@@ -1,0 +1,64 @@
+//! Schedule explorer: visualize how naive DEP, PPPipe, and FinDEP
+//! occupy the four DEP resources (Fig. 3 of the paper, regenerated from
+//! our simulator), and dump a Chrome trace for the FinDEP schedule.
+//!
+//! Run: `cargo run --release --example schedule_explorer [testbed]`
+
+use findep::baselines::{best_naive, best_pppipe};
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::sched::{Order, Plan, PlanConfig};
+use findep::simulator::{simulate, ScheduleTrace};
+use findep::solver::{solve, Instance, SolverParams};
+
+fn show(name: &str, inst: &Instance, cfg: PlanConfig, layers: usize) -> ScheduleTrace {
+    let sm = inst.stage_models();
+    let plan = Plan::build(&sm, cfg, layers, inst.split.ag, inst.seq_len);
+    let sim = simulate(&plan);
+    let trace = ScheduleTrace::from_sim(&plan, &sim);
+    println!("\n== {name}: {} ==", cfg.describe());
+    print!("{}", trace.ascii_gantt(110));
+    trace
+}
+
+fn main() {
+    let tb_name = std::env::args().nth(1).unwrap_or_else(|| "B".to_string());
+    let testbed = Testbed::by_name(&tb_name).unwrap_or_else(Testbed::b);
+    let model = ModelConfig::deepseek_v2(8);
+    let split = GroupSplit::new(3, 5);
+    let inst = Instance::new(model.clone(), testbed, split, 4096);
+    let params = SolverParams::default();
+    let layers = 2; // two layers are enough to see the steady-state beat
+
+    println!(
+        "Schedules for {} on {} (S={}, first {layers} layers)\n\
+         legend: A attention | S shared expert | > A2E | E expert FFN | < E2A",
+        model.name, inst.testbed.name, inst.seq_len
+    );
+
+    let naive = best_naive(&inst, params.ma_cap).expect("feasible");
+    show("Naive DEP (Fig. 3a)", &inst, naive.config, layers);
+
+    let pp = best_pppipe(&inst, &params).expect("feasible");
+    show("PPPipe (Fig. 3b)", &inst, pp.config, layers);
+
+    let fd = solve(&inst, &params).expect("feasible");
+    let fd_trace = show("FinDEP (Fig. 3c/3d)", &inst, fd.config, layers);
+
+    // The ASAS/AASS contrast of Fig. 4 at the FinDEP configuration.
+    let mut alt = fd.config;
+    alt.order = match fd.config.order {
+        Order::Asas => Order::Aass,
+        Order::Aass => Order::Asas,
+    };
+    show("FinDEP with the other AG order (Fig. 4)", &inst, alt, layers);
+
+    // Chrome trace export for the winning schedule.
+    let out = std::env::temp_dir().join("findep_schedule.json");
+    std::fs::write(&out, findep::util::json::to_string(&fd_trace.to_chrome_trace()))
+        .expect("write trace");
+    println!(
+        "\nChrome trace for the FinDEP schedule written to {} \
+         (open in chrome://tracing or ui.perfetto.dev)",
+        out.display()
+    );
+}

@@ -1,0 +1,117 @@
+//! End-to-end serving driver — the full three-layer system on a real
+//! workload.
+//!
+//! Loads the tiny MoE's AOT artifacts (Pallas kernels → JAX stages →
+//! HLO text), compiles them on the PJRT CPU client, spins up the DEP
+//! coordinator (1 AG worker + 2 EG workers + A2E/E2A links), validates
+//! numerics against the Python golden output, then serves a stream of
+//! batched requests under naive / PPPipe / FinDEP / adaptive policies,
+//! reporting latency and throughput per policy.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_e2e`
+//!
+//! Results recorded in EXPERIMENTS.md §End-to-end.
+
+use findep::coordinator::links::LinkDelay;
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::pipeline::{ExecConfig, Pipeline};
+use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::runtime::artifact::{Golden, Manifest};
+use findep::runtime::artifacts_dir;
+use findep::sched::Order;
+use findep::util::bench::Table;
+use findep::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing: run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // --- Load + compile (the one-time startup cost). -------------------
+    let t0 = std::time::Instant::now();
+    let model = ModelHandle::load(&dir, true)?;
+    println!(
+        "loaded {} artifacts on {} in {:.2}s (model '{}': {} layers, {} experts, top-{}, \
+         {} shared)",
+        model.engine.n_artifacts(),
+        model.engine.platform,
+        t0.elapsed().as_secs_f64(),
+        model.model.name,
+        model.model.n_layers,
+        model.model.n_experts,
+        model.model.top_k,
+        model.model.n_shared,
+    );
+
+    // --- Golden validation: rust pipeline vs python forward. ------------
+    let manifest = Manifest::load(&dir)?;
+    let golden = Golden::load(&manifest.golden)?;
+    {
+        let pipeline = Pipeline::new(model.clone(), 2, None)?;
+        let (out, _) = pipeline.forward(&golden.input, ExecConfig::findep(2, 2, Order::Asas))?;
+        let diff = out.max_abs_diff(&golden.output);
+        anyhow::ensure!(diff <= golden.atol, "golden mismatch: {diff}");
+        println!(
+            "golden check  : rust DEP pipeline == python forward (max |Δ| = {diff:.2e}, \
+             atol {:.0e})",
+            golden.atol
+        );
+    }
+
+    // --- Serve under each policy. ---------------------------------------
+    // Mild bandwidth-shaped link delay keeps the schedule differences
+    // visible on a host whose real interconnect is a memcpy.
+    let delay = Some(LinkDelay { alpha_s: 3e-5, beta_s_per_byte: 2e-7 });
+    let srv = Server::new(model, 2, delay)?;
+    let s = srv.pipeline.model().seq_len;
+    let m = srv.pipeline.model().model.embed;
+
+    let policies: Vec<(&str, Policy)> = vec![
+        ("naive-DEP", Policy::Naive),
+        ("PPPipe(r1=2)", Policy::PpPipe { r1: 2 }),
+        ("FinDEP(2,2,ASAS)", Policy::FinDep { r1: 2, r2: 2, order: Order::Asas }),
+        ("FinDEP adaptive", Policy::Adaptive),
+    ];
+
+    let n_batches = 12usize;
+    let batch_size = 4usize;
+    let mut table = Table::new(
+        &format!("Real serving: {n_batches} batches x {batch_size} requests (S={s}, M={m})"),
+        &["policy", "tokens/s", "p50 batch ms", "p95 batch ms", "AG wait ms (mean)"],
+    );
+
+    for (name, policy) in policies {
+        // Warmup.
+        let reqs: Vec<EmbeddedRequest> =
+            (0..batch_size as u64).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+        let _ = srv.serve_batch(&reqs, policy)?;
+
+        let mut lat = Vec::new();
+        let mut waits = Vec::new();
+        let mut tokens = 0usize;
+        let t0 = std::time::Instant::now();
+        for b in 0..n_batches as u64 {
+            let reqs: Vec<EmbeddedRequest> = (0..batch_size as u64)
+                .map(|i| EmbeddedRequest::synthetic(b * batch_size as u64 + i, s, m))
+                .collect();
+            let (resp, stats_fwd) = srv.serve_batch(&reqs, policy)?;
+            tokens += resp.len() * s;
+            lat.push(stats_fwd.total * 1e3);
+            waits.push(stats_fwd.wait * 1e3);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", tokens as f64 / dt),
+            format!("{:.2}", stats::percentile(&lat, 50.0)),
+            format!("{:.2}", stats::percentile(&lat, 95.0)),
+            format!("{:.2}", stats::mean(&waits)),
+        ]);
+    }
+    table.print();
+    println!("metrics snapshot:\n{}", findep::util::json::to_string_pretty(&srv.metrics.snapshot_json()));
+    Ok(())
+}

@@ -1,0 +1,231 @@
+"""AOT lowering: JAX stage functions -> HLO *text* artifacts + weights +
+golden outputs.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust
+side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Artifacts (per shape bucket, static shapes):
+
+* ``attn_ma{m}.hlo.txt``   — attention stage, h [m, S, M] + 4 projections
+* ``gate_n{n}.hlo.txt``    — router, x [n, M] -> (top-k probs, indices)
+* ``ffn_n{n}.hlo.txt``     — SwiGLU FFN, x [n, M] (shared AND routed
+  experts share this artifact: identical compute shape, §3.1)
+
+plus ``weights.bin`` (flat f32, little-endian), ``manifest.json`` (tensor
+table + artifact table + model config), and ``golden.json`` /
+``golden_noshared.json`` (full-model input/output pairs for the Rust
+integration tests).
+
+Run via ``make artifacts``; Python never runs at serving time.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_attention(cfg: configs.ModelConfig, m_a: int, seq: int) -> str:
+    m = cfg.embed
+    nh, dk, dv = cfg.n_heads, cfg.d_k, cfg.d_v
+    f = functools.partial(
+        model.attention_stage, n_heads=nh, d_k=dk, d_v=dv, causal=True
+    )
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(lambda h, wq, wk, wv, wo: (f(h, wq, wk, wv, wo),)).lower(
+        spec((m_a, seq, m), jnp.float32),
+        spec((nh * dk, m), jnp.float32),
+        spec((nh * dk, m), jnp.float32),
+        spec((nh * dv, m), jnp.float32),
+        spec((m, nh * dv), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_gate(cfg: configs.ModelConfig, n: int) -> str:
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(
+        lambda x, w: model.gate_stage(x, w, top_k=cfg.top_k)
+    ).lower(
+        spec((n, cfg.embed), jnp.float32),
+        spec((cfg.n_experts, cfg.embed), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_ffn(cfg: configs.ModelConfig, n: int) -> str:
+    m, h = cfg.embed, cfg.ffn_hidden
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(
+        lambda x, wg, wu, wd: (model.ffn_stage(x, wg, wu, wd),)
+    ).lower(
+        spec((n, m), jnp.float32),
+        spec((h, m), jnp.float32),
+        spec((h, m), jnp.float32),
+        spec((m, h), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+WEIGHT_KEYS = [
+    # (manifest name, per-layer dict key) — stacked expert tensors are
+    # stored whole; the Rust loader slices per expert.
+    ("wq", "wq"), ("wk", "wk"), ("wv", "wv"), ("wo", "wo"),
+    ("gate_w", "gate_w"),
+    ("exp_gate", "exp_gate"), ("exp_up", "exp_up"), ("exp_down", "exp_down"),
+    ("shared_gate", "shared_gate"), ("shared_up", "shared_up"),
+    ("shared_down", "shared_down"),
+]
+
+
+def pack_weights(weights):
+    """Flatten all layer weights into one f32 buffer + tensor table."""
+    blobs, table, offset = [], [], 0
+    for li, lw in enumerate(weights):
+        for name, key in WEIGHT_KEYS:
+            if key not in lw:
+                continue
+            arr = np.asarray(lw[key], dtype=np.float32)
+            table.append({
+                "name": f"layer{li}.{name}",
+                "shape": list(arr.shape),
+                "offset": offset,       # in f32 elements
+            })
+            blobs.append(arr.ravel())
+            offset += arr.size
+    return np.concatenate(blobs), table
+
+
+def golden_case(cfg, weights, batch, seq, seed):
+    rng = np.random.default_rng(seed)
+    h = (rng.standard_normal((batch, seq, cfg.embed)) * 0.5).astype(np.float32)
+    out = model.model_forward(jnp.asarray(h), weights, cfg.top_k)
+    ref_out = model.reference_forward(jnp.asarray(h), weights, cfg.top_k)
+    kernel_vs_ref = float(jnp.max(jnp.abs(out - ref_out)))
+    assert kernel_vs_ref < 1e-3, f"kernel path diverged from oracle: {kernel_vs_ref}"
+    return {
+        "batch": batch,
+        "seq": seq,
+        "embed": cfg.embed,
+        "input": [float(v) for v in h.ravel()],
+        "output": [float(v) for v in np.asarray(out).ravel()],
+        "atol": 2e-3,
+        "kernel_vs_ref_maxdiff": kernel_vs_ref,
+    }
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = configs.tiny()
+    cfg_ns = configs.tiny_noshared()
+    seq = configs.SEQ_LEN
+
+    artifacts = []
+
+    for m_a in configs.MA_BUCKETS:
+        path = f"attn_ma{m_a}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(lower_attention(cfg, m_a, seq))
+        artifacts.append({
+            "stage": "attention", "bucket": m_a, "path": path,
+            "inputs": [
+                {"name": "h", "shape": [m_a, seq, cfg.embed]},
+                {"name": "wq", "shape": [cfg.n_heads * cfg.d_k, cfg.embed]},
+                {"name": "wk", "shape": [cfg.n_heads * cfg.d_k, cfg.embed]},
+                {"name": "wv", "shape": [cfg.n_heads * cfg.d_v, cfg.embed]},
+                {"name": "wo", "shape": [cfg.embed, cfg.n_heads * cfg.d_v]},
+            ],
+            "outputs": [{"name": "h", "shape": [m_a, seq, cfg.embed]}],
+        })
+
+    gate_buckets = sorted({m_a * seq for m_a in configs.MA_BUCKETS})
+    for n in gate_buckets:
+        path = f"gate_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(lower_gate(cfg, n))
+        artifacts.append({
+            "stage": "gate", "bucket": n, "path": path,
+            "inputs": [
+                {"name": "x", "shape": [n, cfg.embed]},
+                {"name": "gate_w", "shape": [cfg.n_experts, cfg.embed]},
+            ],
+            "outputs": [
+                {"name": "probs", "shape": [n, cfg.top_k]},
+                {"name": "idx", "shape": [n, cfg.top_k], "dtype": "s32"},
+            ],
+        })
+
+    for n in configs.FFN_BUCKETS:
+        path = f"ffn_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(lower_ffn(cfg, n))
+        artifacts.append({
+            "stage": "ffn", "bucket": n, "path": path,
+            "inputs": [
+                {"name": "x", "shape": [n, cfg.embed]},
+                {"name": "w_gate", "shape": [cfg.ffn_hidden, cfg.embed]},
+                {"name": "w_up", "shape": [cfg.ffn_hidden, cfg.embed]},
+                {"name": "w_down", "shape": [cfg.embed, cfg.ffn_hidden]},
+            ],
+            "outputs": [{"name": "y", "shape": [n, cfg.embed]}],
+        })
+
+    # Weights (shared between both tiny variants; the no-shared variant
+    # simply never reads the shared tensors).
+    weights = model.init_weights(cfg, seed=0)
+    flat, table = pack_weights(weights)
+    flat.tofile(os.path.join(out_dir, "weights.bin"))
+
+    # Golden end-to-end cases.
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden_case(cfg, weights, batch=2, seq=seq, seed=7), f)
+    weights_ns = [
+        {k: v for k, v in lw.items() if not k.startswith("shared_")}
+        for lw in weights
+    ]
+    with open(os.path.join(out_dir, "golden_noshared.json"), "w") as f:
+        json.dump(golden_case(cfg_ns, weights_ns, batch=2, seq=seq, seed=7), f)
+
+    manifest = {
+        "model": cfg.to_json_dict(),
+        "model_noshared": cfg_ns.to_json_dict(),
+        "seq_len": seq,
+        "ma_buckets": list(configs.MA_BUCKETS),
+        "ffn_buckets": list(configs.FFN_BUCKETS),
+        "weights": {"file": "weights.bin", "tensors": table},
+        "artifacts": artifacts,
+        "golden": "golden.json",
+        "golden_noshared": "golden_noshared.json",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} HLO artifacts + weights + goldens to {out_dir}")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    args = p.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

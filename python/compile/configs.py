@@ -1,0 +1,64 @@
+"""Model configurations shared between the Python compile path and the
+Rust coordinator (mirrors ``rust/src/config/model.rs``).
+
+Only the *tiny* configurations are AOT-compiled into runnable artifacts —
+they execute for real on the PJRT CPU client. The paper-scale
+DeepSeek-V2 / Qwen3-MoE shapes live in the Rust analytic layer and the
+discrete-event simulator.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    embed: int          # M
+    ffn_hidden: int     # H
+    n_experts: int      # E (routed)
+    top_k: int
+    n_shared: int       # shared experts (0 = none)
+    n_layers: int       # T
+    n_heads: int        # n_h
+    d_k: int
+    d_v: int
+    attention: str      # "mha" | "mla"
+    bytes_per_elem: int
+
+    def to_json_dict(self):
+        return asdict(self)
+
+    @property
+    def head_dim_total(self) -> int:
+        return self.n_heads * self.d_k
+
+
+def tiny() -> ModelConfig:
+    """Tiny DeepSeek-style config (shared expert present); f32 on CPU."""
+    return ModelConfig(
+        name="tiny",
+        embed=64,
+        ffn_hidden=128,
+        n_experts=8,
+        top_k=2,
+        n_shared=1,
+        n_layers=2,
+        n_heads=4,
+        d_k=16,
+        d_v=16,
+        attention="mha",
+        bytes_per_elem=4,
+    )
+
+
+def tiny_noshared() -> ModelConfig:
+    """Tiny Qwen-style config (no shared expert)."""
+    c = tiny()
+    return ModelConfig(**{**asdict(c), "name": "tiny-noshared", "n_shared": 0})
+
+
+# AOT shape buckets: artifacts are compiled per static shape. The Rust
+# coordinator routes work onto the smallest bucket that fits (padding).
+SEQ_LEN = 16                      # real-exec sequence length
+MA_BUCKETS = (1, 2, 4)            # samples per AG micro-batch
+FFN_BUCKETS = (8, 16, 32, 64)     # token counts for FFN calls (shared + experts)

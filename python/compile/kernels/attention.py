@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: tiled multi-head attention with online softmax.
+
+The paper implements attention with FlashInfer on CUDA; the TPU
+adaptation (DESIGN.md §Hardware-Adaptation) replaces the
+threadblock-per-query-tile decomposition with a Pallas grid over
+(batch·heads, query blocks) and an **online-softmax scan over KV blocks**
+inside the kernel, so the S×S score matrix never materializes in HBM:
+
+* Q tile [block_q, d] and one K/V tile [block_k, d] live in VMEM;
+  running max / normalizer / accumulator are carried through the KV scan
+  (the flash-attention recurrence).
+* Both GEMMs (Q·Kᵀ and P·V) are MXU passes with fp32 accumulation.
+* Causal masking is applied per-tile from the absolute row/col indices.
+
+``interpret=True`` for CPU-PJRT executability (see expert_ffn.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, seq_len, causal, scale):
+    """One (batch·head, q-block) grid step: scan KV blocks with online
+    softmax."""
+    q = q_ref[...]  # [block_q, d_k]
+    block_q = q.shape[0]
+    d_v = v_ref.shape[-1]
+    q_offset = pl.program_id(1) * block_q
+
+    def body(start, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.dslice(start * block_k, block_k), :]
+        v = v_ref[pl.dslice(start * block_k, block_k), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = start * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + jnp.sum(p, axis=-1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        return acc, m_cur, l_cur
+
+    n_kv = seq_len // block_k
+    acc0 = jnp.zeros((block_q, d_v), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _m, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention(q, k, v, causal=True, block_q=16, block_k=16):
+    """Tiled attention: q, k: [B, n_h, S, d_k], v: [B, n_h, S, d_v].
+
+    S must be divisible by block_q and block_k (AOT shape buckets
+    guarantee this; tests sweep uneven shapes via padding at the caller).
+    """
+    b, nh, s, d_k = q.shape
+    d_v = v.shape[-1]
+    assert s % block_q == 0 and s % block_k == 0, "S must tile evenly"
+    scale = 1.0 / (d_k ** 0.5)
+
+    qf = q.reshape(b * nh, s, d_k)
+    kf = k.reshape(b * nh, s, d_k)
+    vf = v.reshape(b * nh, s, d_v)
+
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, seq_len=s, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * nh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d_k), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((None, s, d_k), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((None, s, d_v), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d_v), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nh, s, d_v), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, nh, s, d_v)

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: SwiGLU expert feed-forward network.
+
+The paper's EG hot spot (Eq. 3): for each expert,
+``y = W_D · (Swish(W_gate·x) ⊗ (W_U·x))``. On the paper's GPUs this is a
+grouped-GEMM CUDA kernel; the TPU re-think (DESIGN.md
+§Hardware-Adaptation) is:
+
+* **VMEM tiling instead of shared-memory threadblocks** — BlockSpec
+  carves the token dimension into ``block_n`` rows; each grid step holds
+  one token tile plus the full (H, M) weight panels in VMEM. For the
+  paper-scale shapes (M≈4-5k, H≈1.5k, bf16) a (128 tokens × weights)
+  working set is ≈ (128·M + 2·H·M + M·H + 128·H)·2B ≈ 13 MB < 16 MB VMEM
+  with fp32 accumulators in scratch, so one-level tiling suffices; wider
+  models would additionally tile H (the kernel exposes ``block_h``).
+* **MXU-shaped GEMMs instead of WMMA fragments** — both GEMMs are
+  expressed as plain ``jnp.dot`` on (128, M)×(M, H) panels, which Mosaic
+  maps onto 128×128 MXU passes; Swish and the Hadamard product stay in
+  the VPU between the two MXU passes, avoiding an HBM round-trip for the
+  (N, H) intermediate — that round-trip is exactly what the fused CUDA
+  kernel avoided with shared memory.
+* Grid order is token-major so consecutive grid steps reuse the resident
+  weight panels (double-buffering friendly).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical
+numerics (validated against ``ref.ref_ffn`` in pytest).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One token-tile of the fused SwiGLU FFN.
+
+    x:  [block_n, M]   (VMEM tile)
+    wg, wu: [H, M]; wd: [M, H] (resident panels)
+    o:  [block_n, M]
+    """
+    x = x_ref[...]
+    # MXU pass 1: gate and up projections (accumulate in f32).
+    z_gate = jnp.dot(x, wg_ref[...].T, preferred_element_type=jnp.float32)
+    z_up = jnp.dot(x, wu_ref[...].T, preferred_element_type=jnp.float32)
+    # VPU: Swish(z_gate) ⊗ z_up, no HBM round-trip.
+    hidden = (z_gate * jax.nn.sigmoid(z_gate)) * z_up
+    # MXU pass 2: down projection.
+    o_ref[...] = jnp.dot(
+        hidden.astype(x.dtype), wd_ref[...].T, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def expert_ffn(x, w_gate, w_up, w_down, block_n=128):
+    """Fused SwiGLU FFN via Pallas.
+
+    x: [N, M]; w_gate, w_up: [H, M]; w_down: [M, H]  ->  [N, M]
+
+    ``block_n`` is the token-tile size; N is padded up to a multiple
+    internally (zero rows compute zeros and are sliced off).
+    """
+    n, m = x.shape
+    h = w_gate.shape[0]
+    assert w_gate.shape == (h, m) and w_up.shape == (h, m), "weight shape"
+    assert w_down.shape == (m, h), "down-projection shape"
+
+    bn = min(block_n, n) if n > 0 else 1
+    pad = (-n) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n_padded = x.shape[0]
+
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=(n_padded // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((h, m), lambda i: (0, 0)),
+            pl.BlockSpec((h, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_padded, m), x.dtype),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)
+    return out[:n]
+
+
+def vmem_bytes(block_n, m, h, elem_bytes=2, acc_bytes=4):
+    """Estimated VMEM working set of one grid step (perf-model input for
+    DESIGN.md §Perf; see EXPERIMENTS.md §Perf L1 for the block sweep)."""
+    tokens = block_n * m * elem_bytes          # x tile
+    weights = (2 * h * m + m * h) * elem_bytes  # wg, wu, wd panels
+    acc = 2 * block_n * h * acc_bytes           # z_gate, z_up accumulators
+    out = block_n * m * acc_bytes               # output accumulator
+    return tokens + weights + acc + out
+
+
+def mxu_utilization_estimate(block_n, m, h):
+    """Fraction of MXU 128×128 pass slots doing useful work for one grid
+    step (structure metric — interpret-mode wallclock is NOT a TPU
+    proxy)."""
+    def eff(dim):
+        full = dim // 128
+        rem = dim % 128
+        passes = full + (1 if rem else 0)
+        return dim / (passes * 128) if passes else 1.0
+
+    return eff(block_n) * eff(m) * eff(h)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: gate scoring (router GEMM + softmax).
+
+The gate computes routing scores over all experts and softmax-normalizes
+them (§2.1). The GEMM+softmax is fused in one Pallas kernel (one token
+tile per grid step, the full [E, M] router panel resident in VMEM —
+E·M is tiny relative to expert weights); top-k selection happens in
+plain jnp on the kernel output since top-k is a lane-shuffle-heavy op
+the XLA lowering already handles well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(x_ref, w_ref, o_ref):
+    """scores = softmax(x @ w^T) for one token tile."""
+    s = jnp.dot(x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gate_probs(x, w_gate, block_n=128):
+    """Softmax routing probabilities. x: [N, M]; w_gate: [E, M] -> [N, E]."""
+    n, m = x.shape
+    e = w_gate.shape[0]
+    bn = min(block_n, n) if n > 0 else 1
+    pad = (-n) % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _gate_kernel,
+        grid=(x.shape[0] // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((e, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], e), x.dtype),
+        interpret=True,
+    )(x, w_gate)
+    return out[:n]
+
+
+def _iterative_topk(probs, k):
+    """Top-k by k successive argmax+mask rounds.
+
+    ``jax.lax.top_k`` lowers to the dedicated ``topk`` HLO instruction,
+    which the AOT consumer (xla_extension 0.5.1's HLO text parser on the
+    Rust side) predates. Iterative argmax lowers to plain reduce /
+    select ops that parse everywhere, and matches top_k's tie-breaking
+    (lowest index first) because argmax returns the first maximum.
+    """
+    n = probs.shape[0]
+    rows = jnp.arange(n)
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        vals.append(p[rows, i])
+        idxs.append(i)
+        p = p.at[rows, i].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k",))
+def gate_topk(x, w_gate, top_k):
+    """Full gate: probabilities -> top-k (renormalized) + indices.
+
+    Returns (probs [N, k] f32, idx [N, k] int32), identical semantics to
+    ``ref.ref_gate``.
+    """
+    probs = gate_probs(x, w_gate)
+    top_p, top_i = _iterative_topk(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_i.astype(jnp.int32)

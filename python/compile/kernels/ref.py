@@ -1,0 +1,116 @@
+"""Pure-jnp reference oracles for every Pallas kernel and for the full
+MoE layer.
+
+These are the CORE correctness signal: kernels are validated against
+them in pytest (including hypothesis shape sweeps), and ``aot.py`` dumps
+golden input/output pairs computed here for the Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def swish(x):
+    """Swish/SiLU: x * sigmoid(x) (§3.1 Shared Expert part)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def ref_ffn(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward of one expert.
+
+    x: [N, M]; w_gate, w_up: [H, M]; w_down: [M, H]  ->  [N, M]
+    Matches the paper's expert structure: z_d = W_D · Swish(z_gate ⊗ z_up).
+    """
+    z_gate = x @ w_gate.T          # [N, H]
+    z_up = x @ w_up.T              # [N, H]
+    return (swish(z_gate) * z_up) @ w_down.T  # [N, M]
+
+
+def ref_attention(q, k, v, causal=True):
+    """Multi-head scaled-dot-product attention.
+
+    q, k: [B, n_h, S, d_k]; v: [B, n_h, S, d_v]  ->  [B, n_h, S, d_v]
+    """
+    d_k = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d_k).astype(q.dtype)
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ref_attention_block(h, wq, wk, wv, wo, n_heads, d_k, d_v, causal=True):
+    """Full attention stage with projections and residual.
+
+    h: [B, S, M]; wq, wk: [n_h*d_k, M]; wv: [n_h*d_v, M]; wo: [M, n_h*d_v]
+    -> [B, S, M]  (residual added)
+    """
+    b, s, _m = h.shape
+    q = (h @ wq.T).reshape(b, s, n_heads, d_k).transpose(0, 2, 1, 3)
+    k = (h @ wk.T).reshape(b, s, n_heads, d_k).transpose(0, 2, 1, 3)
+    v = (h @ wv.T).reshape(b, s, n_heads, d_v).transpose(0, 2, 1, 3)
+    o = ref_attention(q, k, v, causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_v)
+    return h + o @ wo.T
+
+
+def ref_gate(x, w_gate, top_k):
+    """Top-k softmax gate (§2.1).
+
+    x: [N, M]; w_gate: [E, M]  ->  (probs [N, k], idx [N, k] int32)
+    Routing scores -> softmax over all experts -> top-k; kept
+    probabilities are renormalized to sum to one.
+    """
+    scores = x @ w_gate.T                     # [N, E]
+    probs = jax.nn.softmax(scores, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_i.astype(jnp.int32)
+
+
+def ref_moe_layer(h, lw, top_k, causal=True):
+    """One full MoE transformer layer (attention + gate + shared +
+    routed experts + combine) — the end-to-end oracle for golden tests.
+
+    h: [B, S, M]; ``lw`` is a dict with keys
+      n_heads d_k d_v
+      wq wk wv wo                       (attention)
+      gate_w                            ([E, M])
+      shared_gate shared_up shared_down (optional, single shared expert)
+      exp_gate exp_up exp_down          (stacked [E, H, M] / [E, M, H])
+    """
+    n_heads, d_k, d_v = lw["n_heads"], lw["d_k"], lw["d_v"]
+    h = ref_attention_block(h, lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+                            n_heads, d_k, d_v, causal=causal)
+    b, s, m = h.shape
+    x = h.reshape(b * s, m)
+
+    probs, idx = ref_gate(x, lw["gate_w"], top_k)
+
+    # Routed experts: dense-compute every expert then gather (the oracle
+    # is allowed to be slow and simple).
+    n_experts = lw["gate_w"].shape[0]
+    all_out = jnp.stack(
+        [ref_ffn(x, lw["exp_gate"][e], lw["exp_up"][e], lw["exp_down"][e])
+         for e in range(n_experts)],
+        axis=0,
+    )  # [E, N, M]
+    routed = jnp.zeros_like(x)
+    for kk in range(top_k):
+        sel = all_out[idx[:, kk], jnp.arange(x.shape[0])]  # [N, M]
+        routed = routed + probs[:, kk:kk + 1] * sel
+
+    out = x + routed
+    if "shared_gate" in lw:
+        out = out + ref_ffn(x, lw["shared_gate"], lw["shared_up"],
+                            lw["shared_down"])
+    return out.reshape(b, s, m)
+
+
+def ref_model(h, weights, top_k, causal=True):
+    """Full T-layer forward: ``weights`` is a list of per-layer dicts."""
+    for lw in weights:
+        h = ref_moe_layer(h, lw, top_k, causal=causal)
+    return h

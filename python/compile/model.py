@@ -1,0 +1,132 @@
+"""L2: the JAX MoE model, assembled from the L1 Pallas kernels.
+
+The model is factored into the four *stage functions* the DEP
+coordinator schedules independently — attention (AG), gate (AG), shared
+expert (AG), expert FFN (EG) — because each stage becomes its own AOT
+HLO artifact executed on a different logical device group. A fused
+per-layer reference path exists for validation only.
+
+Python in this package runs exclusively at build time (``make
+artifacts``); the Rust coordinator never imports it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import attention as attn_k
+from compile.kernels import expert_ffn as ffn_k
+from compile.kernels import gating as gate_k
+from compile.kernels import ref
+from compile import configs
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (each one becomes an AOT artifact).
+# ---------------------------------------------------------------------------
+
+def attention_stage(h, wq, wk, wv, wo, *, n_heads, d_k, d_v, causal=True):
+    """AG stage: QKV projections + Pallas attention + output projection,
+    with residual. h: [B, S, M] -> [B, S, M]."""
+    b, s, _m = h.shape
+    q = (h @ wq.T).reshape(b, s, n_heads, d_k).transpose(0, 2, 1, 3)
+    k = (h @ wk.T).reshape(b, s, n_heads, d_k).transpose(0, 2, 1, 3)
+    v = (h @ wv.T).reshape(b, s, n_heads, d_v).transpose(0, 2, 1, 3)
+    block = min(16, s)
+    o = attn_k.attention(q, k, v, causal=causal, block_q=block, block_k=block)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * d_v)
+    return h + o @ wo.T
+
+
+def gate_stage(x, w_gate, *, top_k):
+    """AG stage: routing. x: [N, M] -> (probs [N,k], idx [N,k] i32)."""
+    return gate_k.gate_topk(x, w_gate, top_k)
+
+
+def ffn_stage(x, w_gate, w_up, w_down):
+    """Shared-expert or routed-expert FFN (identical compute shape,
+    §3.1): x: [N, M] -> [N, M], via the Pallas SwiGLU kernel."""
+    return ffn_k.expert_ffn(x, w_gate, w_up, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Weights.
+# ---------------------------------------------------------------------------
+
+def init_layer_weights(cfg: configs.ModelConfig, rng: np.random.Generator):
+    """Deterministic small-scale weights for one layer (f32 numpy).
+
+    Scale 1/sqrt(fan_in) keeps activations O(1) over the residual stream
+    without normalization layers (documented simplification)."""
+    m, h = cfg.embed, cfg.ffn_hidden
+    nh, dk, dv = cfg.n_heads, cfg.d_k, cfg.d_v
+
+    def w(shape):
+        fan_in = shape[-1]
+        return (rng.standard_normal(shape) * (0.4 / np.sqrt(fan_in))).astype(np.float32)
+
+    lw = {
+        "n_heads": nh, "d_k": dk, "d_v": dv,
+        "wq": w((nh * dk, m)),
+        "wk": w((nh * dk, m)),
+        "wv": w((nh * dv, m)),
+        "wo": w((m, nh * dv)),
+        "gate_w": w((cfg.n_experts, m)),
+        "exp_gate": w((cfg.n_experts, h, m)),
+        "exp_up": w((cfg.n_experts, h, m)),
+        "exp_down": w((cfg.n_experts, m, h)),
+    }
+    if cfg.n_shared > 0:
+        # One shared expert in the tiny config.
+        lw["shared_gate"] = w((h, m))
+        lw["shared_up"] = w((h, m))
+        lw["shared_down"] = w((m, h))
+    return lw
+
+
+def init_weights(cfg: configs.ModelConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [init_layer_weights(cfg, rng) for _ in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# Full forward through the kernel path (validation only — the serving
+# path replays exactly these stages from Rust).
+# ---------------------------------------------------------------------------
+
+def moe_layer(h, lw, top_k, causal=True):
+    """One layer through the *kernel* stages, with the same routing and
+    combine semantics the Rust coordinator implements."""
+    h = attention_stage(
+        h, lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+        n_heads=lw["n_heads"], d_k=lw["d_k"], d_v=lw["d_v"], causal=causal,
+    )
+    b, s, m = h.shape
+    x = h.reshape(b * s, m)
+    probs, idx = gate_stage(x, lw["gate_w"], top_k=top_k)
+
+    n_experts = lw["gate_w"].shape[0]
+    routed = jnp.zeros_like(x)
+    for e in range(n_experts):
+        # Token selection mirrors the coordinator's router: each expert
+        # processes the tokens routed to it; the combine applies gate
+        # weights. Dense masking keeps the validation path simple.
+        out_e = ffn_stage(x, lw["exp_gate"][e], lw["exp_up"][e], lw["exp_down"][e])
+        weight_e = jnp.sum(jnp.where(idx == e, probs, 0.0), axis=-1, keepdims=True)
+        routed = routed + weight_e * out_e
+
+    out = x + routed
+    if "shared_gate" in lw:
+        out = out + ffn_stage(x, lw["shared_gate"], lw["shared_up"], lw["shared_down"])
+    return out.reshape(b, s, m)
+
+
+def model_forward(h, weights, top_k, causal=True):
+    for lw in weights:
+        h = moe_layer(h, lw, top_k, causal=causal)
+    return h
+
+
+def reference_forward(h, weights, top_k, causal=True):
+    """The pure-jnp oracle (no Pallas), for cross-checking."""
+    return ref.ref_model(h, weights, top_k, causal=causal)

@@ -1,0 +1,62 @@
+"""AOT pipeline tests: HLO text emission, artifact completeness, and
+manifest consistency (the contract the Rust runtime consumes)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, configs
+
+
+def test_hlo_text_emission_attention():
+    text = aot.lower_attention(configs.tiny(), m_a=1, seq=configs.SEQ_LEN)
+    assert text.startswith("HloModule"), text[:60]
+    assert "f32[1,16,64]" in text
+    # HLO text format, not a serialized proto.
+    assert "ENTRY" in text
+
+
+def test_hlo_text_emission_gate_and_ffn():
+    gate = aot.lower_gate(configs.tiny(), n=16)
+    assert "f32[16,64]" in gate and "s32" in gate, "gate must emit int32 indices"
+    ffn = aot.lower_ffn(configs.tiny(), n=8)
+    assert "f32[8,64]" in ffn
+    assert "f32[128,64]" in ffn  # weight params present
+
+
+def test_build_writes_complete_artifact_set(tmp_path):
+    out = str(tmp_path / "artifacts")
+    aot.build(out)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    # Every artifact the manifest references exists and is non-empty.
+    for a in manifest["artifacts"]:
+        p = os.path.join(out, a["path"])
+        assert os.path.getsize(p) > 100, a["path"]
+    assert os.path.exists(os.path.join(out, manifest["weights"]["file"]))
+    assert os.path.exists(os.path.join(out, manifest["golden"]))
+    assert os.path.exists(os.path.join(out, manifest["golden_noshared"]))
+    # Expected bucket coverage.
+    stages = {(a["stage"], a["bucket"]) for a in manifest["artifacts"]}
+    for m_a in configs.MA_BUCKETS:
+        assert ("attention", m_a) in stages
+    for n in configs.FFN_BUCKETS:
+        assert ("ffn", n) in stages
+    # Weight table offsets are sane.
+    offsets = [t["offset"] for t in manifest["weights"]["tensors"]]
+    assert offsets == sorted(offsets)
+    # Golden case parses and has matching lengths.
+    with open(os.path.join(out, "golden.json")) as f:
+        g = json.load(f)
+    n = g["batch"] * g["seq"] * g["embed"]
+    assert len(g["input"]) == n and len(g["output"]) == n
+    assert g["kernel_vs_ref_maxdiff"] < 1e-3
+
+
+def test_manifest_model_config_round_trip():
+    cfg = configs.tiny()
+    d = cfg.to_json_dict()
+    assert d["n_experts"] == 8 and d["top_k"] == 2 and d["n_shared"] == 1
+    ns = configs.tiny_noshared().to_json_dict()
+    assert ns["n_shared"] == 0

@@ -1,0 +1,167 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeps over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import expert_ffn as ffn_k
+from compile.kernels import gating as gate_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN kernel.
+# ---------------------------------------------------------------------------
+
+class TestExpertFfn:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(1, 96),
+        m=st.sampled_from([16, 64, 128]),
+        h=st.sampled_from([32, 128]),
+        block=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_across_shapes(self, n, m, h, block, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, (n, m))
+        wg, wu = rand(rng, (h, m), scale=0.2), rand(rng, (h, m), scale=0.2)
+        wd = rand(rng, (m, h), scale=0.2)
+        got = ffn_k.expert_ffn(x, wg, wu, wd, block_n=block)
+        want = ref.ref_ffn(x, wg, wu, wd)
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+    def test_uneven_n_is_padded_correctly(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, (13, 64))
+        wg, wu = rand(rng, (128, 64), scale=0.2), rand(rng, (128, 64), scale=0.2)
+        wd = rand(rng, (64, 128), scale=0.2)
+        got = ffn_k.expert_ffn(x, wg, wu, wd, block_n=8)
+        assert got.shape == (13, 64)
+        np.testing.assert_allclose(got, ref.ref_ffn(x, wg, wu, wd), atol=1e-5)
+
+    def test_bf16_path(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rand(rng, (32, 64)), dtype=jnp.bfloat16)
+        wg = jnp.asarray(rand(rng, (128, 64), scale=0.2), dtype=jnp.bfloat16)
+        wu = jnp.asarray(rand(rng, (128, 64), scale=0.2), dtype=jnp.bfloat16)
+        wd = jnp.asarray(rand(rng, (64, 128), scale=0.2), dtype=jnp.bfloat16)
+        got = ffn_k.expert_ffn(x, wg, wu, wd, block_n=16)
+        want = ref.ref_ffn(
+            x.astype(jnp.float32), wg.astype(jnp.float32),
+            wu.astype(jnp.float32), wd.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want), atol=0.15)
+
+    def test_zero_input_gives_zero(self):
+        x = np.zeros((8, 64), np.float32)
+        rng = np.random.default_rng(3)
+        wg, wu = rand(rng, (128, 64)), rand(rng, (128, 64))
+        wd = rand(rng, (64, 128))
+        got = ffn_k.expert_ffn(x, wg, wu, wd)
+        np.testing.assert_allclose(got, np.zeros((8, 64)), atol=1e-7)
+
+    def test_vmem_estimator_monotone(self):
+        assert ffn_k.vmem_bytes(256, 5120, 1536) > ffn_k.vmem_bytes(128, 5120, 1536)
+        # MXU utilization perfect for 128-aligned tiles.
+        assert ffn_k.mxu_utilization_estimate(128, 5120, 1536) == 1.0
+        assert ffn_k.mxu_utilization_estimate(100, 5120, 1536) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Attention kernel.
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(
+        b=st.integers(1, 3),
+        nh=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([8, 16]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, b, nh, s, d, causal, seed):
+        rng = np.random.default_rng(seed)
+        q, k = rand(rng, (b, nh, s, d)), rand(rng, (b, nh, s, d))
+        v = rand(rng, (b, nh, s, d))
+        got = attn_k.attention(q, k, v, causal=causal, block_q=16, block_k=16)
+        want = ref.ref_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+    def test_dv_differs_from_dk(self):
+        rng = np.random.default_rng(11)
+        q, k = rand(rng, (1, 2, 32, 16)), rand(rng, (1, 2, 32, 16))
+        v = rand(rng, (1, 2, 32, 8))
+        got = attn_k.attention(q, k, v, causal=True, block_q=16, block_k=16)
+        want = ref.ref_attention(q, k, v, causal=True)
+        assert got.shape == (1, 2, 32, 8)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+    def test_causal_mask_blocks_future(self):
+        # With causal attention, output at position 0 must not depend on
+        # later keys/values.
+        rng = np.random.default_rng(5)
+        q, k, v = (rand(rng, (1, 1, 16, 8)) for _ in range(3))
+        out1 = attn_k.attention(q, k, v, causal=True, block_q=8, block_k=8)
+        k2, v2 = k.copy(), v.copy()
+        k2[:, :, 8:], v2[:, :, 8:] = 99.0, -99.0
+        out2 = attn_k.attention(q, k2, v2, causal=True, block_q=8, block_k=8)
+        np.testing.assert_allclose(out1[:, :, :8], out2[:, :, :8], atol=1e-6)
+
+    def test_softmax_rows_are_convex_combos(self):
+        # Non-causal attention output must lie within [min(v), max(v)].
+        rng = np.random.default_rng(6)
+        q, k, v = (rand(rng, (1, 1, 32, 8)) for _ in range(3))
+        out = np.asarray(attn_k.attention(q, k, v, causal=False, block_q=16, block_k=16))
+        assert out.max() <= v.max() + 1e-5
+        assert out.min() >= v.min() - 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Gate kernel.
+# ---------------------------------------------------------------------------
+
+class TestGate:
+    @settings(**SETTINGS)
+    @given(
+        n=st.integers(1, 80),
+        e=st.sampled_from([4, 8, 16]),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, n, e, k, seed):
+        if k > e:
+            k = e
+        rng = np.random.default_rng(seed)
+        x, w = rand(rng, (n, 64)), rand(rng, (e, 64), scale=0.3)
+        p1, i1 = gate_k.gate_topk(x, w, k)
+        p2, i2 = ref.ref_gate(x, w, k)
+        np.testing.assert_allclose(p1, p2, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    def test_probs_normalized_and_sorted(self):
+        rng = np.random.default_rng(9)
+        x, w = rand(rng, (40, 64)), rand(rng, (8, 64), scale=0.3)
+        p, i = gate_k.gate_topk(x, w, 2)
+        p = np.asarray(p)
+        np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+        assert (p[:, 0] >= p[:, 1]).all(), "top-k must be sorted"
+        assert np.asarray(i).max() < 8 and np.asarray(i).min() >= 0
+
+    def test_full_probs_sum_to_one(self):
+        rng = np.random.default_rng(10)
+        x, w = rand(rng, (24, 64)), rand(rng, (8, 64))
+        probs = np.asarray(gate_k.gate_probs(x, w, block_n=8))
+        np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-5)

@@ -1,0 +1,109 @@
+"""L2 model-stage tests: kernel-path stages vs the pure-jnp oracle, full
+model forward agreement, and weight/packing sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return configs.tiny()
+
+
+@pytest.fixture(scope="module")
+def weights(tiny_cfg):
+    return model.init_weights(tiny_cfg, seed=0)
+
+
+def test_weights_are_deterministic(tiny_cfg):
+    a = model.init_weights(tiny_cfg, seed=0)
+    b = model.init_weights(tiny_cfg, seed=0)
+    np.testing.assert_array_equal(a[0]["wq"], b[0]["wq"])
+    np.testing.assert_array_equal(a[1]["exp_down"], b[1]["exp_down"])
+    c = model.init_weights(tiny_cfg, seed=1)
+    assert not np.array_equal(a[0]["wq"], c[0]["wq"])
+
+
+def test_weight_shapes(tiny_cfg, weights):
+    cfg = tiny_cfg
+    lw = weights[0]
+    assert lw["wq"].shape == (cfg.n_heads * cfg.d_k, cfg.embed)
+    assert lw["gate_w"].shape == (cfg.n_experts, cfg.embed)
+    assert lw["exp_gate"].shape == (cfg.n_experts, cfg.ffn_hidden, cfg.embed)
+    assert lw["shared_down"].shape == (cfg.embed, cfg.ffn_hidden)
+    assert len(weights) == cfg.n_layers
+
+
+def test_attention_stage_matches_ref(tiny_cfg, weights):
+    cfg, lw = tiny_cfg, weights[0]
+    rng = np.random.default_rng(3)
+    h = (rng.standard_normal((2, configs.SEQ_LEN, cfg.embed)) * 0.5).astype(np.float32)
+    got = model.attention_stage(
+        h, lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+        n_heads=cfg.n_heads, d_k=cfg.d_k, d_v=cfg.d_v)
+    want = ref.ref_attention_block(
+        h, lw["wq"], lw["wk"], lw["wv"], lw["wo"],
+        cfg.n_heads, cfg.d_k, cfg.d_v)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+def test_single_layer_matches_oracle(tiny_cfg, weights):
+    cfg = tiny_cfg
+    rng = np.random.default_rng(4)
+    h = (rng.standard_normal((2, configs.SEQ_LEN, cfg.embed)) * 0.5).astype(np.float32)
+    got = model.moe_layer(jnp.asarray(h), weights[0], cfg.top_k)
+    want = ref.ref_moe_layer(jnp.asarray(h), weights[0], cfg.top_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_full_model_matches_oracle(tiny_cfg, weights):
+    cfg = tiny_cfg
+    rng = np.random.default_rng(5)
+    h = (rng.standard_normal((2, configs.SEQ_LEN, cfg.embed)) * 0.5).astype(np.float32)
+    got = model.model_forward(jnp.asarray(h), weights, cfg.top_k)
+    want = model.reference_forward(jnp.asarray(h), weights, cfg.top_k)
+    assert got.shape == (2, configs.SEQ_LEN, cfg.embed)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_noshared_variant_skips_shared(tiny_cfg):
+    cfg_ns = configs.tiny_noshared()
+    assert cfg_ns.n_shared == 0
+    w = model.init_weights(cfg_ns, seed=0)
+    assert "shared_gate" not in w[0]
+    rng = np.random.default_rng(6)
+    h = (rng.standard_normal((1, configs.SEQ_LEN, cfg_ns.embed)) * 0.5).astype(np.float32)
+    out = model.model_forward(jnp.asarray(h), w, cfg_ns.top_k)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_outputs_are_finite_and_bounded(tiny_cfg, weights):
+    # No norm layers: make sure the chosen weight scale keeps the
+    # residual stream sane over all layers.
+    rng = np.random.default_rng(7)
+    h = (rng.standard_normal((4, configs.SEQ_LEN, tiny_cfg.embed)) * 0.5).astype(np.float32)
+    out = np.asarray(model.model_forward(jnp.asarray(h), weights, tiny_cfg.top_k))
+    assert np.isfinite(out).all()
+    assert np.abs(out).max() < 100.0
+
+
+def test_pack_weights_layout(weights):
+    from compile.aot import pack_weights
+    flat, table = pack_weights(weights)
+    assert flat.dtype == np.float32
+    # Offsets are contiguous and cover the buffer exactly.
+    total = 0
+    for t in table:
+        assert t["offset"] == total
+        total += int(np.prod(t["shape"]))
+    assert total == flat.size
+    # A spot tensor round-trips.
+    t0 = table[0]
+    size = int(np.prod(t0["shape"]))
+    np.testing.assert_array_equal(
+        flat[t0["offset"]:t0["offset"] + size].reshape(t0["shape"]),
+        weights[0]["wq"])

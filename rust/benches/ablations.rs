@@ -1,0 +1,128 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **Group split (ag, eg)** — the disaggregation ratio itself: sweep
+//!    every split of an 8-GPU testbed and show where the paper's chosen
+//!    (3,5)/(4,4) splits sit.
+//! 2. **AG execution order** — ASAS vs AASS at the solved configuration
+//!    across regimes (Fig. 4's trade-off, measured).
+//! 3. **r2 sensitivity** — throughput vs r2 at fixed (m_a, r1): the
+//!    §2.3 launch-overhead trade-off that motivates an adaptive solver
+//!    (expect a maximum at moderate r2, not at the extremes).
+//!
+//! Run: `cargo bench --bench ablations`
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::sched::{Order, PlanConfig};
+use findep::solver::{solve, Instance, SolverParams};
+use findep::util::bench::Table;
+
+fn main() {
+    let params = SolverParams::default();
+
+    // --- 1. Group-split ablation. ---------------------------------------
+    let mut table = Table::new(
+        "Ablation 1: disaggregation split (ag, eg) on testbed A, S=4096",
+        &["model", "split", "FinDEP tokens/s", "note"],
+    );
+    for (model, label) in [
+        (ModelConfig::deepseek_v2(8), "deepseek"),
+        (ModelConfig::qwen3_moe(24), "qwen"),
+    ] {
+        let mut best: Option<(GroupSplit, f64)> = None;
+        let mut rows = Vec::new();
+        for split in GroupSplit::enumerate(8) {
+            let inst = Instance::new(model.clone(), Testbed::a(), split, 4096);
+            let tput = solve(&inst, &params).map(|s| s.throughput_tokens);
+            if let Some(t) = tput {
+                if best.as_ref().map_or(true, |b| t > b.1) {
+                    best = Some((split, t));
+                }
+            }
+            rows.push((split, tput));
+        }
+        for (split, tput) in rows {
+            let paper_pick = (model.has_shared_expert() && (split.ag, split.eg) == (3, 5))
+                || (!model.has_shared_expert() && (split.ag, split.eg) == (4, 4));
+            let is_best = best.map_or(false, |(b, _)| b == split);
+            table.row(&[
+                label.into(),
+                format!("({},{})", split.ag, split.eg),
+                tput.map(|t| format!("{t:.0}")).unwrap_or_else(|| "infeasible".into()),
+                match (paper_pick, is_best) {
+                    (true, true) => "paper's pick = best".into(),
+                    (true, false) => "paper's pick".into(),
+                    (false, true) => "best".into(),
+                    _ => String::new(),
+                },
+            ]);
+        }
+    }
+    table.print();
+
+    // --- 2. Order ablation. ----------------------------------------------
+    let mut table = Table::new(
+        "Ablation 2: ASAS vs AASS at the solved configuration (DeepSeek-V2)",
+        &["testbed", "S", "ASAS tokens/s", "AASS tokens/s", "winner"],
+    );
+    for tb in Testbed::all() {
+        let layers = ModelConfig::paper_layers(true, &tb.name[..2]);
+        let model = ModelConfig::deepseek_v2(layers);
+        let split = GroupSplit::paper_default(&tb, true);
+        for s in [1024usize, 4096] {
+            let inst = Instance::new(model.clone(), tb.clone(), split, s);
+            let Some(sol) = solve(&inst, &params) else { continue };
+            let eval_order = |order: Order| {
+                let mut cfg: PlanConfig = sol.config;
+                cfg.order = order;
+                inst.evaluate(cfg).1
+            };
+            let (asas, aass) = (eval_order(Order::Asas), eval_order(Order::Aass));
+            table.row(&[
+                tb.name.clone(),
+                s.to_string(),
+                format!("{asas:.0}"),
+                format!("{aass:.0}"),
+                if (asas - aass).abs() < 1e-6 * asas {
+                    "tie".into()
+                } else if asas > aass {
+                    "ASAS".into()
+                } else {
+                    "AASS".into()
+                },
+            ]);
+        }
+    }
+    table.print();
+
+    // --- 3. r2 sensitivity. ----------------------------------------------
+    let mut table = Table::new(
+        "Ablation 3: throughput vs r2 at fixed (m_a=2, r1=2) — the §2.3 trade-off",
+        &["instance", "r2=1", "r2=2", "r2=4", "r2=8", "r2=16", "r2=32", "best r2"],
+    );
+    for (tb, model, split, s) in [
+        (Testbed::b(), ModelConfig::qwen3_moe(12), GroupSplit::new(4, 4), 8192usize),
+        (Testbed::a(), ModelConfig::deepseek_v2(8), GroupSplit::new(3, 5), 4096),
+        (Testbed::c(), ModelConfig::deepseek_v2(16), GroupSplit::new(3, 5), 2048),
+    ] {
+        let inst = Instance::new(model.clone(), tb.clone(), split, s);
+        let sm = inst.stage_models();
+        let mut row = vec![format!("{} on {} S={s}", model.name, tb.name)];
+        let mut best = (1usize, 0.0f64);
+        for r2 in [1usize, 2, 4, 8, 16, 32] {
+            let cfg = PlanConfig::findep(2, 2, r2, sm.m_e(2.0, r2), Order::Asas);
+            let (_, tput) = inst.evaluate(cfg);
+            if tput > best.1 {
+                best = (r2, tput);
+            }
+            row.push(format!("{tput:.0}"));
+        }
+        row.push(best.0.to_string());
+        table.row(&row);
+    }
+    table.print();
+    println!(
+        "Expected shapes: (1) the paper's splits sit at/near the sweep optimum; (2) order \
+         choice is regime-dependent (that is why Algorithm 1 evaluates both); (3) r2 has an \
+         interior optimum — more parts overlap more until launch α dominates (§2.3)."
+    );
+}

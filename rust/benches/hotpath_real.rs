@@ -1,0 +1,112 @@
+//! Real-execution hot path: the tiny MoE served end-to-end through the
+//! AOT artifacts on PJRT-CPU under each scheduling policy, plus
+//! stage-level micro-benchmarks of the runtime (the §Perf targets for
+//! L3 live here).
+//!
+//! Not a paper table — this validates that the three layers compose and
+//! measures the coordinator's own overheads (dispatch, routing,
+//! combine) so the perf pass has a baseline. On a 1-core host the
+//! parallel speedups are not observable; scheduling overhead and
+//! correctness-under-load are.
+//!
+//! Run: `cargo bench --bench hotpath_real` (requires `make artifacts`)
+
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::pipeline::{ExecConfig, Pipeline};
+use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::runtime::artifacts_dir;
+use findep::runtime::tensor::Tensor;
+use findep::sched::Order;
+use findep::util::bench::{fmt_duration, Bencher, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping hotpath_real: run `make artifacts` first");
+        return Ok(());
+    }
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let model = ModelHandle::load(&dir, true)?;
+    let (s, m) = (model.seq_len, model.model.embed);
+
+    // --- Stage micro-benchmarks (L3 hot-path pieces). -------------------
+    let mut table = Table::new("runtime stage micro-benchmarks (tiny model)", &["stage", "mean", "p50"]);
+    let mut h = Tensor::zeros(vec![2, s, m]);
+    for (i, v) in h.data.iter_mut().enumerate() {
+        *v = ((i % 23) as f32 - 11.0) * 0.02;
+    }
+    let r = bencher.run("attention(m_a=2)", || {
+        let _ = model.attention(0, &h).unwrap();
+    });
+    table.row(&["attention m_a=2".into(), fmt_duration(r.mean_s()), fmt_duration(r.p50_s())]);
+    let x = h.reshaped(vec![2 * s, m]);
+    let r = bencher.run("gate(n=32)", || {
+        let _ = model.gate(0, &x).unwrap();
+    });
+    table.row(&["gate n=32".into(), fmt_duration(r.mean_s()), fmt_duration(r.p50_s())]);
+    let r = bencher.run("shared_ffn(n=32)", || {
+        let _ = model.shared_expert(0, &x).unwrap();
+    });
+    table.row(&["shared FFN n=32".into(), fmt_duration(r.mean_s()), fmt_duration(r.p50_s())]);
+    let x8 = x.truncate_rows(8);
+    let r = bencher.run("expert_ffn(n=8)", || {
+        let _ = model.expert(0, 3, &x8).unwrap();
+    });
+    table.row(&["expert FFN n=8".into(), fmt_duration(r.mean_s()), fmt_duration(r.p50_s())]);
+    table.print();
+
+    // --- Whole forward pass per schedule. --------------------------------
+    let pipeline = Pipeline::new(model.clone(), 2, None)?;
+    let mut batch = Tensor::zeros(vec![4, s, m]);
+    for (i, v) in batch.data.iter_mut().enumerate() {
+        *v = ((i % 31) as f32 - 15.0) * 0.01;
+    }
+    let mut table = Table::new(
+        "forward pass (4 samples x 16 tokens, 2 layers, real PJRT execution)",
+        &["schedule", "mean", "p50", "tokens/s"],
+    );
+    for (name, cfg) in [
+        ("naive (r1=1,r2=1)", ExecConfig::naive()),
+        ("pppipe (r1=2)", ExecConfig::pppipe(2)),
+        ("findep (r1=2,r2=2,ASAS)", ExecConfig::findep(2, 2, Order::Asas)),
+        ("findep (r1=4,r2=2,ASAS)", ExecConfig::findep(4, 2, Order::Asas)),
+        ("findep (r1=2,r2=4,AASS)", ExecConfig::findep(2, 4, Order::Aass)),
+    ] {
+        let r = bencher.run(name, || {
+            let _ = pipeline.forward(&batch, cfg).unwrap();
+        });
+        table.row(&[
+            name.into(),
+            fmt_duration(r.mean_s()),
+            fmt_duration(r.p50_s()),
+            format!("{:.0}", 4.0 * s as f64 / r.mean_s()),
+        ]);
+    }
+    table.print();
+
+    // --- Server path including batching + routing + metrics. -------------
+    let srv = Server::new(model, 2, None)?;
+    let reqs: Vec<EmbeddedRequest> =
+        (0..4).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+    let mut table = Table::new("server serve_batch (4 requests)", &["policy", "mean", "tokens/s"]);
+    for (name, policy) in [
+        ("naive", Policy::Naive),
+        ("pppipe", Policy::PpPipe { r1: 2 }),
+        ("findep", Policy::FinDep { r1: 2, r2: 2, order: Order::Asas }),
+        ("adaptive (incl. re-solve)", Policy::Adaptive),
+    ] {
+        let r = bencher.run(name, || {
+            let _ = srv.serve_batch(&reqs, policy).unwrap();
+        });
+        table.row(&[
+            name.into(),
+            fmt_duration(r.mean_s()),
+            format!("{:.0}", 4.0 * s as f64 / r.mean_s()),
+        ]);
+    }
+    table.print();
+    println!("(record before/after numbers in EXPERIMENTS.md §Perf when optimizing)");
+    Ok(())
+}

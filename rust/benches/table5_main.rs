@@ -1,0 +1,103 @@
+//! Table 5 — the main result: FinDEP vs best-configured PPPipe across
+//! two backbones (DeepSeek-V2 with shared experts, Qwen3-MoE without),
+//! four testbeds, and sequence lengths 1024-8192.
+//!
+//! Layer counts per testbed follow §5.4 (DeepSeek 8/4/16/16, Qwen
+//! 24/12/48/48); (ag, eg) follows §5.5 ((3,5) / (4,4) on 8-GPU
+//! testbeds, (8,24) on D). PPPipe is swept to its optimal (m_a, r1)
+//! exactly as the paper's bracketed speedups require.
+//!
+//! Run: `cargo bench --bench table5_main`
+
+use findep::baselines::{best_pppipe, best_pppipe_deep};
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::solver::{solve, Instance, SolverParams};
+use findep::util::bench::Table;
+
+fn main() {
+    let params = SolverParams::default();
+    let seqs = [1024usize, 2048, 4096, 8192];
+    let paper_speedups: &[(&str, &str, &[f64])] = &[
+        // paper Table 5 speedup columns per testbed for reference rows
+        ("deepseek", "A", &[1.10, 1.09, 1.16, f64::NAN]),
+        ("deepseek", "B", &[1.07, 1.06, 1.06, f64::NAN]),
+        ("deepseek", "C", &[1.02, 1.03, 1.10, f64::NAN]),
+        ("deepseek", "D", &[1.08, 1.12, 1.10, f64::NAN]),
+        ("qwen", "A", &[1.13, 1.20, 1.13, 1.53]),
+        ("qwen", "B", &[1.11, 1.08, 1.23, 1.61]),
+        ("qwen", "C", &[1.03, 1.02, 1.07, 1.35]),
+        ("qwen", "D", &[1.08, 1.08, 1.24, 1.22]),
+    ];
+
+    for (backbone, deepseek) in [("DeepSeek-V2", true), ("Qwen3-MoE", false)] {
+        let mut table = Table::new(
+            &format!("Table 5 ({backbone}): tokens/s, FinDEP speedup vs best PPPipe"),
+            &["testbed", "S", "PPPipe", "FinDEP", "speedup", "paper", "vs deep-PP (ablation)"],
+        );
+        for tb in Testbed::all() {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            let split = GroupSplit::paper_default(&tb, deepseek);
+            for (si, &s) in seqs.iter().enumerate() {
+                // The paper's DeepSeek rows stop at 4096.
+                if deepseek && s == 8192 {
+                    continue;
+                }
+                let inst = Instance::new(model.clone(), tb.clone(), split, s);
+                let (pp, fd) = (best_pppipe(&inst, &params), solve(&inst, &params));
+                let pp_deep = best_pppipe_deep(&inst, &params);
+                let paper = paper_speedups
+                    .iter()
+                    .find(|(b, t, _)| {
+                        *b == if deepseek { "deepseek" } else { "qwen" }
+                            && tb.name.starts_with(&format!("{t} "))
+                    })
+                    .map(|(_, _, v)| v[si])
+                    .unwrap_or(f64::NAN);
+                match (pp, fd) {
+                    (Some(pp), Some(fd)) => {
+                        let sp = fd.throughput_tokens / pp.throughput_tokens;
+                        let sp_deep = pp_deep
+                            .map(|d| fd.throughput_tokens / d.throughput_tokens)
+                            .unwrap_or(f64::NAN);
+                        table.row(&[
+                            tb.name.clone(),
+                            s.to_string(),
+                            format!("{:.0}", pp.throughput_tokens),
+                            format!("{:.0}", fd.throughput_tokens),
+                            format!("{sp:.3}x"),
+                            if paper.is_nan() { "-".into() } else { format!("{paper:.2}x") },
+                            format!("{sp_deep:.3}x"),
+                        ]);
+                        assert!(
+                            sp >= 0.999,
+                            "FinDEP lost to PPPipe on {} S={s}",
+                            tb.name
+                        );
+                    }
+                    _ => table.row(&[
+                        tb.name.clone(),
+                        s.to_string(),
+                        "infeasible".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
+        table.print();
+    }
+    println!(
+        "Shape check vs paper: FinDEP ≥ PPPipe everywhere; gains concentrate on comm-bound \
+         testbeds (A/B/D) and shrink toward 1.0x on NVSwitch testbed C (Amdahl, §5.5).\n\
+         PPPipe is ping-pong double buffering (r1 ≤ 2, Fig. 3b); the ablation column compares \
+         FinDEP against an idealized depth-unlimited PPPipe, quantifying how much of the win \
+         is pipeline depth vs fine-grained task scheduling — see EXPERIMENTS.md."
+    );
+}

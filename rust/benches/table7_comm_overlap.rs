@@ -1,0 +1,58 @@
+//! Table 7 — non-overlapped communication time for naive DEP, PPPipe,
+//! and FinDEP (DeepSeek-V2 on testbed A, S ∈ {1024, 2048, 4096}).
+//!
+//! "Non-overlapped" = wall time where a link is transferring while both
+//! compute groups sit idle (the communication the schedule failed to
+//! hide). Regenerated from the simulator traces of each scheduler's
+//! best configuration.
+//!
+//! Run: `cargo bench --bench table7_comm_overlap`
+
+use findep::baselines::{best_naive, best_pppipe};
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::sched::Plan;
+use findep::simulator::{simulate, ScheduleTrace};
+use findep::solver::{solve, Instance, SolverParams};
+use findep::util::bench::Table;
+
+fn main() {
+    let params = SolverParams::default();
+    let tb = Testbed::a();
+    let model = ModelConfig::deepseek_v2(8); // testbed-A config (§5.4)
+    let split = GroupSplit::new(3, 5);
+
+    let mut table = Table::new(
+        "Table 7: non-overlapped communication time (ms), DeepSeek-V2 on testbed A",
+        &["S", "Naive-DEP", "PPPipe", "FinDEP", "ordering ok?"],
+    );
+    for s in [4096usize, 2048, 1024] {
+        let inst = Instance::new(model.clone(), tb.clone(), split, s);
+        let exposed_ms = |cfg: findep::sched::PlanConfig| -> f64 {
+            let sm = inst.stage_models();
+            let plan = Plan::build(&sm, cfg, model.n_layers, split.ag, s);
+            let sim = simulate(&plan);
+            ScheduleTrace::from_sim(&plan, &sim).non_overlapped_comm() * 1e3
+        };
+        let nv = best_naive(&inst, params.ma_cap).expect("naive feasible");
+        let pp = best_pppipe(&inst, &params).expect("pppipe feasible");
+        let fd = solve(&inst, &params).expect("findep feasible");
+        let (e_nv, e_pp, e_fd) =
+            (exposed_ms(nv.config), exposed_ms(pp.config), exposed_ms(fd.config));
+        let ok = e_nv >= e_pp - 1e-6 && e_pp >= e_fd - 1e-6;
+        table.row(&[
+            s.to_string(),
+            format!("{e_nv:.2}"),
+            format!("{e_pp:.2}"),
+            format!("{e_fd:.2}"),
+            if ok { "yes".into() } else { "NO — VIOLATION".into() },
+        ]);
+        assert!(ok, "exposure ordering violated at S={s}");
+    }
+    table.print();
+    println!(
+        "paper Table 7 (ms): S=4096: 905.49 / 528.94 / 309.81; S=2048: 536.22 / 144.32 / 52.60; \
+         S=1024: 194.95 / 188.65 / 97.33. The ordering naive > PPPipe > FinDEP and the shrinking \
+         exposure with better scheduling are the reproduced shape; FinDEP reduces exposed \
+         communication by >1.7x vs PPPipe at the comm-heavy points, as §5.4's discussion reports."
+    );
+}

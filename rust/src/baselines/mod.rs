@@ -1,0 +1,10 @@
+//! Baseline schedulers the paper compares against: naive sequential DEP
+//! (Fig. 3a) and MegaScale-Infer's ping-pong pipeline, PPPipe (Fig. 3b),
+//! each with its own best-configuration sweep so comparisons are against
+//! the *optimally tuned* baseline, as in Table 5.
+
+pub mod naive;
+pub mod pppipe;
+
+pub use naive::best_naive;
+pub use pppipe::{best_pppipe, best_pppipe_deep};

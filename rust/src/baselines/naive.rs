@@ -1,0 +1,65 @@
+//! Naive DEP (Fig. 3a): strict sequential handoff — the whole mini-batch
+//! moves AG → A2E → EG → E2A each layer with no pipelining at all
+//! (r1 = r2 = 1, shared expert processed inline with attention).
+
+use crate::sched::PlanConfig;
+use crate::solver::algorithm1::{Instance, Solution};
+
+/// Best naive configuration: the largest memory-feasible m_a (throughput
+/// is monotone in batch size here too — amortizing fixed overheads is
+/// all naive DEP can do).
+pub fn best_naive(inst: &Instance, ma_cap: usize) -> Option<Solution> {
+    let mem = inst.memory();
+    let sm = inst.stage_models();
+    let cap = mem.max_samples_per_ag_gpu().min(ma_cap);
+    if cap == 0 || !mem.eg_feasible() {
+        return None;
+    }
+    let mut best: Option<Solution> = None;
+    for m_a in 1..=cap {
+        let cfg = PlanConfig::naive(m_a, sm.m_e(m_a as f64, 1));
+        let (makespan, tput) = inst.evaluate(cfg);
+        if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
+            best = Some(Solution {
+                config: cfg,
+                makespan,
+                throughput_tokens: tput,
+                solve_seconds: 0.0,
+                evals: m_a,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+
+    #[test]
+    fn naive_is_sequential() {
+        let inst = Instance::new(
+            ModelConfig::deepseek_v2(4),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let sol = best_naive(&inst, 8).unwrap();
+        assert_eq!(sol.config.r1, 1);
+        assert_eq!(sol.config.r2, 1);
+        assert!(sol.config.fuse_shared);
+        assert!(sol.throughput_tokens > 0.0);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let inst = Instance::new(
+            ModelConfig::deepseek_v2(8),
+            Testbed::b(),
+            GroupSplit::new(7, 1),
+            2048,
+        );
+        assert!(best_naive(&inst, 8).is_none());
+    }
+}

@@ -1,0 +1,130 @@
+//! PPPipe — the ping-pong micro-batch pipeline of MegaScale-Infer [36]
+//! (Fig. 3b), reimplemented as the paper does for fair comparison
+//! (§5.4: "we provide our own reimplementation").
+//!
+//! PPPipe splits the mini-batch into `r1` micro-batches but has no
+//! fine-grained EG split (`r2 = 1`) and no shared-expert scheduling —
+//! the shared expert is fused into the attention task (§2.3: "one can
+//! support including the shared expert by regarding it as a part of
+//! attention"). `best_pppipe` sweeps the same memory-constrained
+//! Pareto frontier as Algorithm 1 so Table 5's "optimal ep, dp, m_a and
+//! r1 settings" comparison is faithful.
+
+use crate::sched::PlanConfig;
+use crate::solver::algorithm1::{Instance, Solution, SolverParams};
+
+/// Ping-pong pipelining is double buffering: the attention and expert
+/// groups alternate between **two** in-flight micro-batches (Fig. 3b;
+/// §2.2 "e.g., r1 = 2 in Fig. 3b"). The faithful baseline therefore
+/// caps r1 at 2; [`best_pppipe_deep`] removes the cap for the ablation
+/// of how much of FinDEP's win is depth vs fine-graining.
+pub const PPPIPE_R1_CAP: usize = 2;
+
+/// Best PPPipe configuration for an instance (sweep m_a on the memory
+/// Pareto frontier, r1 ∈ {1, 2} per the ping-pong discipline).
+pub fn best_pppipe(inst: &Instance, params: &SolverParams) -> Option<Solution> {
+    best_pppipe_capped(inst, params, PPPIPE_R1_CAP)
+}
+
+/// Ablation variant: PPPipe with arbitrary pipeline depth (an idealized
+/// baseline stronger than [36]'s published system).
+pub fn best_pppipe_deep(inst: &Instance, params: &SolverParams) -> Option<Solution> {
+    best_pppipe_capped(inst, params, params.r1_cap)
+}
+
+fn best_pppipe_capped(inst: &Instance, params: &SolverParams, r1_cap: usize) -> Option<Solution> {
+    let mem = inst.memory();
+    let sm = inst.stage_models();
+    let mut best: Option<Solution> = None;
+    let mut evals = 0usize;
+    for m_a in (1..=params.ma_cap).rev() {
+        let max_r1 = mem.get_max_r1(m_a, params.r1_cap.min(r1_cap));
+        for r1 in 1..=max_r1 {
+            let cfg = PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1));
+            let (makespan, tput) = inst.evaluate(cfg);
+            evals += 1;
+            if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
+                best = Some(Solution {
+                    config: cfg,
+                    makespan,
+                    throughput_tokens: tput,
+                    solve_seconds: 0.0,
+                    evals: 0,
+                });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.evals = evals;
+        b
+    })
+}
+
+/// PPPipe at a *fixed* (m_a, r1) — used by the online comparison
+/// (Table 6) where the batch is dictated by arrivals.
+pub fn pppipe_fixed(inst: &Instance, m_a: usize, r1: usize) -> Solution {
+    let sm = inst.stage_models();
+    let cfg = PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1));
+    let (makespan, tput) = inst.evaluate(cfg);
+    Solution { config: cfg, makespan, throughput_tokens: tput, solve_seconds: 0.0, evals: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+    use crate::solver::algorithm1::solve;
+
+    fn inst() -> Instance {
+        Instance::new(ModelConfig::deepseek_v2(8), Testbed::a(), GroupSplit::new(3, 5), 2048)
+    }
+
+    #[test]
+    fn pppipe_has_no_fine_graining() {
+        let sol = best_pppipe(&inst(), &SolverParams::default()).unwrap();
+        assert_eq!(sol.config.r2, 1);
+        assert!(sol.config.fuse_shared);
+        assert!(sol.throughput_tokens > 0.0);
+    }
+
+    #[test]
+    fn findep_never_loses_to_pppipe() {
+        // FinDEP's search space strictly contains PPPipe-with-separate-
+        // shared; with the fused variant it may differ slightly, but the
+        // solved FinDEP must beat or match the best PPPipe on every
+        // testbed (the paper's headline claim, Table 5).
+        for tb in Testbed::all() {
+            let inst = Instance::new(
+                ModelConfig::deepseek_v2(8),
+                tb,
+                GroupSplit::paper_default(&Testbed::a(), true),
+                2048,
+            );
+            let pp = best_pppipe(&inst, &SolverParams::default()).unwrap();
+            let fd = solve(&inst, &SolverParams::default()).unwrap();
+            assert!(
+                fd.throughput_tokens >= pp.throughput_tokens * 0.999,
+                "FinDEP {} < PPPipe {} on {}",
+                fd.throughput_tokens,
+                pp.throughput_tokens,
+                inst.testbed.name
+            );
+        }
+    }
+
+    #[test]
+    fn pppipe_beats_naive() {
+        let inst = inst();
+        let pp = best_pppipe(&inst, &SolverParams::default()).unwrap();
+        let nv = crate::baselines::naive::best_naive(&inst, 8).unwrap();
+        assert!(pp.throughput_tokens >= nv.throughput_tokens);
+    }
+
+    #[test]
+    fn fixed_config_matches_eval() {
+        let inst = inst();
+        let s = pppipe_fixed(&inst, 2, 2);
+        assert_eq!((s.config.m_a, s.config.r1), (2, 2));
+        assert!(s.makespan > 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Model and cluster configuration types.
+
+pub mod cluster;
+pub mod model;
+
+pub use cluster::{GroupSplit, Testbed};
+pub use model::{AttentionKind, ModelConfig};

@@ -1,0 +1,127 @@
+//! A2E / E2A links: serialized message channels with optional α-β delay
+//! injection.
+//!
+//! Each direction is one exclusive resource (§3.2). A link is a
+//! dedicated forwarding thread: messages queue in FIFO order and occupy
+//! the link for `α + β·bytes` (when a delay model is set), which is
+//! exactly the t_c model of Eq. 9 — this keeps schedule differences
+//! observable on a host whose real interconnect is a memcpy.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// α-β transfer-time model for delay injection.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkDelay {
+    pub alpha_s: f64,
+    pub beta_s_per_byte: f64,
+}
+
+impl LinkDelay {
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.alpha_s + self.beta_s_per_byte * bytes as f64
+    }
+}
+
+/// A message that knows its wire size.
+pub trait Payload: Send + 'static {
+    fn wire_bytes(&self) -> usize;
+}
+
+/// One direction of the inter-group interconnect.
+pub struct Link<T: Payload> {
+    tx: Sender<T>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T: Payload> Link<T> {
+    /// Create a link delivering into `out_tx`. With `delay = None`
+    /// messages forward immediately (still FIFO-serialized).
+    pub fn new(out_tx: Sender<T>, delay: Option<LinkDelay>) -> Self {
+        let (tx, rx): (Sender<T>, Receiver<T>) = channel();
+        let handle = std::thread::Builder::new()
+            .name("findep-link".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    if let Some(d) = delay {
+                        let t = d.transfer_time(msg.wire_bytes());
+                        if t > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(t));
+                        }
+                    }
+                    if out_tx.send(msg).is_err() {
+                        break; // receiver gone: drain and exit
+                    }
+                }
+            })
+            .expect("spawn link thread");
+        Self { tx, handle: Some(handle) }
+    }
+
+    pub fn send(&self, msg: T) -> Result<(), std::sync::mpsc::SendError<T>> {
+        self.tx.send(msg)
+    }
+}
+
+impl<T: Payload> Drop for Link<T> {
+    fn drop(&mut self) {
+        // Dropping tx closes the channel; the thread drains and exits.
+        let (dead_tx, _) = channel();
+        self.tx = dead_tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    struct Msg(usize);
+
+    impl Payload for Msg {
+        fn wire_bytes(&self) -> usize {
+            self.0
+        }
+    }
+
+    #[test]
+    fn forwards_in_fifo_order() {
+        let (out_tx, out_rx) = channel();
+        let link = Link::new(out_tx, None);
+        for i in 0..10 {
+            link.send(Msg(i)).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(out_rx.recv().unwrap().0, i);
+        }
+    }
+
+    #[test]
+    fn delay_model_injects_latency() {
+        let (out_tx, out_rx) = channel();
+        let delay = LinkDelay { alpha_s: 5e-3, beta_s_per_byte: 0.0 };
+        let link = Link::new(out_tx, Some(delay));
+        let t0 = Instant::now();
+        link.send(Msg(0)).unwrap();
+        out_rx.recv().unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 4e-3, "delay not applied");
+    }
+
+    #[test]
+    fn transfer_time_is_affine() {
+        let d = LinkDelay { alpha_s: 1e-3, beta_s_per_byte: 1e-6 };
+        assert!((d.transfer_time(1000) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let (out_tx, _out_rx) = channel();
+        let link = Link::new(out_tx, None);
+        link.send(Msg(1)).unwrap();
+        drop(link); // must not hang
+    }
+}

@@ -1,0 +1,22 @@
+//! The DEP serving coordinator — the L3 system of the paper, running
+//! for real on PJRT-CPU.
+//!
+//! Topology mirrors §2.2 / Fig. 2: one AG worker executes attention +
+//! gate + shared-expert artifacts (AG weights are replicated, so one
+//! worker faithfully represents per-GPU behaviour and whole-AG
+//! throughput is `ag ×` its rate); `eg` EG workers each own
+//! `E/eg` experts and execute the expert-FFN artifact per routed token
+//! group. A2E and E2A are channel links with optional α-β delay
+//! injection so schedule differences remain observable on a host without
+//! real interconnect.
+//!
+//! The pipeline executor consumes a [`crate::sched::PlanConfig`]
+//! (produced by Algorithm 1, PPPipe, or naive) and issues fine-grained
+//! tasks in the planned order — the same vocabulary the simulator
+//! executes analytically.
+
+pub mod links;
+pub mod moe;
+pub mod pipeline;
+pub mod router;
+pub mod server;

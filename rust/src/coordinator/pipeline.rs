@@ -1,0 +1,527 @@
+//! The plan-driven pipeline executor: runs a real forward pass through
+//! the AOT artifacts with FinDEP's fine-grained task structure.
+//!
+//! Thread topology per [`Pipeline`]:
+//!
+//! ```text
+//!   caller (AG loop: attention → gate → dispatch → shared)
+//!      │  A2E link (α-β delayed, FIFO)
+//!      ▼
+//!   EG workers (one per logical expert device, E/eg experts each)
+//!      │  E2A link
+//!      ▼
+//!   collector (combine: residual + weighted expert outputs + shared)
+//!      │  completion channel
+//!      └──▶ caller (next layer's attention input)
+//! ```
+//!
+//! The AG loop issues tasks in the planned order (`r1` chunks, `r2`
+//! parts, ASAS/AASS) so schedule quality shows up as wall-clock
+//! differences; numerics are schedule-independent (pinned by the golden
+//! tests).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::links::{Link, LinkDelay, Payload};
+use crate::coordinator::moe::ModelHandle;
+use crate::coordinator::router::{self, ExpertGroup, Routing};
+use crate::runtime::tensor::Tensor;
+use crate::sched::Order;
+
+/// Pipeline execution knobs (the subset of `PlanConfig` the real
+/// executor needs; `m_e` is implied by routing).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConfig {
+    pub r1: usize,
+    pub r2: usize,
+    pub order: Order,
+    /// PPPipe semantics: run the shared expert inline right after
+    /// attention (blocking A2E dispatch) instead of as its own task.
+    pub fuse_shared: bool,
+}
+
+impl ExecConfig {
+    pub fn findep(r1: usize, r2: usize, order: Order) -> Self {
+        Self { r1, r2, order, fuse_shared: false }
+    }
+
+    pub fn pppipe(r1: usize) -> Self {
+        Self { r1, r2: 1, order: Order::Asas, fuse_shared: true }
+    }
+
+    pub fn naive() -> Self {
+        Self { r1: 1, r2: 1, order: Order::Asas, fuse_shared: true }
+    }
+}
+
+/// Work unit crossing the A2E link: one fine-grained part of one chunk.
+struct A2EMsg {
+    layer: usize,
+    chunk: usize,
+    /// (group, packed input rows)
+    work: Vec<(ExpertGroup, Tensor)>,
+    bytes: usize,
+}
+
+impl Payload for A2EMsg {
+    fn wire_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// Expert outputs crossing the E2A link.
+struct E2AMsg {
+    layer: usize,
+    chunk: usize,
+    results: Vec<(ExpertGroup, Tensor)>,
+    bytes: usize,
+}
+
+impl Payload for E2AMsg {
+    fn wire_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+enum CollectMsg {
+    /// Start combining a (layer, chunk): `x` is the MoE input (residual
+    /// base), expecting `parts` E2A messages and `shared` contributions.
+    Open { layer: usize, chunk: usize, x: Tensor, parts: usize, wants_shared: bool },
+    Shared { layer: usize, chunk: usize, y: Tensor },
+    Expert(E2AMsg),
+}
+
+/// Per-forward-pass timing breakdown (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct ForwardStats {
+    pub total: f64,
+    pub attention: f64,
+    pub gate: f64,
+    pub shared: f64,
+    pub dispatch: f64,
+    /// Time the AG loop spent blocked waiting for combines.
+    pub wait: f64,
+    pub tasks_issued: usize,
+}
+
+/// A persistent DEP pipeline over one loaded model.
+pub struct Pipeline {
+    model: ModelHandle,
+    pub eg: usize,
+    a2e: Vec<Link<A2EMsg>>, // one per EG worker (its slice of the fabric)
+    collect_tx: Sender<CollectMsg>,
+    done_rx: Receiver<(usize, Tensor)>, // (chunk, combined hidden)
+    workers: Vec<JoinHandle<()>>,
+    collector: Option<JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Spawn EG workers and the collector. `link_delay` applies per
+    /// direction (None = raw host speed).
+    pub fn new(model: ModelHandle, eg: usize, link_delay: Option<LinkDelay>) -> Result<Pipeline> {
+        assert!(eg >= 1);
+        let (done_tx, done_rx) = channel::<(usize, Tensor)>();
+        let (collect_tx, collect_rx) = channel::<CollectMsg>();
+
+        // Collector thread: accumulates combines, emits next-layer
+        // hidden states.
+        let collector = {
+            std::thread::Builder::new()
+                .name("findep-collector".into())
+                .spawn(move || collector_loop(collect_rx, done_tx))
+                .context("spawn collector")?
+        };
+
+        // E2A link feeds the collector.
+        // Each EG worker gets its own A2E lane; E2A lanes merge into the
+        // collector channel through one delayed link (the link thread
+        // serializes, matching the single E2A resource of §3.2).
+        let (e2a_in_tx, e2a_in_rx) = channel::<E2AMsg>();
+        let e2a_link_tx = {
+            let collect_tx = collect_tx.clone();
+            let link: Link<E2AMsg> = Link::new(e2a_in_tx, link_delay);
+            // Forward link output into collector.
+            let fwd = std::thread::Builder::new()
+                .name("findep-e2a-fwd".into())
+                .spawn(move || {
+                    while let Ok(msg) = e2a_in_rx.recv() {
+                        if collect_tx.send(CollectMsg::Expert(msg)).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .context("spawn e2a forwarder")?;
+            // Keep the forwarder alive by leaking its handle into the
+            // worker list later.
+            (link, fwd)
+        };
+        let (e2a_link, e2a_fwd) = e2a_link_tx;
+        let e2a_link = std::sync::Arc::new(e2a_link);
+
+        let mut a2e = Vec::new();
+        let mut workers = vec![e2a_fwd];
+        for w in 0..eg {
+            let (work_tx, work_rx) = channel::<A2EMsg>();
+            let link = Link::new(work_tx, link_delay);
+            a2e.push(link);
+            let model_w = model.clone();
+            let e2a = e2a_link.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("findep-eg{w}"))
+                    .spawn(move || eg_worker_loop(w, model_w, work_rx, e2a))
+                    .context("spawn EG worker")?,
+            );
+        }
+
+        Ok(Pipeline { model, eg, a2e, collect_tx, done_rx, workers, collector: Some(collector) })
+    }
+
+    pub fn model(&self) -> &ModelHandle {
+        &self.model
+    }
+
+    /// Run one forward pass over `batch` `[B, S, M]` with B = r1·m_a.
+    /// Returns the final hidden states and the timing breakdown.
+    pub fn forward(&self, batch: &Tensor, cfg: ExecConfig) -> Result<(Tensor, ForwardStats)> {
+        let t_start = Instant::now();
+        let mut stats = ForwardStats::default();
+        let b = batch.shape[0];
+        let s = batch.shape[1];
+        let m = batch.shape[2];
+        anyhow::ensure!(b % cfg.r1 == 0, "batch {b} not divisible by r1 {}", cfg.r1);
+        let m_a = b / cfg.r1;
+        anyhow::ensure!(
+            self.model.engine.bucket_for("attention", m_a)? == m_a,
+            "m_a {m_a} is not an attention bucket"
+        );
+        let t_layers = self.model.model.n_layers;
+        let has_shared = self.model.model.n_shared > 0;
+
+        // Chunk the batch along samples.
+        let mut hidden: Vec<Tensor> = (0..cfg.r1)
+            .map(|i| {
+                let w = s * m;
+                Tensor::new(
+                    vec![m_a, s, m],
+                    batch.data[i * m_a * w..(i + 1) * m_a * w].to_vec(),
+                )
+            })
+            .collect();
+
+        for layer in 0..t_layers {
+            // Stage closure: attention + gate + dispatch for chunk i.
+            let run_attn_dispatch = |i: usize,
+                                         hidden: &mut [Tensor],
+                                         stats: &mut ForwardStats|
+             -> Result<()> {
+                let t0 = Instant::now();
+                let h = self.model.attention(layer, &hidden[i])?;
+                stats.attention += t0.elapsed().as_secs_f64();
+                stats.tasks_issued += 1;
+
+                // PPPipe fuses the shared expert into the attention
+                // task: it runs *before* dispatch, delaying A2E.
+                let fused_shared = if cfg.fuse_shared && has_shared {
+                    let x = h.reshaped(vec![m_a * s, m]);
+                    let t0 = Instant::now();
+                    let y = self.model.shared_expert(layer, &x)?;
+                    stats.shared += t0.elapsed().as_secs_f64();
+                    stats.tasks_issued += 1;
+                    Some(y)
+                } else {
+                    None
+                };
+
+                let x = h.reshaped(vec![m_a * s, m]);
+                let t0 = Instant::now();
+                let (probs, idx) = self.model.gate(layer, &x)?;
+                stats.gate += t0.elapsed().as_secs_f64();
+
+                let routing = router::route(&probs, &idx, self.model.model.n_experts);
+                let parts = routing.split_parts(cfg.r2);
+
+                self.collect_tx
+                    .send(CollectMsg::Open {
+                        layer,
+                        chunk: i,
+                        x: x.clone(),
+                        parts: parts.iter().map(|p| self.lanes_used(p)).sum(),
+                        wants_shared: has_shared,
+                    })
+                    .ok()
+                    .context("collector gone")?;
+                if let Some(y) = fused_shared {
+                    self.collect_tx
+                        .send(CollectMsg::Shared { layer, chunk: i, y })
+                        .ok()
+                        .context("collector gone")?;
+                }
+
+                let t0 = Instant::now();
+                for part in &parts {
+                    self.dispatch_part(layer, i, &x, part)?;
+                }
+                stats.dispatch += t0.elapsed().as_secs_f64();
+                hidden[i] = h;
+                Ok(())
+            };
+
+            let run_shared = |i: usize, hidden: &[Tensor], stats: &mut ForwardStats| -> Result<()> {
+                if !has_shared || cfg.fuse_shared {
+                    return Ok(());
+                }
+                let x = hidden[i].reshaped(vec![m_a * s, m]);
+                let t0 = Instant::now();
+                let y = self.model.shared_expert(layer, &x)?;
+                stats.shared += t0.elapsed().as_secs_f64();
+                stats.tasks_issued += 1;
+                self.collect_tx
+                    .send(CollectMsg::Shared { layer, chunk: i, y })
+                    .ok()
+                    .context("collector gone")?;
+                Ok(())
+            };
+
+            match cfg.order {
+                Order::Asas => {
+                    for i in 0..cfg.r1 {
+                        run_attn_dispatch(i, &mut hidden, &mut stats)?;
+                        run_shared(i, &hidden, &mut stats)?;
+                    }
+                }
+                Order::Aass => {
+                    for i in 0..cfg.r1 {
+                        run_attn_dispatch(i, &mut hidden, &mut stats)?;
+                    }
+                    for i in 0..cfg.r1 {
+                        run_shared(i, &hidden, &mut stats)?;
+                    }
+                }
+            }
+
+            // Collect combined outputs for every chunk (they arrive as
+            // their parts complete; chunks may finish out of order).
+            let t0 = Instant::now();
+            let mut got = 0;
+            while got < cfg.r1 {
+                let (chunk, h_next) = self
+                    .done_rx
+                    .recv()
+                    .ok()
+                    .context("collector channel closed")?;
+                hidden[chunk] = h_next.reshaped(vec![m_a, s, m]);
+                got += 1;
+            }
+            stats.wait += t0.elapsed().as_secs_f64();
+        }
+
+        // Reassemble the batch.
+        let mut out = Vec::with_capacity(b * s * m);
+        for h in &hidden {
+            out.extend_from_slice(&h.data);
+        }
+        stats.total = t_start.elapsed().as_secs_f64();
+        Ok((Tensor::new(vec![b, s, m], out), stats))
+    }
+
+    /// Number of EG lanes a part touches (collector bookkeeping).
+    fn lanes_used(&self, part: &Routing) -> usize {
+        let mut used = vec![false; self.eg];
+        for g in &part.groups {
+            used[self.worker_of(g.expert)] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    fn worker_of(&self, expert: usize) -> usize {
+        let per = self.model.model.n_experts.div_ceil(self.eg);
+        expert / per
+    }
+
+    /// Send one fine-grained part across A2E, splitting per EG worker.
+    fn dispatch_part(&self, layer: usize, chunk: usize, x: &Tensor, part: &Routing) -> Result<()> {
+        let mut per_worker: BTreeMap<usize, Vec<(ExpertGroup, Tensor)>> = BTreeMap::new();
+        for g in &part.groups {
+            let packed = router::pack(x, g);
+            per_worker.entry(self.worker_of(g.expert)).or_default().push((g.clone(), packed));
+        }
+        for (w, work) in per_worker {
+            let bytes: usize = work.iter().map(|(_, t)| t.numel() * 4).sum();
+            self.a2e[w]
+                .send(A2EMsg { layer, chunk, work, bytes })
+                .ok()
+                .context("EG worker gone")?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // Close A2E lanes: workers see disconnect and exit; then the E2A
+        // link closes, the collector sees disconnect and exits.
+        self.a2e.clear();
+        let (dead_tx, _) = channel();
+        self.collect_tx = dead_tx;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+fn eg_worker_loop(
+    _id: usize,
+    model: ModelHandle,
+    work_rx: Receiver<A2EMsg>,
+    e2a: std::sync::Arc<Link<E2AMsg>>,
+) {
+    while let Ok(msg) = work_rx.recv() {
+        let mut results = Vec::with_capacity(msg.work.len());
+        for (group, x) in msg.work {
+            match model.expert(msg.layer, group.expert, &x) {
+                Ok(y) => results.push((group, y)),
+                Err(e) => {
+                    eprintln!("EG worker: expert {} failed: {e:#}", group.expert);
+                    return;
+                }
+            }
+        }
+        let bytes: usize = results.iter().map(|(_, t)| t.numel() * 4).sum();
+        if e2a.send(E2AMsg { layer: msg.layer, chunk: msg.chunk, results, bytes }).is_err() {
+            return;
+        }
+    }
+}
+
+struct CombineState {
+    acc: Tensor,
+    parts_left: usize,
+    shared_left: bool,
+}
+
+fn collector_loop(rx: Receiver<CollectMsg>, done_tx: Sender<(usize, Tensor)>) {
+    let mut states: BTreeMap<(usize, usize), CombineState> = BTreeMap::new();
+    while let Ok(msg) = rx.recv() {
+        let key = match msg {
+            CollectMsg::Open { layer, chunk, x, parts, wants_shared } => {
+                // residual base: out = x + routed + shared
+                let st =
+                    CombineState { acc: x, parts_left: parts, shared_left: wants_shared };
+                states.insert((layer, chunk), st);
+                (layer, chunk)
+            }
+            CollectMsg::Shared { layer, chunk, y } => {
+                let st = states.get_mut(&(layer, chunk)).expect("shared before open");
+                for (a, b) in st.acc.data.iter_mut().zip(&y.data) {
+                    *a += b;
+                }
+                st.shared_left = false;
+                (layer, chunk)
+            }
+            CollectMsg::Expert(m) => {
+                let st = states.get_mut(&(m.layer, m.chunk)).expect("expert before open");
+                for (group, y) in &m.results {
+                    router::combine_into(&mut st.acc, group, y);
+                }
+                st.parts_left -= 1;
+                (m.layer, m.chunk)
+            }
+        };
+        let done = states
+            .get(&key)
+            .map(|st| st.parts_left == 0 && !st.shared_left)
+            .unwrap_or(false);
+        if done {
+            // Move the accumulator out without cloning (§Perf L3).
+            let st = states.remove(&key).unwrap();
+            if done_tx.send((key.1, st.acc)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn pipeline(eg: usize) -> Option<Pipeline> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let model = ModelHandle::load(&dir, true).unwrap();
+        Some(Pipeline::new(model, eg, None).unwrap())
+    }
+
+    fn test_batch(b: usize, s: usize, m: usize) -> Tensor {
+        let data: Vec<f32> =
+            (0..b * s * m).map(|i| (((i * 2654435761) % 97) as f32 - 48.0) * 0.01).collect();
+        Tensor::new(vec![b, s, m], data)
+    }
+
+    #[test]
+    fn forward_shapes_and_stats() {
+        let Some(p) = pipeline(2) else { return };
+        let (s, m) = (p.model().seq_len, p.model().model.embed);
+        let batch = test_batch(2, s, m);
+        let (out, stats) = p.forward(&batch, ExecConfig::findep(2, 2, Order::Asas)).unwrap();
+        assert_eq!(out.shape, vec![2, s, m]);
+        assert!(stats.total > 0.0);
+        assert!(stats.attention > 0.0);
+        assert!(stats.tasks_issued > 0);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn schedules_agree_numerically() {
+        // The same batch through naive / PPPipe / FinDEP (both orders)
+        // must produce identical outputs: scheduling must never change
+        // numerics.
+        let Some(p) = pipeline(2) else { return };
+        let (s, m) = (p.model().seq_len, p.model().model.embed);
+        let batch = test_batch(4, s, m);
+        let (base, _) = p.forward(&batch, ExecConfig::naive()).unwrap();
+        for cfg in [
+            ExecConfig::pppipe(2),
+            ExecConfig::findep(2, 2, Order::Asas),
+            ExecConfig::findep(4, 4, Order::Aass),
+            ExecConfig::findep(2, 1, Order::Aass),
+        ] {
+            let (out, _) = p.forward(&batch, cfg).unwrap();
+            let diff = out.max_abs_diff(&base);
+            assert!(diff < 1e-4, "schedule changed numerics by {diff} ({cfg:?})");
+        }
+    }
+
+    #[test]
+    fn different_eg_counts_agree() {
+        let Some(p1) = pipeline(1) else { return };
+        let (s, m) = (p1.model().seq_len, p1.model().model.embed);
+        let batch = test_batch(2, s, m);
+        let (o1, _) = p1.forward(&batch, ExecConfig::findep(1, 1, Order::Asas)).unwrap();
+        drop(p1);
+        let p4 = pipeline(4).unwrap();
+        let (o4, _) = p4.forward(&batch, ExecConfig::findep(2, 2, Order::Asas)).unwrap();
+        assert!(o1.max_abs_diff(&o4) < 1e-4);
+    }
+
+    #[test]
+    fn rejects_bad_batch_split() {
+        let Some(p) = pipeline(1) else { return };
+        let (s, m) = (p.model().seq_len, p.model().model.embed);
+        let batch = test_batch(3, s, m);
+        assert!(p.forward(&batch, ExecConfig::findep(2, 1, Order::Asas)).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! Token→expert routing: pack tokens per expert for A2E dispatch,
+//! combine expert outputs (gate-weighted) on return — the data-plane
+//! half of the MoE layer that the paper's EG confinement property
+//! (§2.2) relies on.
+
+use crate::runtime::tensor::{Tensor, TensorI32};
+
+/// Tokens routed to one expert.
+#[derive(Debug, Clone)]
+pub struct ExpertGroup {
+    pub expert: usize,
+    /// Row indices into the flattened token tensor.
+    pub token_ids: Vec<u32>,
+    /// Gate weight per routed token (aligned with `token_ids`).
+    pub weights: Vec<f32>,
+}
+
+/// Routing decision for a token block: per-expert groups.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub groups: Vec<ExpertGroup>,
+    pub n_tokens: usize,
+    pub top_k: usize,
+}
+
+/// Build per-expert token groups from gate outputs.
+/// `probs`, `idx`: [N, top_k].
+pub fn route(probs: &Tensor, idx: &TensorI32, n_experts: usize) -> Routing {
+    let n = probs.shape[0];
+    let k = probs.shape[1];
+    let mut groups: Vec<ExpertGroup> = (0..n_experts)
+        .map(|e| ExpertGroup { expert: e, token_ids: Vec::new(), weights: Vec::new() })
+        .collect();
+    for t in 0..n {
+        for j in 0..k {
+            let e = idx.data[t * k + j] as usize;
+            debug_assert!(e < n_experts, "expert index out of range");
+            groups[e].token_ids.push(t as u32);
+            groups[e].weights.push(probs.data[t * k + j]);
+        }
+    }
+    groups.retain(|g| !g.token_ids.is_empty());
+    Routing { groups, n_tokens: n, top_k: k }
+}
+
+impl Routing {
+    /// Token count conservation: total routed assignments == N·top_k.
+    pub fn total_assignments(&self) -> usize {
+        self.groups.iter().map(|g| g.token_ids.len()).sum()
+    }
+
+    /// Split this routing into `parts` fine-grained parts along the
+    /// token dimension (the r2 split of §2.3: "the expert part processes
+    /// samples token by token ... we can further partition along the
+    /// token dimension"). Tokens [0, N) are cut into contiguous ranges;
+    /// each part keeps only the group slices whose tokens fall in its
+    /// range, so parts are disjoint and their union is the original
+    /// routing.
+    pub fn split_parts(&self, parts: usize) -> Vec<Routing> {
+        let parts = parts.clamp(1, self.n_tokens.max(1));
+        let per = self.n_tokens.div_ceil(parts);
+        (0..parts)
+            .map(|p| {
+                let lo = (p * per) as u32;
+                let hi = (((p + 1) * per).min(self.n_tokens)) as u32;
+                let groups: Vec<ExpertGroup> = self
+                    .groups
+                    .iter()
+                    .filter_map(|g| {
+                        let sel: Vec<usize> = g
+                            .token_ids
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &t)| t >= lo && t < hi)
+                            .map(|(i, _)| i)
+                            .collect();
+                        if sel.is_empty() {
+                            return None;
+                        }
+                        Some(ExpertGroup {
+                            expert: g.expert,
+                            token_ids: sel.iter().map(|&i| g.token_ids[i]).collect(),
+                            weights: sel.iter().map(|&i| g.weights[i]).collect(),
+                        })
+                    })
+                    .collect();
+                Routing { groups, n_tokens: self.n_tokens, top_k: self.top_k }
+            })
+            .collect()
+    }
+}
+
+/// Gather the input rows for one expert group.
+pub fn pack(x: &Tensor, group: &ExpertGroup) -> Tensor {
+    x.gather_rows(&group.token_ids.iter().map(|&t| t as usize).collect::<Vec<_>>())
+}
+
+/// Scatter-accumulate one expert's outputs into the combine buffer with
+/// gate weighting: `acc[token] += w · y[row]`.
+pub fn combine_into(acc: &mut Tensor, group: &ExpertGroup, y: &Tensor) {
+    let m = acc.row_len();
+    debug_assert_eq!(y.row_len(), m);
+    debug_assert_eq!(y.dim0(), group.token_ids.len());
+    for (row, (&t, &w)) in group.token_ids.iter().zip(&group.weights).enumerate() {
+        let dst = &mut acc.data[t as usize * m..(t as usize + 1) * m];
+        let src = &y.data[row * m..(row + 1) * m];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += w * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self, Config};
+    use crate::util::rng::Rng;
+
+    fn mk_gate(rng: &mut Rng, n: usize, e: usize, k: usize) -> (Tensor, TensorI32) {
+        let mut probs = Vec::new();
+        let mut idx = Vec::new();
+        for _ in 0..n {
+            // Distinct experts per token, renormalized weights.
+            let mut experts: Vec<i32> = (0..e as i32).collect();
+            rng.shuffle(&mut experts);
+            let raw: Vec<f64> = (0..k).map(|_| rng.range_f64(0.1, 1.0)).collect();
+            let s: f64 = raw.iter().sum();
+            for j in 0..k {
+                probs.push((raw[j] / s) as f32);
+                idx.push(experts[j]);
+            }
+        }
+        (
+            Tensor::new(vec![n, k], probs),
+            TensorI32 { shape: vec![n, k], data: idx },
+        )
+    }
+
+    #[test]
+    fn routing_conserves_assignments() {
+        let mut rng = Rng::new(3);
+        let (p, i) = mk_gate(&mut rng, 32, 8, 2);
+        let r = route(&p, &i, 8);
+        assert_eq!(r.total_assignments(), 32 * 2);
+        for g in &r.groups {
+            assert!(!g.token_ids.is_empty());
+            assert_eq!(g.token_ids.len(), g.weights.len());
+        }
+    }
+
+    #[test]
+    fn split_parts_partition_tokens() {
+        let mut rng = Rng::new(5);
+        let (p, i) = mk_gate(&mut rng, 33, 8, 2);
+        let r = route(&p, &i, 8);
+        for parts in [1usize, 2, 3, 5] {
+            let split = r.split_parts(parts);
+            let total: usize = split.iter().map(|s| s.total_assignments()).sum();
+            assert_eq!(total, r.total_assignments(), "parts={parts}");
+            // Disjoint token ranges.
+            for (a, b) in split.iter().zip(split.iter().skip(1)) {
+                let max_a = a.groups.iter().flat_map(|g| &g.token_ids).max();
+                let min_b = b.groups.iter().flat_map(|g| &g.token_ids).min();
+                if let (Some(&ma), Some(&mb)) = (max_a, min_b) {
+                    assert!(ma < mb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_combine_is_weighted_permutation_inverse() {
+        // Property: routing with identity experts (y = x) and weights
+        // summing to 1 per token reconstructs x exactly.
+        proptest::check("pack-combine-inverse", &Config::with_cases(40), |rng| {
+            let n = 1 + rng.usize_below(40);
+            let e = 2 + rng.usize_below(8);
+            let k = 1 + rng.usize_below(2.min(e));
+            let m = 4;
+            let (p, i) = mk_gate(rng, n, e, k);
+            let x = Tensor::new(
+                vec![n, m],
+                (0..n * m).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
+            );
+            let r = route(&p, &i, e);
+            let mut acc = Tensor::zeros(vec![n, m]);
+            for g in &r.groups {
+                let xg = pack(&x, g);
+                combine_into(&mut acc, g, &xg); // identity "expert"
+            }
+            proptest::ensure(
+                acc.max_abs_diff(&x) < 2e-6,
+                format!("reconstruction error {}", acc.max_abs_diff(&x)),
+            )
+        });
+    }
+
+    #[test]
+    fn split_respects_part_count_bounds() {
+        let mut rng = Rng::new(9);
+        let (p, i) = mk_gate(&mut rng, 4, 4, 1);
+        let r = route(&p, &i, 4);
+        // More parts than tokens clamps to token count.
+        let split = r.split_parts(100);
+        assert!(split.len() <= 4);
+    }
+}

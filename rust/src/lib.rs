@@ -1,0 +1,33 @@
+//! # FinDEP
+//!
+//! A reproduction of *"Efficient MoE Inference with Fine-Grained
+//! Scheduling of Disaggregated Expert Parallelism"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the DEP serving coordinator: request batching,
+//!   token→expert routing, attention-group / expert-group worker
+//!   topology, A2E/E2A links, the FinDEP schedule solver (Algorithm 1),
+//!   the PPPipe and naive-DEP baselines, a calibrated discrete-event
+//!   cluster simulator, workload generators, and metrics.
+//! * **L2 (`python/compile/model.py`)** — JAX stage functions (attention,
+//!   gate, shared expert, expert FFN) AOT-lowered to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels called by L2.
+//!
+//! Python never runs on the request path: `rust/src/runtime` loads the
+//! AOT artifacts via the PJRT C API (`xla` crate) once at startup.
+//!
+//! Start with [`solver::algorithm1::solve`] for the paper's contribution,
+//! [`simulator::engine::Simulator`] for the evaluation substrate, and
+//! [`coordinator::server::Server`] for the real serving path.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;
+pub mod solver;
+pub mod util;
+pub mod workload;

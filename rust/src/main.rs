@@ -1,0 +1,262 @@
+//! `findep` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `solve`    — run Algorithm 1 for a (model, testbed, split, S) and
+//!   print the chosen configuration + predicted throughput.
+//! * `compare`  — naive vs PPPipe vs FinDEP on the simulator, with an
+//!   ASCII Gantt of each schedule.
+//! * `serve`    — real execution: load AOT artifacts, serve synthetic
+//!   batches through the DEP pipeline, report tokens/s and latency.
+//! * `calibrate`— Fig.-7-style micro-benchmarks on this host (PJRT GEMM
+//!   / attention probes + link probe), printing fitted α-β models + R².
+
+use findep::baselines;
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::coordinator::links::LinkDelay;
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::perfmodel::calibrate;
+use findep::runtime::{artifacts_dir, probe};
+use findep::sched::{Order, Plan};
+use findep::simulator::{simulate, ScheduleTrace};
+use findep::solver::{self, Instance, SolverParams};
+use findep::util::args::Spec;
+use findep::util::bench::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
+    let code = match cmd {
+        "solve" => cmd_solve(&rest),
+        "compare" => cmd_compare(&rest),
+        "serve" => cmd_serve(&rest),
+        "calibrate" => cmd_calibrate(&rest),
+        _ => {
+            eprintln!(
+                "findep — fine-grained scheduling for disaggregated expert parallelism\n\n\
+                 usage: findep <solve|compare|serve|calibrate> [--help]"
+            );
+            if cmd == "help" {
+                0
+            } else {
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn instance_from(p: &findep::util::args::Parsed) -> Option<Instance> {
+    let testbed = Testbed::by_name(p.get("testbed"))?;
+    let model = ModelConfig::paper_preset(p.get("model"), p.get("testbed"))?;
+    let split = GroupSplit::paper_default(&testbed, model.has_shared_expert());
+    Some(Instance::new(model, testbed, split, p.get_usize("seq")))
+}
+
+fn cmd_solve(args: &[String]) -> i32 {
+    let spec = Spec::new("findep solve", "run Algorithm 1 and print the best configuration")
+        .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
+        .opt("testbed", "A", "testbed A|B|C|D")
+        .opt("seq", "2048", "sequence length S");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let Some(inst) = instance_from(&p) else {
+        eprintln!("unknown model or testbed");
+        return 2;
+    };
+    match solver::solve(&inst, &SolverParams::default()) {
+        Some(sol) => {
+            println!("instance: {} on {} S={}", inst.model.name, inst.testbed.name, inst.seq_len);
+            println!("best config: {}", sol.config.describe());
+            println!("makespan: {:.3} ms", sol.makespan * 1e3);
+            println!("throughput: {:.2} tokens/s", sol.throughput_tokens);
+            println!("solver: {:.1} ms, {} evaluations", sol.solve_seconds * 1e3, sol.evals);
+            0
+        }
+        None => {
+            eprintln!("instance infeasible (experts do not fit the EG)");
+            1
+        }
+    }
+}
+
+fn cmd_compare(args: &[String]) -> i32 {
+    let spec = Spec::new("findep compare", "naive vs PPPipe vs FinDEP on the simulator")
+        .opt("model", "deepseek-v2", "model preset")
+        .opt("testbed", "A", "testbed A|B|C|D")
+        .opt("seq", "2048", "sequence length S")
+        .flag("gantt", "print ASCII Gantt charts");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let Some(inst) = instance_from(&p) else {
+        eprintln!("unknown model or testbed");
+        return 2;
+    };
+    let params = SolverParams::default();
+    let naive = baselines::best_naive(&inst, params.ma_cap);
+    let pp = baselines::best_pppipe(&inst, &params);
+    let fd = solver::solve(&inst, &params);
+    let mut table = Table::new(
+        &format!("{} on {} (S={})", inst.model.name, inst.testbed.name, inst.seq_len),
+        &["scheduler", "config", "tokens/s", "speedup vs naive"],
+    );
+    let base = naive.as_ref().map(|s| s.throughput_tokens).unwrap_or(0.0);
+    for (name, sol) in [("Naive-DEP", &naive), ("PPPipe", &pp), ("FinDEP", &fd)] {
+        match sol {
+            Some(s) => table.row(&[
+                name.to_string(),
+                s.config.describe(),
+                format!("{:.2}", s.throughput_tokens),
+                format!("{:.2}x", s.throughput_tokens / base),
+            ]),
+            None => table.row(&[name.to_string(), "infeasible".into(), "-".into(), "-".into()]),
+        }
+    }
+    table.print();
+    if p.has_flag("gantt") {
+        let sm = inst.stage_models();
+        for (name, sol) in [("naive", &naive), ("pppipe", &pp), ("findep", &fd)] {
+            if let Some(s) = sol {
+                let plan = Plan::build(
+                    &sm,
+                    s.config,
+                    inst.model.n_layers.min(2),
+                    inst.split.ag,
+                    inst.seq_len,
+                );
+                let sim = simulate(&plan);
+                println!("\n{name} (first 2 layers):");
+                print!("{}", ScheduleTrace::from_sim(&plan, &sim).ascii_gantt(100));
+            }
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let spec = Spec::new("findep serve", "real-execution serving on the PJRT CPU runtime")
+        .opt("eg", "2", "number of EG workers")
+        .opt("batches", "8", "number of batches to serve")
+        .opt("batch-size", "4", "requests per batch")
+        .opt("policy", "findep", "naive|pppipe|findep|adaptive")
+        .opt("link-alpha-us", "0", "injected link startup latency (µs)")
+        .opt("link-gbps", "0", "injected link bandwidth (GB/s, 0 = none)")
+        .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let dir = artifacts_dir();
+    let model = match ModelHandle::load(&dir, !p.has_flag("noshared")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "failed to load artifacts from {}: {e:#}\nrun `make artifacts` first",
+                dir.display()
+            );
+            return 1;
+        }
+    };
+    let delay = if p.get_f64("link-alpha-us") > 0.0 || p.get_f64("link-gbps") > 0.0 {
+        Some(LinkDelay {
+            alpha_s: p.get_f64("link-alpha-us") * 1e-6,
+            beta_s_per_byte: if p.get_f64("link-gbps") > 0.0 {
+                1.0 / (p.get_f64("link-gbps") * 1e9)
+            } else {
+                0.0
+            },
+        })
+    } else {
+        None
+    };
+    let srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
+    let s = srv.pipeline.model().seq_len;
+    let m = srv.pipeline.model().model.embed;
+    let policy = match p.get("policy") {
+        "naive" => Policy::Naive,
+        "pppipe" => Policy::PpPipe { r1: 2 },
+        "adaptive" => Policy::Adaptive,
+        _ => Policy::FinDep { r1: 2, r2: 2, order: Order::Asas },
+    };
+    let n_batches = p.get_usize("batches");
+    let batch_size = p.get_usize("batch-size");
+    let t0 = std::time::Instant::now();
+    let mut tokens = 0usize;
+    for b in 0..n_batches {
+        let reqs: Vec<EmbeddedRequest> = (0..batch_size)
+            .map(|i| EmbeddedRequest::synthetic((b * batch_size + i) as u64, s, m))
+            .collect();
+        match srv.serve_batch(&reqs, policy) {
+            Ok((resp, stats)) => {
+                tokens += resp.len() * s;
+                println!(
+                    "batch {b}: {} reqs in {:.2} ms (attn {:.2} gate {:.2} shared {:.2} wait {:.2})",
+                    resp.len(),
+                    stats.total * 1e3,
+                    stats.attention * 1e3,
+                    stats.gate * 1e3,
+                    stats.shared * 1e3,
+                    stats.wait * 1e3
+                );
+            }
+            Err(e) => {
+                eprintln!("batch {b} failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {n_batches} batches, {tokens} tokens in {:.2}s -> {:.1} tokens/s ({:?})",
+        dt,
+        tokens as f64 / dt,
+        policy
+    );
+    println!("{}", findep::util::json::to_string_pretty(&srv.metrics.snapshot_json()));
+    0
+}
+
+fn cmd_calibrate(args: &[String]) -> i32 {
+    let spec = Spec::new("findep calibrate", "fit α-β models on this host (Fig. 7)")
+        .opt("trials", "9", "timed trials per point");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let trials = p.get_usize("trials");
+    let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
+    let mut gemm_samples = Vec::new();
+    for &(m, k, n) in
+        &[(32, 64, 64), (64, 64, 128), (128, 128, 128), (256, 128, 256), (256, 256, 512)]
+    {
+        let s = probe::gemm_sample(&client, m, k, n, 3, trials).expect("gemm probe");
+        println!("gemm {m}x{k}x{n}: {:.3} ms", s.seconds * 1e3);
+        gemm_samples.push(s);
+    }
+    let (gm, r2g) = calibrate::fit(&gemm_samples);
+    println!("t_gm(x) = {:.3e} + {:.3e}·x  (R² = {:.6})", gm.alpha, gm.beta, r2g);
+
+    let mut attn_samples = Vec::new();
+    for &(hb, s, d) in &[(4, 16, 16), (8, 32, 16), (8, 64, 16), (16, 64, 32)] {
+        let smp = probe::attention_sample(&client, hb, s, d, 3, trials).expect("attn probe");
+        println!("attn hb={hb} S={s} d={d}: {:.3} ms", smp.seconds * 1e3);
+        attn_samples.push(smp);
+    }
+    let (am, r2a) = calibrate::fit(&attn_samples);
+    println!("t_attn(y) = {:.3e} + {:.3e}·y  (R² = {:.6})", am.alpha, am.beta, r2a);
+
+    let (cm, r2c, _) =
+        calibrate::calibrate_copy_link(&[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22]);
+    println!("t_c(z) = {:.3e} + {:.3e}·z  (R² = {:.6})", cm.alpha, cm.beta, r2c);
+    0
+}
+
+fn usage(msg: String) -> i32 {
+    eprintln!("{msg}");
+    2
+}

@@ -1,0 +1,223 @@
+//! Serving metrics: counters, latency histograms, and throughput meters
+//! used by the coordinator and the bench harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+
+/// Latency histogram with fixed log-spaced buckets (1 µs .. ~100 s).
+#[derive(Debug)]
+pub struct Histogram {
+    /// Bucket upper bounds in seconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    /// Raw samples kept for exact percentiles (bounded reservoir).
+    samples: Vec<f64>,
+    max_samples: usize,
+    total: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let n = bounds.len();
+        Self { bounds, counts: vec![0; n + 1], samples: Vec::new(), max_samples: 65_536, total: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self.bounds.partition_point(|&b| b < seconds);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += seconds;
+        if self.samples.len() < self.max_samples {
+            self.samples.push(seconds);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.samples, p)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("count", Json::Num(self.total as f64));
+        o.insert("mean_s", Json::Num(self.mean()));
+        o.insert("p50_s", Json::Num(self.percentile(50.0)));
+        o.insert("p95_s", Json::Num(self.percentile(95.0)));
+        o.insert("p99_s", Json::Num(self.percentile(99.0)));
+        Json::Obj(o)
+    }
+}
+
+/// Tokens/s meter over a wall-clock window.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    started: Instant,
+    tokens: u64,
+    requests: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        Self { started: Instant::now(), tokens: 0, requests: 0 }
+    }
+
+    pub fn add(&mut self, tokens: u64) {
+        self.tokens += tokens;
+        self.requests += 1;
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        let e = self.elapsed_s();
+        if e > 0.0 {
+            self.tokens as f64 / e
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Thread-safe metrics registry shared across coordinator components.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&self, name: &str, seconds: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .record(seconds);
+    }
+
+    pub fn histogram_json(&self, name: &str) -> Option<Json> {
+        self.histograms.lock().unwrap().get(name).map(|h| h.to_json())
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        let mut counters = JsonObj::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        o.insert("counters", Json::Obj(counters));
+        let mut hists = JsonObj::new();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists.insert(k.clone(), h.to_json());
+        }
+        o.insert("histograms", Json::Obj(hists));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-6);
+        assert!((h.percentile(50.0) - 0.0505).abs() < 2e-3);
+        assert!(h.percentile(99.0) > 0.09);
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = ThroughputMeter::new();
+        m.add(100);
+        m.add(200);
+        assert_eq!(m.tokens(), 300);
+        assert_eq!(m.requests(), 2);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(m.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn registry_is_shared_safely() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    r.inc("reqs", 1);
+                    r.observe("lat", 0.001);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("reqs"), 400);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("counters").get("reqs").as_f64(), Some(400.0));
+        assert!(r.histogram_json("lat").is_some());
+        assert!(r.histogram_json("missing").is_none());
+    }
+}

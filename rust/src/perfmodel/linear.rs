@@ -1,0 +1,76 @@
+//! The α-β linear time model (Eqs. 7-9): `t(x) = α + β·x`, with α the
+//! fixed launch/startup overhead and β the per-unit marginal cost.
+
+use crate::util::stats::{self, LinFit};
+
+/// `t(x) = alpha + beta * x`, times in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearModel {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl LinearModel {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        assert!(alpha >= 0.0 && beta >= 0.0, "negative cost model");
+        Self { alpha, beta }
+    }
+
+    /// Evaluate at workload `x` (x <= 0 still pays the launch cost once
+    /// invoked; callers skip zero-size tasks entirely instead).
+    pub fn eval(&self, x: f64) -> f64 {
+        self.alpha + self.beta * x.max(0.0)
+    }
+
+    /// Least-squares fit from (workload, seconds) samples, clamping a
+    /// (noise-induced) negative intercept to zero so the model stays a
+    /// valid cost function. Returns the model and the fit's R².
+    pub fn fit(x: &[f64], y: &[f64]) -> (Self, f64) {
+        let LinFit { alpha, beta, r2 } = stats::linear_fit(x, y);
+        (Self { alpha: alpha.max(0.0), beta: beta.max(0.0) }, r2)
+    }
+
+    /// Scale the marginal cost (e.g. derive β_s = 3·N_shared·β_gm·S·M·H
+    /// style compositions) keeping α.
+    pub fn with_beta_scaled(&self, k: f64) -> Self {
+        Self { alpha: self.alpha, beta: self.beta * k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_is_affine() {
+        let m = LinearModel::new(1.0, 2.0);
+        assert_eq!(m.eval(0.0), 1.0);
+        assert_eq!(m.eval(3.0), 7.0);
+        assert_eq!(m.eval(-5.0), 1.0, "negative workloads clamp to launch cost");
+    }
+
+    #[test]
+    fn fit_recovers_exact_model() {
+        let x: Vec<f64> = (1..50).map(|i| i as f64 * 10.0).collect();
+        let y: Vec<f64> = x.iter().map(|v| 0.25 + 0.01 * v).collect();
+        let (m, r2) = LinearModel::fit(&x, &y);
+        assert!((m.alpha - 0.25).abs() < 1e-9);
+        assert!((m.beta - 0.01).abs() < 1e-12);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn fit_clamps_negative_intercept() {
+        // Points through the origin with negative-intercept noise.
+        let x = [1.0, 2.0, 3.0];
+        let y = [0.9, 2.05, 3.0];
+        let (m, _) = LinearModel::fit(&x, &y);
+        assert!(m.alpha >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_model_rejected() {
+        LinearModel::new(-1.0, 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! α-β performance models (§3.1, §4.1).
+//!
+//! Everything the solver and simulator know about hardware flows through
+//! these models: `t_gm(x) = α_gm + β_gm·x` for GEMM (x = FLOPs),
+//! `t_attn(y)` for self-attention, `t_c(z) = α_c + β_c·z` for A2E/E2A
+//! transfers (z = bytes), composed into per-stage layer models
+//! `t_a(m_a), t_s(m_a), t_e(m_e), t_a2e(m_e)` exactly as Eqs. 1-4 and
+//! 10-11 do.
+
+pub mod calibrate;
+pub mod linear;
+pub mod stage;
+
+pub use linear::LinearModel;
+pub use stage::{CompModels, StageModels};

@@ -1,0 +1,225 @@
+//! Artifact-set loading: `manifest.json` + `weights.bin` + HLO text
+//! files, as written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+/// One stage artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub stage: String,
+    pub bucket: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub model_noshared: ModelConfig,
+    pub seq_len: usize,
+    pub ma_buckets: Vec<usize>,
+    pub ffn_buckets: Vec<usize>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub weights_file: PathBuf,
+    pub tensor_table: Vec<(String, Vec<usize>, usize)>, // name, shape, offset (f32)
+    pub golden: PathBuf,
+    pub golden_noshared: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let usizes = |j: &Json| -> Vec<usize> {
+            j.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactEntry {
+                stage: a.get("stage").as_str().unwrap_or("").to_string(),
+                bucket: a.get("bucket").as_usize().context("artifact bucket")?,
+                path: dir.join(a.get("path").as_str().context("artifact path")?),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+
+        let mut tensor_table = Vec::new();
+        for t in v.get("weights").get("tensors").as_arr().unwrap_or(&[]) {
+            tensor_table.push((
+                t.get("name").as_str().context("tensor name")?.to_string(),
+                usizes(t.get("shape")),
+                t.get("offset").as_usize().context("tensor offset")?,
+            ));
+        }
+
+        Ok(Manifest {
+            model: ModelConfig::from_json(v.get("model"))?,
+            model_noshared: ModelConfig::from_json(v.get("model_noshared"))?,
+            seq_len: v.get("seq_len").as_usize().context("seq_len")?,
+            ma_buckets: usizes(v.get("ma_buckets")),
+            ffn_buckets: usizes(v.get("ffn_buckets")),
+            artifacts,
+            weights_file: dir.join(v.get("weights").get("file").as_str().unwrap_or("weights.bin")),
+            tensor_table,
+            golden: dir.join(v.get("golden").as_str().unwrap_or("golden.json")),
+            golden_noshared: dir
+                .join(v.get("golden_noshared").as_str().unwrap_or("golden_noshared.json")),
+        })
+    }
+}
+
+/// The model weights, loaded once and addressed by manifest name
+/// (`layer{t}.{tensor}`); stacked expert tensors are sliced per expert.
+#[derive(Debug)]
+pub struct Weights {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        let bytes = std::fs::read(&manifest.weights_file)
+            .with_context(|| format!("reading {}", manifest.weights_file.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights.bin not a multiple of 4 bytes");
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = BTreeMap::new();
+        for (name, shape, offset) in &manifest.tensor_table {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(offset + n <= floats.len(), "tensor {name} out of bounds");
+            tensors.insert(
+                name.clone(),
+                Tensor::new(shape.clone(), floats[*offset..offset + n].to_vec()),
+            );
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing weight tensor '{name}'"))
+    }
+
+    /// Slice expert `e` out of a stacked `[E, ...]` tensor.
+    pub fn expert_slice(&self, name: &str, e: usize) -> Result<Tensor> {
+        let t = self.get(name)?;
+        anyhow::ensure!(t.rank() >= 2 && e < t.shape[0], "bad expert slice {name}[{e}]");
+        let w: usize = t.shape[1..].iter().product();
+        Ok(Tensor::new(t.shape[1..].to_vec(), t.data[e * w..(e + 1) * w].to_vec()))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+}
+
+/// A golden end-to-end case from `golden.json`.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub batch: usize,
+    pub seq: usize,
+    pub embed: usize,
+    pub input: Tensor,
+    pub output: Tensor,
+    pub atol: f32,
+}
+
+impl Golden {
+    pub fn load(path: &Path) -> Result<Golden> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text)?;
+        let batch = v.get("batch").as_usize().context("batch")?;
+        let seq = v.get("seq").as_usize().context("seq")?;
+        let embed = v.get("embed").as_usize().context("embed")?;
+        let floats = |key: &str| -> Result<Vec<f32>> {
+            Ok(v.get(key)
+                .as_arr()
+                .context("golden array")?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|f| f as f32))
+                .collect())
+        };
+        Ok(Golden {
+            batch,
+            seq,
+            embed,
+            input: Tensor::new(vec![batch, seq, embed], floats("input")?),
+            output: Tensor::new(vec![batch, seq, embed], floats("output")?),
+            atol: v.get("atol").as_f64().unwrap_or(2e-3) as f32,
+        })
+    }
+}
+
+/// Convenience bundle: manifest + weights together.
+#[derive(Debug)]
+pub struct ArtifactSet {
+    pub manifest: Manifest,
+    pub weights: Weights,
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(&manifest)?;
+        Ok(ArtifactSet { manifest, weights, dir: dir.to_path_buf() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_and_weights_load() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let set = ArtifactSet::load(&artifacts_dir()).unwrap();
+        assert_eq!(set.manifest.model.name, "tiny");
+        assert_eq!(set.manifest.model.n_experts, 8);
+        assert!(set.manifest.artifacts.len() >= 10);
+        // Every weight tensor named by the table is loadable.
+        let wq = set.weights.get("layer0.wq").unwrap();
+        assert_eq!(wq.shape, vec![64, 64]);
+        // Expert slicing.
+        let e3 = set.weights.expert_slice("layer0.exp_gate", 3).unwrap();
+        assert_eq!(e3.shape, vec![128, 64]);
+        let e0 = set.weights.expert_slice("layer0.exp_gate", 0).unwrap();
+        assert_ne!(e0.data, e3.data);
+    }
+
+    #[test]
+    fn golden_loads() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let g = Golden::load(&m.golden).unwrap();
+        assert_eq!(g.input.shape, vec![g.batch, g.seq, g.embed]);
+        assert_eq!(g.output.numel(), g.input.numel());
+        assert!(g.atol > 0.0);
+    }
+}

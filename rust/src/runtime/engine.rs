@@ -1,0 +1,200 @@
+//! The PJRT execution engine: compile every HLO artifact once, expose
+//! typed stage calls.
+//!
+//! Thread-safety: `xla`'s raw wrappers hold C pointers and are `!Send`
+//! by default, but the underlying PJRT CPU client and loaded
+//! executables are thread-safe objects (they carry internal
+//! synchronization and are driven concurrently by JAX/TF in normal
+//! use). We wrap the engine in an [`EngineHandle`] with an explicit
+//! `unsafe impl Send + Sync` documented by that invariant; all
+//! coordinator threads share one compiled engine.
+
+use std::collections::BTreeMap;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::tensor::{Tensor, TensorI32};
+
+/// Compiled artifact registry keyed by (stage, bucket).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exes: BTreeMap<(String, usize), xla::PjRtLoadedExecutable>,
+    pub platform: String,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Engine({} artifacts on {})", self.exes.len(), self.platform)
+    }
+}
+
+impl Engine {
+    /// Compile all artifacts listed in the manifest on the PJRT CPU
+    /// client. One-time cost at coordinator startup.
+    pub fn compile(manifest: &Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut exes = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                a.path.to_str().context("artifact path utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", a.path.display()))?;
+            exes.insert((a.stage.clone(), a.bucket), exe);
+        }
+        Ok(Engine { client, exes, platform })
+    }
+
+    fn exe(&self, stage: &str, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(&(stage.to_string(), bucket))
+            .with_context(|| format!("no artifact for stage={stage} bucket={bucket}"))
+    }
+
+    /// Smallest compiled bucket >= n for a stage.
+    pub fn bucket_for(&self, stage: &str, n: usize) -> Result<usize> {
+        self.exes
+            .keys()
+            .filter(|(s, b)| s == stage && *b >= n)
+            .map(|(_, b)| *b)
+            .min()
+            .with_context(|| format!("no bucket >= {n} for stage {stage}"))
+    }
+
+    /// Execute an artifact whose output is a 1-tuple of one f32 array.
+    pub fn run1(&self, stage: &str, bucket: usize, inputs: &[&Tensor]) -> Result<Tensor> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run1_lits(stage, bucket, &refs)
+    }
+
+    /// Hot-path variant of [`Self::run1`]: callers pass pre-built
+    /// literals (weights come from the [`crate::coordinator::moe`]
+    /// weight-literal cache, so only activations are converted per
+    /// call — the §Perf L3 optimization).
+    pub fn run1_lits(&self, stage: &str, bucket: usize, inputs: &[&xla::Literal]) -> Result<Tensor> {
+        let exe = self.exe(stage, bucket)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Tensor::from_literal(&out)
+    }
+
+    /// Execute the gate artifact: returns (probs f32 [n,k], idx i32 [n,k]).
+    pub fn run_gate(&self, _bucket: usize, inputs: &[&Tensor]) -> Result<(Tensor, TensorI32)> {
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        self.run_gate_lits(&refs)
+    }
+
+    /// Hot-path gate execution on pre-built literals.
+    pub fn run_gate_lits(&self, inputs: &[&xla::Literal]) -> Result<(Tensor, TensorI32)> {
+        let n = inputs
+            .first()
+            .and_then(|l| l.array_shape().ok())
+            .map(|s| s.dims().first().copied().unwrap_or(0) as usize)
+            .unwrap_or(0);
+        let bucket = self.bucket_for("gate", n)?;
+        anyhow::ensure!(bucket == n, "gate literal must be pre-padded to a bucket");
+        let exe = self.exe("gate", bucket)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let (probs, idx) = result.to_tuple2()?;
+        Ok((Tensor::from_literal(&probs)?, TensorI32::from_literal(&idx)?))
+    }
+
+    pub fn n_artifacts(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// Shared, thread-safe engine handle.
+///
+/// Safety: the PJRT CPU client/executables are internally synchronized;
+/// all mutation happens at `compile` time before the handle is shared.
+#[derive(Clone, Debug)]
+pub struct EngineHandle(Arc<Engine>);
+
+unsafe impl Send for EngineHandle {}
+unsafe impl Sync for EngineHandle {}
+
+impl EngineHandle {
+    pub fn new(engine: Engine) -> Self {
+        Self(Arc::new(engine))
+    }
+}
+
+impl std::ops::Deref for EngineHandle {
+    type Target = Engine;
+
+    fn deref(&self) -> &Engine {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ArtifactSet;
+    use crate::runtime::artifacts_dir;
+
+    fn engine() -> Option<(ArtifactSet, Engine)> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let set = ArtifactSet::load(&dir).unwrap();
+        let eng = Engine::compile(&set.manifest).unwrap();
+        Some((set, eng))
+    }
+
+    #[test]
+    fn compiles_all_artifacts() {
+        let Some((set, eng)) = engine() else { return };
+        assert_eq!(eng.n_artifacts(), set.manifest.artifacts.len());
+        assert_eq!(eng.bucket_for("ffn", 9).unwrap(), 16);
+        assert_eq!(eng.bucket_for("ffn", 8).unwrap(), 8);
+        assert!(eng.bucket_for("ffn", 1000).is_err());
+    }
+
+    #[test]
+    fn ffn_stage_executes_and_matches_weights_contract() {
+        let Some((set, eng)) = engine() else { return };
+        let n = 8;
+        let x = Tensor::zeros(vec![n, set.manifest.model.embed]);
+        let wg = set.weights.get("layer0.shared_gate").unwrap();
+        let wu = set.weights.get("layer0.shared_up").unwrap();
+        let wd = set.weights.get("layer0.shared_down").unwrap();
+        let y = eng.run1("ffn", n, &[&x, wg, wu, wd]).unwrap();
+        assert_eq!(y.shape, vec![n, set.manifest.model.embed]);
+        // Zero input through SwiGLU must give zeros.
+        assert!(y.data.iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn gate_stage_executes() {
+        let Some((set, eng)) = engine() else { return };
+        let n = 16;
+        let mut x = Tensor::zeros(vec![n, set.manifest.model.embed]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 13) as f32 - 6.0) * 0.1;
+        }
+        let w = set.weights.get("layer0.gate_w").unwrap();
+        let (probs, idx) = eng.run_gate(n, &[&x, w]).unwrap();
+        assert_eq!(probs.shape, vec![n, set.manifest.model.top_k]);
+        assert_eq!(idx.shape, vec![n, set.manifest.model.top_k]);
+        for row in 0..n {
+            let s: f32 = (0..set.manifest.model.top_k).map(|k| probs.data[row * 2 + k]).sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {row} probs sum {s}");
+        }
+        assert!(idx.data.iter().all(|&e| (0..8).contains(&e)));
+    }
+}

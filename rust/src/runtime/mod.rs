@@ -1,0 +1,31 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client,
+//! and executes them from the serving hot path. Python never runs here.
+
+pub mod artifact;
+pub mod engine;
+pub mod probe;
+pub mod tensor;
+
+pub use artifact::{ArtifactSet, Manifest, Weights};
+pub use engine::Engine;
+pub use tensor::Tensor;
+
+/// Default artifacts directory relative to the repo root; overridable
+/// with `FINDEP_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FINDEP_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from CWD to find an `artifacts/manifest.json`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Hardware micro-benchmark probes (§5.2 / Fig. 7) executed through the
+//! PJRT client with `XlaBuilder`-constructed computations, so the
+//! calibration measures the same execution stack the serving path uses.
+
+use anyhow::Result;
+
+use crate::perfmodel::calibrate::{measure, Sample};
+
+/// Build + compile an (m,k)x(k,n) matmul and measure its median runtime.
+/// Returns a calibration sample with workload = m·k·n (the paper's GEMM
+/// workload convention).
+pub fn gemm_sample(
+    client: &xla::PjRtClient,
+    m: usize,
+    k: usize,
+    n: usize,
+    warmup: usize,
+    trials: usize,
+) -> Result<Sample> {
+    let builder = xla::XlaBuilder::new("gemm_probe");
+    let a = builder.parameter_s(
+        0,
+        &xla::Shape::array::<f32>(vec![m as i64, k as i64]),
+        "a",
+    )?;
+    let b = builder.parameter_s(
+        1,
+        &xla::Shape::array::<f32>(vec![k as i64, n as i64]),
+        "b",
+    )?;
+    let comp = a.matmul(&b)?.build()?;
+    let exe = client.compile(&comp)?;
+
+    let av: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 * 0.1).collect();
+    let bv: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 * 0.1).collect();
+    let alit = xla::Literal::vec1(&av).reshape(&[m as i64, k as i64])?;
+    let blit = xla::Literal::vec1(&bv).reshape(&[k as i64, n as i64])?;
+
+    let seconds = measure(warmup, trials, || {
+        let out = exe.execute::<xla::Literal>(&[alit.clone(), blit.clone()]).unwrap();
+        // Force completion.
+        let _ = out[0][0].to_literal_sync().unwrap();
+    });
+    Ok(Sample { workload: (m * k * n) as f64, seconds })
+}
+
+/// Measure a scaled-dot-product attention computation (QK^T softmax V)
+/// built with the XlaBuilder; workload = n_h·B·S²·(d_k+d_v).
+pub fn attention_sample(
+    client: &xla::PjRtClient,
+    heads_batch: usize,
+    s: usize,
+    d: usize,
+    warmup: usize,
+    trials: usize,
+) -> Result<Sample> {
+    let builder = xla::XlaBuilder::new("attn_probe");
+    let shape = xla::Shape::array::<f32>(vec![heads_batch as i64, s as i64, d as i64]);
+    let q = builder.parameter_s(0, &shape, "q")?;
+    let k = builder.parameter_s(1, &shape, "k")?;
+    let v = builder.parameter_s(2, &shape, "v")?;
+    // scores[b, i, j] = sum_d q[b,i,d]·k[b,j,d]
+    let scores = q.dot_general(&k, &[2], &[2], &[0], &[0])?;
+    let probs = scores.softmax(-1)?;
+    // out[b, i, d] = sum_j probs[b,i,j]·v[b,j,d]
+    let comp = probs.dot_general(&v, &[2], &[1], &[0], &[0])?.build()?;
+    let exe = client.compile(&comp)?;
+
+    let qv: Vec<f32> = (0..heads_batch * s * d).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+    let mk = |data: &[f32]| {
+        xla::Literal::vec1(data)
+            .reshape(&[heads_batch as i64, s as i64, d as i64])
+            .unwrap()
+    };
+    let (ql, kl, vl) = (mk(&qv), mk(&qv), mk(&qv));
+    let seconds = measure(warmup, trials, || {
+        let out = exe.execute::<xla::Literal>(&[ql.clone(), kl.clone(), vl.clone()]).unwrap();
+        let _ = out[0][0].to_literal_sync().unwrap();
+    });
+    Ok(Sample { workload: (heads_batch * s * s * 2 * d) as f64, seconds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_probe_runs() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let s = gemm_sample(&client, 32, 32, 32, 1, 3).unwrap();
+        assert_eq!(s.workload, (32 * 32 * 32) as f64);
+        assert!(s.seconds > 0.0);
+    }
+
+    #[test]
+    fn attention_probe_runs() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let s = attention_sample(&client, 2, 16, 8, 1, 3).unwrap();
+        assert!(s.seconds > 0.0);
+        assert_eq!(s.workload, (2 * 16 * 16 * 16) as f64);
+    }
+}

@@ -1,0 +1,177 @@
+//! Host tensors: the plain-`Vec<f32>` representation that crosses
+//! coordinator channels, with conversions to/from `xla::Literal`.
+
+use anyhow::{ensure, Result};
+
+/// A dense row-major f32 host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Leading-dimension size (row count for 2-D).
+    pub fn dim0(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Row stride for a 2-D/3-D tensor: product of trailing dims.
+    pub fn row_len(&self) -> usize {
+        self.shape.iter().skip(1).product()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_len();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Gather rows into a new 2-D tensor (router pack path).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let w = self.row_len();
+        let mut data = Vec::with_capacity(idx.len() * w);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Tensor::new(vec![idx.len(), w], data)
+    }
+
+    /// Pad the leading dimension up to `n` with zero rows.
+    pub fn pad_rows_to(&self, n: usize) -> Tensor {
+        ensure_ok(n >= self.dim0());
+        let w = self.row_len();
+        let mut data = self.data.clone();
+        data.resize(n * w, 0.0);
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor::new(shape, data)
+    }
+
+    /// Take the first `n` rows.
+    pub fn truncate_rows(&self, n: usize) -> Tensor {
+        ensure_ok(n <= self.dim0());
+        let w = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        Tensor::new(shape, self.data[..n * w].to_vec())
+    }
+
+    /// Reinterpret shape (same element count).
+    pub fn reshaped(&self, shape: Vec<usize>) -> Tensor {
+        Tensor::new(shape, self.data.clone())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // Single-copy construction straight from the host buffer (§Perf
+        // L3: vec1+reshape costs two copies and a shape pass).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        ensure!(
+            dims.iter().product::<usize>() == data.len(),
+            "literal shape/data mismatch"
+        );
+        Ok(Tensor::new(dims, data))
+    }
+
+    /// Max |a - b| across two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+fn ensure_ok(cond: bool) {
+    assert!(cond, "tensor row-op bounds violated");
+}
+
+/// Int32 host tensor (gate indices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_literal(lit: &xla::Literal) -> Result<TensorI32> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<i32>()?;
+        Ok(TensorI32 { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_ops() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[3., 4.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+        let p = t.pad_rows_to(5);
+        assert_eq!(p.shape, vec![5, 2]);
+        assert_eq!(&p.data[6..], &[0.0; 4]);
+        let back = p.truncate_rows(3);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn diff_and_reshape() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 2.5, 3., 4.]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert_eq!(a.reshaped(vec![4]).shape, vec![4]);
+        assert_eq!(a.row_len(), 2);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Closed-form timestamp algebra of §4.2 (ASAS schedule).
+//!
+//! Building blocks (all per-layer, at a fixed configuration):
+//!
+//! * `X(m_a)      = t_a(m_a) + t_s(m_a)` — AG occupancy of one chunk
+//! * `Y(m_e)      = max(t_e(m_e), t_a2e(m_e))` — fine-pipe beat
+//! * `F(m_a,m_e)  = max(X, r2·Y)` — per-chunk pipeline period
+//! * `G(m_a,m_e)  = t_a + 2·t_a2e + t_e + (r2−1)·Y` (Eq. 12) — the
+//!   chunk-0 round-trip latency through AG → A2E → EG → E2A
+//!
+//! and the layer-0 start-time formulas plus the per-layer offset
+//! `max(G, r1·F)`. The throughput objective (Eq. 13) divides the total
+//! sample count by the resulting makespan. These forms are the fast path
+//! of Algorithm 1; the discrete-event simulator re-derives the same
+//! schedule from the task DAG, and `rust/tests/simulator_vs_analytic.rs`
+//! pins them together.
+
+use crate::perfmodel::StageModels;
+
+/// All §4.2 quantities evaluated at one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Analytic {
+    pub t_a: f64,
+    pub t_s: f64,
+    pub t_e: f64,
+    pub t_c: f64,
+    pub x: f64,
+    pub y: f64,
+    pub f: f64,
+    pub g: f64,
+    pub r1: usize,
+    pub r2: usize,
+    pub m_a: f64,
+    pub m_e: f64,
+}
+
+impl Analytic {
+    pub fn new(models: &StageModels, m_a: f64, r1: usize, r2: usize) -> Self {
+        assert!(r1 >= 1 && r2 >= 1);
+        let m_e = models.m_e(m_a, r2);
+        let t_a = models.attn_time(m_a);
+        let t_s = models.shared_time(m_a);
+        let t_e = models.expert_time(m_e);
+        let t_c = models.comm_time(m_e);
+        let x = t_a + t_s;
+        let y = t_e.max(t_c);
+        let f = x.max(r2 as f64 * y);
+        let g = t_a + 2.0 * t_c + t_e + (r2 as f64 - 1.0) * y;
+        Self { t_a, t_s, t_e, t_c, x, y, f, g, r1, r2, m_a, m_e }
+    }
+
+    /// Per-layer start-time offset: `max(G, r1·F)` (§4.2).
+    pub fn layer_offset(&self) -> f64 {
+        self.g.max(self.r1 as f64 * self.f)
+    }
+
+    /// Layer-0 timestamps (the boxed formulas of §4.2).
+    pub fn tau_a(&self, i: usize) -> f64 {
+        i as f64 * self.x
+    }
+
+    pub fn tau_s(&self, i: usize) -> f64 {
+        i as f64 * self.x + self.t_a
+    }
+
+    pub fn tau_a2e(&self, i: usize, j: usize) -> f64 {
+        self.t_a + i as f64 * self.f + j as f64 * self.t_c
+    }
+
+    pub fn tau_e(&self, i: usize, j: usize) -> f64 {
+        self.t_a + self.t_c + i as f64 * self.f + j as f64 * self.y
+    }
+
+    pub fn tau_e2a(&self, i: usize, j: usize) -> f64 {
+        self.t_a + self.t_c + self.t_e + i as f64 * self.f + j as f64 * self.y
+    }
+
+    /// Makespan of a `t_layers`-layer forward pass: last E2A completion
+    /// vs last shared-expert completion (the two terminal paths of
+    /// Eq. 6's max).
+    pub fn makespan(&self, t_layers: usize) -> f64 {
+        assert!(t_layers >= 1);
+        let shift = (t_layers as f64 - 1.0) * self.layer_offset();
+        let eg_path = shift
+            + self.tau_e2a(self.r1 - 1, self.r2 - 1)
+            + self.t_c;
+        let ag_path = shift + self.tau_s(self.r1 - 1) + self.t_s;
+        eg_path.max(ag_path)
+    }
+
+    /// The denominator exactly as printed in Eq. 13 (kept for
+    /// reference / regression against the paper's algebra; `makespan`
+    /// above is the form the solver and simulator agree on — Eq. 13's
+    /// printed form double-counts `(r2−1)·Y` relative to Eq. 12's G).
+    pub fn eq13_denominator(&self, t_layers: usize) -> f64 {
+        (t_layers as f64 - 1.0) * self.layer_offset()
+            + self.x.max(self.g)
+            + (self.r2 as f64 - 1.0) * self.y
+            + (self.r1 as f64 - 1.0) * self.f
+    }
+
+    /// Throughput objective (Eq. 6/13), in *samples per second per AG
+    /// GPU group-slot*; multiply by `ag·S / 1` for tokens/s.
+    pub fn objective(&self, t_layers: usize) -> f64 {
+        self.r1 as f64 * self.m_a / self.makespan(t_layers)
+    }
+
+    /// Tokens/s for a whole AG of `ag` GPUs at sequence length `s`.
+    pub fn throughput_tokens(&self, t_layers: usize, ag: usize, s: usize) -> f64 {
+        self.r1 as f64 * self.m_a * ag as f64 * s as f64 / self.makespan(t_layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+    use crate::util::proptest::{self, Config};
+
+    fn models() -> StageModels {
+        StageModels::new(&ModelConfig::deepseek_v2(8), &Testbed::a(), GroupSplit::new(3, 5), 2048)
+    }
+
+    #[test]
+    fn building_blocks_consistent() {
+        let a = Analytic::new(&models(), 2.0, 2, 3);
+        assert!((a.x - (a.t_a + a.t_s)).abs() < 1e-15);
+        assert!((a.y - a.t_e.max(a.t_c)).abs() < 1e-15);
+        assert!(a.f >= a.x && a.f >= a.r2 as f64 * a.y);
+        assert!(a.g >= a.t_a + 2.0 * a.t_c + a.t_e);
+    }
+
+    #[test]
+    fn naive_single_layer_makespan_is_sequential_sum() {
+        // r1 = r2 = 1, one layer: makespan = t_a + t_s vs round trip.
+        let sm = models();
+        let a = Analytic::new(&sm, 2.0, 1, 1);
+        let expect = (a.t_a + a.t_c + a.t_e + a.t_c).max(a.t_a + a.t_s);
+        assert!((a.makespan(1) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_grows_linearly_in_layers() {
+        let a = Analytic::new(&models(), 2.0, 2, 2);
+        let d1 = a.makespan(2) - a.makespan(1);
+        let d2 = a.makespan(3) - a.makespan(2);
+        assert!((d1 - d2).abs() < 1e-12);
+        assert!((d1 - a.layer_offset()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_monotone_in_m_a() {
+        // Objective increases with m_a at fixed (r1, r2).
+        let sm = models();
+        for &(r1, r2) in &[(1usize, 1usize), (2, 2), (4, 3), (2, 8)] {
+            let mut prev = 0.0;
+            for m_a in 1..=32 {
+                let obj = Analytic::new(&sm, m_a as f64, r1, r2).objective(8);
+                assert!(
+                    obj >= prev - 1e-12,
+                    "objective not monotone at m_a={m_a} r1={r1} r2={r2}"
+                );
+                prev = obj;
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_nondecreasing_in_r1() {
+        let sm = models();
+        for &(m_a, r2) in &[(1.0, 1usize), (2.0, 2), (4.0, 4)] {
+            let mut prev = 0.0;
+            for r1 in 1..=16 {
+                let obj = Analytic::new(&sm, m_a, r1, r2).objective(8);
+                assert!(obj >= prev - 1e-9, "objective decreasing at r1={r1}");
+                prev = obj;
+            }
+        }
+    }
+
+    #[test]
+    fn theorem1_and_3_property_random_models() {
+        // Random positive α/β stage models must preserve the paper's
+        // monotonicity theorems (they only rely on positivity+linearity).
+        proptest::check("thm1-thm3", &Config::with_cases(60), |rng| {
+            use crate::perfmodel::LinearModel;
+            let sm = StageModels {
+                t_a: LinearModel::new(rng.range_f64(1e-6, 1e-3), rng.range_f64(1e-7, 1e-3)),
+                t_s: LinearModel::new(rng.range_f64(0.0, 1e-3), rng.range_f64(0.0, 1e-3)),
+                t_e: LinearModel::new(rng.range_f64(1e-6, 1e-3), rng.range_f64(1e-7, 1e-3)),
+                t_a2e: LinearModel::new(rng.range_f64(1e-6, 1e-3), rng.range_f64(1e-7, 1e-3)),
+                k_tokens: rng.range_f64(1.0, 500.0),
+                has_shared: rng.bool(0.5),
+            };
+            let t_layers = 1 + rng.usize_below(12);
+            let r2 = 1 + rng.usize_below(8);
+            // Theorem 1: m_a monotone.
+            let r1 = 1 + rng.usize_below(6);
+            let mut prev = 0.0;
+            for m_a in 1..=16 {
+                let obj = Analytic::new(&sm, m_a as f64, r1, r2).objective(t_layers);
+                proptest::ensure(obj >= prev - 1e-12, format!("thm1 violated at m_a={m_a}"))?;
+                prev = obj;
+            }
+            // Theorem 3: r1 non-decreasing.
+            let m_a = 1.0 + rng.usize_below(8) as f64;
+            let mut prev = 0.0;
+            for r1 in 1..=12 {
+                let obj = Analytic::new(&sm, m_a, r1, r2).objective(t_layers);
+                proptest::ensure(obj >= prev - 1e-9, format!("thm3 violated at r1={r1}"))?;
+                prev = obj;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theorem4_unimodal_in_r2() {
+        // Makespan as a function of r2 (others fixed) should be unimodal
+        // (convex in 1/r2 per Theorem 4): ternary search must find the
+        // global min found by exhaustive scan.
+        let sm = models();
+        for m_a in [1usize, 2, 4] {
+            for r1 in [1usize, 2, 4] {
+                let eval = |r2: i64| Analytic::new(&sm, m_a as f64, r1, r2 as usize).makespan(8);
+                let exhaustive = (1..=64).map(|r2| (r2, eval(r2)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                let (_, tern_val) = crate::util::stats::ternary_min_int(1, 64, eval);
+                assert!(
+                    tern_val <= exhaustive.1 * (1.0 + 1e-9),
+                    "ternary missed optimum: {} vs {} (m_a={m_a}, r1={r1})",
+                    tern_val,
+                    exhaustive.1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq13_denominator_close_to_makespan() {
+        // The printed Eq. 13 and our exact makespan may differ by the
+        // double-counted (r2-1)Y term; they must stay within that bound.
+        let sm = models();
+        let a = Analytic::new(&sm, 2.0, 2, 4);
+        let diff = (a.eq13_denominator(8) - a.makespan(8)).abs();
+        assert!(diff <= (a.r2 as f64 - 1.0) * a.y + a.x + 1e-9, "diff={diff}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Schedule representation (§3.2) and the analytic timing machinery of
+//! §4.2.
+//!
+//! A [`plan::Plan`] is the concrete object FinDEP, PPPipe, and naive DEP
+//! all produce: the full set of fine-grained tasks for a forward pass
+//! (attention / shared-expert / A2E / expert / E2A per `(layer, chunk,
+//! part)`), their Eq.-5 precedence edges, and a fixed issue order per
+//! exclusive resource. The simulator executes plans; the analytic module
+//! evaluates the ASAS closed forms (X, Y, F, G, Eq. 13) without building
+//! the graph.
+
+pub mod analytic;
+pub mod plan;
+
+pub use plan::{Order, Plan, PlanConfig, Resource, Task, TaskKind};

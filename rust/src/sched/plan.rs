@@ -1,0 +1,546 @@
+//! Fine-grained DEP schedule plans.
+//!
+//! A plan materializes one forward pass of the disaggregated pipeline as
+//! a task DAG over four exclusive resources (Eq. 5's first five rules)
+//! plus the data-dependency rules 6-9:
+//!
+//! * `Shared(t,i)`  after `Attn(t,i)`
+//! * `A2E(t,i,j)`   after `Attn(t,i)`
+//! * `Expert(t,i,j)` after `A2E(t,i,j)`
+//! * `E2A(t,i,j)`   after `Expert(t,i,j)`
+//! * `Attn(t+1,i)`  after all `E2A(t,i,·)` and `Shared(t,i)`
+//!
+//! The AG issue order distinguishes ASAS from AASS (§4.2); links and EG
+//! issue lexicographically. PPPipe is expressed in the same vocabulary by
+//! fusing the shared expert into attention and pinning `r2 = 1`
+//! (`PlanConfig::pppipe`).
+
+use crate::perfmodel::StageModels;
+
+/// Execution order of attention vs shared-expert segments on the AG
+/// (§4.2 "Determine the order of Attention and Shared Expert").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Order {
+    /// Attention-Shared alternating: A0 S0 A1 S1 …
+    Asas,
+    /// Attention-all then Shared-all: A0 A1 … S0 S1 …
+    Aass,
+}
+
+impl Order {
+    pub fn name(self) -> &'static str {
+        match self {
+            Order::Asas => "ASAS",
+            Order::Aass => "AASS",
+        }
+    }
+
+    pub fn both() -> [Order; 2] {
+        [Order::Asas, Order::Aass]
+    }
+}
+
+/// The four exclusive resources of the DEP pipeline (§3.2: "each
+/// operation runs on a dedicated machine").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Resource {
+    /// Attention-group GPUs (attention + shared expert).
+    AgCompute,
+    /// Expert-group GPUs.
+    EgCompute,
+    /// Attention→Expert link direction.
+    A2ELink,
+    /// Expert→Attention link direction (full duplex with A2E).
+    E2ALink,
+}
+
+impl Resource {
+    pub const ALL: [Resource; 4] =
+        [Resource::AgCompute, Resource::EgCompute, Resource::A2ELink, Resource::E2ALink];
+
+    pub fn index(self) -> usize {
+        match self {
+            Resource::AgCompute => 0,
+            Resource::EgCompute => 1,
+            Resource::A2ELink => 2,
+            Resource::E2ALink => 3,
+        }
+    }
+
+    pub fn is_compute(self) -> bool {
+        matches!(self, Resource::AgCompute | Resource::EgCompute)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Resource::AgCompute => "AG",
+            Resource::EgCompute => "EG",
+            Resource::A2ELink => "A2E",
+            Resource::E2ALink => "E2A",
+        }
+    }
+}
+
+/// Task flavours of the fine-grained pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Attention,
+    SharedExpert,
+    A2E,
+    Expert,
+    E2A,
+}
+
+impl TaskKind {
+    pub fn resource(self) -> Resource {
+        match self {
+            TaskKind::Attention | TaskKind::SharedExpert => Resource::AgCompute,
+            TaskKind::Expert => Resource::EgCompute,
+            TaskKind::A2E => Resource::A2ELink,
+            TaskKind::E2A => Resource::E2ALink,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Attention => "attn",
+            TaskKind::SharedExpert => "shared",
+            TaskKind::A2E => "a2e",
+            TaskKind::Expert => "expert",
+            TaskKind::E2A => "e2a",
+        }
+    }
+}
+
+/// One schedulable unit.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    /// Transformer layer t.
+    pub layer: u32,
+    /// r1 pipeline chunk i.
+    pub chunk: u32,
+    /// r2 fine-grained part j (0 for AG-side tasks).
+    pub part: u32,
+    pub duration: f64,
+    /// Indices of tasks that must *finish* before this may start.
+    pub deps: Vec<u32>,
+}
+
+impl Task {
+    pub fn resource(&self) -> Resource {
+        self.kind.resource()
+    }
+
+    pub fn label(&self) -> String {
+        match self.kind {
+            TaskKind::Attention | TaskKind::SharedExpert => {
+                format!("{}[{},{}]", self.kind.name(), self.layer, self.chunk)
+            }
+            _ => format!("{}[{},{},{}]", self.kind.name(), self.layer, self.chunk, self.part),
+        }
+    }
+}
+
+/// The configuration knobs Algorithm 1 searches over.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanConfig {
+    /// Samples per micro-batch per AG GPU (m_a).
+    pub m_a: usize,
+    /// Pipeline degree of the AG (r1).
+    pub r1: usize,
+    /// Fine-grained pipeline degree of the EG (r2).
+    pub r2: usize,
+    /// Tokens per expert per fine-grained part (m_e, derived from token
+    /// conservation; fractional values are fine, the models are linear).
+    pub m_e: f64,
+    pub order: Order,
+    /// PPPipe compatibility: treat the shared expert as part of the
+    /// attention task (§2.3 "regarding it as a part of attention").
+    pub fuse_shared: bool,
+}
+
+impl PlanConfig {
+    /// A FinDEP configuration (shared expert scheduled separately).
+    pub fn findep(m_a: usize, r1: usize, r2: usize, m_e: f64, order: Order) -> Self {
+        Self { m_a, r1, r2, m_e, order, fuse_shared: false }
+    }
+
+    /// PPPipe (MegaScale-Infer): micro-batch pipelining only — no
+    /// fine-grained EG split, shared expert fused into attention.
+    pub fn pppipe(m_a: usize, r1: usize, m_e: f64) -> Self {
+        Self { m_a, r1, r2: 1, m_e, order: Order::Asas, fuse_shared: true }
+    }
+
+    /// Naive DEP: strict sequential handoff (Fig. 3a).
+    pub fn naive(m_a: usize, m_e: f64) -> Self {
+        Self { m_a, r1: 1, r2: 1, m_e, order: Order::Asas, fuse_shared: true }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "m_a={} r1={} r2={} m_e={:.1} order={}{}",
+            self.m_a,
+            self.r1,
+            self.r2,
+            self.m_e,
+            self.order.name(),
+            if self.fuse_shared { " (shared fused)" } else { "" }
+        )
+    }
+}
+
+/// A fully-materialized schedule: tasks + precedence + per-resource
+/// issue order. Produced by [`Plan::build`], consumed by the simulator
+/// and by the real coordinator's pipeline executor.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub config: PlanConfig,
+    pub n_layers: usize,
+    pub has_shared_tasks: bool,
+    pub tasks: Vec<Task>,
+    /// Issue order per resource (indices into `tasks`), FIFO,
+    /// non-preemptive.
+    pub issue_order: [Vec<u32>; 4],
+    /// Total tokens processed per forward pass across the whole AG
+    /// (numerator of Eq. 6 scaled to tokens).
+    pub total_tokens: f64,
+}
+
+impl Plan {
+    /// Build the task DAG for `n_layers` transformer layers with stage
+    /// durations from `models` and `ag` AG GPUs contributing
+    /// `r1·m_a·S` tokens each.
+    pub fn build(models: &StageModels, cfg: PlanConfig, n_layers: usize, ag: usize, seq_len: usize) -> Plan {
+        assert!(cfg.r1 >= 1 && cfg.r2 >= 1 && cfg.m_a >= 1);
+        let r1 = cfg.r1;
+        let r2 = cfg.r2;
+        let shared_tasks = models.has_shared && !cfg.fuse_shared;
+
+        let t_a = models.attn_time(cfg.m_a as f64)
+            + if cfg.fuse_shared { models.shared_time(cfg.m_a as f64) } else { 0.0 };
+        let t_s = if shared_tasks { models.shared_time(cfg.m_a as f64) } else { 0.0 };
+        let t_e = models.expert_time(cfg.m_e);
+        let t_c = models.comm_time(cfg.m_e);
+
+        let n_sh = if shared_tasks { r1 } else { 0 };
+        let per_layer = r1 + n_sh + 3 * r1 * r2;
+        let mut tasks: Vec<Task> = Vec::with_capacity(per_layer * n_layers);
+
+        // Arithmetic index helpers (layout per layer: attn | shared |
+        // a2e | expert | e2a).
+        let base = |t: usize| t * per_layer;
+        let idx_attn = |t: usize, i: usize| (base(t) + i) as u32;
+        let idx_shared = |t: usize, i: usize| (base(t) + r1 + i) as u32;
+        let idx_a2e = |t: usize, i: usize, j: usize| (base(t) + r1 + n_sh + i * r2 + j) as u32;
+        let idx_expert =
+            |t: usize, i: usize, j: usize| (base(t) + r1 + n_sh + r1 * r2 + i * r2 + j) as u32;
+        let idx_e2a =
+            |t: usize, i: usize, j: usize| (base(t) + r1 + n_sh + 2 * r1 * r2 + i * r2 + j) as u32;
+
+        for t in 0..n_layers {
+            // Attention chunks.
+            for i in 0..r1 {
+                let mut deps = Vec::new();
+                if t > 0 {
+                    // Rule 9: next-layer attention needs all E2A parts of
+                    // its chunk and (if present) its shared segment.
+                    for j in 0..r2 {
+                        deps.push(idx_e2a(t - 1, i, j));
+                    }
+                    if shared_tasks {
+                        deps.push(idx_shared(t - 1, i));
+                    }
+                }
+                tasks.push(Task {
+                    kind: TaskKind::Attention,
+                    layer: t as u32,
+                    chunk: i as u32,
+                    part: 0,
+                    duration: t_a,
+                    deps,
+                });
+            }
+            // Shared-expert chunks (rule 6: after own attention).
+            if shared_tasks {
+                for i in 0..r1 {
+                    tasks.push(Task {
+                        kind: TaskKind::SharedExpert,
+                        layer: t as u32,
+                        chunk: i as u32,
+                        part: 0,
+                        duration: t_s,
+                        deps: vec![idx_attn(t, i)],
+                    });
+                }
+            }
+            // A2E parts (rule 6: after own attention chunk).
+            for i in 0..r1 {
+                for j in 0..r2 {
+                    tasks.push(Task {
+                        kind: TaskKind::A2E,
+                        layer: t as u32,
+                        chunk: i as u32,
+                        part: j as u32,
+                        duration: t_c,
+                        deps: vec![idx_attn(t, i)],
+                    });
+                }
+            }
+            // Expert parts (rule 7).
+            for i in 0..r1 {
+                for j in 0..r2 {
+                    tasks.push(Task {
+                        kind: TaskKind::Expert,
+                        layer: t as u32,
+                        chunk: i as u32,
+                        part: j as u32,
+                        duration: t_e,
+                        deps: vec![idx_a2e(t, i, j)],
+                    });
+                }
+            }
+            // E2A parts (rule 8).
+            for i in 0..r1 {
+                for j in 0..r2 {
+                    tasks.push(Task {
+                        kind: TaskKind::E2A,
+                        layer: t as u32,
+                        chunk: i as u32,
+                        part: j as u32,
+                        duration: t_c,
+                        deps: vec![idx_expert(t, i, j)],
+                    });
+                }
+            }
+        }
+
+        // Issue orders.
+        let mut ag_order = Vec::with_capacity(n_layers * (r1 + n_sh));
+        for t in 0..n_layers {
+            match cfg.order {
+                Order::Asas => {
+                    for i in 0..r1 {
+                        ag_order.push(idx_attn(t, i));
+                        if shared_tasks {
+                            ag_order.push(idx_shared(t, i));
+                        }
+                    }
+                }
+                Order::Aass => {
+                    for i in 0..r1 {
+                        ag_order.push(idx_attn(t, i));
+                    }
+                    if shared_tasks {
+                        for i in 0..r1 {
+                            ag_order.push(idx_shared(t, i));
+                        }
+                    }
+                }
+            }
+        }
+        let mut a2e_order = Vec::new();
+        let mut eg_order = Vec::new();
+        let mut e2a_order = Vec::new();
+        for t in 0..n_layers {
+            for i in 0..r1 {
+                for j in 0..r2 {
+                    a2e_order.push(idx_a2e(t, i, j));
+                    eg_order.push(idx_expert(t, i, j));
+                    e2a_order.push(idx_e2a(t, i, j));
+                }
+            }
+        }
+
+        let total_tokens = (cfg.r1 * cfg.m_a * ag * seq_len) as f64;
+
+        Plan {
+            config: cfg,
+            n_layers,
+            has_shared_tasks: shared_tasks,
+            tasks,
+            issue_order: [ag_order, eg_order, a2e_order, e2a_order],
+            total_tokens,
+        }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Index lookup by identity (test/diagnostic path; O(n)).
+    pub fn find(&self, kind: TaskKind, layer: u32, chunk: u32, part: u32) -> Option<usize> {
+        self.tasks.iter().position(|t| {
+            t.kind == kind && t.layer == layer && t.chunk == chunk && t.part == part
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+
+    fn models(shared: bool) -> StageModels {
+        let m = if shared { ModelConfig::deepseek_v2(4) } else { ModelConfig::qwen3_moe(4) };
+        let split =
+            if shared { GroupSplit::new(3, 5) } else { GroupSplit::new(4, 4) };
+        StageModels::new(&m, &Testbed::a(), split, 2048)
+    }
+
+    fn cfg(r1: usize, r2: usize, order: Order) -> PlanConfig {
+        PlanConfig::findep(2, r1, r2, 64.0, order)
+    }
+
+    #[test]
+    fn task_counts() {
+        let sm = models(true);
+        let p = Plan::build(&sm, cfg(2, 3, Order::Asas), 4, 3, 2048);
+        // per layer: 2 attn + 2 shared + 3*2*3 = 22; 4 layers = 88
+        assert_eq!(p.n_tasks(), 88);
+        let q = Plan::build(&models(false), cfg(2, 3, Order::Asas), 4, 4, 2048);
+        // no shared tasks: per layer 2 + 18 = 20; 4 layers = 80
+        assert_eq!(q.n_tasks(), 80);
+        assert!(!q.has_shared_tasks);
+    }
+
+    #[test]
+    fn pppipe_fuses_shared() {
+        let sm = models(true);
+        let p = Plan::build(&sm, PlanConfig::pppipe(2, 2, 128.0), 2, 3, 2048);
+        assert!(!p.has_shared_tasks);
+        // Fused attention task must absorb the shared time.
+        let attn = &p.tasks[p.find(TaskKind::Attention, 0, 0, 0).unwrap()];
+        assert!(
+            (attn.duration - (sm.attn_time(2.0) + sm.shared_time(2.0))).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn dependency_rules_hold() {
+        let sm = models(true);
+        let p = Plan::build(&sm, cfg(2, 2, Order::Asas), 3, 3, 2048);
+        // Rule 6: shared after its attention.
+        let sh = p.find(TaskKind::SharedExpert, 1, 1, 0).unwrap();
+        let at = p.find(TaskKind::Attention, 1, 1, 0).unwrap() as u32;
+        assert!(p.tasks[sh].deps.contains(&at));
+        // Rule 7/8 chain.
+        let a2e = p.find(TaskKind::A2E, 1, 0, 1).unwrap();
+        assert!(p.tasks[a2e].deps.contains(&at.saturating_sub(0).min(u32::MAX)) == false || true);
+        let at10 = p.find(TaskKind::Attention, 1, 0, 0).unwrap() as u32;
+        assert!(p.tasks[a2e].deps.contains(&at10));
+        let ex = p.find(TaskKind::Expert, 1, 0, 1).unwrap();
+        assert!(p.tasks[ex].deps.contains(&(a2e as u32)));
+        let e2a = p.find(TaskKind::E2A, 1, 0, 1).unwrap();
+        assert!(p.tasks[e2a].deps.contains(&(ex as u32)));
+        // Rule 9: layer-2 attention of chunk 0 depends on both layer-1
+        // E2A parts of chunk 0 and layer-1 shared of chunk 0.
+        let at2 = p.find(TaskKind::Attention, 2, 0, 0).unwrap();
+        let e2a0 = p.find(TaskKind::E2A, 1, 0, 0).unwrap() as u32;
+        let e2a1 = p.find(TaskKind::E2A, 1, 0, 1).unwrap() as u32;
+        let sh0 = p.find(TaskKind::SharedExpert, 1, 0, 0).unwrap() as u32;
+        for d in [e2a0, e2a1, sh0] {
+            assert!(p.tasks[at2].deps.contains(&d), "missing dep {d}");
+        }
+    }
+
+    #[test]
+    fn issue_orders_cover_all_tasks_once() {
+        let sm = models(true);
+        let p = Plan::build(&sm, cfg(3, 2, Order::Aass), 2, 3, 2048);
+        let total: usize = p.issue_order.iter().map(|v| v.len()).sum();
+        assert_eq!(total, p.n_tasks());
+        let mut seen = vec![false; p.n_tasks()];
+        for q in &p.issue_order {
+            for &t in q {
+                assert!(!seen[t as usize], "task issued twice");
+                seen[t as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Each queue only contains its own resource's tasks.
+        for (ri, q) in p.issue_order.iter().enumerate() {
+            for &t in q {
+                assert_eq!(p.tasks[t as usize].resource().index(), ri);
+            }
+        }
+    }
+
+    #[test]
+    fn asas_vs_aass_orders_differ() {
+        let sm = models(true);
+        let asas = Plan::build(&sm, cfg(2, 1, Order::Asas), 1, 3, 2048);
+        let aass = Plan::build(&sm, cfg(2, 1, Order::Aass), 1, 3, 2048);
+        assert_ne!(asas.issue_order[0], aass.issue_order[0]);
+        // ASAS: A0 S0 A1 S1; AASS: A0 A1 S0 S1.
+        let kinds = |p: &Plan| -> Vec<TaskKind> {
+            p.issue_order[0].iter().map(|&t| p.tasks[t as usize].kind).collect()
+        };
+        use TaskKind::*;
+        assert_eq!(kinds(&asas), vec![Attention, SharedExpert, Attention, SharedExpert]);
+        assert_eq!(kinds(&aass), vec![Attention, Attention, SharedExpert, SharedExpert]);
+    }
+
+    #[test]
+    fn deps_point_backwards_in_issue_order() {
+        // Guarantees deadlock-freedom of FIFO in-order execution.
+        let sm = models(true);
+        for order in Order::both() {
+            let p = Plan::build(&sm, cfg(3, 3, order), 3, 3, 2048);
+            let mut pos = vec![0usize; p.n_tasks()];
+            let mut global = 0usize;
+            // Global positions must exist such that all deps precede.
+            // Use per-resource order concatenated topologically: verify
+            // with Kahn instead (cycle check).
+            let mut indeg = vec![0usize; p.n_tasks()];
+            for t in &p.tasks {
+                for _ in &t.deps {
+                    // counted below
+                }
+            }
+            for (i, t) in p.tasks.iter().enumerate() {
+                indeg[i] = t.deps.len();
+                pos[i] = global;
+                global += 1;
+            }
+            // Add resource-order edges.
+            let mut extra: Vec<Vec<u32>> = vec![Vec::new(); p.n_tasks()];
+            for q in &p.issue_order {
+                for w in q.windows(2) {
+                    extra[w[1] as usize].push(w[0]);
+                    indeg[w[1] as usize] += 1;
+                }
+            }
+            let mut ready: Vec<usize> =
+                indeg.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
+            let mut done = 0usize;
+            let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); p.n_tasks()];
+            for (i, t) in p.tasks.iter().enumerate() {
+                for &d in &t.deps {
+                    dependents[d as usize].push(i as u32);
+                }
+                for &d in &extra[i] {
+                    dependents[d as usize].push(i as u32);
+                }
+            }
+            while let Some(i) = ready.pop() {
+                done += 1;
+                for &n in &dependents[i] {
+                    indeg[n as usize] -= 1;
+                    if indeg[n as usize] == 0 {
+                        ready.push(n as usize);
+                    }
+                }
+            }
+            assert_eq!(done, p.n_tasks(), "cycle in plan ({})", order.name());
+        }
+    }
+
+    #[test]
+    fn total_tokens_counts_whole_ag() {
+        let sm = models(true);
+        let p = Plan::build(&sm, cfg(2, 1, Order::Asas), 2, 3, 2048);
+        // r1=2, m_a=2, ag=3, S=2048
+        assert_eq!(p.total_tokens, (2 * 2 * 3 * 2048) as f64);
+    }
+}

@@ -1,0 +1,205 @@
+//! The discrete-event engine.
+//!
+//! Semantics (matching §3.2's job-shop model):
+//! * each resource executes its issue queue in order, non-preemptively;
+//! * a task starts at the max of (a) its resource becoming free after the
+//!   previous queued task and (b) all of its Eq.-5 dependencies
+//!   finishing;
+//! * zero-duration tasks (e.g. absent shared experts) still sequence
+//!   correctly but occupy no time.
+//!
+//! The engine runs a Kahn-style ready propagation over the union of
+//! dependency edges and resource-order edges, which yields the exact
+//! fixed point of the recurrences in §4.2 in O(V + E).
+
+use crate::sched::{Plan, Resource};
+
+/// Execution schedule of one plan.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Start time per task (seconds), same indexing as `plan.tasks`.
+    pub start: Vec<f64>,
+    /// Finish time per task.
+    pub finish: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl SimResult {
+    /// Tokens/s for the simulated forward pass.
+    pub fn throughput_tokens(&self, plan: &Plan) -> f64 {
+        plan.total_tokens / self.makespan
+    }
+}
+
+/// Simulate a plan. Panics on cyclic plans (construction bug) — every
+/// plan produced by `Plan::build` is acyclic by construction and this is
+/// enforced by tests.
+pub fn simulate(plan: &Plan) -> SimResult {
+    let n = plan.tasks.len();
+    let mut indeg: Vec<u32> = plan.tasks.iter().map(|t| t.deps.len() as u32).collect();
+    // Dependents adjacency (deps + resource-order edges).
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (i, t) in plan.tasks.iter().enumerate() {
+        for &d in &t.deps {
+            dependents[d as usize].push(i as u32);
+        }
+    }
+    // Resource predecessor edges.
+    let mut res_pred: Vec<Option<u32>> = vec![None; n];
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            res_pred[w[1] as usize] = Some(w[0]);
+            dependents[w[0] as usize].push(w[1]);
+            indeg[w[1] as usize] += 1;
+        }
+    }
+
+    let mut start = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    let mut ready: Vec<u32> =
+        (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    let mut done = 0usize;
+    while let Some(i) = ready.pop() {
+        let i = i as usize;
+        let t = &plan.tasks[i];
+        let mut s = 0.0f64;
+        for &d in &t.deps {
+            s = s.max(finish[d as usize]);
+        }
+        if let Some(p) = res_pred[i] {
+            s = s.max(finish[p as usize]);
+        }
+        start[i] = s;
+        finish[i] = s + t.duration;
+        done += 1;
+        for &nidx in &dependents[i] {
+            indeg[nidx as usize] -= 1;
+            if indeg[nidx as usize] == 0 {
+                ready.push(nidx);
+            }
+        }
+    }
+    assert_eq!(done, n, "plan contains a cycle");
+    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+    SimResult { start, finish, makespan }
+}
+
+/// Busy intervals of one resource, sorted by start time.
+pub fn resource_intervals(plan: &Plan, sim: &SimResult, res: Resource) -> Vec<(f64, f64)> {
+    let mut iv: Vec<(f64, f64)> = plan.issue_order[res.index()]
+        .iter()
+        .map(|&t| (sim.start[t as usize], sim.finish[t as usize]))
+        .filter(|(s, f)| f > s)
+        .collect();
+    iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    iv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+    use crate::perfmodel::StageModels;
+    use crate::sched::{Order, PlanConfig, TaskKind};
+
+    fn models() -> StageModels {
+        StageModels::new(&ModelConfig::deepseek_v2(4), &Testbed::a(), GroupSplit::new(3, 5), 2048)
+    }
+
+    fn build(m_a: usize, r1: usize, r2: usize, order: Order, layers: usize) -> Plan {
+        let sm = models();
+        let m_e = sm.m_e(m_a as f64, r2);
+        Plan::build(&sm, PlanConfig::findep(m_a, r1, r2, m_e, order), layers, 3, 2048)
+    }
+
+    #[test]
+    fn sequential_naive_matches_hand_sum() {
+        let sm = models();
+        let m_e = sm.m_e(2.0, 1);
+        let plan = Plan::build(&sm, PlanConfig::naive(2, m_e), 1, 3, 2048);
+        let sim = simulate(&plan);
+        // naive, 1 layer: attn(+shared fused) -> a2e -> expert -> e2a
+        let expect = sm.attn_time(2.0) + sm.shared_time(2.0)
+            + sm.comm_time(m_e) + sm.expert_time(m_e) + sm.comm_time(m_e);
+        assert!((sim.makespan - expect).abs() < 1e-12, "{} vs {}", sim.makespan, expect);
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let plan = build(2, 2, 3, Order::Asas, 3);
+        let sim = simulate(&plan);
+        for (i, t) in plan.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                assert!(
+                    sim.start[i] >= sim.finish[d as usize] - 1e-12,
+                    "task {} starts before dep {} finishes",
+                    plan.tasks[i].label(),
+                    plan.tasks[d as usize].label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resources_never_overlap() {
+        for order in Order::both() {
+            let plan = build(2, 3, 2, order, 4);
+            let sim = simulate(&plan);
+            for res in Resource::ALL {
+                let iv = resource_intervals(&plan, &sim, res);
+                for w in iv.windows(2) {
+                    assert!(
+                        w[1].0 >= w[0].1 - 1e-12,
+                        "overlap on {:?}: {:?} then {:?}",
+                        res,
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelining_beats_naive() {
+        let sm = models();
+        let m_e1 = sm.m_e(4.0, 1);
+        let naive = Plan::build(&sm, PlanConfig::naive(4, m_e1), 4, 3, 2048);
+        let pp = Plan::build(&sm, PlanConfig::pppipe(2, 2, sm.m_e(2.0, 1)), 4, 3, 2048);
+        let t_naive = simulate(&naive).makespan;
+        let t_pp = simulate(&pp).makespan;
+        assert!(t_pp < t_naive, "pppipe {t_pp} !< naive {t_naive}");
+    }
+
+    #[test]
+    fn fine_graining_can_help() {
+        // Same (m_a, r1), FinDEP r2>1 must not be slower than r2=1 when
+        // kernel-launch overhead is small relative to transfer time.
+        let sm = models();
+        let c1 = PlanConfig::findep(2, 2, 1, sm.m_e(2.0, 1), Order::Asas);
+        let c4 = PlanConfig::findep(2, 2, 4, sm.m_e(2.0, 4), Order::Asas);
+        let t1 = simulate(&Plan::build(&sm, c1, 4, 3, 2048)).makespan;
+        let t4 = simulate(&Plan::build(&sm, c4, 4, 3, 2048)).makespan;
+        assert!(t4 <= t1 * 1.02, "r2=4 {t4} much worse than r2=1 {t1}");
+    }
+
+    #[test]
+    fn zero_duration_shared_tasks_are_free() {
+        // Qwen-style (no shared): ASAS and AASS must coincide.
+        let m = ModelConfig::qwen3_moe(4);
+        let sm = StageModels::new(&m, &Testbed::a(), GroupSplit::new(4, 4), 2048);
+        let m_e = sm.m_e(2.0, 2);
+        let a = simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Asas), 4, 4, 2048));
+        let b = simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Aass), 4, 4, 2048));
+        assert!((a.makespan - b.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_equals_last_finish() {
+        let plan = build(1, 2, 2, Order::Aass, 2);
+        let sim = simulate(&plan);
+        let last = sim.finish.iter().copied().fold(0.0f64, f64::max);
+        assert_eq!(sim.makespan, last);
+        assert!(sim.throughput_tokens(&plan) > 0.0);
+    }
+}

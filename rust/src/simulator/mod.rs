@@ -1,0 +1,14 @@
+//! Discrete-event cluster simulator.
+//!
+//! Executes a [`crate::sched::Plan`] over the four exclusive DEP
+//! resources with non-preemptive FIFO issue per resource, producing an
+//! exact schedule (start/finish per task). This is the evaluation
+//! substrate standing in for the paper's GPU testbeds: every throughput
+//! number in the Tables 3-7 benches comes from here, with stage
+//! durations supplied by the α-β performance models.
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate, SimResult};
+pub use trace::{ScheduleTrace, TraceInterval};

@@ -1,0 +1,284 @@
+//! Schedule traces: interval analytics (Table 7's non-overlapped
+//! communication time), Eq.-5 validity checking, ASCII Gantt rendering,
+//! and Chrome `about:tracing` JSON export.
+
+use crate::sched::{Plan, Resource};
+use crate::simulator::engine::SimResult;
+use crate::util::json::{Json, JsonObj};
+
+/// One executed task interval.
+#[derive(Debug, Clone)]
+pub struct TraceInterval {
+    pub label: String,
+    pub resource: Resource,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// A fully-executed schedule with analysis helpers.
+#[derive(Debug, Clone)]
+pub struct ScheduleTrace {
+    pub intervals: Vec<TraceInterval>,
+    pub makespan: f64,
+}
+
+impl ScheduleTrace {
+    pub fn from_sim(plan: &Plan, sim: &SimResult) -> Self {
+        let intervals = plan
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| TraceInterval {
+                label: t.label(),
+                resource: t.resource(),
+                start: sim.start[i],
+                finish: sim.finish[i],
+            })
+            .collect();
+        Self { intervals, makespan: sim.makespan }
+    }
+
+    /// Busy intervals of a resource, merged and sorted.
+    pub fn busy(&self, res: Resource) -> Vec<(f64, f64)> {
+        let mut iv: Vec<(f64, f64)> = self
+            .intervals
+            .iter()
+            .filter(|t| t.resource == res && t.finish > t.start)
+            .map(|t| (t.start, t.finish))
+            .collect();
+        iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        merge(&iv)
+    }
+
+    /// Total busy time of a resource.
+    pub fn busy_time(&self, res: Resource) -> f64 {
+        self.busy(res).iter().map(|(s, f)| f - s).sum()
+    }
+
+    /// **Non-overlapped communication time** (Table 7): the portion of
+    /// wall time where at least one link (A2E or E2A) is transferring
+    /// while *both* compute resources are idle — i.e. communication that
+    /// the schedule failed to hide behind computation.
+    pub fn non_overlapped_comm(&self) -> f64 {
+        let comm = union(&self.busy(Resource::A2ELink), &self.busy(Resource::E2ALink));
+        let compute = union(&self.busy(Resource::AgCompute), &self.busy(Resource::EgCompute));
+        subtract_len(&comm, &compute)
+    }
+
+    /// Idle time of a compute resource inside the makespan window.
+    pub fn idle_time(&self, res: Resource) -> f64 {
+        self.makespan - self.busy_time(res)
+    }
+
+    /// Chrome `about:tracing` / Perfetto-compatible JSON.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events = Vec::new();
+        for t in &self.intervals {
+            let mut o = JsonObj::new();
+            o.insert("name", Json::Str(t.label.clone()));
+            o.insert("cat", Json::Str(t.resource.name().into()));
+            o.insert("ph", Json::Str("X".into()));
+            // Microsecond timestamps, as Chrome expects.
+            o.insert("ts", Json::Num(t.start * 1e6));
+            o.insert("dur", Json::Num((t.finish - t.start) * 1e6));
+            o.insert("pid", Json::Num(1.0));
+            o.insert("tid", Json::Num(t.resource.index() as f64 + 1.0));
+            events.push(Json::Obj(o));
+        }
+        let mut root = JsonObj::new();
+        root.insert("traceEvents", Json::Arr(events));
+        root.insert("displayTimeUnit", Json::Str("ms".into()));
+        Json::Obj(root)
+    }
+
+    /// ASCII Gantt chart (one row per resource), `width` columns wide.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let mut out = String::new();
+        let scale = width as f64 / self.makespan.max(1e-12);
+        for res in Resource::ALL {
+            let mut row = vec![b'.'; width];
+            for t in self.intervals.iter().filter(|t| t.resource == res) {
+                let a = ((t.start * scale) as usize).min(width.saturating_sub(1));
+                let b = ((t.finish * scale).ceil() as usize).clamp(a + 1, width);
+                let ch = match t.label.as_bytes().first() {
+                    Some(b'a') if t.label.starts_with("attn") => b'A',
+                    Some(b's') => b'S',
+                    Some(b'a') => b'>', // a2e
+                    Some(b'e') if t.label.starts_with("expert") => b'E',
+                    _ => b'<', // e2a
+                };
+                for c in &mut row[a..b] {
+                    *c = ch;
+                }
+            }
+            out.push_str(&format!("{:>4} |{}|\n", res.name(), String::from_utf8(row).unwrap()));
+        }
+        out.push_str(&format!(
+            "      makespan {:.3} ms, non-overlapped comm {:.3} ms\n",
+            self.makespan * 1e3,
+            self.non_overlapped_comm() * 1e3
+        ));
+        out
+    }
+
+    /// Validate the Eq.-5 exclusivity constraints on this trace: no two
+    /// tasks of one resource overlap. Returns a violation description.
+    pub fn validate_exclusive(&self) -> Result<(), String> {
+        for res in Resource::ALL {
+            let mut iv: Vec<(f64, f64, &str)> = self
+                .intervals
+                .iter()
+                .filter(|t| t.resource == res && t.finish > t.start)
+                .map(|t| (t.start, t.finish, t.label.as_str()))
+                .collect();
+            iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for w in iv.windows(2) {
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!(
+                        "resource {} overlap: {} [{:.6},{:.6}) vs {} [{:.6},{:.6})",
+                        res.name(),
+                        w[0].2,
+                        w[0].0,
+                        w[0].1,
+                        w[1].2,
+                        w[1].0,
+                        w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Merge overlapping sorted intervals.
+fn merge(iv: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for &(s, f) in iv {
+        if let Some(last) = out.last_mut() {
+            if s <= last.1 + 1e-15 {
+                last.1 = last.1.max(f);
+                continue;
+            }
+        }
+        out.push((s, f));
+    }
+    out
+}
+
+/// Union of two merged interval lists.
+fn union(a: &[(f64, f64)], b: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut all: Vec<(f64, f64)> = a.iter().chain(b.iter()).copied().collect();
+    all.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    merge(&all)
+}
+
+/// Total length of `a \ b` (both merged + sorted).
+fn subtract_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0;
+    for &(s, f) in a {
+        let mut cur = s;
+        for &(bs, bf) in b {
+            if bf <= cur {
+                continue;
+            }
+            if bs >= f {
+                break;
+            }
+            if bs > cur {
+                total += bs - cur;
+            }
+            cur = cur.max(bf);
+            if cur >= f {
+                break;
+            }
+        }
+        if cur < f {
+            total += f - cur;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+    use crate::perfmodel::StageModels;
+    use crate::sched::{Order, PlanConfig};
+    use crate::simulator::engine::simulate;
+
+    fn trace(r1: usize, r2: usize) -> (Plan, ScheduleTrace) {
+        let sm = StageModels::new(
+            &ModelConfig::deepseek_v2(4),
+            &Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let m_e = sm.m_e(2.0, r2);
+        let plan =
+            Plan::build(&sm, PlanConfig::findep(2, r1, r2, m_e, Order::Asas), 4, 3, 2048);
+        let sim = simulate(&plan);
+        let tr = ScheduleTrace::from_sim(&plan, &sim);
+        (plan, tr)
+    }
+
+    #[test]
+    fn interval_helpers() {
+        assert_eq!(merge(&[(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]), vec![(0.0, 2.0), (3.0, 4.0)]);
+        assert_eq!(
+            union(&[(0.0, 1.0)], &[(0.5, 2.0), (5.0, 6.0)]),
+            vec![(0.0, 2.0), (5.0, 6.0)]
+        );
+        let len = subtract_len(&[(0.0, 10.0)], &[(2.0, 3.0), (5.0, 7.0)]);
+        assert!((len - 7.0).abs() < 1e-12);
+        // Subtraction with nothing to subtract.
+        assert!((subtract_len(&[(1.0, 4.0)], &[]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validates_and_measures() {
+        let (_plan, tr) = trace(2, 3);
+        tr.validate_exclusive().unwrap();
+        assert!(tr.busy_time(Resource::AgCompute) > 0.0);
+        assert!(tr.busy_time(Resource::EgCompute) > 0.0);
+        assert!(tr.non_overlapped_comm() >= 0.0);
+        assert!(tr.non_overlapped_comm() <= tr.makespan);
+        assert!(tr.idle_time(Resource::EgCompute) >= 0.0);
+    }
+
+    #[test]
+    fn finer_pipeline_hides_more_comm() {
+        // More r2 parts should not increase non-overlapped comm (with the
+        // cheap kernel-launch constants of testbed A at this size).
+        let (_p1, t1) = trace(2, 1);
+        let (_p2, t2) = trace(2, 4);
+        assert!(
+            t2.non_overlapped_comm() <= t1.non_overlapped_comm() + 1e-9,
+            "r2=4 exposed {} vs r2=1 {}",
+            t2.non_overlapped_comm(),
+            t1.non_overlapped_comm()
+        );
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let (_plan, tr) = trace(2, 2);
+        let j = tr.to_chrome_trace();
+        let text = crate::util::json::to_string(&j);
+        let back = crate::util::json::parse(&text).unwrap();
+        let events = back.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), tr.intervals.len());
+        assert_eq!(events[0].get("ph").as_str(), Some("X"));
+    }
+
+    #[test]
+    fn gantt_renders_all_rows() {
+        let (_plan, tr) = trace(2, 2);
+        let g = tr.ascii_gantt(60);
+        for name in ["AG", "EG", "A2E", "E2A"] {
+            assert!(g.contains(name), "missing row {name}:\n{g}");
+        }
+        assert!(g.contains("makespan"));
+    }
+}

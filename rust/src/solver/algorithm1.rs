@@ -1,0 +1,280 @@
+//! Algorithm 1: FinDEP configuration search (§4.3).
+//!
+//! ```text
+//! for m_a = MA_max downto 1:
+//!     r1 = getMaxR1(...)            # memory-constrained
+//!     if r1 == 0 or r1 == prev r1: continue   # Pareto-dominated
+//!     for order in {ASAS, AASS}:
+//!         r2*, tps = argmin_{r2} makespan(...)  # convex in 1/r2 (Thm 4)
+//!         m_e = m_a·ag·top_k·S / (r2*·E)
+//!         keep the best
+//! ```
+//!
+//! Candidate evaluation goes through the discrete-event engine on the
+//! materialized task DAG — the analytic closed forms of §4.2 coincide
+//! with the engine on ASAS plans (pinned by
+//! `rust/tests/simulator_vs_analytic.rs`), and the engine additionally
+//! evaluates AASS exactly instead of by approximation.
+
+use std::time::Instant;
+
+use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::perfmodel::StageModels;
+use crate::sched::{Order, Plan, PlanConfig};
+use crate::simulator::engine::simulate;
+use crate::solver::memory::MemoryModel;
+use crate::util::stats::ternary_min_int;
+
+/// A solver problem instance.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub model: ModelConfig,
+    pub testbed: Testbed,
+    pub split: GroupSplit,
+    pub seq_len: usize,
+}
+
+impl Instance {
+    pub fn new(model: ModelConfig, testbed: Testbed, split: GroupSplit, seq_len: usize) -> Self {
+        Self { model, testbed, split, seq_len }
+    }
+
+    pub fn stage_models(&self) -> StageModels {
+        StageModels::new(&self.model, &self.testbed, self.split, self.seq_len)
+    }
+
+    pub fn memory(&self) -> MemoryModel {
+        MemoryModel::new(&self.model, &self.testbed, self.split, self.seq_len)
+    }
+
+    /// Evaluate one concrete configuration end-to-end (build plan +
+    /// simulate), returning (makespan seconds, tokens/s).
+    pub fn evaluate(&self, cfg: PlanConfig) -> (f64, f64) {
+        let sm = self.stage_models();
+        let plan = Plan::build(&sm, cfg, self.model.n_layers, self.split.ag, self.seq_len);
+        let sim = simulate(&plan);
+        (sim.makespan, sim.throughput_tokens(&plan))
+    }
+}
+
+/// Search-space caps. `ma_cap` mirrors the paper's small per-GPU
+/// micro-batch regime (Tables 3/4 sweep 1..4); `r1_cap`/`r2_cap` bound
+/// the pipeline degrees (launch overhead makes extreme degrees useless,
+/// §2.3).
+#[derive(Debug, Clone, Copy)]
+pub struct SolverParams {
+    pub ma_cap: usize,
+    pub r1_cap: usize,
+    pub r2_cap: usize,
+}
+
+impl Default for SolverParams {
+    fn default() -> Self {
+        // The paper's experimental regime sweeps m_a and r1 over 1..4
+        // (Tables 3/4); activation working sets and latency SLOs bound
+        // in-flight samples well before raw KV memory does.
+        Self { ma_cap: 4, r1_cap: 4, r2_cap: 64 }
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub config: PlanConfig,
+    pub makespan: f64,
+    pub throughput_tokens: f64,
+    /// Wall time the solver itself took (the paper's <1 s claim).
+    pub solve_seconds: f64,
+    /// Number of (m_a, r1, order, r2) evaluations performed.
+    pub evals: usize,
+}
+
+/// Optimal r2 (and its makespan) for fixed (m_a, r1, order) via ternary
+/// search over the convex-in-1/r2 objective. Returns (r2, m_e, makespan,
+/// evals).
+fn best_r2(
+    inst: &Instance,
+    sm: &StageModels,
+    m_a: usize,
+    r1: usize,
+    order: Order,
+    fuse_shared: bool,
+    r2_cap: usize,
+) -> (usize, f64, f64, usize) {
+    let mut evals = 0usize;
+    let mut eval = |r2: i64| -> f64 {
+        evals += 1;
+        let r2 = r2 as usize;
+        let m_e = sm.m_e(m_a as f64, r2);
+        let mut cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
+        cfg.fuse_shared = fuse_shared;
+        inst.evaluate(cfg).0
+    };
+    // m_e below one token per expert per part is degenerate; bound r2 so
+    // that m_e >= 1.
+    let max_r2 = ((sm.m_e(m_a as f64, 1)).floor() as usize).clamp(1, r2_cap);
+    let (r2, makespan) = ternary_min_int(1, max_r2 as i64, &mut eval);
+    let r2 = r2 as usize;
+    (r2, sm.m_e(m_a as f64, r2), makespan, evals)
+}
+
+/// Algorithm 1 (offline mode): maximize throughput over
+/// (m_a, r1, r2, m_e, order) subject to memory.
+pub fn solve(inst: &Instance, params: &SolverParams) -> Option<Solution> {
+    let t0 = Instant::now();
+    let sm = inst.stage_models();
+    let mem = inst.memory();
+    let mut best: Option<Solution> = None;
+    let mut evals = 0usize;
+    let mut prev_r1 = usize::MAX;
+
+    for m_a in (1..=params.ma_cap).rev() {
+        let r1 = mem.get_max_r1(m_a, params.r1_cap);
+        if r1 == 0 || r1 == prev_r1 {
+            // Pareto-dominated: same r1 at a smaller m_a loses by Thm 1.
+            continue;
+        }
+        prev_r1 = r1;
+        for order in Order::both() {
+            // With no shared expert both orders coincide; skip AASS.
+            if !sm.has_shared && order == Order::Aass {
+                continue;
+            }
+            let (r2, m_e, _ms, e) =
+                best_r2(inst, &sm, m_a, r1, order, false, params.r2_cap);
+            evals += e;
+            let cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
+            let (makespan, tput) = inst.evaluate(cfg);
+            evals += 1;
+            if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
+                best = Some(Solution {
+                    config: cfg,
+                    makespan,
+                    throughput_tokens: tput,
+                    solve_seconds: 0.0,
+                    evals: 0,
+                });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.solve_seconds = t0.elapsed().as_secs_f64();
+        b.evals = evals;
+        b
+    })
+}
+
+/// Online mode (§5.5): the batch is fixed by what arrived (total
+/// `samples_per_gpu` samples per AG GPU); adapt `r1` (divisors of the
+/// per-GPU batch), `r2`, and the order, with (ag, eg) pinned.
+pub fn solve_online(
+    inst: &Instance,
+    samples_per_gpu: usize,
+    params: &SolverParams,
+) -> Option<Solution> {
+    let t0 = Instant::now();
+    let sm = inst.stage_models();
+    let mem = inst.memory();
+    if samples_per_gpu == 0 || mem.max_samples_per_ag_gpu() < samples_per_gpu {
+        return None;
+    }
+    let mut best: Option<Solution> = None;
+    let mut evals = 0usize;
+    for r1 in 1..=params.r1_cap.min(samples_per_gpu) {
+        if samples_per_gpu % r1 != 0 {
+            continue;
+        }
+        let m_a = samples_per_gpu / r1;
+        for order in Order::both() {
+            if !sm.has_shared && order == Order::Aass {
+                continue;
+            }
+            let (r2, m_e, _ms, e) =
+                best_r2(inst, &sm, m_a, r1, order, false, params.r2_cap);
+            evals += e;
+            let cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
+            let (makespan, tput) = inst.evaluate(cfg);
+            evals += 1;
+            if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
+                best = Some(Solution {
+                    config: cfg,
+                    makespan,
+                    throughput_tokens: tput,
+                    solve_seconds: 0.0,
+                    evals: 0,
+                });
+            }
+        }
+    }
+    best.map(|mut b| {
+        b.solve_seconds = t0.elapsed().as_secs_f64();
+        b.evals = evals;
+        b
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst_deepseek(tb: Testbed) -> Instance {
+        Instance::new(ModelConfig::deepseek_v2(8), tb, GroupSplit::new(3, 5), 2048)
+    }
+
+    fn inst_qwen(tb: Testbed) -> Instance {
+        Instance::new(ModelConfig::qwen3_moe(12), tb, GroupSplit::new(4, 4), 2048)
+    }
+
+    #[test]
+    fn solves_all_testbeds_quickly() {
+        for tb in Testbed::all() {
+            let inst = inst_deepseek(tb.clone());
+            let sol = solve(&inst, &SolverParams::default()).expect("feasible");
+            assert!(sol.throughput_tokens > 0.0);
+            assert!(sol.solve_seconds < 1.0, "solver too slow: {}s", sol.solve_seconds);
+            assert!(sol.config.r1 >= 1 && sol.config.r2 >= 1);
+        }
+    }
+
+    #[test]
+    fn qwen_without_shared_solves() {
+        let sol = solve(&inst_qwen(Testbed::b()), &SolverParams::default()).unwrap();
+        assert!(!sol.config.fuse_shared);
+        assert!(sol.throughput_tokens > 0.0);
+    }
+
+    #[test]
+    fn solution_beats_naive_and_trivial_configs() {
+        let inst = inst_deepseek(Testbed::a());
+        let sol = solve(&inst, &SolverParams::default()).unwrap();
+        let sm = inst.stage_models();
+        let naive = inst.evaluate(PlanConfig::naive(1, sm.m_e(1.0, 1))).1;
+        assert!(
+            sol.throughput_tokens >= naive,
+            "solver {} < naive {}",
+            sol.throughput_tokens,
+            naive
+        );
+    }
+
+    #[test]
+    fn online_respects_batch() {
+        let inst = inst_deepseek(Testbed::a());
+        let sol = solve_online(&inst, 8, &SolverParams::default()).unwrap();
+        assert_eq!(sol.config.m_a * sol.config.r1, 8);
+        // Huge batches that don't fit must be rejected.
+        assert!(solve_online(&inst, 10_000_000, &SolverParams::default()).is_none());
+    }
+
+    #[test]
+    fn infeasible_split_returns_none() {
+        // All experts on one 24 GB device: infeasible.
+        let inst = Instance::new(
+            ModelConfig::deepseek_v2(8),
+            Testbed::b(),
+            GroupSplit::new(7, 1),
+            2048,
+        );
+        assert!(solve(&inst, &SolverParams::default()).is_none());
+    }
+}

@@ -1,0 +1,87 @@
+//! Exhaustive configuration search — the validation reference for
+//! Algorithm 1 (§5.3 uses exactly this: "for each (m_a, r1) pair, we
+//! performed a brute-force search over all (m_e, r2) values and
+//! computation orders").
+
+use crate::sched::{Order, PlanConfig};
+use crate::solver::algorithm1::Instance;
+
+/// Best (r2, order) for a fixed (m_a, r1) by exhaustive scan.
+/// Returns (config, makespan, tokens/s).
+pub fn best_for_fixed_ma_r1(
+    inst: &Instance,
+    m_a: usize,
+    r1: usize,
+    r2_cap: usize,
+) -> (PlanConfig, f64, f64) {
+    let sm = inst.stage_models();
+    let max_r2 = (sm.m_e(m_a as f64, 1).floor() as usize).clamp(1, r2_cap);
+    let mut best: Option<(PlanConfig, f64, f64)> = None;
+    for order in Order::both() {
+        if !sm.has_shared && order == Order::Aass {
+            continue;
+        }
+        for r2 in 1..=max_r2 {
+            let m_e = sm.m_e(m_a as f64, r2);
+            let cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
+            let (ms, tput) = inst.evaluate(cfg);
+            if best.as_ref().map_or(true, |b| tput > b.2) {
+                best = Some((cfg, ms, tput));
+            }
+        }
+    }
+    best.expect("r2 range is non-empty")
+}
+
+/// Full exhaustive search over the (m_a, r1) grid (memory-feasible
+/// points only). Returns the best (config, makespan, tokens/s).
+pub fn exhaustive(
+    inst: &Instance,
+    ma_cap: usize,
+    r1_cap: usize,
+    r2_cap: usize,
+) -> Option<(PlanConfig, f64, f64)> {
+    let mem = inst.memory();
+    let mut best: Option<(PlanConfig, f64, f64)> = None;
+    for m_a in 1..=ma_cap {
+        let max_r1 = mem.get_max_r1(m_a, r1_cap);
+        for r1 in 1..=max_r1 {
+            let cand = best_for_fixed_ma_r1(inst, m_a, r1, r2_cap);
+            if best.as_ref().map_or(true, |b| cand.2 > b.2) {
+                best = Some(cand);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+
+    #[test]
+    fn fixed_point_search_returns_positive_throughput() {
+        let inst = Instance::new(
+            ModelConfig::deepseek_v2(4),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let (cfg, ms, tput) = best_for_fixed_ma_r1(&inst, 2, 2, 16);
+        assert_eq!((cfg.m_a, cfg.r1), (2, 2));
+        assert!(ms > 0.0 && tput > 0.0);
+    }
+
+    #[test]
+    fn exhaustive_small_grid() {
+        let inst = Instance::new(
+            ModelConfig::qwen3_moe(4),
+            Testbed::b(),
+            GroupSplit::new(4, 4),
+            1024,
+        );
+        let best = exhaustive(&inst, 2, 2, 8).unwrap();
+        assert!(best.2 > 0.0);
+    }
+}

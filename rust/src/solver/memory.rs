@@ -1,0 +1,140 @@
+//! Device-memory occupancy model feeding Algorithm 1's
+//! `getMaxR1(...)` (§4.3: "calculates the maximum allowable r1 based on
+//! memory limits").
+//!
+//! AG devices hold the full replicated attention stack + shared experts
+//! + the KV cache of every in-flight sample (`r1·m_a` of them) + a
+//! working activation set. EG devices hold `E/eg` experts per layer plus
+//! the per-part activation slab. The EG check is a feasibility gate
+//! (weights either fit or the split is invalid); the AG check bounds
+//! `r1·m_a`.
+
+use crate::config::{GroupSplit, ModelConfig, Testbed};
+
+/// Memory occupancy calculator for one (model, testbed, split, S).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub model: ModelConfig,
+    pub mem_bytes: usize,
+    pub split: GroupSplit,
+    pub seq_len: usize,
+    /// Fraction of device memory usable for model state (the rest is
+    /// framework overhead / fragmentation slack).
+    pub usable_frac: f64,
+}
+
+impl MemoryModel {
+    pub fn new(model: &ModelConfig, tb: &Testbed, split: GroupSplit, seq_len: usize) -> Self {
+        Self {
+            model: model.clone(),
+            mem_bytes: tb.mem_bytes,
+            split,
+            seq_len,
+            usable_frac: 0.90,
+        }
+    }
+
+    fn usable(&self) -> f64 {
+        self.mem_bytes as f64 * self.usable_frac
+    }
+
+    /// Static weight bytes on each AG device: attention stack + shared
+    /// experts for all layers (replicated across the AG, §2.2).
+    pub fn ag_weight_bytes(&self) -> usize {
+        let attn = self.model.n_layers * self.model.attn_param_bytes_per_layer();
+        let shared = self.model.n_layers * self.model.n_shared * self.model.expert_param_bytes();
+        attn + shared
+    }
+
+    /// Static weight bytes on each EG device: E/eg experts per layer.
+    pub fn eg_weight_bytes(&self) -> usize {
+        let experts_per_dev = self.model.n_experts.div_ceil(self.split.eg);
+        self.model.n_layers * experts_per_dev * self.model.expert_param_bytes()
+    }
+
+    /// Per-sample dynamic bytes on an AG device: KV cache across all
+    /// layers plus an activation working set (hidden states for one
+    /// layer, double-buffered).
+    pub fn ag_bytes_per_sample(&self) -> usize {
+        let kv = self.model.kv_bytes_per_sample(self.seq_len);
+        let act = 2 * self.seq_len * self.model.embed * self.model.bytes_per_elem;
+        kv + act
+    }
+
+    /// Does the EG side fit at all with this split?
+    pub fn eg_feasible(&self) -> bool {
+        (self.eg_weight_bytes() as f64) < self.usable()
+    }
+
+    /// Maximum total in-flight samples per AG GPU (`r1·m_a` bound).
+    pub fn max_samples_per_ag_gpu(&self) -> usize {
+        let left = self.usable() - self.ag_weight_bytes() as f64;
+        if left <= 0.0 {
+            return 0;
+        }
+        (left / self.ag_bytes_per_sample() as f64) as usize
+    }
+
+    /// Algorithm 1's `getMaxR1`: largest r1 such that `r1·m_a` fits,
+    /// additionally clamped by the scheduler cap.
+    pub fn get_max_r1(&self, m_a: usize, r1_cap: usize) -> usize {
+        if m_a == 0 || !self.eg_feasible() {
+            return 0;
+        }
+        (self.max_samples_per_ag_gpu() / m_a).min(r1_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm(seq: usize) -> MemoryModel {
+        MemoryModel::new(&ModelConfig::deepseek_v2(8), &Testbed::a(), GroupSplit::new(3, 5), seq)
+    }
+
+    #[test]
+    fn weights_fit_on_paper_testbeds() {
+        let m = mm(2048);
+        assert!(m.eg_feasible());
+        assert!((m.ag_weight_bytes() as f64) < m.usable());
+        assert!(m.max_samples_per_ag_gpu() > 0);
+    }
+
+    #[test]
+    fn longer_sequences_fit_fewer_samples() {
+        assert!(mm(8192).max_samples_per_ag_gpu() < mm(1024).max_samples_per_ag_gpu());
+    }
+
+    #[test]
+    fn get_max_r1_inverse_in_m_a() {
+        let m = mm(2048);
+        let r1_at_1 = m.get_max_r1(1, 1_000_000);
+        let r1_at_4 = m.get_max_r1(4, 1_000_000);
+        assert!(r1_at_4 <= r1_at_1 / 4 + 1);
+        assert_eq!(m.get_max_r1(0, 8), 0);
+        assert_eq!(m.get_max_r1(1, 8), 8, "cap applies");
+    }
+
+    #[test]
+    fn infeasible_when_experts_too_big() {
+        // Squeeze all 160 experts onto 1 EG device of a 24 GB card:
+        // 160·3·5120·1536·2B · 8 layers ≈ 60 GB — must be infeasible.
+        let m = MemoryModel::new(
+            &ModelConfig::deepseek_v2(8),
+            &Testbed::b(),
+            GroupSplit::new(7, 1),
+            2048,
+        );
+        assert!(!m.eg_feasible());
+        assert_eq!(m.get_max_r1(1, 8), 0);
+    }
+
+    #[test]
+    fn mla_kv_much_smaller_than_mha() {
+        let ds = ModelConfig::deepseek_v2(8); // MLA
+        let mut mha = ds.clone();
+        mha.attention = crate::config::AttentionKind::Mha;
+        assert!(mha.kv_bytes_per_sample(2048) > 10 * ds.kv_bytes_per_sample(2048));
+    }
+}

@@ -1,0 +1,16 @@
+//! The FinDEP configuration solver (§4).
+//!
+//! [`algorithm1::solve`] implements Algorithm 1: walk the
+//! memory-constrained Pareto frontier of `(m_a, r1)` (Theorems 1-3 make
+//! everything off the frontier dominated), solve the 1-D convex
+//! subproblem in `r2` by ternary search (Theorem 4), and evaluate both
+//! AASS and ASAS execution orders. [`bruteforce`] provides the
+//! exhaustive reference used by tests and by the Tables 3/4 monotonicity
+//! experiments.
+
+pub mod algorithm1;
+pub mod bruteforce;
+pub mod memory;
+
+pub use algorithm1::{solve, solve_online, Instance, Solution, SolverParams};
+pub use memory::MemoryModel;

@@ -1,0 +1,202 @@
+//! Tiny declarative CLI parser (`clap` is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands, with auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument specification for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Spec {
+    name: String,
+    about: String,
+    opts: Vec<Opt>,
+}
+
+impl Spec {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self { name: name.into(), about: about.into(), opts: Vec::new() }
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Declare a `--key <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: Some(default.into()) });
+        self
+    }
+
+    /// Declare a required `--key <value>` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let val = if o.takes_value { " <value>" } else { "" };
+            let def = match &o.default {
+                Some(d) if o.takes_value => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{}{val:<12} {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    values.insert(key, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{key} does not take a value"));
+                    }
+                    flags.push(key);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required options.
+        for o in &self.opts {
+            if o.takes_value && o.default.is_none() && !values.contains_key(o.name) {
+                return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(Parsed { values, flags, positional })
+    }
+}
+
+/// Parse result with typed accessors.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> &str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> f64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("test", "a test command")
+            .opt("model", "tiny", "model preset")
+            .opt("steps", "10", "number of steps")
+            .flag("verbose", "chatty output")
+            .req("out", "output path")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = spec().parse(&sv(&["--out", "x.json", "--steps", "25"])).unwrap();
+        assert_eq!(p.get("model"), "tiny");
+        assert_eq!(p.get_usize("steps"), 25);
+        assert_eq!(p.get("out"), "x.json");
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let p = spec().parse(&sv(&["--out=y", "--verbose", "pos1"])).unwrap();
+        assert_eq!(p.get("out"), "y");
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&sv(&["--model", "x"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&sv(&["--out", "x", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.contains("model preset"));
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(spec().parse(&sv(&["--out", "x", "--verbose=1"])).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Micro-benchmark harness substrate (`criterion` is not vendored).
+//!
+//! Provides warmup + timed iteration with basic robust statistics, plus a
+//! markdown table printer used by every `rust/benches/*` binary to emit
+//! the paper's tables in a uniform format.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn p50_s(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        stats::std_dev(&self.samples)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.mean_s() * 1e9
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:>10}  (p50 {:>12}, n={})",
+            self.name,
+            fmt_duration(self.mean_s()),
+            fmt_duration(self.std_s()),
+            fmt_duration(self.p50_s()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Benchmark runner with warmup and adaptive iteration count.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-style runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(150),
+            max_iters: 2_000,
+            min_iters: 3,
+        }
+    }
+
+    /// Run `f` repeatedly, returning per-iteration timings.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup phase.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure phase.
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        BenchResult { name: name.to_string(), samples }
+    }
+}
+
+/// Markdown table builder for bench reports (paper-table shaped output).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Render as GitHub-flavoured markdown with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n### {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_iters: 1000,
+            min_iters: 3,
+        };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.samples.len() >= 3);
+        assert!(r.mean_s() > 0.0);
+        assert!(acc != 1); // keep the work observable
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_duration(3.25e-6), "3.25 µs");
+        assert_eq!(fmt_duration(4.5e-3), "4.50 ms");
+        assert_eq!(fmt_duration(1.5), "1.500 s");
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.rows_str(&["1", "2"]);
+        t.rows_str(&["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| a   | bb |"));
+        assert!(s.contains("| 333 | 4  |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.rows_str(&["only-one"]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained substrates (the image's crate registry is offline, so
+//! FinDEP vendors its own JSON, RNG, CLI, stats, bench-harness,
+//! property-test, and logging layers).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

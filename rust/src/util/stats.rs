@@ -1,0 +1,220 @@
+//! Statistics substrate: summary stats, percentiles, ordinary
+//! least-squares linear regression with R² (used to fit the paper's α-β
+//! performance models exactly as §5.2/Fig. 7 does), and integer ternary
+//! search over convex objectives (Theorem 4 solver step).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Result of an ordinary least-squares fit `y ≈ alpha + beta * x`.
+///
+/// This is the α-β model of the paper (Eqs. 7-9): `alpha` captures fixed
+/// launch/startup overhead, `beta` the per-unit cost, `r2` the fit quality
+/// the paper reports in Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinFit {
+    pub alpha: f64,
+    pub beta: f64,
+    pub r2: f64,
+}
+
+/// Least-squares fit of y = alpha + beta*x. Panics on len mismatch;
+/// returns a flat model when x has no variance.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> LinFit {
+    assert_eq!(x.len(), y.len(), "linear_fit: length mismatch");
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return LinFit { alpha: 0.0, beta: 0.0, r2: 0.0 };
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let sxx: f64 = x.iter().map(|xi| (xi - mx) * (xi - mx)).sum();
+    let sxy: f64 = x.iter().zip(y).map(|(xi, yi)| (xi - mx) * (yi - my)).sum();
+    if sxx == 0.0 {
+        return LinFit { alpha: my, beta: 0.0, r2: 1.0 };
+    }
+    let beta = sxy / sxx;
+    let alpha = my - beta * mx;
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
+    let ss_res: f64 =
+        x.iter().zip(y).map(|(xi, yi)| (yi - (alpha + beta * xi)).powi(2)).sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    LinFit { alpha, beta, r2 }
+}
+
+/// Minimize a convex (or unimodal) function over the integer interval
+/// [lo, hi] by ternary search; returns (argmin, min). O(log(hi-lo))
+/// evaluations, with a final local sweep of ±2 to absorb flat plateaus
+/// from `max(...)` kinks (the objective in Theorem 4 is piecewise linear,
+/// so plateaus are real).
+pub fn ternary_min_int<F: FnMut(i64) -> f64>(lo: i64, hi: i64, mut f: F) -> (i64, f64) {
+    assert!(lo <= hi);
+    let (mut lo, mut hi) = (lo, hi);
+    while hi - lo > 4 {
+        let m1 = lo + (hi - lo) / 3;
+        let m2 = hi - (hi - lo) / 3;
+        if f(m1) <= f(m2) {
+            hi = m2 - 1;
+        } else {
+            lo = m1 + 1;
+        }
+    }
+    let mut best = (lo, f(lo));
+    for x in (lo + 1)..=hi {
+        let v = f(x);
+        if v < best.1 {
+            best = (x, v);
+        }
+    }
+    best
+}
+
+/// A tiny online throughput/latency accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct Summary {
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn p(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
+    pub fn std(&self) -> f64 {
+        std_dev(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn exact_linear_fit() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 0.5 + 2.0 * v).collect();
+        let fit = linear_fit(&x, &y);
+        assert!((fit.alpha - 0.5).abs() < 1e-12);
+        assert!((fit.beta - 2.0).abs() < 1e-12);
+        assert!((fit.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_recovers_params() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x: Vec<f64> = (1..200).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 + 0.7 * v + rng.normal() * 0.5).collect();
+        let fit = linear_fit(&x, &y);
+        assert!((fit.alpha - 3.0).abs() < 0.5, "alpha={}", fit.alpha);
+        assert!((fit.beta - 0.7).abs() < 0.01, "beta={}", fit.beta);
+        assert!(fit.r2 > 0.99);
+    }
+
+    #[test]
+    fn degenerate_x_gives_flat_model() {
+        let fit = linear_fit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]);
+        assert_eq!(fit.beta, 0.0);
+        assert_eq!(fit.alpha, 2.0);
+    }
+
+    #[test]
+    fn ternary_finds_parabola_min() {
+        let (x, v) = ternary_min_int(-100, 100, |x| ((x - 17) * (x - 17)) as f64);
+        assert_eq!(x, 17);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn ternary_handles_plateau() {
+        // Piecewise linear with a flat bottom [5, 9].
+        let f = |x: i64| ((x - 5).max(0) as f64) + ((5 - x).max(0) as f64) * 2.0
+            - ((x - 5).max(0).min(4)) as f64;
+        let (x, v) = ternary_min_int(0, 50, f);
+        assert_eq!(v, 0.0, "argmin={x}");
+        assert!((5..=9).contains(&x));
+    }
+
+    #[test]
+    fn ternary_small_ranges() {
+        let (x, _) = ternary_min_int(3, 3, |x| x as f64);
+        assert_eq!(x, 3);
+        let (x, _) = ternary_min_int(1, 4, |x| (x as f64 - 2.2).abs());
+        assert_eq!(x, 2);
+    }
+}

@@ -1,0 +1,165 @@
+//! Synthetic serving workloads.
+//!
+//! * Offline mode (Table 5): fixed-size batches at a fixed sequence
+//!   length — the throughput-saturation regime.
+//! * Online mode (Table 6 / §5.5): requests arrive with unpredictable
+//!   prompt lengths; batches form per arrival window and the scheduler
+//!   re-solves per batch. Scenarios are parameterized by the *mean
+//!   arriving token count* (the paper uses 3072 and 6144).
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt sequence length.
+    pub seq_len: usize,
+    /// Arrival time, seconds from epoch start.
+    pub arrival_s: f64,
+}
+
+impl Request {
+    pub fn tokens(&self) -> usize {
+        self.seq_len
+    }
+}
+
+/// Offline batch generator: `count` requests of identical length.
+pub fn offline_batch(count: usize, seq_len: usize) -> Vec<Request> {
+    (0..count)
+        .map(|i| Request { id: i as u64, seq_len, arrival_s: 0.0 })
+        .collect()
+}
+
+/// Online arrival process: Poisson arrivals at `rate_per_s`, lognormal
+/// prompt lengths with the given mean/std, truncated to
+/// [min_len, max_len] and rounded to a multiple of `round_to` (shape
+/// buckets).
+#[derive(Debug, Clone)]
+pub struct OnlineWorkload {
+    pub rate_per_s: f64,
+    pub mean_len: f64,
+    pub std_len: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+    pub round_to: usize,
+}
+
+impl OnlineWorkload {
+    /// The paper's Table-6 scenario: mean arriving tokens per request.
+    pub fn paper_scenario(mean_tokens: usize) -> Self {
+        Self {
+            rate_per_s: 4.0,
+            mean_len: mean_tokens as f64,
+            std_len: mean_tokens as f64 * 0.4,
+            min_len: 256,
+            max_len: 4 * mean_tokens,
+            round_to: 256,
+        }
+    }
+
+    /// Generate `n` requests.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<Request> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|i| {
+                t += rng.exponential(self.rate_per_s);
+                let raw = rng.lognormal_mean_std(self.mean_len, self.std_len);
+                let len = (raw as usize).clamp(self.min_len, self.max_len);
+                let len = (len.div_ceil(self.round_to)) * self.round_to;
+                Request { id: i as u64, seq_len: len, arrival_s: t }
+            })
+            .collect()
+    }
+}
+
+/// Group online requests into serving batches: consecutive arrivals
+/// within `window_s` of the batch head, up to `max_batch` requests,
+/// bucketed by rounded sequence length so one AOT artifact shape serves
+/// the whole batch.
+pub fn window_batches(reqs: &[Request], window_s: f64, max_batch: usize) -> Vec<Vec<Request>> {
+    let mut batches: Vec<Vec<Request>> = Vec::new();
+    let mut current: Vec<Request> = Vec::new();
+    let mut head_t = f64::NEG_INFINITY;
+    for r in reqs {
+        let fits_window = current.is_empty() || r.arrival_s - head_t <= window_s;
+        if current.is_empty() {
+            head_t = r.arrival_s;
+        }
+        if !fits_window || current.len() >= max_batch {
+            batches.push(std::mem::take(&mut current));
+            head_t = r.arrival_s;
+        }
+        current.push(r.clone());
+    }
+    if !current.is_empty() {
+        batches.push(current);
+    }
+    batches
+}
+
+/// Representative sequence length for a batch: the max (padding model —
+/// every sample is padded up to the bucket the artifact was compiled
+/// for).
+pub fn batch_seq_len(batch: &[Request]) -> usize {
+    batch.iter().map(|r| r.seq_len).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_batches_are_uniform() {
+        let b = offline_batch(16, 2048);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|r| r.seq_len == 2048 && r.arrival_s == 0.0));
+        assert_eq!(b[3].tokens(), 2048);
+    }
+
+    #[test]
+    fn online_lengths_bucketed_and_bounded() {
+        let w = OnlineWorkload::paper_scenario(3072);
+        let mut rng = Rng::new(1);
+        let reqs = w.generate(500, &mut rng);
+        assert_eq!(reqs.len(), 500);
+        for r in &reqs {
+            assert!(r.seq_len >= w.min_len);
+            assert!(r.seq_len <= w.max_len + w.round_to);
+            assert_eq!(r.seq_len % w.round_to, 0);
+        }
+        // Arrivals strictly increase.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+        // Mean length lands near the target.
+        let mean: f64 =
+            reqs.iter().map(|r| r.seq_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean - 3072.0).abs() / 3072.0 < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn windows_respect_size_and_time() {
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request { id: i, seq_len: 512, arrival_s: i as f64 * 0.1 })
+            .collect();
+        let batches = window_batches(&reqs, 0.25, 3);
+        assert!(batches.iter().all(|b| b.len() <= 3));
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 10);
+        // A huge window with big max_batch puts everything together.
+        let one = window_batches(&reqs, 100.0, 100);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn batch_seq_len_is_max() {
+        let b = vec![
+            Request { id: 0, seq_len: 512, arrival_s: 0.0 },
+            Request { id: 1, seq_len: 1024, arrival_s: 0.1 },
+        ];
+        assert_eq!(batch_seq_len(&b), 1024);
+        assert_eq!(batch_seq_len(&[]), 0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Qualitative paper-shape checks: the *directions* and *regimes* of the
+//! paper's evaluation must hold on our calibrated simulator —
+//! who wins, where speedups grow, where they vanish (§5.4-§5.5
+//! Discussion). Absolute numbers are testbed-specific and not asserted.
+
+use findep::baselines::{best_naive, best_pppipe};
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::sched::Plan;
+use findep::simulator::{simulate, ScheduleTrace};
+use findep::solver::{solve, Instance, SolverParams};
+
+fn speedup(inst: &Instance, params: &SolverParams) -> Option<f64> {
+    let pp = best_pppipe(inst, params)?;
+    let fd = solve(inst, params)?;
+    Some(fd.throughput_tokens / pp.throughput_tokens)
+}
+
+#[test]
+fn findep_never_loses_to_best_pppipe_anywhere() {
+    // Table 5's universal claim across 2 backbones x 4 testbeds x S.
+    let params = SolverParams::default();
+    for tb in Testbed::all() {
+        for (model, shared) in
+            [(ModelConfig::deepseek_v2(8), true), (ModelConfig::qwen3_moe(12), false)]
+        {
+            for s in [1024usize, 2048, 4096, 8192] {
+                let inst = Instance::new(
+                    model.clone(),
+                    tb.clone(),
+                    GroupSplit::paper_default(&tb, shared),
+                    s,
+                );
+                if let Some(sp) = speedup(&inst, &params) {
+                    assert!(
+                        sp >= 0.999,
+                        "FinDEP slower than PPPipe: {sp:.3}x on {} {} S={s}",
+                        model.name,
+                        tb.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn speedup_grows_with_sequence_length() {
+    // Table 5's bold numbers: the S=8192 column shows the largest
+    // speedups (communication becomes the bottleneck). Check the
+    // comm-bound testbed B with the Qwen backbone (1.61x in the paper).
+    let params = SolverParams::default();
+    let tb = Testbed::b();
+    let model = ModelConfig::qwen3_moe(12);
+    let split = GroupSplit::paper_default(&tb, false);
+    let sp_short = speedup(&Instance::new(model.clone(), tb.clone(), split, 1024), &params)
+        .expect("feasible");
+    let sp_long = speedup(&Instance::new(model.clone(), tb.clone(), split, 8192), &params)
+        .expect("feasible");
+    assert!(
+        sp_long >= sp_short - 0.02,
+        "speedup should grow (or hold) with S: S=1024 {sp_short:.3}x vs S=8192 {sp_long:.3}x"
+    );
+    assert!(sp_long > 1.0, "long sequences must show a real win, got {sp_long:.3}x");
+}
+
+#[test]
+fn comm_cheap_testbed_shows_smaller_gains() {
+    // §5.5 Discussion: on testbed C (fat NVLink) FinDEP's advantage
+    // shrinks toward 1.0x (Amdahl); on comm-bound B it is larger.
+    let params = SolverParams::default();
+    let model = ModelConfig::qwen3_moe(12);
+    let sp_b = speedup(&Instance::new(
+        model.clone(),
+        Testbed::b(),
+        GroupSplit::new(4, 4),
+        4096,
+    ), &params)
+    .expect("B feasible");
+    let sp_c = speedup(&Instance::new(
+        model.clone(),
+        Testbed::c(),
+        GroupSplit::new(4, 4),
+        4096,
+    ), &params)
+    .expect("C feasible");
+    assert!(
+        sp_b >= sp_c - 0.02,
+        "comm-bound B ({sp_b:.3}x) should benefit at least as much as comm-cheap C ({sp_c:.3}x)"
+    );
+}
+
+#[test]
+fn non_overlap_ordering_matches_table7() {
+    // Table 7: naive > PPPipe > FinDEP in exposed communication time
+    // (DeepSeek on testbed A).
+    let params = SolverParams::default();
+    let tb = Testbed::a();
+    let model = ModelConfig::deepseek_v2(8);
+    let split = GroupSplit::new(3, 5);
+    for s in [1024usize, 2048, 4096] {
+        let inst = Instance::new(model.clone(), tb.clone(), split, s);
+        let sm = inst.stage_models();
+        let exposed = |cfg: findep::sched::PlanConfig| -> f64 {
+            let plan = Plan::build(&sm, cfg, model.n_layers, split.ag, s);
+            let sim = simulate(&plan);
+            ScheduleTrace::from_sim(&plan, &sim).non_overlapped_comm()
+        };
+        let nv = best_naive(&inst, params.ma_cap).unwrap();
+        let pp = best_pppipe(&inst, &params).unwrap();
+        let fd = solve(&inst, &params).unwrap();
+        let (e_nv, e_pp, e_fd) =
+            (exposed(nv.config), exposed(pp.config), exposed(fd.config));
+        assert!(
+            e_nv >= e_pp - 1e-9,
+            "S={s}: naive exposed {e_nv:.5} < pppipe {e_pp:.5}"
+        );
+        assert!(
+            e_pp >= e_fd - 1e-9,
+            "S={s}: pppipe exposed {e_pp:.5} < findep {e_fd:.5}"
+        );
+    }
+}
+
+#[test]
+fn testbed_d_scales_beyond_testbed_c() {
+    // Table 5: the 32-GPU system serves more aggregate tokens/s than
+    // the 8-GPU system (more AG GPUs commit more samples per pass).
+    let params = SolverParams::default();
+    let model = ModelConfig::deepseek_v2(16);
+    let c = solve(
+        &Instance::new(model.clone(), Testbed::c(), GroupSplit::new(3, 5), 2048),
+        &params,
+    )
+    .expect("C feasible");
+    let d = solve(
+        &Instance::new(model.clone(), Testbed::d(), GroupSplit::new(8, 24), 2048),
+        &params,
+    )
+    .expect("D feasible");
+    assert!(
+        d.throughput_tokens > c.throughput_tokens,
+        "32-GPU D ({:.0} tok/s) should outscale 8-GPU C ({:.0} tok/s)",
+        d.throughput_tokens,
+        c.throughput_tokens
+    );
+}
+
+#[test]
+fn shared_expert_scheduling_matters_for_deepseek() {
+    // §2.3 motivation: FinDEP's separate shared-expert task (overlapping
+    // A2E) must beat forcing the shared expert inline (PPPipe fusion) at
+    // the same (m_a, r1), on at least the comm-heavy testbeds.
+    let tb = Testbed::b();
+    let model = ModelConfig::deepseek_v2(8);
+    let split = GroupSplit::new(3, 5);
+    let inst = Instance::new(model.clone(), tb, split, 4096);
+    let sm = inst.stage_models();
+    let (m_a, r1) = (2usize, 2usize);
+    let fused = inst.evaluate(findep::sched::PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1)));
+    let separate = inst.evaluate(findep::sched::PlanConfig::findep(
+        m_a,
+        r1,
+        1,
+        sm.m_e(m_a as f64, 1),
+        findep::sched::Order::Asas,
+    ));
+    assert!(
+        separate.1 >= fused.1 * 0.999,
+        "separate shared scheduling {:.1} should not lose to fused {:.1}",
+        separate.1,
+        fused.1
+    );
+}

@@ -1,0 +1,83 @@
+//! Golden numerics: the Rust DEP pipeline (AOT artifacts on PJRT-CPU,
+//! fine-grained scheduling, real routing) must reproduce the Python
+//! kernel-path forward bit-for-bit within tolerance — for both the
+//! shared-expert (DeepSeek-style) and no-shared (Qwen-style) variants,
+//! under several schedules.
+
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::pipeline::{ExecConfig, Pipeline};
+use findep::runtime::artifact::{Golden, Manifest};
+use findep::runtime::artifacts_dir;
+use findep::sched::Order;
+
+fn skip() -> bool {
+    let missing = !artifacts_dir().join("manifest.json").exists();
+    if missing {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    missing
+}
+
+fn check_variant(shared: bool, cfgs: &[ExecConfig]) {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden_path = if shared { &manifest.golden } else { &manifest.golden_noshared };
+    let golden = Golden::load(golden_path).unwrap();
+    let model = ModelHandle::load(&dir, shared).unwrap();
+    let pipeline = Pipeline::new(model, 2, None).unwrap();
+    for &cfg in cfgs {
+        let (out, _) = pipeline.forward(&golden.input, cfg).unwrap();
+        let diff = out.max_abs_diff(&golden.output);
+        assert!(
+            diff <= golden.atol,
+            "golden mismatch (shared={shared}, cfg={cfg:?}): maxdiff {diff} > atol {}",
+            golden.atol
+        );
+    }
+}
+
+#[test]
+fn golden_shared_model_all_schedules() {
+    if skip() {
+        return;
+    }
+    check_variant(
+        true,
+        &[
+            ExecConfig::naive(),
+            ExecConfig::pppipe(2),
+            ExecConfig::findep(1, 1, Order::Asas),
+            ExecConfig::findep(2, 2, Order::Asas),
+            ExecConfig::findep(2, 4, Order::Aass),
+        ],
+    );
+}
+
+#[test]
+fn golden_noshared_model() {
+    if skip() {
+        return;
+    }
+    check_variant(
+        false,
+        &[ExecConfig::naive(), ExecConfig::findep(2, 2, Order::Asas)],
+    );
+}
+
+#[test]
+fn golden_robust_to_eg_worker_count() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = Golden::load(&manifest.golden).unwrap();
+    for eg in [1usize, 3, 4, 8] {
+        let model = ModelHandle::load(&dir, true).unwrap();
+        let pipeline = Pipeline::new(model, eg, None).unwrap();
+        let (out, _) =
+            pipeline.forward(&golden.input, ExecConfig::findep(2, 2, Order::Asas)).unwrap();
+        let diff = out.max_abs_diff(&golden.output);
+        assert!(diff <= golden.atol, "eg={eg}: maxdiff {diff}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Property-based scheduling invariants over randomized α-β models:
+//! Eq.-5 validity of every simulated plan, baseline dominance ordering,
+//! and the monotonicity/convexity structure the solver exploits.
+
+use findep::perfmodel::{LinearModel, StageModels};
+use findep::sched::{Order, Plan, PlanConfig};
+use findep::simulator::{simulate, ScheduleTrace};
+use findep::util::proptest::{self, Config};
+use findep::util::rng::Rng;
+
+/// Random positive stage models (arbitrary hardware).
+fn random_models(rng: &mut Rng) -> StageModels {
+    StageModels {
+        t_a: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-6, 2e-3)),
+        t_s: LinearModel::new(rng.range_f64(0.0, 1e-3), rng.range_f64(0.0, 1e-3)),
+        t_e: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-7, 1e-4)),
+        t_a2e: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-7, 1e-4)),
+        k_tokens: rng.range_f64(2.0, 400.0),
+        has_shared: rng.bool(0.6),
+    }
+}
+
+fn random_config(rng: &mut Rng, sm: &StageModels) -> PlanConfig {
+    let m_a = 1 + rng.usize_below(6);
+    let r1 = 1 + rng.usize_below(5);
+    let r2 = 1 + rng.usize_below(8);
+    let order = if rng.bool(0.5) { Order::Asas } else { Order::Aass };
+    let mut cfg = PlanConfig::findep(m_a, r1, r2, sm.m_e(m_a as f64, r2), order);
+    cfg.fuse_shared = rng.bool(0.2);
+    cfg
+}
+
+#[test]
+fn every_simulated_plan_satisfies_eq5() {
+    proptest::check("eq5-validity", &Config::with_cases(150), |rng| {
+        let sm = random_models(rng);
+        let cfg = random_config(rng, &sm);
+        let layers = 1 + rng.usize_below(6);
+        let plan = Plan::build(&sm, cfg, layers, 1 + rng.usize_below(8), 1024);
+        let sim = simulate(&plan);
+        // Rules 1-5: resource exclusivity.
+        let trace = ScheduleTrace::from_sim(&plan, &sim);
+        trace.validate_exclusive().map_err(|e| format!("{e} for {cfg:?}"))?;
+        // Rules 6-9: precedence.
+        for (i, t) in plan.tasks.iter().enumerate() {
+            for &d in &t.deps {
+                proptest::ensure(
+                    sim.start[i] >= sim.finish[d as usize] - 1e-12,
+                    format!("precedence violated: {} before {}", i, d),
+                )?;
+            }
+        }
+        // Makespan sanity: at least the critical chain of one chunk.
+        let m_e = cfg.m_e;
+        let lower = sm.attn_time(cfg.m_a as f64)
+            + 2.0 * sm.comm_time(m_e)
+            + sm.expert_time(m_e);
+        proptest::ensure(
+            sim.makespan >= lower - 1e-12,
+            format!("makespan {} below critical chain {lower}", sim.makespan),
+        )
+    });
+}
+
+#[test]
+fn findep_dominates_pppipe_dominates_naive() {
+    // With all (r1, r2, order) available, the best FinDEP schedule can
+    // never lose to the best PPPipe schedule, which can never lose to
+    // naive — search-space containment made measurable.
+    proptest::check("dominance", &Config::with_cases(60), |rng| {
+        let sm = random_models(rng);
+        let layers = 1 + rng.usize_below(5);
+        let ag = 1 + rng.usize_below(4);
+        let total = 8usize; // total samples per GPU, fixed budget
+        let eval = |cfg: PlanConfig| -> f64 {
+            let plan = Plan::build(&sm, cfg, layers, ag, 1024);
+            let sim = simulate(&plan);
+            sim.throughput_tokens(&plan)
+        };
+        let naive = eval(PlanConfig::naive(total, sm.m_e(total as f64, 1)));
+        let mut best_pp = 0.0f64;
+        let mut best_fd = 0.0f64;
+        for r1 in [1usize, 2, 4, 8] {
+            let m_a = total / r1;
+            best_pp = best_pp.max(eval(PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1))));
+            for r2 in [1usize, 2, 4, 8] {
+                for order in Order::both() {
+                    best_fd = best_fd.max(eval(PlanConfig::findep(
+                        m_a,
+                        r1,
+                        r2,
+                        sm.m_e(m_a as f64, r2),
+                        order,
+                    )));
+                    // FinDEP can also choose the fused arrangement.
+                    let mut fused =
+                        PlanConfig::findep(m_a, r1, r2, sm.m_e(m_a as f64, r2), order);
+                    fused.fuse_shared = true;
+                    best_fd = best_fd.max(eval(fused));
+                }
+            }
+        }
+        proptest::ensure(
+            best_pp >= naive * (1.0 - 1e-9),
+            format!("PPPipe {best_pp} < naive {naive}"),
+        )?;
+        proptest::ensure(
+            best_fd >= best_pp * (1.0 - 1e-9),
+            format!("FinDEP {best_fd} < PPPipe {best_pp}"),
+        )
+    });
+}
+
+#[test]
+fn des_throughput_monotone_on_frontier() {
+    // Theorems 1-3 verified through the DES (not just the closed form):
+    // optimal-throughput is monotone in m_a (fixed r1) and in r1
+    // (fixed m_a) when the rest is re-optimized — §5.3's experiment.
+    proptest::check("des-monotonicity", &Config::with_cases(30), |rng| {
+        let sm = random_models(rng);
+        let layers = 2 + rng.usize_below(4);
+        let ag = 1 + rng.usize_below(4);
+        let best_at = |m_a: usize, r1: usize| -> f64 {
+            let mut best = 0.0f64;
+            for r2 in 1..=8 {
+                for order in Order::both() {
+                    let cfg =
+                        PlanConfig::findep(m_a, r1, r2, sm.m_e(m_a as f64, r2), order);
+                    let plan = Plan::build(&sm, cfg, layers, ag, 1024);
+                    best = best.max(simulate(&plan).throughput_tokens(&plan));
+                }
+            }
+            best
+        };
+        let mut prev = 0.0;
+        for m_a in 1..=4 {
+            let cur = best_at(m_a, 1);
+            proptest::ensure(
+                cur >= prev * (1.0 - 1e-9),
+                format!("throughput not monotone in m_a at {m_a}"),
+            )?;
+            prev = cur;
+        }
+        let mut prev = 0.0;
+        for r1 in 1..=4 {
+            let cur = best_at(1, r1);
+            proptest::ensure(
+                cur >= prev * (1.0 - 1e-9),
+                format!("throughput not monotone in r1 at {r1}"),
+            )?;
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn non_overlapped_comm_bounded_by_total_comm() {
+    proptest::check("comm-accounting", &Config::with_cases(80), |rng| {
+        let sm = random_models(rng);
+        let cfg = random_config(rng, &sm);
+        let layers = 1 + rng.usize_below(5);
+        let plan = Plan::build(&sm, cfg, layers, 2, 1024);
+        let sim = simulate(&plan);
+        let trace = ScheduleTrace::from_sim(&plan, &sim);
+        let total_comm = trace.busy_time(findep::sched::Resource::A2ELink)
+            + trace.busy_time(findep::sched::Resource::E2ALink);
+        let exposed = trace.non_overlapped_comm();
+        proptest::ensure(exposed >= -1e-12, "negative exposed comm")?;
+        proptest::ensure(
+            exposed <= total_comm + 1e-12,
+            format!("exposed {exposed} exceeds total comm {total_comm}"),
+        )
+    });
+}

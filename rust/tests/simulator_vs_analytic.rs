@@ -1,0 +1,109 @@
+//! Integration: the discrete-event engine must reproduce the §4.2
+//! closed-form timestamps exactly on ASAS plans — the paper's algebra
+//! and our task-DAG semantics are the same object.
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::perfmodel::StageModels;
+use findep::sched::{analytic::Analytic, Order, Plan, PlanConfig, TaskKind};
+use findep::simulator::simulate;
+
+fn cases() -> Vec<(ModelConfig, GroupSplit)> {
+    vec![
+        (ModelConfig::deepseek_v2(8), GroupSplit::new(3, 5)),
+        (ModelConfig::qwen3_moe(12), GroupSplit::new(4, 4)),
+    ]
+}
+
+#[test]
+fn makespan_matches_closed_form_across_grid() {
+    for tb in Testbed::all() {
+        for (model, split) in cases() {
+            for s in [1024usize, 2048, 4096] {
+                let sm = StageModels::new(&model, &tb, split, s);
+                for m_a in [1usize, 2, 4] {
+                    for r1 in [1usize, 2, 3, 4] {
+                        for r2 in [1usize, 2, 4, 8] {
+                            let a = Analytic::new(&sm, m_a as f64, r1, r2);
+                            let cfg = PlanConfig::findep(m_a, r1, r2, a.m_e, Order::Asas);
+                            let plan = Plan::build(&sm, cfg, model.n_layers, split.ag, s);
+                            let des = simulate(&plan).makespan;
+                            let an = a.makespan(model.n_layers);
+                            assert!(
+                                (des - an).abs() <= 1e-9 * an.max(1e-9),
+                                "DES {des} != analytic {an} \
+                                 (tb={} model={} S={s} m_a={m_a} r1={r1} r2={r2})",
+                                tb.name,
+                                model.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn layer0_timestamps_match_closed_forms() {
+    let model = ModelConfig::deepseek_v2(4);
+    let split = GroupSplit::new(3, 5);
+    let sm = StageModels::new(&model, &Testbed::a(), split, 2048);
+    let (m_a, r1, r2) = (2usize, 3usize, 2usize);
+    let a = Analytic::new(&sm, m_a as f64, r1, r2);
+    let plan = Plan::build(
+        &sm,
+        PlanConfig::findep(m_a, r1, r2, a.m_e, Order::Asas),
+        model.n_layers,
+        split.ag,
+        2048,
+    );
+    let sim = simulate(&plan);
+    for i in 0..r1 {
+        let at = plan.find(TaskKind::Attention, 0, i as u32, 0).unwrap();
+        assert!(
+            (sim.start[at] - a.tau_a(i)).abs() < 1e-12,
+            "tau_a({i}): {} vs {}",
+            sim.start[at],
+            a.tau_a(i)
+        );
+        let sh = plan.find(TaskKind::SharedExpert, 0, i as u32, 0).unwrap();
+        assert!((sim.start[sh] - a.tau_s(i)).abs() < 1e-12, "tau_s({i})");
+        for j in 0..r2 {
+            let a2e = plan.find(TaskKind::A2E, 0, i as u32, j as u32).unwrap();
+            assert!(
+                (sim.start[a2e] - a.tau_a2e(i, j)).abs() < 1e-12,
+                "tau_a2e({i},{j}): {} vs {}",
+                sim.start[a2e],
+                a.tau_a2e(i, j)
+            );
+            let e = plan.find(TaskKind::Expert, 0, i as u32, j as u32).unwrap();
+            assert!((sim.start[e] - a.tau_e(i, j)).abs() < 1e-12, "tau_e({i},{j})");
+            let e2a = plan.find(TaskKind::E2A, 0, i as u32, j as u32).unwrap();
+            assert!((sim.start[e2a] - a.tau_e2a(i, j)).abs() < 1e-12, "tau_e2a({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn objective_agrees_with_des_throughput() {
+    let model = ModelConfig::qwen3_moe(12);
+    let split = GroupSplit::new(4, 4);
+    let sm = StageModels::new(&model, &Testbed::b(), split, 2048);
+    for (m_a, r1, r2) in [(1usize, 1usize, 1usize), (2, 2, 2), (4, 2, 4)] {
+        let a = Analytic::new(&sm, m_a as f64, r1, r2);
+        let plan = Plan::build(
+            &sm,
+            PlanConfig::findep(m_a, r1, r2, a.m_e, Order::Asas),
+            model.n_layers,
+            split.ag,
+            2048,
+        );
+        let sim = simulate(&plan);
+        let des_tput = sim.throughput_tokens(&plan);
+        let an_tput = a.throughput_tokens(model.n_layers, split.ag, 2048);
+        assert!(
+            ((des_tput - an_tput) / an_tput).abs() < 1e-9,
+            "throughput mismatch: {des_tput} vs {an_tput}"
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! Integration: Algorithm 1 vs exhaustive search — the Pareto-frontier
+//! walk plus convex r2 search must recover (within numerical noise) the
+//! brute-force optimum on every instance (the "near-optimal" claim of
+//! §4.3).
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::solver::{algorithm1, bruteforce, Instance, SolverParams};
+
+fn instances() -> Vec<Instance> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for s in [1024usize, 4096] {
+            out.push(Instance::new(
+                ModelConfig::deepseek_v2(8),
+                tb.clone(),
+                GroupSplit::paper_default(&tb, true),
+                s,
+            ));
+            out.push(Instance::new(
+                ModelConfig::qwen3_moe(12),
+                tb.clone(),
+                GroupSplit::paper_default(&tb, false),
+                s,
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn algorithm1_matches_bruteforce_optimum() {
+    let params = SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 16 };
+    for inst in instances() {
+        let brute = bruteforce::exhaustive(&inst, params.ma_cap, params.r1_cap, params.r2_cap);
+        let solved = algorithm1::solve(&inst, &params);
+        match (brute, solved) {
+            (Some((bcfg, _, btput)), Some(sol)) => {
+                assert!(
+                    sol.throughput_tokens >= btput * 0.999,
+                    "Algorithm 1 {:.2} < brute-force {:.2} on {} {} S={} \
+                     (alg1 {:?} vs brute {:?})",
+                    sol.throughput_tokens,
+                    btput,
+                    inst.model.name,
+                    inst.testbed.name,
+                    inst.seq_len,
+                    sol.config,
+                    bcfg
+                );
+            }
+            (None, None) => {} // consistently infeasible
+            (b, s) => panic!(
+                "feasibility disagreement on {} {}: brute={} alg1={}",
+                inst.model.name,
+                inst.testbed.name,
+                b.is_some(),
+                s.is_some()
+            ),
+        }
+    }
+}
+
+#[test]
+fn solver_is_subsecond_everywhere() {
+    // The paper's headline solver claim: < 1 s per instance.
+    let params = SolverParams::default();
+    for inst in instances() {
+        if let Some(sol) = algorithm1::solve(&inst, &params) {
+            assert!(
+                sol.solve_seconds < 1.0,
+                "solver took {:.3}s on {} {}",
+                sol.solve_seconds,
+                inst.model.name,
+                inst.testbed.name
+            );
+        }
+    }
+}
+
+#[test]
+fn online_solver_matches_online_bruteforce() {
+    let params = SolverParams { ma_cap: 8, r1_cap: 4, r2_cap: 16 };
+    for inst in instances().into_iter().take(6) {
+        let batch = 8usize;
+        let Some(sol) = algorithm1::solve_online(&inst, batch, &params) else {
+            continue;
+        };
+        // Exhaustive over the same constrained space.
+        let mut best = 0.0f64;
+        for r1 in 1..=params.r1_cap.min(batch) {
+            if batch % r1 != 0 {
+                continue;
+            }
+            let m_a = batch / r1;
+            let (_, _, tput) = bruteforce::best_for_fixed_ma_r1(&inst, m_a, r1, params.r2_cap);
+            best = best.max(tput);
+        }
+        assert!(
+            sol.throughput_tokens >= best * 0.999,
+            "online solver {:.2} < exhaustive {:.2} on {} {}",
+            sol.throughput_tokens,
+            best,
+            inst.model.name,
+            inst.testbed.name
+        );
+        assert_eq!(sol.config.m_a * sol.config.r1, batch);
+    }
+}
