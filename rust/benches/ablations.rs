@@ -13,7 +13,7 @@
 
 use findep::config::{GroupSplit, ModelConfig, Testbed};
 use findep::sched::{Order, PlanConfig};
-use findep::solver::{solve, Instance, SolverParams};
+use findep::solver::{solve, Evaluator, Instance, SolverParams};
 use findep::util::bench::Table;
 
 fn main() {
@@ -71,10 +71,11 @@ fn main() {
         for s in [1024usize, 4096] {
             let inst = Instance::new(model.clone(), tb.clone(), split, s);
             let Some(sol) = solve(&inst, &params) else { continue };
-            let eval_order = |order: Order| {
+            let mut ev = inst.evaluator();
+            let mut eval_order = |order: Order| {
                 let mut cfg: PlanConfig = sol.config;
                 cfg.order = order;
-                inst.evaluate(cfg).1
+                ev.evaluate(cfg).1
             };
             let (asas, aass) = (eval_order(Order::Asas), eval_order(Order::Aass));
             table.row(&[
@@ -105,12 +106,13 @@ fn main() {
         (Testbed::c(), ModelConfig::deepseek_v2(16), GroupSplit::new(3, 5), 2048),
     ] {
         let inst = Instance::new(model.clone(), tb.clone(), split, s);
-        let sm = inst.stage_models();
+        let mut ev: Evaluator = inst.evaluator();
+        let sm = ev.stage_models().clone();
         let mut row = vec![format!("{} on {} S={s}", model.name, tb.name)];
         let mut best = (1usize, 0.0f64);
         for r2 in [1usize, 2, 4, 8, 16, 32] {
             let cfg = PlanConfig::findep(2, 2, r2, sm.m_e(2.0, r2), Order::Asas);
-            let (_, tput) = inst.evaluate(cfg);
+            let (_, tput) = ev.evaluate(cfg);
             if tput > best.1 {
                 best = (r2, tput);
             }

@@ -3,14 +3,37 @@
 //! per-request online adaptation.
 //!
 //! Benchmarks Algorithm 1 wall time across every (model, testbed, S)
-//! instance of the evaluation plus the online variant, and scales the
-//! search caps to show the growth is benign.
+//! instance of the evaluation plus the online variant, scales the
+//! search caps to show the growth is benign, and measures the buffered
+//! candidate-evaluation hot path (arena reuse + ASAS closed-form
+//! probes) against the original allocate-per-candidate baseline — both
+//! paths are run and reported, and the buffered path must win.
 //!
 //! Run: `cargo bench --bench solver_speed`
 
 use findep::config::{GroupSplit, ModelConfig, Testbed};
-use findep::solver::{solve, solve_online, Instance, SolverParams};
-use findep::util::bench::{Bencher, Table};
+use findep::solver::{solve, solve_mode, solve_online, EvalMode, Instance, SolverParams};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+
+fn paper_instances() -> Vec<(String, Instance)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for (deepseek, name) in [(true, "deepseek"), (false, "qwen")] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            let split = GroupSplit::paper_default(&tb, deepseek);
+            out.push((
+                format!("{name}/{}", tb.name),
+                Instance::new(model, tb.clone(), split, 4096),
+            ));
+        }
+    }
+    out
+}
 
 fn main() {
     let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
@@ -21,35 +44,80 @@ fn main() {
         "Algorithm 1 solve time (must stay << 1 s)",
         &["instance", "mean", "p50", "evals", "throughput (tok/s)"],
     );
-    for tb in Testbed::all() {
-        for (deepseek, name) in [(true, "deepseek"), (false, "qwen")] {
-            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
-            let model = if deepseek {
-                ModelConfig::deepseek_v2(layers)
-            } else {
-                ModelConfig::qwen3_moe(layers)
-            };
-            let split = GroupSplit::paper_default(&tb, deepseek);
-            let inst = Instance::new(model, tb.clone(), split, 4096);
-            let Some(sol) = solve(&inst, &params) else { continue };
-            let r = bencher.run(&format!("{name}/{}", tb.name), || {
-                let _ = solve(&inst, &params);
-            });
-            assert!(
-                r.mean_s() < 1.0,
-                "solver exceeded 1 s on {name}/{}",
-                tb.name
-            );
-            table.row(&[
-                format!("{name} on {}", tb.name),
-                findep::util::bench::fmt_duration(r.mean_s()),
-                findep::util::bench::fmt_duration(r.p50_s()),
-                sol.evals.to_string(),
-                format!("{:.0}", sol.throughput_tokens),
-            ]);
-        }
+    for (label, inst) in paper_instances() {
+        let Some(sol) = solve(&inst, &params) else { continue };
+        let r = bencher.run(&label, || {
+            let _ = solve(&inst, &params);
+        });
+        assert!(r.mean_s() < 1.0, "solver exceeded 1 s on {label}");
+        table.row(&[
+            label,
+            fmt_duration(r.mean_s()),
+            fmt_duration(r.p50_s()),
+            sol.evals.to_string(),
+            format!("{:.0}", sol.throughput_tokens),
+        ]);
     }
     table.print();
+
+    // --- Buffered arena vs per-candidate allocation (the hot-path
+    //     refactor's measured claim). --------------------------------
+    let mut table = Table::new(
+        "Algorithm 1 search wall time: per-candidate allocation vs buffered arena",
+        &["instance", "alloc baseline", "buffered", "speedup"],
+    );
+    let (mut sum_alloc, mut sum_buffered) = (0.0f64, 0.0f64);
+    for (label, inst) in paper_instances() {
+        let sol_alloc = solve_mode(&inst, &params, EvalMode::AllocPerCandidate);
+        let sol_buf = solve_mode(&inst, &params, EvalMode::Buffered);
+        match (&sol_alloc, &sol_buf) {
+            (Some(a), Some(b)) => {
+                // The de-allocation must be behaviour-preserving: 1e-9
+                // relative, the analytic-vs-engine agreement bound
+                // (see buffered_and_alloc_modes_agree in solver tests).
+                let rel =
+                    (a.throughput_tokens - b.throughput_tokens).abs() / a.throughput_tokens;
+                assert!(
+                    rel <= 1e-9,
+                    "modes disagree on throughput on {label}: alloc {} vs buffered {}",
+                    a.throughput_tokens,
+                    b.throughput_tokens
+                );
+            }
+            (None, None) => continue,
+            _ => panic!("feasibility disagreement between modes on {label}"),
+        }
+        let r_alloc = bencher.run(&format!("{label}/alloc"), || {
+            let _ = solve_mode(&inst, &params, EvalMode::AllocPerCandidate);
+        });
+        let r_buf = bencher.run(&format!("{label}/buffered"), || {
+            let _ = solve_mode(&inst, &params, EvalMode::Buffered);
+        });
+        sum_alloc += r_alloc.mean_s();
+        sum_buffered += r_buf.mean_s();
+        table.row(&[
+            label,
+            fmt_duration(r_alloc.mean_s()),
+            fmt_duration(r_buf.mean_s()),
+            format!("{:.2}x", r_alloc.mean_s() / r_buf.mean_s()),
+        ]);
+    }
+    table.print();
+    println!(
+        "aggregate Algorithm-1 search wall time: alloc {} vs buffered {} -> {:.2}x",
+        fmt_duration(sum_alloc),
+        fmt_duration(sum_buffered),
+        sum_alloc / sum_buffered
+    );
+    // Quick mode runs too few iterations to gate CI on a timing
+    // ordering; the full run enforces the hot-path claim.
+    if !quick {
+        assert!(
+            sum_buffered < sum_alloc,
+            "buffered path ({sum_buffered:.6}s) must beat the per-candidate-allocation \
+             baseline ({sum_alloc:.6}s)"
+        );
+    }
 
     // Online variant (the per-batch re-solve of Table 6).
     let inst = Instance::new(
@@ -65,7 +133,8 @@ fn main() {
     assert!(r.mean_s() < 1.0);
 
     // Cap scaling: the Pareto-frontier walk keeps growth benign.
-    let mut table = Table::new("solve time vs search caps", &["ma_cap", "r1_cap", "r2_cap", "mean"]);
+    let mut table =
+        Table::new("solve time vs search caps", &["ma_cap", "r1_cap", "r2_cap", "mean"]);
     for (ma, r1, r2) in [(4usize, 4usize, 16usize), (8, 8, 32), (16, 8, 64), (32, 8, 128)] {
         let p = SolverParams { ma_cap: ma, r1_cap: r1, r2_cap: r2 };
         let r = bencher.run(&format!("caps {ma}/{r1}/{r2}"), || {
@@ -75,7 +144,7 @@ fn main() {
             ma.to_string(),
             r1.to_string(),
             r2.to_string(),
-            findep::util::bench::fmt_duration(r.mean_s()),
+            fmt_duration(r.mean_s()),
         ]);
         assert!(r.mean_s() < 1.0, "solver exceeded 1 s at caps {ma}/{r1}/{r2}");
     }

@@ -10,7 +10,8 @@ use crate::solver::algorithm1::{Instance, Solution};
 /// all naive DEP can do).
 pub fn best_naive(inst: &Instance, ma_cap: usize) -> Option<Solution> {
     let mem = inst.memory();
-    let sm = inst.stage_models();
+    let mut ev = inst.evaluator();
+    let sm = ev.stage_models().clone();
     let cap = mem.max_samples_per_ag_gpu().min(ma_cap);
     if cap == 0 || !mem.eg_feasible() {
         return None;
@@ -18,7 +19,7 @@ pub fn best_naive(inst: &Instance, ma_cap: usize) -> Option<Solution> {
     let mut best: Option<Solution> = None;
     for m_a in 1..=cap {
         let cfg = PlanConfig::naive(m_a, sm.m_e(m_a as f64, 1));
-        let (makespan, tput) = inst.evaluate(cfg);
+        let (makespan, tput) = ev.evaluate(cfg);
         if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
             best = Some(Solution {
                 config: cfg,

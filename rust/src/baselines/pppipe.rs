@@ -34,14 +34,15 @@ pub fn best_pppipe_deep(inst: &Instance, params: &SolverParams) -> Option<Soluti
 
 fn best_pppipe_capped(inst: &Instance, params: &SolverParams, r1_cap: usize) -> Option<Solution> {
     let mem = inst.memory();
-    let sm = inst.stage_models();
+    let mut ev = inst.evaluator();
+    let sm = ev.stage_models().clone();
     let mut best: Option<Solution> = None;
     let mut evals = 0usize;
     for m_a in (1..=params.ma_cap).rev() {
         let max_r1 = mem.get_max_r1(m_a, params.r1_cap.min(r1_cap));
         for r1 in 1..=max_r1 {
             let cfg = PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1));
-            let (makespan, tput) = inst.evaluate(cfg);
+            let (makespan, tput) = ev.evaluate(cfg);
             evals += 1;
             if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
                 best = Some(Solution {

@@ -16,6 +16,7 @@
 //! pins them together.
 
 use crate::perfmodel::StageModels;
+use crate::sched::{Order, PlanConfig};
 
 /// All §4.2 quantities evaluated at one configuration.
 #[derive(Debug, Clone, Copy)]
@@ -47,6 +48,28 @@ impl Analytic {
         let f = x.max(r2 as f64 * y);
         let g = t_a + 2.0 * t_c + t_e + (r2 as f64 - 1.0) * y;
         Self { t_a, t_s, t_e, t_c, x, y, f, g, r1, r2, m_a, m_e }
+    }
+
+    /// The closed forms for a concrete [`PlanConfig`], when they apply.
+    ///
+    /// Returns `Some` exactly for the configurations the §4.2 algebra
+    /// covers — ASAS order, shared expert scheduled separately (not
+    /// fused), and an `m_e` consistent with token conservation — which
+    /// is precisely the candidate shape Algorithm 1's inner r2 probes
+    /// generate. On those plans the closed form and the discrete-event
+    /// engine agree exactly (`rust/tests/simulator_vs_analytic.rs`), so
+    /// the solver uses this as its allocation-free probe fast path and
+    /// falls back to the simulator for AASS / fused candidates.
+    pub fn from_config(models: &StageModels, cfg: &PlanConfig) -> Option<Analytic> {
+        if cfg.order != Order::Asas || cfg.fuse_shared {
+            return None;
+        }
+        let m_e = models.m_e(cfg.m_a as f64, cfg.r2);
+        let consistent = (cfg.m_e - m_e).abs() <= 1e-12 * m_e.abs().max(1.0);
+        if !consistent {
+            return None;
+        }
+        Some(Analytic::new(models, cfg.m_a as f64, cfg.r1, cfg.r2))
     }
 
     /// Per-layer start-time offset: `max(G, r1·F)` (§4.2).
@@ -235,6 +258,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn from_config_gates_on_closed_form_applicability() {
+        let sm = models();
+        let m_e = sm.m_e(2.0, 3);
+        let asas = crate::sched::PlanConfig::findep(2, 2, 3, m_e, crate::sched::Order::Asas);
+        let a = Analytic::from_config(&sm, &asas).expect("ASAS candidate is covered");
+        assert!((a.makespan(8) - Analytic::new(&sm, 2.0, 2, 3).makespan(8)).abs() < 1e-15);
+        // AASS, fused, and inconsistent-m_e candidates are not covered.
+        let aass = crate::sched::PlanConfig::findep(2, 2, 3, m_e, crate::sched::Order::Aass);
+        assert!(Analytic::from_config(&sm, &aass).is_none());
+        let mut fused = asas;
+        fused.fuse_shared = true;
+        assert!(Analytic::from_config(&sm, &fused).is_none());
+        let mut skewed = asas;
+        skewed.m_e = m_e * 1.5;
+        assert!(Analytic::from_config(&sm, &skewed).is_none());
     }
 
     #[test]

@@ -4,12 +4,14 @@
 //! A [`plan::Plan`] is the concrete object FinDEP, PPPipe, and naive DEP
 //! all produce: the full set of fine-grained tasks for a forward pass
 //! (attention / shared-expert / A2E / expert / E2A per `(layer, chunk,
-//! part)`), their Eq.-5 precedence edges, and a fixed issue order per
-//! exclusive resource. The simulator executes plans; the analytic module
-//! evaluates the ASAS closed forms (X, Y, F, G, Eq. 13) without building
-//! the graph.
+//! part)`), their Eq.-5 precedence edges (flat-pooled, arena-rebuildable
+//! via [`plan::PlanBuffers`]), and a fixed issue order per exclusive
+//! resource. The simulator executes plans; the analytic module evaluates
+//! the ASAS closed forms (X, Y, F, G, Eq. 13) without building the
+//! graph — the solver uses those closed forms as its candidate-probe
+//! fast path.
 
 pub mod analytic;
 pub mod plan;
 
-pub use plan::{Order, Plan, PlanConfig, Resource, Task, TaskKind};
+pub use plan::{Order, Plan, PlanBuffers, PlanConfig, Resource, Task, TaskKind};

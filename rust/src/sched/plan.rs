@@ -14,6 +14,16 @@
 //! issue lexicographically. PPPipe is expressed in the same vocabulary by
 //! fusing the shared expert into attention and pinning `r2 = 1`
 //! (`PlanConfig::pppipe`).
+//!
+//! ## Storage layout (hot-path contract)
+//!
+//! Dependency edges live in one flat pool (`Plan::deps(i)` slices it),
+//! not in per-task `Vec`s, and [`Plan::build_into`] rewrites an existing
+//! [`PlanBuffers`] arena in place. Algorithm 1 evaluates hundreds of
+//! `(m_a, order, r2)` candidates per solve; with the arena the whole
+//! search performs zero task/dep allocations after the first candidate.
+//! [`Plan::build`] is the one-shot convenience wrapper over the same
+//! code path, so the two can never drift.
 
 use crate::perfmodel::StageModels;
 
@@ -112,8 +122,9 @@ impl TaskKind {
     }
 }
 
-/// One schedulable unit.
-#[derive(Debug, Clone)]
+/// One schedulable unit. Dependency edges live in the owning
+/// [`Plan`]'s flat pool — see [`Plan::deps`].
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Task {
     pub kind: TaskKind,
     /// Transformer layer t.
@@ -123,8 +134,10 @@ pub struct Task {
     /// r2 fine-grained part j (0 for AG-side tasks).
     pub part: u32,
     pub duration: f64,
-    /// Indices of tasks that must *finish* before this may start.
-    pub deps: Vec<u32>,
+    /// Offset of this task's dependency slice in `Plan::dep_pool`.
+    dep_start: u32,
+    /// Length of the dependency slice.
+    dep_len: u32,
 }
 
 impl Task {
@@ -191,14 +204,18 @@ impl PlanConfig {
 }
 
 /// A fully-materialized schedule: tasks + precedence + per-resource
-/// issue order. Produced by [`Plan::build`], consumed by the simulator
-/// and by the real coordinator's pipeline executor.
-#[derive(Debug, Clone)]
+/// issue order. Produced by [`Plan::build`] / [`Plan::build_into`],
+/// consumed by the simulator and by the real coordinator's pipeline
+/// executor.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
     pub config: PlanConfig,
     pub n_layers: usize,
     pub has_shared_tasks: bool,
     pub tasks: Vec<Task>,
+    /// Flat dependency pool; `tasks[i]` owns
+    /// `dep_pool[dep_start..dep_start+dep_len]`.
+    pub(crate) dep_pool: Vec<u32>,
     /// Issue order per resource (indices into `tasks`), FIFO,
     /// non-preemptive.
     pub issue_order: [Vec<u32>; 4],
@@ -207,11 +224,71 @@ pub struct Plan {
     pub total_tokens: f64,
 }
 
+/// Reusable arena for plan construction: Algorithm 1's candidate loop
+/// rebuilds the task DAG into the same storage instead of allocating a
+/// fresh `Plan` per `(m_a, order, r2)` probe.
+#[derive(Debug, Clone)]
+pub struct PlanBuffers {
+    plan: Plan,
+}
+
+impl Default for PlanBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanBuffers {
+    pub fn new() -> Self {
+        Self {
+            plan: Plan {
+                config: PlanConfig::naive(1, 0.0),
+                n_layers: 0,
+                has_shared_tasks: false,
+                tasks: Vec::new(),
+                dep_pool: Vec::new(),
+                issue_order: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+                total_tokens: 0.0,
+            },
+        }
+    }
+
+    /// The most recently built plan (empty before the first
+    /// `build_into`).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+}
+
 impl Plan {
     /// Build the task DAG for `n_layers` transformer layers with stage
     /// durations from `models` and `ag` AG GPUs contributing
-    /// `r1·m_a·S` tokens each.
-    pub fn build(models: &StageModels, cfg: PlanConfig, n_layers: usize, ag: usize, seq_len: usize) -> Plan {
+    /// `r1·m_a·S` tokens each. One-shot wrapper over
+    /// [`Plan::build_into`].
+    pub fn build(
+        models: &StageModels,
+        cfg: PlanConfig,
+        n_layers: usize,
+        ag: usize,
+        seq_len: usize,
+    ) -> Plan {
+        let mut buf = PlanBuffers::new();
+        Plan::build_into(&mut buf, models, cfg, n_layers, ag, seq_len);
+        buf.plan
+    }
+
+    /// Rebuild the task DAG in place, reusing `buf`'s task, dependency,
+    /// and issue-order storage. Returns a borrow of the built plan.
+    /// Output is task-for-task identical to a fresh [`Plan::build`]
+    /// (pinned by `rust/tests/plan_properties.rs`).
+    pub fn build_into<'a>(
+        buf: &'a mut PlanBuffers,
+        models: &StageModels,
+        cfg: PlanConfig,
+        n_layers: usize,
+        ag: usize,
+        seq_len: usize,
+    ) -> &'a Plan {
         assert!(cfg.r1 >= 1 && cfg.r2 >= 1 && cfg.m_a >= 1);
         let r1 = cfg.r1;
         let r2 = cfg.r2;
@@ -225,7 +302,17 @@ impl Plan {
 
         let n_sh = if shared_tasks { r1 } else { 0 };
         let per_layer = r1 + n_sh + 3 * r1 * r2;
-        let mut tasks: Vec<Task> = Vec::with_capacity(per_layer * n_layers);
+
+        let plan = &mut buf.plan;
+        plan.config = cfg;
+        plan.n_layers = n_layers;
+        plan.has_shared_tasks = shared_tasks;
+        plan.total_tokens = (cfg.r1 * cfg.m_a * ag * seq_len) as f64;
+        let tasks = &mut plan.tasks;
+        let pool = &mut plan.dep_pool;
+        tasks.clear();
+        pool.clear();
+        tasks.reserve(per_layer * n_layers);
 
         // Arithmetic index helpers (layout per layer: attn | shared |
         // a2e | expert | e2a).
@@ -238,85 +325,82 @@ impl Plan {
         let idx_e2a =
             |t: usize, i: usize, j: usize| (base(t) + r1 + n_sh + 2 * r1 * r2 + i * r2 + j) as u32;
 
+        // Push a task whose deps were just appended to the pool.
+        let push = |tasks: &mut Vec<Task>,
+                        pool: &mut Vec<u32>,
+                        dep_start: usize,
+                        kind: TaskKind,
+                        layer: usize,
+                        chunk: usize,
+                        part: usize,
+                        duration: f64| {
+            tasks.push(Task {
+                kind,
+                layer: layer as u32,
+                chunk: chunk as u32,
+                part: part as u32,
+                duration,
+                dep_start: dep_start as u32,
+                dep_len: (pool.len() - dep_start) as u32,
+            });
+        };
+
         for t in 0..n_layers {
             // Attention chunks.
             for i in 0..r1 {
-                let mut deps = Vec::new();
+                let dep_start = pool.len();
                 if t > 0 {
                     // Rule 9: next-layer attention needs all E2A parts of
                     // its chunk and (if present) its shared segment.
                     for j in 0..r2 {
-                        deps.push(idx_e2a(t - 1, i, j));
+                        pool.push(idx_e2a(t - 1, i, j));
                     }
                     if shared_tasks {
-                        deps.push(idx_shared(t - 1, i));
+                        pool.push(idx_shared(t - 1, i));
                     }
                 }
-                tasks.push(Task {
-                    kind: TaskKind::Attention,
-                    layer: t as u32,
-                    chunk: i as u32,
-                    part: 0,
-                    duration: t_a,
-                    deps,
-                });
+                push(tasks, pool, dep_start, TaskKind::Attention, t, i, 0, t_a);
             }
             // Shared-expert chunks (rule 6: after own attention).
             if shared_tasks {
                 for i in 0..r1 {
-                    tasks.push(Task {
-                        kind: TaskKind::SharedExpert,
-                        layer: t as u32,
-                        chunk: i as u32,
-                        part: 0,
-                        duration: t_s,
-                        deps: vec![idx_attn(t, i)],
-                    });
+                    let dep_start = pool.len();
+                    pool.push(idx_attn(t, i));
+                    push(tasks, pool, dep_start, TaskKind::SharedExpert, t, i, 0, t_s);
                 }
             }
             // A2E parts (rule 6: after own attention chunk).
             for i in 0..r1 {
                 for j in 0..r2 {
-                    tasks.push(Task {
-                        kind: TaskKind::A2E,
-                        layer: t as u32,
-                        chunk: i as u32,
-                        part: j as u32,
-                        duration: t_c,
-                        deps: vec![idx_attn(t, i)],
-                    });
+                    let dep_start = pool.len();
+                    pool.push(idx_attn(t, i));
+                    push(tasks, pool, dep_start, TaskKind::A2E, t, i, j, t_c);
                 }
             }
             // Expert parts (rule 7).
             for i in 0..r1 {
                 for j in 0..r2 {
-                    tasks.push(Task {
-                        kind: TaskKind::Expert,
-                        layer: t as u32,
-                        chunk: i as u32,
-                        part: j as u32,
-                        duration: t_e,
-                        deps: vec![idx_a2e(t, i, j)],
-                    });
+                    let dep_start = pool.len();
+                    pool.push(idx_a2e(t, i, j));
+                    push(tasks, pool, dep_start, TaskKind::Expert, t, i, j, t_e);
                 }
             }
             // E2A parts (rule 8).
             for i in 0..r1 {
                 for j in 0..r2 {
-                    tasks.push(Task {
-                        kind: TaskKind::E2A,
-                        layer: t as u32,
-                        chunk: i as u32,
-                        part: j as u32,
-                        duration: t_c,
-                        deps: vec![idx_expert(t, i, j)],
-                    });
+                    let dep_start = pool.len();
+                    pool.push(idx_expert(t, i, j));
+                    push(tasks, pool, dep_start, TaskKind::E2A, t, i, j, t_c);
                 }
             }
         }
 
         // Issue orders.
-        let mut ag_order = Vec::with_capacity(n_layers * (r1 + n_sh));
+        let [ag_order, eg_order, a2e_order, e2a_order] = &mut plan.issue_order;
+        ag_order.clear();
+        eg_order.clear();
+        a2e_order.clear();
+        e2a_order.clear();
         for t in 0..n_layers {
             match cfg.order {
                 Order::Asas => {
@@ -339,9 +423,6 @@ impl Plan {
                 }
             }
         }
-        let mut a2e_order = Vec::new();
-        let mut eg_order = Vec::new();
-        let mut e2a_order = Vec::new();
         for t in 0..n_layers {
             for i in 0..r1 {
                 for j in 0..r2 {
@@ -352,20 +433,23 @@ impl Plan {
             }
         }
 
-        let total_tokens = (cfg.r1 * cfg.m_a * ag * seq_len) as f64;
-
-        Plan {
-            config: cfg,
-            n_layers,
-            has_shared_tasks: shared_tasks,
-            tasks,
-            issue_order: [ag_order, eg_order, a2e_order, e2a_order],
-            total_tokens,
-        }
+        &buf.plan
     }
 
     pub fn n_tasks(&self) -> usize {
         self.tasks.len()
+    }
+
+    /// Dependency edges of task `i` (indices of tasks that must finish
+    /// before it may start).
+    pub fn deps(&self, i: usize) -> &[u32] {
+        let t = &self.tasks[i];
+        &self.dep_pool[t.dep_start as usize..(t.dep_start + t.dep_len) as usize]
+    }
+
+    /// Total number of dependency edges.
+    pub fn n_dep_edges(&self) -> usize {
+        self.dep_pool.len()
     }
 
     /// Index lookup by identity (test/diagnostic path; O(n)).
@@ -373,6 +457,40 @@ impl Plan {
         self.tasks.iter().position(|t| {
             t.kind == kind && t.layer == layer && t.chunk == chunk && t.part == part
         })
+    }
+
+    /// Construct a plan from raw parts (crate-internal: lets simulator
+    /// tests exercise malformed/cyclic inputs that `build` can never
+    /// produce).
+    #[cfg(test)]
+    pub(crate) fn from_raw_parts(
+        tasks: Vec<(TaskKind, f64, Vec<u32>)>,
+        issue_order: [Vec<u32>; 4],
+    ) -> Plan {
+        let mut out_tasks = Vec::with_capacity(tasks.len());
+        let mut pool = Vec::new();
+        for (kind, duration, deps) in tasks {
+            let dep_start = pool.len() as u32;
+            pool.extend_from_slice(&deps);
+            out_tasks.push(Task {
+                kind,
+                layer: 0,
+                chunk: out_tasks.len() as u32,
+                part: 0,
+                duration,
+                dep_start,
+                dep_len: deps.len() as u32,
+            });
+        }
+        Plan {
+            config: PlanConfig::naive(1, 0.0),
+            n_layers: 1,
+            has_shared_tasks: false,
+            tasks: out_tasks,
+            dep_pool: pool,
+            issue_order,
+            total_tokens: 1.0,
+        }
     }
 }
 
@@ -383,8 +501,7 @@ mod tests {
 
     fn models(shared: bool) -> StageModels {
         let m = if shared { ModelConfig::deepseek_v2(4) } else { ModelConfig::qwen3_moe(4) };
-        let split =
-            if shared { GroupSplit::new(3, 5) } else { GroupSplit::new(4, 4) };
+        let split = if shared { GroupSplit::new(3, 5) } else { GroupSplit::new(4, 4) };
         StageModels::new(&m, &Testbed::a(), split, 2048)
     }
 
@@ -411,9 +528,7 @@ mod tests {
         assert!(!p.has_shared_tasks);
         // Fused attention task must absorb the shared time.
         let attn = &p.tasks[p.find(TaskKind::Attention, 0, 0, 0).unwrap()];
-        assert!(
-            (attn.duration - (sm.attn_time(2.0) + sm.shared_time(2.0))).abs() < 1e-12
-        );
+        assert!((attn.duration - (sm.attn_time(2.0) + sm.shared_time(2.0))).abs() < 1e-12);
     }
 
     #[test]
@@ -423,16 +538,15 @@ mod tests {
         // Rule 6: shared after its attention.
         let sh = p.find(TaskKind::SharedExpert, 1, 1, 0).unwrap();
         let at = p.find(TaskKind::Attention, 1, 1, 0).unwrap() as u32;
-        assert!(p.tasks[sh].deps.contains(&at));
-        // Rule 7/8 chain.
+        assert!(p.deps(sh).contains(&at));
+        // Rule 6/7/8 chain for a fine-grained part.
         let a2e = p.find(TaskKind::A2E, 1, 0, 1).unwrap();
-        assert!(p.tasks[a2e].deps.contains(&at.saturating_sub(0).min(u32::MAX)) == false || true);
         let at10 = p.find(TaskKind::Attention, 1, 0, 0).unwrap() as u32;
-        assert!(p.tasks[a2e].deps.contains(&at10));
+        assert!(p.deps(a2e).contains(&at10));
         let ex = p.find(TaskKind::Expert, 1, 0, 1).unwrap();
-        assert!(p.tasks[ex].deps.contains(&(a2e as u32)));
+        assert!(p.deps(ex).contains(&(a2e as u32)));
         let e2a = p.find(TaskKind::E2A, 1, 0, 1).unwrap();
-        assert!(p.tasks[e2a].deps.contains(&(ex as u32)));
+        assert!(p.deps(e2a).contains(&(ex as u32)));
         // Rule 9: layer-2 attention of chunk 0 depends on both layer-1
         // E2A parts of chunk 0 and layer-1 shared of chunk 0.
         let at2 = p.find(TaskKind::Attention, 2, 0, 0).unwrap();
@@ -440,7 +554,7 @@ mod tests {
         let e2a1 = p.find(TaskKind::E2A, 1, 0, 1).unwrap() as u32;
         let sh0 = p.find(TaskKind::SharedExpert, 1, 0, 0).unwrap() as u32;
         for d in [e2a0, e2a1, sh0] {
-            assert!(p.tasks[at2].deps.contains(&d), "missing dep {d}");
+            assert!(p.deps(at2).contains(&d), "missing dep {d}");
         }
     }
 
@@ -483,46 +597,29 @@ mod tests {
 
     #[test]
     fn deps_point_backwards_in_issue_order() {
-        // Guarantees deadlock-freedom of FIFO in-order execution.
+        // Guarantees deadlock-freedom of FIFO in-order execution: the
+        // union of dependency and resource-order edges is acyclic
+        // (Kahn's algorithm consumes every task).
         let sm = models(true);
         for order in Order::both() {
             let p = Plan::build(&sm, cfg(3, 3, order), 3, 3, 2048);
-            let mut pos = vec![0usize; p.n_tasks()];
-            let mut global = 0usize;
-            // Global positions must exist such that all deps precede.
-            // Use per-resource order concatenated topologically: verify
-            // with Kahn instead (cycle check).
             let mut indeg = vec![0usize; p.n_tasks()];
-            for t in &p.tasks {
-                for _ in &t.deps {
-                    // counted below
+            let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); p.n_tasks()];
+            for i in 0..p.n_tasks() {
+                indeg[i] = p.deps(i).len();
+                for &d in p.deps(i) {
+                    dependents[d as usize].push(i as u32);
                 }
             }
-            for (i, t) in p.tasks.iter().enumerate() {
-                indeg[i] = t.deps.len();
-                pos[i] = global;
-                global += 1;
-            }
-            // Add resource-order edges.
-            let mut extra: Vec<Vec<u32>> = vec![Vec::new(); p.n_tasks()];
             for q in &p.issue_order {
                 for w in q.windows(2) {
-                    extra[w[1] as usize].push(w[0]);
+                    dependents[w[0] as usize].push(w[1]);
                     indeg[w[1] as usize] += 1;
                 }
             }
             let mut ready: Vec<usize> =
                 indeg.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
             let mut done = 0usize;
-            let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); p.n_tasks()];
-            for (i, t) in p.tasks.iter().enumerate() {
-                for &d in &t.deps {
-                    dependents[d as usize].push(i as u32);
-                }
-                for &d in &extra[i] {
-                    dependents[d as usize].push(i as u32);
-                }
-            }
             while let Some(i) = ready.pop() {
                 done += 1;
                 for &n in &dependents[i] {
@@ -542,5 +639,37 @@ mod tests {
         let p = Plan::build(&sm, cfg(2, 1, Order::Asas), 2, 3, 2048);
         // r1=2, m_a=2, ag=3, S=2048
         assert_eq!(p.total_tokens, (2 * 2 * 3 * 2048) as f64);
+    }
+
+    #[test]
+    fn build_into_reuses_storage_and_matches_build() {
+        let sm = models(true);
+        let mut buf = PlanBuffers::new();
+        // First build sizes the arena.
+        Plan::build_into(&mut buf, &sm, cfg(3, 4, Order::Asas), 4, 3, 2048);
+        let cap_tasks = buf.plan.tasks.capacity();
+        let cap_pool = buf.plan.dep_pool.capacity();
+        // A smaller rebuild must not reallocate and must equal a fresh
+        // build exactly.
+        for c in [cfg(2, 2, Order::Aass), cfg(3, 4, Order::Asas), cfg(1, 1, Order::Asas)] {
+            let reused = Plan::build_into(&mut buf, &sm, c, 4, 3, 2048).clone();
+            let fresh = Plan::build(&sm, c, 4, 3, 2048);
+            assert_eq!(reused, fresh, "build_into drifted from build for {}", c.describe());
+        }
+        assert_eq!(buf.plan.tasks.capacity(), cap_tasks, "task arena reallocated");
+        assert_eq!(buf.plan.dep_pool.capacity(), cap_pool, "dep arena reallocated");
+    }
+
+    #[test]
+    fn dep_slices_are_consistent() {
+        let sm = models(true);
+        let p = Plan::build(&sm, cfg(2, 3, Order::Asas), 3, 3, 2048);
+        let total: usize = (0..p.n_tasks()).map(|i| p.deps(i).len()).sum();
+        assert_eq!(total, p.n_dep_edges());
+        for i in 0..p.n_tasks() {
+            for &d in p.deps(i) {
+                assert!((d as usize) < p.n_tasks(), "dangling dep {d}");
+            }
+        }
     }
 }

@@ -11,11 +11,22 @@
 //! The engine runs a Kahn-style ready propagation over the union of
 //! dependency edges and resource-order edges, which yields the exact
 //! fixed point of the recurrences in §4.2 in O(V + E).
+//!
+//! ## Hot-path contract
+//!
+//! [`simulate_into`] executes into a reusable [`SimBuffers`] arena —
+//! CSR adjacency, indegrees, the ready stack, and the start/finish
+//! vectors are all rewritten in place, so Algorithm 1's candidate loop
+//! performs zero allocations per probe once the arena is warm.
+//! [`simulate`] is the one-shot wrapper. Cyclic plans (impossible from
+//! `Plan::build`, but reachable from hand-built or corrupted
+//! `PlanConfig` search states) surface as a [`SimError`] naming the
+//! stuck task and its resource queue instead of aborting the solver.
 
 use crate::sched::{Plan, Resource};
 
 /// Execution schedule of one plan.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SimResult {
     /// Start time per task (seconds), same indexing as `plan.tasks`.
     pub start: Vec<f64>,
@@ -25,63 +36,190 @@ pub struct SimResult {
 }
 
 impl SimResult {
-    /// Tokens/s for the simulated forward pass.
+    /// Tokens/s for the simulated forward pass. Degenerate plans whose
+    /// makespan is zero or non-finite (e.g. an all-zero-duration plan
+    /// from an S=0 / no-shared edge case) report 0.0 rather than
+    /// `inf`/NaN, so they can never win Algorithm 1's argmax.
     pub fn throughput_tokens(&self, plan: &Plan) -> f64 {
+        if !self.makespan.is_finite() || self.makespan <= 0.0 {
+            return 0.0;
+        }
         plan.total_tokens / self.makespan
     }
 }
 
-/// Simulate a plan. Panics on cyclic plans (construction bug) — every
-/// plan produced by `Plan::build` is acyclic by construction and this is
-/// enforced by tests.
-pub fn simulate(plan: &Plan) -> SimResult {
-    let n = plan.tasks.len();
-    let mut indeg: Vec<u32> = plan.tasks.iter().map(|t| t.deps.len() as u32).collect();
-    // Dependents adjacency (deps + resource-order edges).
-    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
-    for (i, t) in plan.tasks.iter().enumerate() {
-        for &d in &t.deps {
-            dependents[d as usize].push(i as u32);
-        }
+/// A plan that cannot execute: some task never became ready because the
+/// union of dependency and resource-order edges contains a cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimError {
+    /// Label of one task on the cycle (first stuck task by index).
+    pub task: String,
+    /// Name of the resource queue that task is issued on.
+    pub resource: &'static str,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "plan contains a cycle: task {} on the {} queue never became ready",
+            self.task, self.resource
+        )
     }
-    // Resource predecessor edges.
-    let mut res_pred: Vec<Option<u32>> = vec![None; n];
+}
+
+impl std::error::Error for SimError {}
+
+/// Reusable simulation arena: one warm `SimBuffers` makes every
+/// subsequent [`simulate_into`] allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct SimBuffers {
+    result: SimResult,
+    /// Remaining unmet predecessor count per task.
+    indeg: Vec<u32>,
+    /// Resource-order predecessor per task (`u32::MAX` = none).
+    res_pred: Vec<u32>,
+    /// CSR offsets into `adj` (length n + 1).
+    adj_off: Vec<u32>,
+    /// CSR dependents adjacency (dep edges + resource-order edges).
+    adj: Vec<u32>,
+    /// Fill cursor scratch for CSR construction.
+    cursor: Vec<u32>,
+    /// Ready stack.
+    ready: Vec<u32>,
+}
+
+impl SimBuffers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The most recent *successful* result (empty before the first
+    /// successful simulation, and reset to empty after a cyclic-plan
+    /// error).
+    pub fn result(&self) -> &SimResult {
+        &self.result
+    }
+}
+
+const NO_PRED: u32 = u32::MAX;
+
+/// Simulate a plan into a reusable arena. Returns a borrow of the
+/// schedule, or a [`SimError`] naming the stuck task if the plan is
+/// cyclic — callers in the solver treat that as a skipped candidate.
+pub fn simulate_into<'a>(plan: &Plan, buf: &'a mut SimBuffers) -> Result<&'a SimResult, SimError> {
+    let n = plan.tasks.len();
+
+    // --- Arena reset (len changes, capacity persists). ---------------
+    buf.indeg.clear();
+    buf.indeg.extend((0..n).map(|i| plan.deps(i).len() as u32));
+    buf.res_pred.clear();
+    buf.res_pred.resize(n, NO_PRED);
     for q in &plan.issue_order {
         for w in q.windows(2) {
-            res_pred[w[1] as usize] = Some(w[0]);
-            dependents[w[0] as usize].push(w[1]);
-            indeg[w[1] as usize] += 1;
+            buf.res_pred[w[1] as usize] = w[0];
+            buf.indeg[w[1] as usize] += 1;
         }
     }
 
-    let mut start = vec![0.0f64; n];
-    let mut finish = vec![0.0f64; n];
-    let mut ready: Vec<u32> =
-        (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    // --- CSR dependents adjacency in two passes. ----------------------
+    // Pass 1: out-degree per task.
+    buf.cursor.clear();
+    buf.cursor.resize(n, 0);
+    for i in 0..n {
+        for &d in plan.deps(i) {
+            buf.cursor[d as usize] += 1;
+        }
+    }
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            buf.cursor[w[0] as usize] += 1;
+        }
+    }
+    // Prefix sums -> offsets; cursor becomes the fill position.
+    buf.adj_off.clear();
+    buf.adj_off.reserve(n + 1);
+    let mut acc = 0u32;
+    buf.adj_off.push(0);
+    for i in 0..n {
+        acc += buf.cursor[i];
+        buf.adj_off.push(acc);
+        buf.cursor[i] = buf.adj_off[i];
+    }
+    // Pass 2: fill.
+    buf.adj.clear();
+    buf.adj.resize(acc as usize, 0);
+    for i in 0..n {
+        for &d in plan.deps(i) {
+            let c = &mut buf.cursor[d as usize];
+            buf.adj[*c as usize] = i as u32;
+            *c += 1;
+        }
+    }
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            let c = &mut buf.cursor[w[0] as usize];
+            buf.adj[*c as usize] = w[1];
+            *c += 1;
+        }
+    }
+
+    // --- Kahn ready propagation. --------------------------------------
+    let result = &mut buf.result;
+    result.start.clear();
+    result.start.resize(n, 0.0);
+    result.finish.clear();
+    result.finish.resize(n, 0.0);
+    buf.ready.clear();
+    buf.ready.extend((0..n as u32).filter(|&i| buf.indeg[i as usize] == 0));
     let mut done = 0usize;
-    while let Some(i) = ready.pop() {
+    while let Some(i) = buf.ready.pop() {
         let i = i as usize;
-        let t = &plan.tasks[i];
         let mut s = 0.0f64;
-        for &d in &t.deps {
-            s = s.max(finish[d as usize]);
+        for &d in plan.deps(i) {
+            s = s.max(result.finish[d as usize]);
         }
-        if let Some(p) = res_pred[i] {
-            s = s.max(finish[p as usize]);
+        let p = buf.res_pred[i];
+        if p != NO_PRED {
+            s = s.max(result.finish[p as usize]);
         }
-        start[i] = s;
-        finish[i] = s + t.duration;
+        result.start[i] = s;
+        result.finish[i] = s + plan.tasks[i].duration;
         done += 1;
-        for &nidx in &dependents[i] {
-            indeg[nidx as usize] -= 1;
-            if indeg[nidx as usize] == 0 {
-                ready.push(nidx);
+        for k in buf.adj_off[i] as usize..buf.adj_off[i + 1] as usize {
+            let nidx = buf.adj[k] as usize;
+            buf.indeg[nidx] -= 1;
+            if buf.indeg[nidx] == 0 {
+                buf.ready.push(nidx as u32);
             }
         }
     }
-    assert_eq!(done, n, "plan contains a cycle");
-    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
-    SimResult { start, finish, makespan }
+    if done != n {
+        let stuck = (0..n).find(|&i| buf.indeg[i] > 0).unwrap_or(0);
+        // Leave the arena's result in a consistent (empty) state rather
+        // than a half-written schedule mixed with a stale makespan.
+        result.start.clear();
+        result.finish.clear();
+        result.makespan = 0.0;
+        return Err(SimError {
+            task: plan.tasks[stuck].label(),
+            resource: plan.tasks[stuck].resource().name(),
+        });
+    }
+    result.makespan = result.finish.iter().copied().fold(0.0f64, f64::max);
+    Ok(&buf.result)
+}
+
+/// Simulate a plan (one-shot allocation path). Panics on cyclic plans —
+/// every plan produced by `Plan::build` is acyclic by construction and
+/// this is enforced by tests; searcher-facing code uses
+/// [`simulate_into`] and degrades cyclic candidates into skips.
+pub fn simulate(plan: &Plan) -> SimResult {
+    let mut buf = SimBuffers::new();
+    if let Err(e) = simulate_into(plan, &mut buf) {
+        panic!("{e}");
+    }
+    buf.result
 }
 
 /// Busy intervals of one resource, sorted by start time.
@@ -99,7 +237,7 @@ pub fn resource_intervals(plan: &Plan, sim: &SimResult, res: Resource) -> Vec<(f
 mod tests {
     use super::*;
     use crate::config::{GroupSplit, ModelConfig, Testbed};
-    use crate::perfmodel::StageModels;
+    use crate::perfmodel::{LinearModel, StageModels};
     use crate::sched::{Order, PlanConfig, TaskKind};
 
     fn models() -> StageModels {
@@ -119,8 +257,11 @@ mod tests {
         let plan = Plan::build(&sm, PlanConfig::naive(2, m_e), 1, 3, 2048);
         let sim = simulate(&plan);
         // naive, 1 layer: attn(+shared fused) -> a2e -> expert -> e2a
-        let expect = sm.attn_time(2.0) + sm.shared_time(2.0)
-            + sm.comm_time(m_e) + sm.expert_time(m_e) + sm.comm_time(m_e);
+        let expect = sm.attn_time(2.0)
+            + sm.shared_time(2.0)
+            + sm.comm_time(m_e)
+            + sm.expert_time(m_e)
+            + sm.comm_time(m_e);
         assert!((sim.makespan - expect).abs() < 1e-12, "{} vs {}", sim.makespan, expect);
     }
 
@@ -128,8 +269,8 @@ mod tests {
     fn dependencies_respected() {
         let plan = build(2, 2, 3, Order::Asas, 3);
         let sim = simulate(&plan);
-        for (i, t) in plan.tasks.iter().enumerate() {
-            for &d in &t.deps {
+        for i in 0..plan.n_tasks() {
+            for &d in plan.deps(i) {
                 assert!(
                     sim.start[i] >= sim.finish[d as usize] - 1e-12,
                     "task {} starts before dep {} finishes",
@@ -189,8 +330,10 @@ mod tests {
         let m = ModelConfig::qwen3_moe(4);
         let sm = StageModels::new(&m, &Testbed::a(), GroupSplit::new(4, 4), 2048);
         let m_e = sm.m_e(2.0, 2);
-        let a = simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Asas), 4, 4, 2048));
-        let b = simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Aass), 4, 4, 2048));
+        let a =
+            simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Asas), 4, 4, 2048));
+        let b =
+            simulate(&Plan::build(&sm, PlanConfig::findep(2, 2, 2, m_e, Order::Aass), 4, 4, 2048));
         assert!((a.makespan - b.makespan).abs() < 1e-12);
     }
 
@@ -201,5 +344,96 @@ mod tests {
         let last = sim.finish.iter().copied().fold(0.0f64, f64::max);
         assert_eq!(sim.makespan, last);
         assert!(sim.throughput_tokens(&plan) > 0.0);
+    }
+
+    #[test]
+    fn simulate_into_reuses_arena_and_matches_one_shot() {
+        let mut buf = SimBuffers::new();
+        // Warm the arena on the largest plan first.
+        let warm = build(2, 3, 4, Order::Asas, 4);
+        simulate_into(&warm, &mut buf).unwrap();
+        let caps = (
+            buf.result.start.capacity(),
+            buf.adj.capacity(),
+            buf.adj_off.capacity(),
+            buf.indeg.capacity(),
+        );
+        for (r1, r2, order) in [(2, 2, Order::Aass), (3, 4, Order::Asas), (1, 1, Order::Asas)] {
+            let plan = build(2, r1, r2, order, 4);
+            let one_shot = simulate(&plan);
+            let reused = simulate_into(&plan, &mut buf).unwrap();
+            assert_eq!(reused.start, one_shot.start);
+            assert_eq!(reused.finish, one_shot.finish);
+            assert_eq!(reused.makespan, one_shot.makespan);
+        }
+        assert_eq!(
+            caps,
+            (
+                buf.result.start.capacity(),
+                buf.adj.capacity(),
+                buf.adj_off.capacity(),
+                buf.indeg.capacity()
+            ),
+            "simulation arena reallocated"
+        );
+    }
+
+    #[test]
+    fn cyclic_plan_reports_stuck_task_instead_of_aborting() {
+        // Two expert tasks depending on each other: unexecutable.
+        let plan = Plan::from_raw_parts(
+            vec![
+                (TaskKind::Expert, 1.0, vec![1]),
+                (TaskKind::Expert, 1.0, vec![0]),
+            ],
+            [Vec::new(), vec![0, 1], Vec::new(), Vec::new()],
+        );
+        let mut buf = SimBuffers::new();
+        // Warm the arena with a good plan first: the error must not
+        // leave the previous schedule half-mixed into the result.
+        let good = build(1, 1, 1, Order::Asas, 1);
+        simulate_into(&good, &mut buf).unwrap();
+        let err = simulate_into(&plan, &mut buf).unwrap_err();
+        assert_eq!(err.resource, "EG");
+        assert!(err.task.starts_with("expert"), "unexpected task label {}", err.task);
+        assert!(format!("{err}").contains("cycle"));
+        assert!(buf.result().start.is_empty() && buf.result().makespan == 0.0);
+    }
+
+    #[test]
+    fn issue_order_cycle_against_deps_is_detected() {
+        // Deps say 0 -> 1, issue order says 1 before 0 is fine (FIFO
+        // waits), but issue order 1 -> 0 with dep 1 -> 0 both ways jams.
+        let plan = Plan::from_raw_parts(
+            vec![
+                (TaskKind::A2E, 1.0, vec![]),
+                (TaskKind::A2E, 1.0, vec![0]),
+            ],
+            // Queue order contradicts the dependency: task 1 first.
+            [Vec::new(), Vec::new(), vec![1, 0], Vec::new()],
+        );
+        let mut buf = SimBuffers::new();
+        let err = simulate_into(&plan, &mut buf).unwrap_err();
+        assert_eq!(err.resource, "A2E");
+    }
+
+    #[test]
+    fn degenerate_zero_duration_plan_reports_zero_throughput() {
+        // All-zero α/β models: every task takes 0 s, makespan is 0, and
+        // the throughput guard must clamp to 0 instead of inf/NaN.
+        let sm = StageModels {
+            t_a: LinearModel::new(0.0, 0.0),
+            t_s: LinearModel::new(0.0, 0.0),
+            t_e: LinearModel::new(0.0, 0.0),
+            t_a2e: LinearModel::new(0.0, 0.0),
+            k_tokens: 1.0,
+            has_shared: false,
+        };
+        let plan =
+            Plan::build(&sm, PlanConfig::findep(1, 1, 1, 1.0, Order::Asas), 1, 1, 128);
+        let sim = simulate(&plan);
+        assert_eq!(sim.makespan, 0.0);
+        assert_eq!(sim.throughput_tokens(&plan), 0.0);
+        assert!(sim.throughput_tokens(&plan).is_finite());
     }
 }

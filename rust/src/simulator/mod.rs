@@ -6,9 +6,13 @@
 //! substrate standing in for the paper's GPU testbeds: every throughput
 //! number in the Tables 3-7 benches comes from here, with stage
 //! durations supplied by the α-β performance models.
+//!
+//! The solver hot path uses [`simulate_into`] with a reusable
+//! [`SimBuffers`] arena (zero allocations per candidate once warm);
+//! [`simulate`] is the one-shot convenience wrapper over the same code.
 
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate, SimResult};
+pub use engine::{simulate, simulate_into, SimBuffers, SimError, SimResult};
 pub use trace::{ScheduleTrace, TraceInterval};

@@ -2,19 +2,25 @@
 //! Algorithm 1 (§5.3 uses exactly this: "for each (m_a, r1) pair, we
 //! performed a brute-force search over all (m_e, r2) values and
 //! computation orders").
+//!
+//! Every probe goes through the discrete-event engine (never the
+//! closed forms): the reference must stay independent of the solver's
+//! analytic fast path. The engine still runs on a reusable
+//! [`Evaluator`] arena, so the full grid sweep is allocation-free after
+//! the first candidate.
 
 use crate::sched::{Order, PlanConfig};
-use crate::solver::algorithm1::Instance;
+use crate::solver::algorithm1::{Evaluator, Instance};
 
-/// Best (r2, order) for a fixed (m_a, r1) by exhaustive scan.
-/// Returns (config, makespan, tokens/s).
-pub fn best_for_fixed_ma_r1(
-    inst: &Instance,
+/// Best (r2, order) for a fixed (m_a, r1) by exhaustive scan, reusing a
+/// caller-held evaluator arena. Returns (config, makespan, tokens/s).
+pub fn best_for_fixed_ma_r1_with(
+    ev: &mut Evaluator,
     m_a: usize,
     r1: usize,
     r2_cap: usize,
 ) -> (PlanConfig, f64, f64) {
-    let sm = inst.stage_models();
+    let sm = ev.stage_models().clone();
     let max_r2 = (sm.m_e(m_a as f64, 1).floor() as usize).clamp(1, r2_cap);
     let mut best: Option<(PlanConfig, f64, f64)> = None;
     for order in Order::both() {
@@ -24,13 +30,24 @@ pub fn best_for_fixed_ma_r1(
         for r2 in 1..=max_r2 {
             let m_e = sm.m_e(m_a as f64, r2);
             let cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
-            let (ms, tput) = inst.evaluate(cfg);
+            let (ms, tput) = ev.evaluate(cfg);
             if best.as_ref().map_or(true, |b| tput > b.2) {
                 best = Some((cfg, ms, tput));
             }
         }
     }
     best.expect("r2 range is non-empty")
+}
+
+/// Best (r2, order) for a fixed (m_a, r1) by exhaustive scan (one-shot
+/// arena). Returns (config, makespan, tokens/s).
+pub fn best_for_fixed_ma_r1(
+    inst: &Instance,
+    m_a: usize,
+    r1: usize,
+    r2_cap: usize,
+) -> (PlanConfig, f64, f64) {
+    best_for_fixed_ma_r1_with(&mut inst.evaluator(), m_a, r1, r2_cap)
 }
 
 /// Full exhaustive search over the (m_a, r1) grid (memory-feasible
@@ -42,11 +59,12 @@ pub fn exhaustive(
     r2_cap: usize,
 ) -> Option<(PlanConfig, f64, f64)> {
     let mem = inst.memory();
+    let mut ev = inst.evaluator();
     let mut best: Option<(PlanConfig, f64, f64)> = None;
     for m_a in 1..=ma_cap {
         let max_r1 = mem.get_max_r1(m_a, r1_cap);
         for r1 in 1..=max_r1 {
-            let cand = best_for_fixed_ma_r1(inst, m_a, r1, r2_cap);
+            let cand = best_for_fixed_ma_r1_with(&mut ev, m_a, r1, r2_cap);
             if best.as_ref().map_or(true, |b| cand.2 > b.2) {
                 best = Some(cand);
             }
@@ -83,5 +101,22 @@ mod tests {
         );
         let best = exhaustive(&inst, 2, 2, 8).unwrap();
         assert!(best.2 > 0.0);
+    }
+
+    #[test]
+    fn arena_reuse_matches_one_shot() {
+        let inst = Instance::new(
+            ModelConfig::deepseek_v2(4),
+            Testbed::b(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let mut ev = inst.evaluator();
+        for (m_a, r1) in [(1usize, 1usize), (2, 2), (4, 1)] {
+            let a = best_for_fixed_ma_r1(&inst, m_a, r1, 8);
+            let b = best_for_fixed_ma_r1_with(&mut ev, m_a, r1, 8);
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.2, b.2);
+        }
     }
 }

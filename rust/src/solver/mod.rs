@@ -4,13 +4,18 @@
 //! memory-constrained Pareto frontier of `(m_a, r1)` (Theorems 1-3 make
 //! everything off the frontier dominated), solve the 1-D convex
 //! subproblem in `r2` by ternary search (Theorem 4), and evaluate both
-//! AASS and ASAS execution orders. [`bruteforce`] provides the
-//! exhaustive reference used by tests and by the Tables 3/4 monotonicity
-//! experiments.
+//! AASS and ASAS execution orders. Candidate evaluation runs on a
+//! reusable [`algorithm1::Evaluator`] arena (no per-probe allocation)
+//! with the §4.2 closed forms as the ASAS probe fast path.
+//! [`bruteforce`] provides the exhaustive engine-only reference used by
+//! tests and by the Tables 3/4 monotonicity experiments.
 
 pub mod algorithm1;
 pub mod bruteforce;
 pub mod memory;
 
-pub use algorithm1::{solve, solve_online, Instance, Solution, SolverParams};
+pub use algorithm1::{
+    solve, solve_mode, solve_online, solve_online_mode, EvalMode, Evaluator, Instance, Solution,
+    SolverParams,
+};
 pub use memory::MemoryModel;

@@ -63,12 +63,19 @@ impl JsonObj {
 }
 
 /// Error produced by [`parse`].
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn as_f64(&self) -> Option<f64> {

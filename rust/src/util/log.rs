@@ -5,9 +5,8 @@
 //! which is what you want when reading scheduler traces.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -42,7 +41,7 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn current_level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
@@ -67,7 +66,7 @@ pub fn enabled(level: Level) -> bool {
 
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if enabled(level) {
-        let t = START.elapsed().as_secs_f64();
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
         eprintln!("[{t:>10.4} {} {module}] {msg}", level.tag());
     }
 }

@@ -1,0 +1,199 @@
+//! Property tests for the plan builder (the arena refactor's safety
+//! net): for random `PlanConfig`s over random positive stage models,
+//!
+//! 1. `Plan::build` always produces an acyclic DAG (deps + issue-order
+//!    edges) whose dependency edges are exactly rules 6-9;
+//! 2. `Plan::build_into` into a continuously-reused `PlanBuffers` arena
+//!    is task-for-task identical to a fresh `Plan::build`.
+
+use std::collections::HashMap;
+
+use findep::perfmodel::{LinearModel, StageModels};
+use findep::sched::{Order, Plan, PlanBuffers, PlanConfig, TaskKind};
+use findep::util::proptest::{self, Config};
+use findep::util::rng::Rng;
+
+fn random_models(rng: &mut Rng) -> StageModels {
+    StageModels {
+        t_a: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-6, 2e-3)),
+        t_s: LinearModel::new(rng.range_f64(0.0, 1e-3), rng.range_f64(0.0, 1e-3)),
+        t_e: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-7, 1e-4)),
+        t_a2e: LinearModel::new(rng.range_f64(1e-6, 2e-3), rng.range_f64(1e-7, 1e-4)),
+        k_tokens: rng.range_f64(2.0, 400.0),
+        has_shared: rng.bool(0.6),
+    }
+}
+
+fn random_config(rng: &mut Rng, sm: &StageModels) -> PlanConfig {
+    let m_a = 1 + rng.usize_below(6);
+    let r1 = 1 + rng.usize_below(5);
+    let r2 = 1 + rng.usize_below(8);
+    let order = if rng.bool(0.5) { Order::Asas } else { Order::Aass };
+    let mut cfg = PlanConfig::findep(m_a, r1, r2, sm.m_e(m_a as f64, r2), order);
+    cfg.fuse_shared = rng.bool(0.2);
+    cfg
+}
+
+/// O(1) task-identity index (the plan's own `find` is O(n) and too slow
+/// for a property sweep).
+fn index_map(plan: &Plan) -> HashMap<(TaskKind, u32, u32, u32), u32> {
+    plan.tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| ((t.kind, t.layer, t.chunk, t.part), i as u32))
+        .collect()
+}
+
+/// Expected rule-6..9 dependency set for task `i`, straight from the
+/// paper's constraints (independent of the builder's index arithmetic).
+fn expected_deps(
+    plan: &Plan,
+    idx: &HashMap<(TaskKind, u32, u32, u32), u32>,
+    i: usize,
+) -> Vec<u32> {
+    let t = &plan.tasks[i];
+    let (layer, chunk, part) = (t.layer, t.chunk, t.part);
+    let find = |kind, l, c, p| *idx.get(&(kind, l, c, p)).expect("referenced task exists");
+    match t.kind {
+        TaskKind::Attention => {
+            if layer == 0 {
+                Vec::new()
+            } else {
+                // Rule 9: all E2A parts of the same chunk one layer
+                // down, plus (if scheduled) its shared segment.
+                let mut d: Vec<u32> = (0..plan.config.r2 as u32)
+                    .map(|j| find(TaskKind::E2A, layer - 1, chunk, j))
+                    .collect();
+                if plan.has_shared_tasks {
+                    d.push(find(TaskKind::SharedExpert, layer - 1, chunk, 0));
+                }
+                d
+            }
+        }
+        // Rule 6.
+        TaskKind::SharedExpert => vec![find(TaskKind::Attention, layer, chunk, 0)],
+        TaskKind::A2E => vec![find(TaskKind::Attention, layer, chunk, 0)],
+        // Rule 7.
+        TaskKind::Expert => vec![find(TaskKind::A2E, layer, chunk, part)],
+        // Rule 8.
+        TaskKind::E2A => vec![find(TaskKind::Expert, layer, chunk, part)],
+    }
+}
+
+/// Kahn's algorithm over deps + per-resource issue-order edges.
+fn is_acyclic(plan: &Plan) -> bool {
+    let n = plan.n_tasks();
+    let mut indeg = vec![0usize; n];
+    let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..n {
+        indeg[i] = plan.deps(i).len();
+        for &d in plan.deps(i) {
+            dependents[d as usize].push(i as u32);
+        }
+    }
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            dependents[w[0] as usize].push(w[1]);
+            indeg[w[1] as usize] += 1;
+        }
+    }
+    let mut ready: Vec<usize> =
+        indeg.iter().enumerate().filter(|(_, &d)| d == 0).map(|(i, _)| i).collect();
+    let mut done = 0usize;
+    while let Some(i) = ready.pop() {
+        done += 1;
+        for &nx in &dependents[i] {
+            indeg[nx as usize] -= 1;
+            if indeg[nx as usize] == 0 {
+                ready.push(nx as usize);
+            }
+        }
+    }
+    done == n
+}
+
+#[test]
+fn build_respects_rules_6_to_9_and_stays_acyclic() {
+    proptest::check("plan-rules-acyclic", &Config::with_cases(120), |rng| {
+        let sm = random_models(rng);
+        let cfg = random_config(rng, &sm);
+        let layers = 1 + rng.usize_below(5);
+        let ag = 1 + rng.usize_below(6);
+        let plan = Plan::build(&sm, cfg, layers, ag, 1024);
+        let idx = index_map(&plan);
+        for i in 0..plan.n_tasks() {
+            let mut got: Vec<u32> = plan.deps(i).to_vec();
+            let mut want = expected_deps(&plan, &idx, i);
+            got.sort_unstable();
+            want.sort_unstable();
+            proptest::ensure(
+                got == want,
+                format!(
+                    "deps of {} are {:?}, rules 6-9 require {:?} ({})",
+                    plan.tasks[i].label(),
+                    got,
+                    want,
+                    cfg.describe()
+                ),
+            )?;
+        }
+        proptest::ensure(
+            is_acyclic(&plan),
+            format!("cyclic plan for {}", cfg.describe()),
+        )
+    });
+}
+
+#[test]
+fn build_into_is_identical_to_fresh_build() {
+    // One arena reused across every random case: any stale state left
+    // behind by a previous (differently-shaped) build would show up as
+    // an inequality here.
+    let mut buf = PlanBuffers::new();
+    proptest::check("build-into-identity", &Config::with_cases(120), |rng| {
+        let sm = random_models(rng);
+        let cfg = random_config(rng, &sm);
+        let layers = 1 + rng.usize_below(5);
+        let ag = 1 + rng.usize_below(6);
+        let fresh = Plan::build(&sm, cfg, layers, ag, 1024);
+        let reused = Plan::build_into(&mut buf, &sm, cfg, layers, ag, 1024);
+        proptest::ensure(
+            *reused == fresh,
+            format!("build_into drifted from build for {}", cfg.describe()),
+        )?;
+        // Task-for-task field check (catches PartialEq blind spots).
+        for i in 0..fresh.n_tasks() {
+            proptest::ensure(
+                fresh.deps(i) == reused.deps(i),
+                format!("dep slice {i} differs for {}", cfg.describe()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn build_into_batches_are_deterministic_across_arena_histories() {
+    // The same config built through arenas with different histories must
+    // agree (the arena cannot leak capacity-dependent behaviour).
+    let sm = StageModels {
+        t_a: LinearModel::new(1e-4, 1e-4),
+        t_s: LinearModel::new(5e-5, 5e-5),
+        t_e: LinearModel::new(1e-4, 1e-6),
+        t_a2e: LinearModel::new(1e-4, 1e-6),
+        k_tokens: 32.0,
+        has_shared: true,
+    };
+    let big = PlanConfig::findep(4, 4, 8, sm.m_e(4.0, 8), Order::Aass);
+    let small = PlanConfig::findep(1, 1, 1, sm.m_e(1.0, 1), Order::Asas);
+
+    let mut warm_big = PlanBuffers::new();
+    Plan::build_into(&mut warm_big, &sm, big, 6, 3, 2048);
+    let via_big = Plan::build_into(&mut warm_big, &sm, small, 6, 3, 2048).clone();
+
+    let mut cold = PlanBuffers::new();
+    let via_cold = Plan::build_into(&mut cold, &sm, small, 6, 3, 2048).clone();
+
+    assert_eq!(via_big, via_cold);
+    assert_eq!(via_cold, Plan::build(&sm, small, 6, 3, 2048));
+}

@@ -42,8 +42,8 @@ fn every_simulated_plan_satisfies_eq5() {
         let trace = ScheduleTrace::from_sim(&plan, &sim);
         trace.validate_exclusive().map_err(|e| format!("{e} for {cfg:?}"))?;
         // Rules 6-9: precedence.
-        for (i, t) in plan.tasks.iter().enumerate() {
-            for &d in &t.deps {
+        for i in 0..plan.n_tasks() {
+            for &d in plan.deps(i) {
                 proptest::ensure(
                     sim.start[i] >= sim.finish[d as usize] - 1e-12,
                     format!("precedence violated: {} before {}", i, d),

@@ -1,0 +1,648 @@
+//! Vendored stand-in for the `xla` PJRT bindings.
+//!
+//! The build image has no network and no PJRT shared library, so this
+//! crate reproduces the small slice of the `xla` API that FinDEP's L3
+//! coordinator uses, in two tiers:
+//!
+//! * **Builder-constructed computations execute for real.** `XlaBuilder`
+//!   graphs (parameter / matmul / dot_general / softmax) are interpreted
+//!   on the host in f32, so the Fig.-7 calibration probes and the
+//!   `findep calibrate` subcommand measure genuine compute on this
+//!   machine — the same operations, interpreted rather than JIT-compiled.
+//! * **HLO-text artifacts do not execute.** `HloModuleProto::from_text_file`
+//!   returns an error naming the limitation; the artifact-driven serving
+//!   path (`runtime::engine`, `coordinator::*`) degrades exactly like a
+//!   missing-artifacts checkout, which every caller already handles.
+//!
+//! `Literal` is a complete host-side container (f32 / i32 arrays and
+//! tuples), so tensor conversion round-trips are fully functional.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Stub error type (message-only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+/// Element types FinDEP's artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parameter/operand shape for builder computations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<i64>,
+}
+
+impl Shape {
+    /// `Shape::array::<f32>(dims)` — the element type parameter is kept
+    /// for API compatibility; only f32 arrays are interpreted.
+    pub fn array<T>(dims: Vec<i64>) -> Shape {
+        Shape { dims }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: dims + typed data (or a tuple of literals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Element types extractable from a [`Literal`] via `to_vec`.
+pub trait FromLiteral: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl FromLiteral for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(err("literal is not f32")),
+        }
+    }
+}
+
+impl FromLiteral for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(err("literal is not i32")),
+        }
+    }
+}
+
+fn numel(dims: &[i64]) -> usize {
+    dims.iter().product::<i64>().max(0) as usize
+}
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: Data::F32(data.to_vec()) }
+    }
+
+    /// Reinterpret the shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n = match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => return Err(err("cannot reshape a tuple literal")),
+        };
+        if numel(dims) != n {
+            return Err(err(format!("reshape {:?} -> {:?}: element count mismatch", self.dims, dims)));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Build from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        if bytes.len() != numel(&dims) * 4 {
+            return Err(err(format!(
+                "untyped data is {} bytes, shape {:?} needs {}",
+                bytes.len(),
+                dims,
+                numel(&dims) * 4
+            )));
+        }
+        let data = match ty {
+            ElementType::F32 => Data::F32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            ElementType::I32 => Data::I32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        };
+        Ok(Literal { dims, data })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            Data::Tuple(_) => Err(err("tuple literal has no array shape")),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    pub fn to_vec<T: FromLiteral>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Unwrap a 1-tuple.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        match &self.data {
+            Data::Tuple(v) if v.len() == 1 => Ok(v[0].clone()),
+            Data::Tuple(v) => Err(err(format!("expected 1-tuple, got {}-tuple", v.len()))),
+            _ => Err(err("literal is not a tuple")),
+        }
+    }
+
+    /// Unwrap a 2-tuple.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        match &self.data {
+            Data::Tuple(v) if v.len() == 2 => Ok((v[0].clone(), v[1].clone())),
+            Data::Tuple(v) => Err(err(format!("expected 2-tuple, got {}-tuple", v.len()))),
+            _ => Err(err("literal is not a tuple")),
+        }
+    }
+}
+
+/// Opaque parsed-HLO handle. Text parsing is not supported by the stub;
+/// the constructor reports that clearly so artifact-driven paths degrade
+/// into the missing-artifacts behaviour their callers already handle.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(err(format!(
+            "HLO text execution ({path}) requires the real PJRT runtime; \
+             the vendored xla stub only interprets builder-constructed computations"
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Builder graph + interpreter.
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Node {
+    Parameter { index: usize },
+    MatMul { lhs: Arc<Node>, rhs: Arc<Node> },
+    DotGeneral {
+        lhs: Arc<Node>,
+        rhs: Arc<Node>,
+        lhs_contracting: Vec<i64>,
+        rhs_contracting: Vec<i64>,
+        lhs_batch: Vec<i64>,
+        rhs_batch: Vec<i64>,
+    },
+    Softmax { input: Arc<Node>, axis: i64 },
+}
+
+fn max_param_index(node: &Node) -> usize {
+    match node {
+        Node::Parameter { index } => index + 1,
+        Node::MatMul { lhs, rhs } => max_param_index(lhs).max(max_param_index(rhs)),
+        Node::DotGeneral { lhs, rhs, .. } => max_param_index(lhs).max(max_param_index(rhs)),
+        Node::Softmax { input, .. } => max_param_index(input),
+    }
+}
+
+/// Row-major strides for a dims vector.
+fn strides(dims: &[i64]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1] as usize;
+    }
+    s
+}
+
+type Evaluated = (Vec<i64>, Vec<f32>);
+
+fn eval(node: &Node, args: &[&Literal]) -> Result<Evaluated> {
+    match node {
+        Node::Parameter { index } => {
+            let lit = args
+                .get(*index)
+                .ok_or_else(|| err(format!("missing argument for parameter {index}")))?;
+            match &lit.data {
+                Data::F32(v) => Ok((lit.dims.clone(), v.clone())),
+                _ => Err(err("interpreter only supports f32 parameters")),
+            }
+        }
+        Node::MatMul { lhs, rhs } => {
+            let (ad, av) = eval(lhs, args)?;
+            let (bd, bv) = eval(rhs, args)?;
+            if ad.len() != 2 || bd.len() != 2 || ad[1] != bd[0] {
+                return Err(err(format!("matmul shape mismatch: {ad:?} x {bd:?}")));
+            }
+            let (m, k, n) = (ad[0] as usize, ad[1] as usize, bd[1] as usize);
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let a = av[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    for (o, b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+            Ok((vec![m as i64, n as i64], out))
+        }
+        Node::DotGeneral { lhs, rhs, lhs_contracting, rhs_contracting, lhs_batch, rhs_batch } => {
+            let (ad, av) = eval(lhs, args)?;
+            let (bd, bv) = eval(rhs, args)?;
+            dot_general(&ad, &av, &bd, &bv, lhs_contracting, rhs_contracting, lhs_batch, rhs_batch)
+        }
+        Node::Softmax { input, axis } => {
+            let (dims, v) = eval(input, args)?;
+            let rank = dims.len() as i64;
+            let ax = if *axis < 0 { rank + axis } else { *axis };
+            if ax < 0 || ax >= rank {
+                return Err(err(format!("softmax axis {axis} out of range for rank {rank}")));
+            }
+            let ax = ax as usize;
+            let size = dims[ax] as usize;
+            let inner: usize = dims[ax + 1..].iter().product::<i64>() as usize;
+            let outer: usize = dims[..ax].iter().product::<i64>() as usize;
+            let mut out = vec![0.0f32; v.len()];
+            for o in 0..outer {
+                for i in 0..inner.max(1) {
+                    let base = o * size * inner.max(1) + i;
+                    let step = inner.max(1);
+                    let mut mx = f32::NEG_INFINITY;
+                    for s in 0..size {
+                        mx = mx.max(v[base + s * step]);
+                    }
+                    let mut sum = 0.0f32;
+                    for s in 0..size {
+                        let e = (v[base + s * step] - mx).exp();
+                        out[base + s * step] = e;
+                        sum += e;
+                    }
+                    for s in 0..size {
+                        out[base + s * step] /= sum;
+                    }
+                }
+            }
+            Ok((dims, out))
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dot_general(
+    ad: &[i64],
+    av: &[f32],
+    bd: &[i64],
+    bv: &[f32],
+    lc: &[i64],
+    rc: &[i64],
+    lb: &[i64],
+    rb: &[i64],
+) -> Result<Evaluated> {
+    if lc.len() != rc.len() || lb.len() != rb.len() {
+        return Err(err("dot_general: dimension-list length mismatch"));
+    }
+    let is_in = |set: &[i64], d: usize| set.iter().any(|&x| x as usize == d);
+    let lfree: Vec<usize> =
+        (0..ad.len()).filter(|&d| !is_in(lc, d) && !is_in(lb, d)).collect();
+    let rfree: Vec<usize> =
+        (0..bd.len()).filter(|&d| !is_in(rc, d) && !is_in(rb, d)).collect();
+    for (i, (&l, &r)) in lb.iter().zip(rb).enumerate() {
+        if ad[l as usize] != bd[r as usize] {
+            return Err(err(format!("dot_general: batch dim {i} size mismatch")));
+        }
+    }
+    for (i, (&l, &r)) in lc.iter().zip(rc).enumerate() {
+        if ad[l as usize] != bd[r as usize] {
+            return Err(err(format!("dot_general: contracting dim {i} size mismatch")));
+        }
+    }
+    let astr = strides(ad);
+    let bstr = strides(bd);
+
+    let batch_sizes: Vec<usize> = lb.iter().map(|&d| ad[d as usize] as usize).collect();
+    let lfree_sizes: Vec<usize> = lfree.iter().map(|&d| ad[d] as usize).collect();
+    let rfree_sizes: Vec<usize> = rfree.iter().map(|&d| bd[d] as usize).collect();
+    let contract_sizes: Vec<usize> = lc.iter().map(|&d| ad[d as usize] as usize).collect();
+
+    let prod = |v: &[usize]| v.iter().product::<usize>().max(1);
+    let (nb, nlf, nrf, nc) =
+        (prod(&batch_sizes), prod(&lfree_sizes), prod(&rfree_sizes), prod(&contract_sizes));
+
+    // Decompose a linear index over `sizes` into per-dim offsets dotted
+    // with `dim_strides`.
+    let offset = |mut idx: usize, sizes: &[usize], dims: &[usize], str_: &[usize]| -> usize {
+        let mut off = 0usize;
+        for k in (0..sizes.len()).rev() {
+            let d = idx % sizes[k];
+            idx /= sizes[k];
+            off += d * str_[dims[k]];
+        }
+        off
+    };
+    let lb_usize: Vec<usize> = lb.iter().map(|&d| d as usize).collect();
+    let rb_usize: Vec<usize> = rb.iter().map(|&d| d as usize).collect();
+    let lc_usize: Vec<usize> = lc.iter().map(|&d| d as usize).collect();
+    let rc_usize: Vec<usize> = rc.iter().map(|&d| d as usize).collect();
+
+    let mut out = vec![0.0f32; nb * nlf * nrf];
+    for b in 0..nb {
+        let a_b = offset(b, &batch_sizes, &lb_usize, &astr);
+        let b_b = offset(b, &batch_sizes, &rb_usize, &bstr);
+        for i in 0..nlf {
+            let a_i = offset(i, &lfree_sizes, &lfree, &astr);
+            for j in 0..nrf {
+                let b_j = offset(j, &rfree_sizes, &rfree, &bstr);
+                let mut acc = 0.0f32;
+                for c in 0..nc {
+                    let a_c = offset(c, &contract_sizes, &lc_usize, &astr);
+                    let b_c = offset(c, &contract_sizes, &rc_usize, &bstr);
+                    acc += av[a_b + a_i + a_c] * bv[b_b + b_j + b_c];
+                }
+                out[(b * nlf + i) * nrf + j] = acc;
+            }
+        }
+    }
+    let mut out_dims: Vec<i64> = batch_sizes.iter().map(|&d| d as i64).collect();
+    out_dims.extend(lfree_sizes.iter().map(|&d| d as i64));
+    out_dims.extend(rfree_sizes.iter().map(|&d| d as i64));
+    Ok((out_dims, out))
+}
+
+/// Computation builder (API-compatible subset).
+#[derive(Debug)]
+pub struct XlaBuilder {
+    _name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { _name: name.to_string() }
+    }
+
+    pub fn parameter_s(&self, index: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        if index < 0 {
+            return Err(err("negative parameter index"));
+        }
+        Ok(XlaOp { node: Arc::new(Node::Parameter { index: index as usize }) })
+    }
+}
+
+/// A node in a builder computation.
+#[derive(Debug, Clone)]
+pub struct XlaOp {
+    node: Arc<Node>,
+}
+
+impl XlaOp {
+    pub fn matmul(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        Ok(XlaOp { node: Arc::new(Node::MatMul { lhs: self.node.clone(), rhs: rhs.node.clone() }) })
+    }
+
+    pub fn dot_general(
+        &self,
+        rhs: &XlaOp,
+        lhs_contracting: &[i64],
+        rhs_contracting: &[i64],
+        lhs_batch: &[i64],
+        rhs_batch: &[i64],
+    ) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Arc::new(Node::DotGeneral {
+                lhs: self.node.clone(),
+                rhs: rhs.node.clone(),
+                lhs_contracting: lhs_contracting.to_vec(),
+                rhs_contracting: rhs_contracting.to_vec(),
+                lhs_batch: lhs_batch.to_vec(),
+                rhs_batch: rhs_batch.to_vec(),
+            }),
+        })
+    }
+
+    pub fn softmax(&self, axis: i64) -> Result<XlaOp> {
+        Ok(XlaOp { node: Arc::new(Node::Softmax { input: self.node.clone(), axis }) })
+    }
+
+    pub fn build(&self) -> Result<XlaComputation> {
+        Ok(XlaComputation { root: Some(self.node.clone()) })
+    }
+}
+
+/// A built computation: interpretable when builder-constructed, opaque
+/// (uncompilable) when created from an HLO proto.
+#[derive(Debug)]
+pub struct XlaComputation {
+    root: Option<Arc<Node>>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { root: None }
+    }
+}
+
+/// Host "PJRT" client. `cpu()` always succeeds — the interpreter needs
+/// no runtime library.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-interpreter".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.root {
+            Some(root) => {
+                let n_params = max_param_index(root);
+                Ok(PjRtLoadedExecutable { root: root.clone(), n_params })
+            }
+            None => Err(err(
+                "compiling HLO-proto computations requires the real PJRT runtime \
+                 (vendored stub interprets builder graphs only)",
+            )),
+        }
+    }
+}
+
+/// A compiled (interpretable) executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    root: Arc<Node>,
+    n_params: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned or borrowed literals; returns the usual
+    /// per-device, per-output buffer nesting (`[0][0]` for our 1-device
+    /// single-output computations).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if args.len() < self.n_params {
+            return Err(err(format!(
+                "executable needs {} arguments, got {}",
+                self.n_params,
+                args.len()
+            )));
+        }
+        let refs: Vec<&Literal> = args.iter().map(|l| l.borrow()).collect();
+        let (dims, data) = eval(&self.root, &refs)?;
+        Ok(vec![vec![PjRtBuffer(Literal { dims, data: Data::F32(data) })]])
+    }
+}
+
+/// A device buffer (host literal in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer(Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).reshape(&[2, 3]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn untyped_bytes_round_trip() {
+        let vals = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vals.to_vec());
+        let ivals = [7i32, -9];
+        let bytes: Vec<u8> = ivals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::I32, &[2], &bytes).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), ivals.to_vec());
+    }
+
+    #[test]
+    fn matmul_interprets() {
+        let b = XlaBuilder::new("t");
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![2, 3]), "x").unwrap();
+        let y = b.parameter_s(1, &Shape::array::<f32>(vec![3, 2]), "y").unwrap();
+        let comp = x.matmul(&y).unwrap().build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let xl = Literal::vec1(&[1., 2., 3., 4., 5., 6.]).reshape(&[2, 3]).unwrap();
+        let yl = Literal::vec1(&[1., 0., 0., 1., 1., 1.]).reshape(&[3, 2]).unwrap();
+        let out = exe.execute::<Literal>(&[xl, yl]).unwrap()[0][0].to_literal_sync().unwrap();
+        assert_eq!(out.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(out.to_vec::<f32>().unwrap(), vec![4., 5., 10., 11.]);
+    }
+
+    #[test]
+    fn attention_shaped_dot_general_and_softmax() {
+        // scores[b,i,j] = sum_d q[b,i,d] k[b,j,d]; probs = softmax(-1);
+        // out[b,i,d] = sum_j probs[b,i,j] v[b,j,d].
+        let b = XlaBuilder::new("attn");
+        let shape = Shape::array::<f32>(vec![2, 3, 4]);
+        let q = b.parameter_s(0, &shape, "q").unwrap();
+        let k = b.parameter_s(1, &shape, "k").unwrap();
+        let v = b.parameter_s(2, &shape, "v").unwrap();
+        let scores = q.dot_general(&k, &[2], &[2], &[0], &[0]).unwrap();
+        let probs = scores.softmax(-1).unwrap();
+        let comp = probs.dot_general(&v, &[2], &[1], &[0], &[0]).unwrap().build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let data: Vec<f32> = (0..24).map(|i| (i % 5) as f32 * 0.1).collect();
+        let lit = Literal::vec1(&data).reshape(&[2, 3, 4]).unwrap();
+        let out = exe
+            .execute::<&Literal>(&[&lit, &lit, &lit])
+            .unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        assert_eq!(out.array_shape().unwrap().dims(), &[2, 3, 4]);
+        let vals = out.to_vec::<f32>().unwrap();
+        assert!(vals.iter().all(|x| x.is_finite()));
+        // Each output row is a convex combination of v rows, so it must
+        // stay within the min/max of the v values.
+        let (mn, mx) = data.iter().fold((f32::MAX, f32::MIN), |(a, b), &x| (a.min(x), b.max(x)));
+        assert!(vals.iter().all(|&x| x >= mn - 1e-5 && x <= mx + 1e-5));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let b = XlaBuilder::new("sm");
+        let x = b.parameter_s(0, &Shape::array::<f32>(vec![3, 5]), "x").unwrap();
+        let comp = x.softmax(-1).unwrap().build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let data: Vec<f32> = (0..15).map(|i| i as f32 - 7.0).collect();
+        let lit = Literal::vec1(&data).reshape(&[3, 5]).unwrap();
+        let out = exe.execute::<Literal>(&[lit]).unwrap()[0][0].to_literal_sync().unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        for r in 0..3 {
+            let s: f32 = v[r * 5..(r + 1) * 5].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn hlo_text_is_rejected_clearly() {
+        let e = HloModuleProto::from_text_file("/tmp/nope.hlo").unwrap_err();
+        assert!(format!("{e}").contains("PJRT"));
+        let comp = XlaComputation { root: None };
+        assert!(PjRtClient::cpu().unwrap().compile(&comp).is_err());
+    }
+
+    #[test]
+    fn tuple_accessors() {
+        let a = Literal::vec1(&[1.0]);
+        let t = Literal { dims: vec![], data: Data::Tuple(vec![a.clone()]) };
+        assert_eq!(t.to_tuple1().unwrap(), a);
+        assert!(a.to_tuple1().is_err());
+        let t2 = Literal { dims: vec![], data: Data::Tuple(vec![a.clone(), a.clone()]) };
+        assert!(t2.to_tuple2().is_ok());
+        assert!(t2.to_tuple1().is_err());
+    }
+}
