@@ -1,0 +1,267 @@
+//! Serving-speed claims for the continuous-batching layer:
+//!
+//! 1. **Memoized online planning** — re-solving the §5.5 online
+//!    schedule per *batch* vs once per *shape* through the
+//!    [`PlanCache`]. On the paper instance the cached path must be
+//!    strictly faster than the per-batch cold solve (the acceptance
+//!    gate; a hit is a map lookup against a full Algorithm-1 walk, so
+//!    this holds by orders of magnitude even in quick mode).
+//! 2. **Allocation-free batch assembly** — the [`BatchBuffers`] arena
+//!    vs the seed's allocate-per-batch assembly, asserted the same way
+//!    `solver_speed.rs` asserts the buffered solver path wins, plus a
+//!    direct steady-state probe: across a thousand mixed-shape batches
+//!    the arena's data pointer and capacity must not change (no
+//!    per-batch heap allocation once warm).
+//! 3. **Queue-fed serving** — requests/s through the bounded queue +
+//!    batcher + worker replicas under all four policies, and Adaptive
+//!    with the plan cache on vs off (needs `make artifacts`; skipped
+//!    gracefully otherwise).
+//!
+//! Emits a `BENCH_serving.json` trajectory file with the measured
+//! series for dashboard-style tracking across PRs.
+//!
+//! Run: `cargo bench --bench serving_speed`
+
+use std::time::{Duration, Instant};
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::server::{BatchBuffers, EmbeddedRequest, Policy};
+use findep::runtime::artifacts_dir;
+use findep::sched::Order;
+use findep::solver::{shape_key, solve_online, Instance, PlanCache, SolverParams};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+use findep::util::stats;
+
+/// First `n` per-iteration samples as a JSON trajectory array.
+fn trajectory(samples: &[f64], n: usize) -> Json {
+    Json::Arr(samples.iter().take(n).map(|&s| Json::Num(s)).collect())
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("serving_speed".into()));
+    report.insert("quick", Json::Bool(quick));
+
+    // --- 1. Plan cache: per-batch cold solve vs memoized solve on the
+    //     paper instance. ---------------------------------------------
+    let inst = Instance::new(
+        ModelConfig::deepseek_v2(8),
+        Testbed::a(),
+        GroupSplit::new(3, 5),
+        3072,
+    );
+    let params = SolverParams::default();
+    // A serving stream repeats a handful of padded batch shapes.
+    let stream: Vec<usize> =
+        [4usize, 8, 2, 4, 16, 8, 4, 2].iter().copied().cycle().take(64).collect();
+
+    // Correctness first: the memoized solution per shape is the cold
+    // solution, config-identical.
+    let check = PlanCache::new();
+    for &b in &stream {
+        let cold = solve_online(&inst, b, &params);
+        let cached =
+            check.get_or_solve(shape_key(inst.seq_len, b), || solve_online(&inst, b, &params));
+        match (cold, cached) {
+            (Some(c), Some(h)) => assert_eq!(c.config, h.config, "cache changed the plan"),
+            (None, None) => {}
+            _ => panic!("cache changed feasibility for batch {b}"),
+        }
+    }
+
+    let r_cold = bencher.run("online solve per batch (cold)", || {
+        for &b in &stream {
+            let _ = solve_online(&inst, b, &params);
+        }
+    });
+    let cache = PlanCache::new();
+    let r_cached = bencher.run("online solve per shape (cached)", || {
+        for &b in &stream {
+            let _ = cache
+                .get_or_solve(shape_key(inst.seq_len, b), || solve_online(&inst, b, &params));
+        }
+    });
+    let mut table = Table::new(
+        &format!("Adaptive planning, {}-batch serving stream (paper instance)", stream.len()),
+        &["path", "mean / stream", "per batch", "speedup"],
+    );
+    table.row(&[
+        "cold solve".into(),
+        fmt_duration(r_cold.mean_s()),
+        fmt_duration(r_cold.mean_s() / stream.len() as f64),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "plan cache".into(),
+        fmt_duration(r_cached.mean_s()),
+        fmt_duration(r_cached.mean_s() / stream.len() as f64),
+        format!("{:.0}x", r_cold.mean_s() / r_cached.mean_s()),
+    ]);
+    table.print();
+    println!(
+        "plan cache after run: {} hits / {} misses across {} shapes",
+        cache.hits(),
+        cache.misses(),
+        cache.len()
+    );
+    // The acceptance gate: cached-solve planning is strictly faster
+    // than the per-batch cold solve. The margin is enormous (map
+    // lookup vs full solve), so this is asserted in quick mode too.
+    assert!(
+        r_cached.mean_s() < r_cold.mean_s(),
+        "plan cache ({:.9}s) must beat per-batch cold solve ({:.9}s)",
+        r_cached.mean_s(),
+        r_cold.mean_s()
+    );
+    assert_eq!(cache.len() as u64, cache.misses(), "each shape must be solved exactly once");
+    let mut pc = JsonObj::new();
+    pc.insert("stream_len", Json::Num(stream.len() as f64));
+    pc.insert("cold_mean_s", Json::Num(r_cold.mean_s()));
+    pc.insert("cached_mean_s", Json::Num(r_cached.mean_s()));
+    pc.insert("speedup", Json::Num(r_cold.mean_s() / r_cached.mean_s()));
+    pc.insert("shapes", Json::Num(cache.len() as f64));
+    pc.insert("cold_trajectory_s", trajectory(&r_cold.samples, 32));
+    pc.insert("cached_trajectory_s", trajectory(&r_cached.samples, 32));
+    report.insert("plan_cache", Json::Obj(pc));
+
+    // --- 2. Batch assembly: arena vs allocate-per-batch. --------------
+    let (s, m) = (16usize, 64usize);
+    let reqs: Vec<EmbeddedRequest> =
+        (0..8u64).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+    let mut buf = BatchBuffers::new();
+
+    // Direct no-allocation probe: once warm at the largest shape, a
+    // thousand mixed-fill batches must not move or grow the buffer.
+    buf.assemble(&reqs, 8, s, m);
+    let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+    for _ in 0..1000 {
+        buf.assemble(&reqs[..5], 8, s, m);
+        buf.assemble(&reqs[..3], 4, s, m);
+        buf.assemble(&reqs, 8, s, m);
+    }
+    assert_eq!(buf.as_ptr(), ptr, "steady-state assembly reallocated the arena");
+    assert_eq!(buf.capacity(), cap, "steady-state assembly grew the arena");
+    println!("arena probe: 3000 mixed-shape batches, zero reallocations");
+
+    let r_alloc = bencher.run("assemble (alloc per batch)", || {
+        let t = BatchBuffers::assemble_alloc(&reqs[..5], 8, s, m);
+        std::hint::black_box(&t);
+        let t = BatchBuffers::assemble_alloc(&reqs, 8, s, m);
+        std::hint::black_box(&t);
+    });
+    let r_arena = bencher.run("assemble (arena)", || {
+        let t = buf.assemble(&reqs[..5], 8, s, m);
+        std::hint::black_box(t);
+        let t = buf.assemble(&reqs, 8, s, m);
+        std::hint::black_box(t);
+    });
+    let mut table = Table::new(
+        "Batch assembly (two batches per iteration, S=16 M=64 B=8)",
+        &["path", "mean", "p50", "speedup"],
+    );
+    table.row(&[
+        "alloc per batch".into(),
+        fmt_duration(r_alloc.mean_s()),
+        fmt_duration(r_alloc.p50_s()),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "BatchBuffers arena".into(),
+        fmt_duration(r_arena.mean_s()),
+        fmt_duration(r_arena.p50_s()),
+        format!("{:.2}x", r_alloc.mean_s() / r_arena.mean_s()),
+    ]);
+    table.print();
+    // Quick mode runs too few iterations to gate CI on a timing
+    // ordering (same policy as solver_speed); the pointer probe above
+    // asserts the no-allocation claim directly in every mode.
+    if !quick {
+        assert!(
+            r_arena.mean_s() < r_alloc.mean_s(),
+            "arena assembly ({:.9}s) must beat allocate-per-batch ({:.9}s)",
+            r_arena.mean_s(),
+            r_alloc.mean_s()
+        );
+    }
+    let mut asm = JsonObj::new();
+    asm.insert("alloc_mean_s", Json::Num(r_alloc.mean_s()));
+    asm.insert("arena_mean_s", Json::Num(r_arena.mean_s()));
+    asm.insert("speedup", Json::Num(r_alloc.mean_s() / r_arena.mean_s()));
+    report.insert("assembly", Json::Obj(asm));
+
+    // --- 3. Queue-fed serving (real pipeline; needs artifacts). -------
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let model = ModelHandle::load(&dir, true).expect("artifacts load");
+        let (s, m) = (model.seq_len, model.model.embed);
+        let n_requests = if quick { 32 } else { 96 };
+        let policies: [(&str, Policy, bool); 5] = [
+            ("naive", Policy::Naive, true),
+            ("pppipe(r1=2)", Policy::PpPipe { r1: 2 }, true),
+            ("findep(2,2,ASAS)", Policy::FinDep { r1: 2, r2: 2, order: Order::Asas }, true),
+            ("adaptive (cold solve)", Policy::Adaptive, false),
+            ("adaptive (plan cache)", Policy::Adaptive, true),
+        ];
+        let mut table = Table::new(
+            &format!("Queue-fed serving, {n_requests} requests, 2 workers, max batch 8"),
+            &["policy", "req/s", "p50 latency ms", "queue wait ms", "cache hit/miss"],
+        );
+        let mut entries: Vec<Json> = Vec::new();
+        for (name, policy, cache_plans) in policies {
+            let cfg = BatcherConfig {
+                policy,
+                cache_plans,
+                workers: 2,
+                max_batch: 8,
+                queue_depth: 128,
+                linger: Duration::from_micros(500),
+                ..Default::default()
+            };
+            let batcher = Batcher::new(model.clone(), cfg).expect("batcher");
+            let t0 = Instant::now();
+            for i in 0..n_requests {
+                batcher.submit(EmbeddedRequest::synthetic(i as u64, s, m)).expect("submit");
+            }
+            let resps = batcher.drain(n_requests, Duration::from_secs(30));
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(resps.len(), n_requests, "{name}: lost responses");
+            let lat: Vec<f64> = resps.iter().map(|r| r.latency_s).collect();
+            let rps = n_requests as f64 / dt;
+            let qw = batcher.metrics().histogram_mean("queue_wait") * 1e3;
+            let (hits, misses) =
+                (batcher.plan_cache().hits(), batcher.plan_cache().misses());
+            table.row(&[
+                name.to_string(),
+                format!("{rps:.1}"),
+                format!("{:.2}", stats::percentile(&lat, 50.0) * 1e3),
+                format!("{qw:.3}"),
+                format!("{hits}/{misses}"),
+            ]);
+            let mut e = JsonObj::new();
+            e.insert("policy", Json::Str(name.into()));
+            e.insert("requests", Json::Num(n_requests as f64));
+            e.insert("req_per_s", Json::Num(rps));
+            e.insert("p50_latency_s", Json::Num(stats::percentile(&lat, 50.0)));
+            e.insert("p95_latency_s", Json::Num(stats::percentile(&lat, 95.0)));
+            e.insert("queue_wait_mean_s", Json::Num(qw * 1e-3));
+            e.insert("plan_cache_hits", Json::Num(hits as f64));
+            e.insert("plan_cache_misses", Json::Num(misses as f64));
+            e.insert("latency_trajectory_s", trajectory(&lat, 32));
+            entries.push(Json::Obj(e));
+        }
+        table.print();
+        report.insert("serving", Json::Arr(entries));
+    } else {
+        println!("artifacts missing: skipping queue-fed serving (run `make artifacts`)");
+        report.insert("serving", Json::Str("skipped: artifacts missing".into()));
+    }
+
+    std::fs::write("BENCH_serving.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json");
+}

@@ -1,0 +1,334 @@
+//! Continuous batching: a bounded request queue in front of a pool of
+//! pipelined serving workers (the EPS-MoE / MegaScale-Infer serving
+//! shape — many in-flight micro-batches keep the disaggregated
+//! attention/expert groups busy).
+//!
+//! ```text
+//!   submit() ──▶ bounded queue ──▶ assembler (FIFO, linger window,
+//!        │                         size-bucketed batches)
+//!        │                              │ bounded work channel
+//!        │                              ▼
+//!        │                     worker 0 .. W-1  (one Server +
+//!        │                     pipeline replica each; shared
+//!        │                     Registry + PlanCache)
+//!        │                              │
+//!        ◀──────── responses ───────────┘
+//! ```
+//!
+//! Invariants:
+//!
+//! * **FIFO draining** — the assembler forms batches strictly in
+//!   arrival order; with one worker, responses come back in submission
+//!   order regardless of how the stream was cut into batches.
+//! * **Backpressure** — the submit queue is a bounded `sync_channel`:
+//!   `submit` blocks when the queue is full, `try_submit` rejects (and
+//!   counts `queue_rejected`).
+//! * **Per-request latency** — each response's `latency_s` is rewritten
+//!   to the true enqueue→response time, and the enqueue→dispatch wait
+//!   lands in the shared registry's `queue_wait` histogram.
+//! * **Shared planning** — workers share one [`PlanCache`], so an
+//!   Adaptive shape solved on any worker is a hit on all of them.
+
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::links::LinkDelay;
+use crate::coordinator::moe::ModelHandle;
+use crate::coordinator::server::{EmbeddedRequest, Policy, Response, Server};
+use crate::metrics::Registry;
+use crate::solver::PlanCache;
+
+/// A request plus its enqueue timestamp (the latency reference).
+struct QueuedRequest {
+    req: EmbeddedRequest,
+    enqueued: Instant,
+}
+
+/// Continuous-batcher knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// EG workers per pipeline replica.
+    pub eg: usize,
+    /// Optional α-β link delay per replica.
+    pub link_delay: Option<LinkDelay>,
+    /// Scheduling policy applied to every assembled batch.
+    pub policy: Policy,
+    /// Most requests per assembled batch (the size bucket cap).
+    pub max_batch: usize,
+    /// Bounded submit-queue depth (`submit` blocks beyond it).
+    pub queue_depth: usize,
+    /// Serving workers = pipeline replicas = in-flight batches.
+    pub workers: usize,
+    /// How long the assembler waits to fill a batch after the first
+    /// request arrives.
+    pub linger: Duration,
+    /// Memoize Adaptive plans per shape (shared across workers).
+    pub cache_plans: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            eg: 2,
+            link_delay: None,
+            policy: Policy::Adaptive,
+            max_batch: 8,
+            queue_depth: 64,
+            workers: 2,
+            linger: Duration::from_millis(1),
+            cache_plans: true,
+        }
+    }
+}
+
+/// The continuous batcher: owns the queue, the assembler, and the
+/// worker pool. Dropping it drains in-flight work and joins every
+/// thread.
+pub struct Batcher {
+    submit_tx: Option<SyncSender<QueuedRequest>>,
+    resp_rx: Receiver<Response>,
+    metrics: Arc<Registry>,
+    plan_cache: Arc<PlanCache>,
+    /// Expected `S·M` element count per request — malformed requests
+    /// are rejected at submit time so they can never sink a whole
+    /// assembled batch inside a worker.
+    req_elems: usize,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spin up the assembler and `cfg.workers` serving replicas over
+    /// one loaded model.
+    pub fn new(model: ModelHandle, cfg: BatcherConfig) -> Result<Batcher> {
+        let metrics = Arc::new(Registry::new());
+        let plan_cache = Arc::new(PlanCache::new());
+        let workers = cfg.workers.max(1);
+        let max_batch = cfg.max_batch.max(1);
+        let req_elems = model.seq_len * model.model.embed;
+
+        let (submit_tx, submit_rx) = sync_channel::<QueuedRequest>(cfg.queue_depth.max(1));
+        // Bounded work channel: the assembler runs at most `workers`
+        // batches ahead of the slowest replica.
+        let (work_tx, work_rx) = sync_channel::<Vec<QueuedRequest>>(workers);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (resp_tx, resp_rx) = channel::<Response>();
+
+        let mut threads = Vec::with_capacity(workers + 1);
+        {
+            let metrics = metrics.clone();
+            let linger = cfg.linger;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("findep-batcher".into())
+                    .spawn(move || assembler_loop(submit_rx, work_tx, max_batch, linger, metrics))
+                    .context("spawn batch assembler")?,
+            );
+        }
+        for w in 0..workers {
+            let mut server = Server::with_shared(
+                model.clone(),
+                cfg.eg,
+                cfg.link_delay,
+                metrics.clone(),
+                plan_cache.clone(),
+            )?;
+            server.cache_plans = cfg.cache_plans;
+            let work_rx = work_rx.clone();
+            let resp_tx = resp_tx.clone();
+            let policy = cfg.policy;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("findep-serve{w}"))
+                    .spawn(move || worker_loop(server, policy, work_rx, resp_tx))
+                    .context("spawn serving worker")?,
+            );
+        }
+
+        Ok(Batcher {
+            submit_tx: Some(submit_tx),
+            resp_rx,
+            metrics,
+            plan_cache,
+            req_elems,
+            threads,
+        })
+    }
+
+    /// A malformed request must fail at the submission boundary — once
+    /// assembled, `serve_batch` would reject the whole batch and every
+    /// co-batched request would silently lose its response.
+    fn validate(&self, req: &EmbeddedRequest) -> Result<()> {
+        anyhow::ensure!(
+            req.hidden.data.len() == self.req_elems,
+            "request {} has {} elements, expected {} (S·M)",
+            req.id,
+            req.hidden.data.len(),
+            self.req_elems
+        );
+        Ok(())
+    }
+
+    /// Enqueue a request, blocking while the queue is full
+    /// (backpressure). Errors on malformed requests or after shutdown.
+    pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
+        self.validate(&req)?;
+        let tx = self.submit_tx.as_ref().context("batcher closed")?;
+        tx.send(QueuedRequest { req, enqueued: Instant::now() })
+            .ok()
+            .context("batcher workers gone")?;
+        self.metrics.inc("queued", 1);
+        Ok(())
+    }
+
+    /// Non-blocking enqueue: `Ok(false)` when the queue is full (the
+    /// request is rejected and counted).
+    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
+        self.validate(&req)?;
+        let tx = self.submit_tx.as_ref().context("batcher closed")?;
+        match tx.try_send(QueuedRequest { req, enqueued: Instant::now() }) {
+            Ok(()) => {
+                self.metrics.inc("queued", 1);
+                Ok(true)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.inc("queue_rejected", 1);
+                Ok(false)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                anyhow::bail!("batcher workers gone")
+            }
+        }
+    }
+
+    /// Next completed response, or `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.resp_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Collect up to `n` responses, waiting at most `timeout` for each.
+    pub fn drain(&self, n: usize, timeout: Duration) -> Vec<Response> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.recv_timeout(timeout) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Close the queue: the assembler drains what's pending, then
+        // the work channel closes and every worker exits.
+        self.submit_tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// FIFO batch assembly with a linger window: take the first request
+/// (blocking), then fill up to `max_batch` from whatever arrives within
+/// `linger`, draining already-queued requests without waiting.
+fn assembler_loop(
+    rx: Receiver<QueuedRequest>,
+    work_tx: SyncSender<Vec<QueuedRequest>>,
+    max_batch: usize,
+    linger: Duration,
+    metrics: Arc<Registry>,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(q) => q,
+            Err(_) => return, // queue closed and drained
+        };
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(q) => {
+                    batch.push(q);
+                    continue;
+                }
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {}
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(q) => batch.push(q),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        for q in &batch {
+            metrics.observe("queue_wait", q.enqueued.elapsed().as_secs_f64());
+        }
+        metrics.inc("batches_assembled", 1);
+        metrics.observe("batch_fill", batch.len() as f64);
+        if work_tx.send(batch).is_err() {
+            return; // all workers gone
+        }
+    }
+}
+
+/// One serving replica: pop the next assembled batch, serve it, rewrite
+/// per-request latencies to enqueue→response, emit responses.
+fn worker_loop(
+    server: Server,
+    policy: Policy,
+    work_rx: Arc<Mutex<Receiver<Vec<QueuedRequest>>>>,
+    resp_tx: Sender<Response>,
+) {
+    loop {
+        // Hold the lock only for the pop; serving runs unlocked so the
+        // other replicas pipeline their own batches meanwhile.
+        let batch = {
+            let rx = work_rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(batch) = batch else { return };
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut enqueued = Vec::with_capacity(batch.len());
+        for q in batch {
+            reqs.push(q.req);
+            enqueued.push(q.enqueued);
+        }
+        match server.serve_batch(&reqs, policy) {
+            Ok((responses, _stats)) => {
+                for (mut resp, t) in responses.into_iter().zip(enqueued) {
+                    resp.latency_s = t.elapsed().as_secs_f64();
+                    server.metrics.observe("request_latency", resp.latency_s);
+                    if resp_tx.send(resp).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(e) => {
+                // Drop the batch but keep the replica alive; callers
+                // see the gap via the serve_errors counter.
+                server.metrics.inc("serve_errors", 1);
+                eprintln!("serving worker: batch failed: {e:#}");
+            }
+        }
+    }
+}

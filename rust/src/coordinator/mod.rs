@@ -14,7 +14,13 @@
 //! (produced by Algorithm 1, PPPipe, or naive) and issues fine-grained
 //! tasks in the planned order — the same vocabulary the simulator
 //! executes analytically.
+//!
+//! [`batcher`] stacks continuous batching on top: a bounded request
+//! queue drains into size-bucketed batches pipelined across a pool of
+//! server replicas that share one metrics registry and one memoized
+//! plan cache.
 
+pub mod batcher;
 pub mod links;
 pub mod moe;
 pub mod pipeline;

@@ -35,7 +35,7 @@ use crate::sched::Order;
 
 /// Pipeline execution knobs (the subset of `PlanConfig` the real
 /// executor needs; `m_e` is implied by routing).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecConfig {
     pub r1: usize,
     pub r2: usize,
@@ -107,6 +107,20 @@ pub struct ForwardStats {
     /// Time the AG loop spent blocked waiting for combines.
     pub wait: f64,
     pub tasks_issued: usize,
+}
+
+impl ForwardStats {
+    /// Accumulate another pass's stats — the chunked `serve_batch`
+    /// path stitches one stats object out of its per-chunk forwards.
+    pub fn absorb(&mut self, other: &ForwardStats) {
+        self.total += other.total;
+        self.attention += other.attention;
+        self.gate += other.gate;
+        self.shared += other.shared;
+        self.dispatch += other.dispatch;
+        self.wait += other.wait;
+        self.tasks_issued += other.tasks_issued;
+    }
 }
 
 /// A persistent DEP pipeline over one loaded model.

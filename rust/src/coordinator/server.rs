@@ -1,8 +1,28 @@
-//! The serving front-end: dynamic batcher + plan selection + pipeline
+//! The serving front-end: plan selection + batch assembly + pipeline
 //! execution + metrics. This is the binary's `serve` path and the
-//! examples' entry point.
+//! examples' entry point; [`crate::coordinator::batcher`] stacks the
+//! continuous-batching queue on top of it.
+//!
+//! ## Serving hot path
+//!
+//! * **Planning** — `Policy::Adaptive` re-solves per *shape*, not per
+//!   batch: the padded capacity `r1·m_a` is the batch-size bucket of a
+//!   [`PlanCache`] key, a hit skips the solver entirely, and a miss
+//!   runs [`solver::solve_online_bucketed`] (Algorithm 1's online mode
+//!   restricted to compiled attention buckets), falling back to the
+//!   fixed-`(m_a, r1)` brute-force only if the online solver reports
+//!   the shape infeasible.
+//! * **Assembly** — the padded `[B, S, M]` batch tensor is rewritten in
+//!   place inside a [`BatchBuffers`] arena (PR 1's `PlanBuffers`
+//!   pattern applied to serving): steady-state assembly performs no
+//!   heap allocation. Responses are the ownership hand-off boundary and
+//!   stay owned copies.
+//! * **Oversize batches** — `serve_batch` splits a batch that exceeds
+//!   the policy's capacity into capacity-sized chunks and stitches the
+//!   responses back in request order; set [`Server::strict`] to restore
+//!   the pre-queue "split upstream" error.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -14,7 +34,7 @@ use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
 use crate::metrics::Registry;
 use crate::runtime::tensor::Tensor;
 use crate::sched::Order;
-use crate::solver::{Instance, SolverParams};
+use crate::solver::{self, Instance, PlanCache, Solution, SolverParams};
 
 /// One embedded request: hidden states for a fixed-S prompt (embedding
 /// lookup is out of scope for the tiny model; requests arrive as
@@ -43,6 +63,10 @@ impl EmbeddedRequest {
 pub struct Response {
     pub id: u64,
     pub hidden: Tensor,
+    /// Seconds from serve/enqueue to this response. Direct
+    /// `serve_batch` calls measure from call entry (all requests of a
+    /// chunk share the chunk's completion time); the batcher rewrites
+    /// this with the true enqueue→response time per request.
     pub latency_s: f64,
 }
 
@@ -52,9 +76,86 @@ pub enum Policy {
     Naive,
     PpPipe { r1: usize },
     FinDep { r1: usize, r2: usize, order: Order },
-    /// Solve per batch with Algorithm 1 against an emulated testbed
-    /// (the online-adaptive mode of §5.5).
+    /// Solve per batch shape with Algorithm 1's online mode against an
+    /// emulated testbed (the online-adaptive mode of §5.5), memoized in
+    /// the plan cache.
     Adaptive,
+}
+
+/// Reusable batch-assembly arena: the padded `[B, S, M]` input tensor
+/// is rewritten in place per batch. The backing buffer only ever
+/// grows, so at a stable serving shape assembly touches no allocator —
+/// `benches/serving_speed.rs` pins this (stable data pointer across
+/// steady-state batches) and measures it against the allocating
+/// baseline.
+#[derive(Debug)]
+pub struct BatchBuffers {
+    batch: Tensor,
+}
+
+impl Default for BatchBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BatchBuffers {
+    pub fn new() -> Self {
+        Self { batch: Tensor::zeros(vec![0, 0, 0]) }
+    }
+
+    /// Assemble the padded `[b_total, s, m]` batch in place: request
+    /// rows first, zero padding after. Requests beyond `b_total` are
+    /// ignored (callers chunk upstream).
+    pub fn assemble(
+        &mut self,
+        reqs: &[EmbeddedRequest],
+        b_total: usize,
+        s: usize,
+        m: usize,
+    ) -> &Tensor {
+        let w = s * m;
+        let n = reqs.len().min(b_total);
+        let t = &mut self.batch;
+        t.shape.clear();
+        t.shape.extend_from_slice(&[b_total, s, m]);
+        t.data.resize(b_total * w, 0.0);
+        for (i, r) in reqs.iter().take(n).enumerate() {
+            t.data[i * w..(i + 1) * w].copy_from_slice(&r.hidden.data);
+        }
+        for v in &mut t.data[n * w..] {
+            *v = 0.0;
+        }
+        &self.batch
+    }
+
+    /// The seed's allocate-per-batch assembly, kept as the measured
+    /// baseline for `benches/serving_speed.rs` (the same role
+    /// `EvalMode::AllocPerCandidate` plays for the solver).
+    pub fn assemble_alloc(
+        reqs: &[EmbeddedRequest],
+        b_total: usize,
+        s: usize,
+        m: usize,
+    ) -> Tensor {
+        let mut data = Vec::with_capacity(b_total * s * m);
+        for r in reqs.iter().take(b_total) {
+            data.extend_from_slice(&r.hidden.data);
+        }
+        for _ in reqs.len().min(b_total)..b_total {
+            data.extend(std::iter::repeat(0.0).take(s * m));
+        }
+        Tensor::new(vec![b_total, s, m], data)
+    }
+
+    /// Backing-buffer identity — the steady-state no-allocation probe.
+    pub fn as_ptr(&self) -> *const f32 {
+        self.batch.data.as_ptr()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.batch.data.capacity()
+    }
 }
 
 /// The DEP server.
@@ -66,12 +167,39 @@ pub struct Server {
     /// the solver plans against the testbed the deployment targets).
     pub plan_testbed: Testbed,
     pub plan_split: GroupSplit,
+    /// Memoize Adaptive plans per shape (disable to re-solve every
+    /// batch — the cold-solve baseline of `benches/serving_speed.rs`).
+    pub cache_plans: bool,
+    /// Pre-queue behaviour: error on batches beyond capacity instead of
+    /// splitting them into chunks.
+    pub strict: bool,
     solver_params: SolverParams,
+    plan_cache: Arc<PlanCache>,
+    batch_buf: Mutex<BatchBuffers>,
 }
 
 impl Server {
     pub fn new(model: ModelHandle, eg: usize, link_delay: Option<LinkDelay>) -> Result<Server> {
-        let metrics = Arc::new(Registry::new());
+        Self::with_shared(
+            model,
+            eg,
+            link_delay,
+            Arc::new(Registry::new()),
+            Arc::new(PlanCache::new()),
+        )
+    }
+
+    /// Construct a server sharing metrics and the plan cache with its
+    /// siblings — the batcher's worker replicas all point at one
+    /// registry and one cache, so a shape solved on any worker is a hit
+    /// on every other.
+    pub fn with_shared(
+        model: ModelHandle,
+        eg: usize,
+        link_delay: Option<LinkDelay>,
+        metrics: Arc<Registry>,
+        plan_cache: Arc<PlanCache>,
+    ) -> Result<Server> {
         let plan_testbed = Testbed::a();
         let plan_split = GroupSplit::new(1, eg);
         let pipeline = Pipeline::new(model, eg, link_delay)?;
@@ -80,8 +208,16 @@ impl Server {
             metrics,
             plan_testbed,
             plan_split,
+            cache_plans: true,
+            strict: false,
             solver_params: SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 8 },
+            plan_cache,
+            batch_buf: Mutex::new(BatchBuffers::new()),
         })
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
     }
 
     /// Largest attention bucket (preferred m_a).
@@ -97,12 +233,39 @@ impl Server {
             .unwrap_or(1)
     }
 
-    /// Choose (m_a, r1, ExecConfig) for an Adaptive batch of `n`
-    /// requests: among (bucket m_a, r1 ≤ cap) pairs with minimal padding
-    /// `r1·m_a − n`, pick the one the solver scores best against the
-    /// emulated target testbed (the §5.5 online mode; the per-batch
-    /// re-solve is sub-millisecond here, well under the paper's <1 s).
-    fn plan_adaptive(&self, n: usize) -> (usize, usize, ExecConfig) {
+    /// Most requests one planned batch can hold under `policy`.
+    pub fn capacity(&self, policy: Policy) -> usize {
+        let max_ma = self.max_ma();
+        match policy {
+            Policy::Naive => max_ma,
+            Policy::PpPipe { r1 } | Policy::FinDep { r1, .. } => r1 * max_ma,
+            Policy::Adaptive => self.solver_params.r1_cap * max_ma,
+        }
+    }
+
+    /// Smallest padded batch `r1·m_a` that covers `n` requests with a
+    /// bucket m_a and `r1` within the cap — the batch-size bucket of
+    /// the plan-cache key. Everything off this capacity is dominated:
+    /// candidates with equal padding and equal capacity are exactly the
+    /// `(m_a, r1)` pairs whose product is this value.
+    fn padded_capacity(&self, n: usize) -> usize {
+        let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;
+        buckets
+            .iter()
+            .filter_map(|&m_a| {
+                let r1 = n.div_ceil(m_a);
+                (r1 <= self.solver_params.r1_cap).then_some(m_a * r1)
+            })
+            .min()
+            .unwrap_or_else(|| self.max_ma() * self.solver_params.r1_cap)
+    }
+
+    /// Solve the Adaptive plan for one padded shape: Algorithm 1's
+    /// online mode restricted to the compiled attention buckets, with
+    /// the exhaustive fixed-`(m_a, r1)` scan as the fallback when the
+    /// online solver calls the shape infeasible (e.g. an emulated
+    /// testbed whose memory model rejects it).
+    fn solve_adaptive_shape(&self, capacity: usize) -> Option<Solution> {
         let inst = Instance::new(
             self.pipeline.model().model.clone(),
             self.plan_testbed.clone(),
@@ -110,60 +273,81 @@ impl Server {
             self.pipeline.model().seq_len,
         );
         let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;
-        let mut candidates: Vec<(usize, usize)> = Vec::new();
+        solver::solve_online_bucketed(&inst, capacity, &self.solver_params, buckets)
+            .or_else(|| self.bruteforce_shape(&inst, capacity, buckets))
+    }
+
+    /// Exhaustive reference path over the capacity-exact bucket pairs.
+    fn bruteforce_shape(
+        &self,
+        inst: &Instance,
+        capacity: usize,
+        buckets: &[usize],
+    ) -> Option<Solution> {
+        let mut best: Option<Solution> = None;
         for &m_a in buckets {
-            for r1 in 1..=self.solver_params.r1_cap {
-                if r1 * m_a >= n {
-                    candidates.push((m_a, r1));
-                    break; // larger r1 only adds padding for this m_a
-                }
-            }
-        }
-        if candidates.is_empty() {
-            // Batch exceeds the largest capacity: take the max and let
-            // serve_batch split the overflow into a second call upstream.
-            candidates.push((self.max_ma(), self.solver_params.r1_cap));
-        }
-        let min_pad =
-            candidates.iter().map(|(m_a, r1)| r1 * m_a - n.min(r1 * m_a)).min().unwrap();
-        let mut best: Option<(usize, usize, ExecConfig, f64)> = None;
-        for (m_a, r1) in candidates {
-            if r1 * m_a - n.min(r1 * m_a) > min_pad {
+            if m_a == 0 || capacity % m_a != 0 {
                 continue;
             }
-            let (cfg, _, tput) = crate::solver::bruteforce::best_for_fixed_ma_r1(
-                &inst,
+            let r1 = capacity / m_a;
+            if r1 == 0 || r1 > self.solver_params.r1_cap {
+                continue;
+            }
+            let (cfg, makespan, tput) = crate::solver::bruteforce::best_for_fixed_ma_r1(
+                inst,
                 m_a,
                 r1,
                 self.solver_params.r2_cap,
             );
-            if best.as_ref().map_or(true, |b| tput > b.3) {
-                best = Some((
-                    m_a,
-                    r1,
-                    ExecConfig { r1, r2: cfg.r2, order: cfg.order, fuse_shared: false },
-                    tput,
-                ));
+            if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
+                best = Some(Solution {
+                    config: cfg,
+                    makespan,
+                    throughput_tokens: tput,
+                    solve_seconds: 0.0,
+                    evals: 0,
+                });
             }
         }
-        let (m_a, r1, cfg, _) = best.expect("candidate set non-empty");
-        (m_a, r1, cfg)
+        best
     }
 
-    /// Pad a request list up to `r1·m_a` samples. Returns (batch tensor,
-    /// total batch size).
-    fn build_batch(&self, reqs: &[EmbeddedRequest], m_a: usize, r1: usize) -> (Tensor, usize) {
-        let s = self.pipeline.model().seq_len;
-        let m = self.pipeline.model().model.embed;
-        let b_total = r1 * m_a;
-        let mut data = Vec::with_capacity(b_total * s * m);
-        for r in reqs.iter().take(b_total) {
-            data.extend_from_slice(&r.hidden.data);
+    /// Choose (m_a, r1, ExecConfig) for an Adaptive batch of `n`
+    /// requests. Cached per `(seq len, padded capacity)` shape; a
+    /// cache-disabled server runs the identical solve per batch, so the
+    /// two modes produce byte-identical configurations.
+    pub fn plan_adaptive(&self, n: usize) -> (usize, usize, ExecConfig) {
+        let capacity = self.padded_capacity(n);
+        let key = (self.pipeline.model().seq_len, capacity);
+        let sol = if self.cache_plans {
+            self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity))
+        } else {
+            self.solve_adaptive_shape(capacity)
+        };
+        match sol {
+            Some(s) => (
+                s.config.m_a,
+                s.config.r1,
+                ExecConfig {
+                    r1: s.config.r1,
+                    r2: s.config.r2,
+                    order: s.config.order,
+                    fuse_shared: s.config.fuse_shared,
+                },
+            ),
+            // Degenerate shape (no bucket pair at all): serve at max
+            // capacity with an unfused sequential plan.
+            None => (
+                self.max_ma(),
+                self.solver_params.r1_cap,
+                ExecConfig {
+                    r1: self.solver_params.r1_cap,
+                    r2: 1,
+                    order: Order::Asas,
+                    fuse_shared: false,
+                },
+            ),
         }
-        for _ in reqs.len().min(b_total)..b_total {
-            data.extend(std::iter::repeat(0.0).take(s * m));
-        }
-        (Tensor::new(vec![b_total, s, m], data), b_total)
     }
 
     /// Smallest m_a bucket such that `r1·m_a` covers the request count
@@ -178,15 +362,58 @@ impl Server {
             .unwrap_or_else(|| self.max_ma())
     }
 
-    /// Serve one batch of requests under a policy; returns responses
-    /// (padding samples dropped) and the pipeline stats.
+    /// Serve a batch of requests under a policy; returns responses in
+    /// request order (padding samples dropped) and the stitched
+    /// pipeline stats. Batches beyond the policy's capacity are split
+    /// into capacity-sized chunks and served back to back, unless
+    /// [`Server::strict`] restores the pre-queue error.
     pub fn serve_batch(
         &self,
         reqs: &[EmbeddedRequest],
         policy: Policy,
     ) -> Result<(Vec<Response>, ForwardStats)> {
         anyhow::ensure!(!reqs.is_empty(), "empty batch");
+        let s = self.pipeline.model().seq_len;
+        let m = self.pipeline.model().model.embed;
+        for r in reqs {
+            anyhow::ensure!(
+                r.hidden.data.len() == s * m,
+                "request {} has {} elements, expected [S={s}, M={m}]",
+                r.id,
+                r.hidden.data.len()
+            );
+        }
+        let cap = self.capacity(policy);
+        anyhow::ensure!(cap > 0, "policy {policy:?} has zero capacity (r1 must be >= 1)");
         let t0 = Instant::now();
+        if reqs.len() <= cap {
+            return self.serve_chunk(reqs, policy, t0);
+        }
+        anyhow::ensure!(
+            !self.strict,
+            "batch of {} exceeds serving capacity {cap}; split upstream",
+            reqs.len()
+        );
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut stats = ForwardStats::default();
+        for chunk in reqs.chunks(cap) {
+            let (r, st) = self.serve_chunk(chunk, policy, t0)?;
+            responses.extend(r);
+            stats.absorb(&st);
+        }
+        Ok((responses, stats))
+    }
+
+    /// Serve one capacity-fitting chunk. `t0` is the serve/enqueue
+    /// reference for latency (chunks of a split batch share it, so a
+    /// later chunk's latency includes its wait behind earlier chunks).
+    fn serve_chunk(
+        &self,
+        reqs: &[EmbeddedRequest],
+        policy: Policy,
+        t0: Instant,
+    ) -> Result<(Vec<Response>, ForwardStats)> {
+        let t_chunk = Instant::now();
         let (m_a, r1, cfg) = match policy {
             Policy::Naive => {
                 let m_a = self.fit_ma(reqs.len(), 1);
@@ -198,27 +425,33 @@ impl Server {
             }
             Policy::Adaptive => self.plan_adaptive(reqs.len()),
         };
-        let (batch, b_total) = self.build_batch(reqs, m_a, r1);
-        anyhow::ensure!(
-            b_total >= reqs.len(),
-            "batch of {} exceeds serving capacity {b_total}; split upstream",
-            reqs.len()
-        );
-        let (out, stats) = self.pipeline.forward(&batch, cfg)?;
-        let latency = t0.elapsed().as_secs_f64();
-
         let s = self.pipeline.model().seq_len;
         let m = self.pipeline.model().model.embed;
+        let b_total = r1 * m_a;
+        anyhow::ensure!(
+            b_total >= reqs.len(),
+            "planned batch {b_total} cannot hold {} requests; split upstream",
+            reqs.len()
+        );
+        let (out, stats) = {
+            let mut buf = self.batch_buf.lock().unwrap();
+            let batch = buf.assemble(reqs, b_total, s, m);
+            self.pipeline.forward(batch, cfg)?
+        };
+        // Response latency counts from the serve/enqueue reference;
+        // the batch_latency histogram stays per-forward (chunk-local),
+        // so split batches don't inflate it cumulatively.
+        let latency = t0.elapsed().as_secs_f64();
+        let chunk_latency = t_chunk.elapsed().as_secs_f64();
+
+        let w = s * m;
         let responses: Vec<Response> = reqs
             .iter()
             .take(b_total)
             .enumerate()
             .map(|(i, r)| Response {
                 id: r.id,
-                hidden: Tensor::new(
-                    vec![s, m],
-                    out.data[i * s * m..(i + 1) * s * m].to_vec(),
-                ),
+                hidden: Tensor::new(vec![s, m], out.data[i * w..(i + 1) * w].to_vec()),
                 latency_s: latency,
             })
             .collect();
@@ -226,7 +459,7 @@ impl Server {
         self.metrics.inc("batches", 1);
         self.metrics.inc("requests", responses.len() as u64);
         self.metrics.inc("tokens", (responses.len() * s) as u64);
-        self.metrics.observe("batch_latency", latency);
+        self.metrics.observe("batch_latency", chunk_latency);
         Ok((responses, stats))
     }
 }
@@ -292,5 +525,45 @@ mod tests {
         for (a, b) in r3.iter().zip(&r4) {
             assert!(a.hidden.max_abs_diff(&b.hidden) < 1e-5);
         }
+    }
+
+    // ---- BatchBuffers (artifact-free) --------------------------------
+
+    fn reqs(n: usize, s: usize, m: usize) -> Vec<EmbeddedRequest> {
+        (0..n as u64).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect()
+    }
+
+    #[test]
+    fn arena_assembly_matches_alloc_baseline() {
+        let (s, m) = (16usize, 32usize);
+        let mut buf = BatchBuffers::new();
+        for (n, b_total) in [(1usize, 4usize), (3, 4), (4, 4), (5, 8), (8, 8)] {
+            let rs = reqs(n, s, m);
+            let baseline = BatchBuffers::assemble_alloc(&rs, b_total, s, m);
+            let arena = buf.assemble(&rs, b_total, s, m);
+            assert_eq!(arena.shape, baseline.shape);
+            assert_eq!(arena.data, baseline.data, "n={n} b_total={b_total}");
+        }
+    }
+
+    #[test]
+    fn arena_is_stable_in_steady_state_and_zeroes_dirty_padding() {
+        let (s, m) = (16usize, 32usize);
+        let mut buf = BatchBuffers::new();
+        // Warm with the largest shape, then shrink: the buffer must not
+        // move again.
+        buf.assemble(&reqs(8, s, m), 8, s, m);
+        let (ptr, cap) = (buf.as_ptr(), buf.capacity());
+        for n in [1usize, 4, 8, 2, 8] {
+            let b_total = n.next_power_of_two().max(4);
+            buf.assemble(&reqs(n, s, m), b_total, s, m);
+            assert_eq!(buf.as_ptr(), ptr, "buffer moved at n={n}");
+            assert_eq!(buf.capacity(), cap, "buffer reallocated at n={n}");
+        }
+        // A small batch after a larger one must see zeroed padding, not
+        // the previous batch's rows.
+        let out = buf.assemble(&reqs(2, s, m), 4, s, m);
+        assert!(out.data[2 * s * m..].iter().all(|&v| v == 0.0));
+        assert_eq!(out.shape, vec![4, s, m]);
     }
 }

@@ -12,6 +12,7 @@
 
 use findep::baselines;
 use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
 use findep::coordinator::links::LinkDelay;
 use findep::coordinator::moe::ModelHandle;
 use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
@@ -146,6 +147,12 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("policy", "findep", "naive|pppipe|findep|adaptive")
         .opt("link-alpha-us", "0", "injected link startup latency (µs)")
         .opt("link-gbps", "0", "injected link bandwidth (GB/s, 0 = none)")
+        .opt("queue-depth", "0", "bounded request queue depth (0 = direct batch loop)")
+        .opt("workers", "2", "serving replicas / in-flight batches (queue mode)")
+        .opt("max-batch", "8", "max requests per assembled batch (queue mode)")
+        .opt("linger-us", "500", "batch-fill window in µs (queue mode)")
+        .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
+        .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
     let p = match spec.parse(args) {
         Ok(p) => p,
@@ -174,9 +181,8 @@ fn cmd_serve(args: &[String]) -> i32 {
     } else {
         None
     };
-    let srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
-    let s = srv.pipeline.model().seq_len;
-    let m = srv.pipeline.model().model.embed;
+    let s = model.seq_len;
+    let m = model.model.embed;
     let policy = match p.get("policy") {
         "naive" => Policy::Naive,
         "pppipe" => Policy::PpPipe { r1: 2 },
@@ -185,6 +191,71 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
     let n_batches = p.get_usize("batches");
     let batch_size = p.get_usize("batch-size");
+
+    // Queue mode: the continuous batcher pipelines in-flight batches
+    // through a pool of serving replicas.
+    let queue_depth = p.get_usize("queue-depth");
+    if queue_depth > 0 {
+        let cfg = BatcherConfig {
+            eg: p.get_usize("eg"),
+            link_delay: delay,
+            policy,
+            max_batch: p.get_usize("max-batch"),
+            queue_depth,
+            workers: p.get_usize("workers"),
+            linger: std::time::Duration::from_micros(p.get_u64("linger-us")),
+            cache_plans: !p.has_flag("no-plan-cache"),
+        };
+        let total = match p.get_usize("requests") {
+            0 => n_batches * batch_size,
+            r => r,
+        };
+        let batcher = match Batcher::new(model, cfg) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("failed to start batcher: {e:#}");
+                return 1;
+            }
+        };
+        let t0 = std::time::Instant::now();
+        for i in 0..total {
+            if let Err(e) = batcher.submit(EmbeddedRequest::synthetic(i as u64, s, m)) {
+                eprintln!("submit failed: {e:#}");
+                return 1;
+            }
+        }
+        let resps = batcher.drain(total, std::time::Duration::from_secs(60));
+        let dt = t0.elapsed().as_secs_f64();
+        if resps.len() != total {
+            eprintln!("timed out: {} of {total} responses", resps.len());
+            return 1;
+        }
+        println!(
+            "served {total} requests ({} tokens) in {:.2}s -> {:.1} req/s, {:.1} tokens/s \
+             ({:?}, {} workers, max batch {})",
+            total * s,
+            dt,
+            total as f64 / dt,
+            (total * s) as f64 / dt,
+            policy,
+            cfg.workers,
+            cfg.max_batch,
+        );
+        let cache = batcher.plan_cache();
+        println!(
+            "plan cache: {} hits / {} misses ({} shapes); queue wait mean {:.3} ms over {} reqs",
+            cache.hits(),
+            cache.misses(),
+            cache.len(),
+            batcher.metrics().histogram_mean("queue_wait") * 1e3,
+            batcher.metrics().histogram_count("queue_wait"),
+        );
+        println!("{}", findep::util::json::to_string_pretty(&batcher.metrics().snapshot_json()));
+        return 0;
+    }
+
+    let mut srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
+    srv.cache_plans = !p.has_flag("no-plan-cache");
     let t0 = std::time::Instant::now();
     let mut tokens = 0usize;
     for b in 0..n_batches {

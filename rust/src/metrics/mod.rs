@@ -155,6 +155,16 @@ impl Registry {
         self.histograms.lock().unwrap().get(name).map(|h| h.to_json())
     }
 
+    /// Sample count of a histogram (0 when it was never observed).
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.histograms.lock().unwrap().get(name).map(|h| h.count()).unwrap_or(0)
+    }
+
+    /// Mean of a histogram (0.0 when it was never observed).
+    pub fn histogram_mean(&self, name: &str) -> f64 {
+        self.histograms.lock().unwrap().get(name).map(|h| h.mean()).unwrap_or(0.0)
+    }
+
     pub fn snapshot_json(&self) -> Json {
         let mut o = JsonObj::new();
         let mut counters = JsonObj::new();
@@ -219,5 +229,9 @@ mod tests {
         assert_eq!(j.get("counters").get("reqs").as_f64(), Some(400.0));
         assert!(r.histogram_json("lat").is_some());
         assert!(r.histogram_json("missing").is_none());
+        assert_eq!(r.histogram_count("lat"), 400);
+        assert!((r.histogram_mean("lat") - 0.001).abs() < 1e-9);
+        assert_eq!(r.histogram_count("missing"), 0);
+        assert_eq!(r.histogram_mean("missing"), 0.0);
     }
 }

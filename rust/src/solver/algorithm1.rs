@@ -168,7 +168,7 @@ impl Default for SolverParams {
 }
 
 /// Solver output.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Solution {
     pub config: PlanConfig,
     pub makespan: f64,
@@ -307,6 +307,29 @@ pub fn solve_online_mode(
     params: &SolverParams,
     mode: EvalMode,
 ) -> Option<Solution> {
+    solve_online_impl(inst, samples_per_gpu, params, mode, &[])
+}
+
+/// Online entry for the serving loop: like [`solve_online`], but `m_a`
+/// restricted to `allowed_ma` — the coordinator's compiled attention
+/// buckets, since the real executor can only launch bucket-exact
+/// micro-batches. An empty slice places no restriction.
+pub fn solve_online_bucketed(
+    inst: &Instance,
+    samples_per_gpu: usize,
+    params: &SolverParams,
+    allowed_ma: &[usize],
+) -> Option<Solution> {
+    solve_online_impl(inst, samples_per_gpu, params, EvalMode::Buffered, allowed_ma)
+}
+
+fn solve_online_impl(
+    inst: &Instance,
+    samples_per_gpu: usize,
+    params: &SolverParams,
+    mode: EvalMode,
+    allowed_ma: &[usize],
+) -> Option<Solution> {
     let t0 = Instant::now();
     let mut ev = inst.evaluator();
     let mem = inst.memory();
@@ -320,6 +343,9 @@ pub fn solve_online_mode(
             continue;
         }
         let m_a = samples_per_gpu / r1;
+        if !allowed_ma.is_empty() && !allowed_ma.contains(&m_a) {
+            continue;
+        }
         for order in Order::both() {
             if !ev.stage_models().has_shared && order == Order::Aass {
                 continue;
@@ -399,6 +425,23 @@ mod tests {
         assert_eq!(sol.config.m_a * sol.config.r1, 8);
         // Huge batches that don't fit must be rejected.
         assert!(solve_online(&inst, 10_000_000, &SolverParams::default()).is_none());
+    }
+
+    #[test]
+    fn online_bucketed_restricts_ma() {
+        let inst = inst_deepseek(Testbed::a());
+        let params = SolverParams::default();
+        // Restricting to a single bucket pins m_a.
+        let sol = solve_online_bucketed(&inst, 8, &params, &[2]).unwrap();
+        assert_eq!(sol.config.m_a, 2);
+        assert_eq!(sol.config.r1, 4);
+        // The unrestricted entry agrees with solve_online exactly.
+        let a = solve_online_bucketed(&inst, 8, &params, &[]).unwrap();
+        let b = solve_online(&inst, 8, &params).unwrap();
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.throughput_tokens, b.throughput_tokens);
+        // No bucket divides the batch -> infeasible.
+        assert!(solve_online_bucketed(&inst, 9, &params, &[2, 4]).is_none());
     }
 
     #[test]

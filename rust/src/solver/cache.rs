@@ -1,0 +1,173 @@
+//! Memoized online planning (§5.5 at serving rate).
+//!
+//! The online-adaptive mode re-solves the schedule per batch, but a
+//! serving stream repeats a small set of shapes: the same sequence
+//! bucket and padded batch size arrive over and over. [`PlanCache`]
+//! memoizes [`Solution`]s per `(seq-len bucket, batch-size bucket)`
+//! key, so the solver runs once per *shape* instead of once per
+//! *batch* — a cache hit is a map lookup, three-plus orders of
+//! magnitude cheaper than even the sub-millisecond re-solve.
+//!
+//! Infeasible shapes are cached too (as `None`): a batch the testbed
+//! cannot hold would otherwise re-run the whole feasibility walk on
+//! every arrival.
+//!
+//! The cache is shared across serving workers (`Arc<PlanCache>`); the
+//! map lock is held across a miss's solve on purpose, so concurrent
+//! workers hitting the same cold shape wait for one solve instead of
+//! duplicating it.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::solver::Solution;
+
+/// Round up to the next power of two — the shape-bucketing used for
+/// arbitrary online shapes (a 2-approximation keyspace keeps the cache
+/// small under lognormal prompt lengths).
+pub fn bucket_up(x: usize) -> usize {
+    x.max(1).next_power_of_two()
+}
+
+/// Cache key for an arbitrary `(seq_len, batch)` online shape. Serving
+/// paths with exact padded capacities (the coordinator pads to
+/// `r1 · m_a`) should key on those directly instead.
+pub fn shape_key(seq_len: usize, batch: usize) -> (usize, usize) {
+    (bucket_up(seq_len), bucket_up(batch))
+}
+
+/// Memoized `(seq bucket, batch bucket) -> Solution` store.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: Mutex<BTreeMap<(usize, usize), Option<Solution>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the memoized solution for `key`, running `solve` exactly
+    /// once per key on a miss (a `None` result is memoized as
+    /// infeasible).
+    pub fn get_or_solve(
+        &self,
+        key: (usize, usize),
+        solve: impl FnOnce() -> Option<Solution>,
+    ) -> Option<Solution> {
+        let mut map = self.map.lock().unwrap();
+        if let Some(cached) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return cached.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let solved = solve();
+        map.insert(key, solved.clone());
+        solved
+    }
+
+    /// Cached solution without solving (`None` = never solved; a cached
+    /// infeasible shape reads back as `Some(None)`).
+    pub fn peek(&self, key: (usize, usize)) -> Option<Option<Solution>> {
+        self.map.lock().unwrap().get(&key).cloned()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of memoized shapes (feasible and infeasible).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every memoized shape (testbed constants changed).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GroupSplit, ModelConfig, Testbed};
+    use crate::solver::{solve_online, Instance, SolverParams};
+
+    fn paper_instance() -> Instance {
+        Instance::new(ModelConfig::deepseek_v2(8), Testbed::a(), GroupSplit::new(3, 5), 2048)
+    }
+
+    #[test]
+    fn bucketing_rounds_up_to_powers_of_two() {
+        assert_eq!(bucket_up(0), 1);
+        assert_eq!(bucket_up(1), 1);
+        assert_eq!(bucket_up(5), 8);
+        assert_eq!(bucket_up(8), 8);
+        assert_eq!(shape_key(3000, 6), (4096, 8));
+    }
+
+    #[test]
+    fn solves_once_per_shape() {
+        let cache = PlanCache::new();
+        let mut solves = 0usize;
+        for _ in 0..5 {
+            let sol = cache.get_or_solve((2048, 8), || {
+                solves += 1;
+                solve_online(&paper_instance(), 8, &SolverParams::default())
+            });
+            assert!(sol.is_some());
+        }
+        assert_eq!(solves, 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 4);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cached_solution_matches_fresh_solve() {
+        let cache = PlanCache::new();
+        let inst = paper_instance();
+        let params = SolverParams::default();
+        let fresh = solve_online(&inst, 8, &params).unwrap();
+        let cached = cache
+            .get_or_solve((2048, 8), || solve_online(&inst, 8, &params))
+            .unwrap();
+        let hit = cache
+            .get_or_solve((2048, 8), || panic!("must not re-solve"))
+            .unwrap();
+        assert_eq!(fresh.config, cached.config);
+        assert_eq!(fresh.config, hit.config);
+        assert_eq!(fresh.throughput_tokens, hit.throughput_tokens);
+    }
+
+    #[test]
+    fn infeasible_shapes_are_memoized() {
+        let cache = PlanCache::new();
+        let inst = paper_instance();
+        let params = SolverParams::default();
+        let mut solves = 0usize;
+        for _ in 0..3 {
+            let sol = cache.get_or_solve(shape_key(2048, 10_000_000), || {
+                solves += 1;
+                solve_online(&inst, 10_000_000, &params)
+            });
+            assert!(sol.is_none());
+        }
+        assert_eq!(solves, 1);
+        assert_eq!(cache.peek(shape_key(2048, 10_000_000)), Some(None));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert!(cache.peek(shape_key(2048, 10_000_000)).is_none());
+    }
+}

@@ -8,14 +8,20 @@
 //! reusable [`algorithm1::Evaluator`] arena (no per-probe allocation)
 //! with the §4.2 closed forms as the ASAS probe fast path.
 //! [`bruteforce`] provides the exhaustive engine-only reference used by
-//! tests and by the Tables 3/4 monotonicity experiments.
+//! tests and by the Tables 3/4 monotonicity experiments. [`cache`]
+//! memoizes online solutions per `(seq bucket, batch bucket)` shape so
+//! the serving loop solves once per shape, not once per batch;
+//! [`algorithm1::solve_online_bucketed`] is the serving entry that
+//! restricts `m_a` to the runtime's compiled attention buckets.
 
 pub mod algorithm1;
 pub mod bruteforce;
+pub mod cache;
 pub mod memory;
 
 pub use algorithm1::{
-    solve, solve_mode, solve_online, solve_online_mode, EvalMode, Evaluator, Instance, Solution,
-    SolverParams,
+    solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode, EvalMode,
+    Evaluator, Instance, Solution, SolverParams,
 };
+pub use cache::{bucket_up, shape_key, PlanCache};
 pub use memory::MemoryModel;

@@ -1,0 +1,225 @@
+//! Continuous-batching serving tests: the plan cache memoizes Adaptive
+//! shapes without changing plans or numerics, oversize batches split
+//! into chunks without padding leaks, and the queued path is
+//! response-equivalent to direct `serve_batch` calls.
+//!
+//! All tests need the AOT artifacts (`make artifacts`) and skip
+//! otherwise, matching the rest of the runtime/coordinator tier.
+
+use std::time::Duration;
+
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::server::{EmbeddedRequest, Policy, Response, Server};
+use findep::runtime::artifacts_dir;
+use findep::runtime::tensor::Tensor;
+use findep::sched::Order;
+use findep::util::proptest::{check, ensure, Config};
+
+fn skip() -> bool {
+    let missing = !artifacts_dir().join("manifest.json").exists();
+    if missing {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    missing
+}
+
+fn load_model() -> ModelHandle {
+    ModelHandle::load(&artifacts_dir(), true).unwrap()
+}
+
+fn mk_server(eg: usize) -> Server {
+    Server::new(load_model(), eg, None).unwrap()
+}
+
+fn reqs(ids: std::ops::Range<u64>, s: usize, m: usize) -> Vec<EmbeddedRequest> {
+    ids.map(|i| EmbeddedRequest::synthetic(i, s, m)).collect()
+}
+
+#[test]
+fn plan_cache_memoizes_byte_identical_configs() {
+    if skip() {
+        return;
+    }
+    let srv = mk_server(2);
+    // First plan for a shape misses, the second hits — and both are the
+    // identical configuration.
+    let p1 = srv.plan_adaptive(4);
+    assert_eq!(srv.plan_cache().misses(), 1);
+    assert_eq!(srv.plan_cache().hits(), 0);
+    let p2 = srv.plan_adaptive(4);
+    assert_eq!(srv.plan_cache().misses(), 1);
+    assert_eq!(srv.plan_cache().hits(), 1);
+    assert_eq!(p1, p2, "cache hit changed the plan");
+    // 5 and 6 requests both pad to capacity 6 (m_a=2, r1=3) -> same
+    // shape key, one solve.
+    let p3 = srv.plan_adaptive(6);
+    assert_eq!(srv.plan_cache().misses(), 2);
+    let p4 = srv.plan_adaptive(5);
+    assert_eq!(srv.plan_cache().misses(), 2);
+    assert_eq!(srv.plan_cache().hits(), 2);
+    assert_eq!(p3, p4, "equal padded capacity must reuse the plan");
+
+    // A cache-disabled server re-solves per batch but lands on the
+    // byte-identical configuration.
+    let mut cold = mk_server(2);
+    cold.cache_plans = false;
+    let pc1 = cold.plan_adaptive(4);
+    let pc2 = cold.plan_adaptive(4);
+    assert_eq!(cold.plan_cache().misses() + cold.plan_cache().hits(), 0);
+    assert_eq!(p1, pc1, "cold solve disagrees with cached solve");
+    assert_eq!(pc1, pc2, "cold solve is not deterministic");
+}
+
+#[test]
+fn cache_disabled_run_matches_cached_run_numerically() {
+    if skip() {
+        return;
+    }
+    let cached = mk_server(2);
+    let mut cold = mk_server(2);
+    cold.cache_plans = false;
+    let s = cached.pipeline.model().seq_len;
+    let m = cached.pipeline.model().model.embed;
+    let mut id = 0u64;
+    for n in [4usize, 3, 7, 4, 8] {
+        let batch = reqs(id..id + n as u64, s, m);
+        id += n as u64;
+        let (a, _) = cached.serve_batch(&batch, Policy::Adaptive).unwrap();
+        let (b, _) = cold.serve_batch(&batch, Policy::Adaptive).unwrap();
+        assert_eq!(a.len(), n);
+        assert_eq!(b.len(), n);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            let diff = x.hidden.max_abs_diff(&y.hidden);
+            assert!(diff < 1e-4, "cache changed numerics by {diff} (n={n})");
+        }
+    }
+    assert!(cached.plan_cache().hits() > 0, "same-shape batches must hit the cache");
+}
+
+#[test]
+fn oversize_batches_split_without_padding_leaks() {
+    if skip() {
+        return;
+    }
+    let srv = mk_server(2);
+    let s = srv.pipeline.model().seq_len;
+    let m = srv.pipeline.model().model.embed;
+    // Capacity for PpPipe{r1:2} is 2 × max bucket = 8; 10 requests
+    // split into chunks of 8 + 2 (the second chunk padded to 4).
+    let batch = reqs(0..10, s, m);
+    let (resp, stats) = srv.serve_batch(&batch, Policy::PpPipe { r1: 2 }).unwrap();
+    assert_eq!(resp.len(), 10, "split batch lost responses");
+    assert!(stats.total > 0.0);
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "split batch broke request order");
+        // Each response must match the same request served alone —
+        // padding from either chunk must not leak in.
+        let (solo, _) = srv.serve_batch(&batch[i..i + 1], Policy::Naive).unwrap();
+        let diff = r.hidden.max_abs_diff(&solo[0].hidden);
+        assert!(diff < 1e-4, "request {i} drifted by {diff} across the split");
+    }
+
+    // The strict flag restores the pre-queue error.
+    let mut strict = mk_server(2);
+    strict.strict = true;
+    let err = strict.serve_batch(&batch, Policy::PpPipe { r1: 2 }).unwrap_err();
+    assert!(format!("{err:#}").contains("split upstream"), "unexpected error: {err:#}");
+
+    // A zero-capacity policy errors cleanly instead of panicking in the
+    // chunk split.
+    let err = srv
+        .serve_batch(&batch[..1], Policy::FinDep { r1: 0, r2: 1, order: Order::Asas })
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("zero capacity"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn batcher_drains_fifo_with_one_worker() {
+    if skip() {
+        return;
+    }
+    let cfg = BatcherConfig {
+        workers: 1,
+        max_batch: 4,
+        policy: Policy::FinDep { r1: 2, r2: 2, order: Order::Asas },
+        linger: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let model = load_model();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let batcher = Batcher::new(model, cfg).unwrap();
+    for i in 0..12u64 {
+        batcher.submit(EmbeddedRequest::synthetic(i, s, m)).unwrap();
+    }
+    let resps = batcher.drain(12, Duration::from_secs(30));
+    assert_eq!(resps.len(), 12, "batcher lost responses");
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "single-worker draining must be FIFO");
+        assert!(r.latency_s > 0.0, "per-request latency must be measured");
+    }
+    // Every request passed through the queue-wait histogram, and the
+    // serving counters add up.
+    assert_eq!(batcher.metrics().histogram_count("queue_wait"), 12);
+    assert_eq!(batcher.metrics().counter("requests"), 12);
+    assert_eq!(batcher.metrics().counter("queued"), 12);
+    assert!(batcher.metrics().counter("batches_assembled") >= 1);
+    // Fixed policies never consult the plan cache.
+    assert_eq!(batcher.plan_cache().misses(), 0);
+
+    // Malformed requests are rejected at the submission boundary (a
+    // bad request must never sink an assembled batch in a worker).
+    let bad = EmbeddedRequest { id: 99, hidden: Tensor::zeros(vec![1]) };
+    assert!(batcher.submit(bad).is_err());
+    assert_eq!(batcher.metrics().counter("queued"), 12, "rejected request was queued");
+}
+
+#[test]
+fn queued_responses_equal_direct_serve_batch() {
+    if skip() {
+        return;
+    }
+    let model = load_model();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let direct = Server::new(model.clone(), 2, None).unwrap();
+    check("queue == direct", &Config::with_cases(5), |rng| {
+        let n = 1 + rng.usize_below(12);
+        let policy = match rng.usize_below(4) {
+            0 => Policy::Naive,
+            1 => Policy::PpPipe { r1: 2 },
+            2 => Policy::FinDep { r1: 2, r2: 2, order: Order::Asas },
+            _ => Policy::Adaptive,
+        };
+        let workers = 1 + rng.usize_below(2);
+        let batch = reqs(0..n as u64, s, m);
+        let (want, _) = direct
+            .serve_batch(&batch, policy)
+            .map_err(|e| format!("direct serve failed: {e:#}"))?;
+
+        let cfg = BatcherConfig {
+            workers,
+            max_batch: 1 + rng.usize_below(8),
+            policy,
+            linger: Duration::from_micros(200),
+            ..Default::default()
+        };
+        let batcher =
+            Batcher::new(model.clone(), cfg).map_err(|e| format!("batcher: {e:#}"))?;
+        for r in &batch {
+            batcher.submit(r.clone()).map_err(|e| format!("submit: {e:#}"))?;
+        }
+        let mut got: Vec<Response> = batcher.drain(n, Duration::from_secs(30));
+        ensure(got.len() == n, format!("lost responses: {} of {n}", got.len()))?;
+        got.sort_by_key(|r| r.id);
+        for (w, g) in want.iter().zip(&got) {
+            ensure(w.id == g.id, format!("id mismatch {} vs {}", w.id, g.id))?;
+            let diff = w.hidden.max_abs_diff(&g.hidden);
+            ensure(
+                diff < 1e-4,
+                format!("queue changed numerics by {diff} (n={n}, {policy:?})"),
+            )?;
+        }
+        Ok(())
+    });
+}
