@@ -13,13 +13,15 @@
 
 use findep::config::{GroupSplit, ModelConfig, Testbed};
 use findep::sched::{Order, PlanConfig};
-use findep::solver::{solve, Evaluator, Instance, SolverParams};
+use findep::solver::{search_splits, solve, Evaluator, Instance, SearchParams, SolverParams};
 use findep::util::bench::Table;
 
 fn main() {
     let params = SolverParams::default();
 
-    // --- 1. Group-split ablation. ---------------------------------------
+    // --- 1. Group-split ablation (delegated to the split-search solver
+    //     layer: an unpruned single-replica search returns every
+    //     feasible split's solved throughput in one call). -------------
     let mut table = Table::new(
         "Ablation 1: disaggregation split (ag, eg) on testbed A, S=4096",
         &["model", "split", "FinDEP tokens/s", "note"],
@@ -28,22 +30,24 @@ fn main() {
         (ModelConfig::deepseek_v2(8), "deepseek"),
         (ModelConfig::qwen3_moe(24), "qwen"),
     ] {
-        let mut best: Option<(GroupSplit, f64)> = None;
-        let mut rows = Vec::new();
+        let sp = SearchParams {
+            solver: params,
+            prune: false,
+            multi_replica: false,
+            ..Default::default()
+        };
+        let report = search_splits(&model, &Testbed::a(), 4096, &sp);
+        let best = report.as_ref().map(|r| r.best.candidate.split);
         for split in GroupSplit::enumerate(8) {
-            let inst = Instance::new(model.clone(), Testbed::a(), split, 4096);
-            let tput = solve(&inst, &params).map(|s| s.throughput_tokens);
-            if let Some(t) = tput {
-                if best.as_ref().map_or(true, |b| t > b.1) {
-                    best = Some((split, t));
-                }
-            }
-            rows.push((split, tput));
-        }
-        for (split, tput) in rows {
+            let tput = report.as_ref().and_then(|r| {
+                r.evaluated
+                    .iter()
+                    .find(|s| s.candidate.split == split)
+                    .map(|s| s.total_throughput)
+            });
             let paper_pick = (model.has_shared_expert() && (split.ag, split.eg) == (3, 5))
                 || (!model.has_shared_expert() && (split.ag, split.eg) == (4, 4));
-            let is_best = best.map_or(false, |(b, _)| b == split);
+            let is_best = best.map_or(false, |b| b == split);
             table.row(&[
                 label.into(),
                 format!("({},{})", split.ag, split.eg),

@@ -64,9 +64,10 @@ fn main() {
     //     refactor's measured claim). --------------------------------
     let mut table = Table::new(
         "Algorithm 1 search wall time: per-candidate allocation vs buffered arena",
-        &["instance", "alloc baseline", "buffered", "speedup"],
+        &["instance", "alloc baseline", "buffered", "speedup", "probes"],
     );
     let (mut sum_alloc, mut sum_buffered) = (0.0f64, 0.0f64);
+    let mut probes = String::new();
     for (label, inst) in paper_instances() {
         let sol_alloc = solve_mode(&inst, &params, EvalMode::AllocPerCandidate);
         let sol_buf = solve_mode(&inst, &params, EvalMode::Buffered);
@@ -83,6 +84,17 @@ fn main() {
                     a.throughput_tokens,
                     b.throughput_tokens
                 );
+                // The buffered path memoizes revisited r2 probes inside
+                // each ternary search and skips the winner's redundant
+                // final simulation — the probe count must strictly drop
+                // against the alloc baseline's original counting.
+                assert!(
+                    b.evals < a.evals,
+                    "probe count did not drop on {label}: buffered {} vs alloc {}",
+                    b.evals,
+                    a.evals
+                );
+                probes = format!("{} -> {}", a.evals, b.evals);
             }
             (None, None) => continue,
             _ => panic!("feasibility disagreement between modes on {label}"),
@@ -100,6 +112,7 @@ fn main() {
             fmt_duration(r_alloc.mean_s()),
             fmt_duration(r_buf.mean_s()),
             format!("{:.2}x", r_alloc.mean_s() / r_buf.mean_s()),
+            std::mem::take(&mut probes),
         ]);
     }
     table.print();

@@ -1,0 +1,140 @@
+//! Split-search speed: the pruned + parallel + topology-reusing
+//! [`findep::solver::splitsearch`] layer against the serial
+//! cold-solve-per-split sweep it replaced (the pre-existing
+//! `benches/ablations.rs` behaviour).
+//!
+//! For every paper instance the two searches must return the identical
+//! winning (placement, PlanConfig, throughput) — bit for bit — and the
+//! optimised search must be strictly faster in aggregate (asserted in
+//! quick mode too: pruning skips whole Algorithm-1 solves, so the
+//! margin does not depend on timer resolution).
+//!
+//! Emits a `BENCH_splitsearch.json` trajectory file.
+//!
+//! Run: `cargo bench --bench split_search`
+
+use findep::config::{ModelConfig, Testbed};
+use findep::solver::{search_splits, search_splits_serial, SearchParams};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+
+fn paper_cases() -> Vec<(String, ModelConfig, Testbed, usize)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for (deepseek, name) in [(true, "deepseek"), (false, "qwen")] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            out.push((format!("{name}/{}", tb.name), model, tb.clone(), 4096));
+        }
+    }
+    out
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let params = SearchParams::default();
+
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("split_search".into()));
+    report.insert("quick", Json::Bool(quick));
+
+    let mut table = Table::new(
+        "Split search: serial cold sweep vs pruned+parallel+topology-reuse",
+        &["instance", "cands", "solved", "pruned", "serial", "search", "speedup", "winner"],
+    );
+    let (mut sum_serial, mut sum_search) = (0.0f64, 0.0f64);
+    let mut entries: Vec<Json> = Vec::new();
+    for (label, model, tb, seq) in paper_cases() {
+        // Correctness gate first: identical winning (split, PlanConfig,
+        // throughput) — bit for bit — before any timing.
+        let serial = search_splits_serial(&model, &tb, seq, &params);
+        let searched = search_splits(&model, &tb, seq, &params);
+        let (serial_best, rep) = match (serial, searched) {
+            (Some(s), Some(o)) => (s, o),
+            (None, None) => continue,
+            (s, o) => panic!(
+                "feasibility disagreement on {label}: serial={} search={}",
+                s.is_some(),
+                o.is_some()
+            ),
+        };
+        assert_eq!(
+            serial_best.candidate, rep.best.candidate,
+            "winning placement differs on {label}"
+        );
+        assert_eq!(
+            serial_best.per_instance.config, rep.best.per_instance.config,
+            "winning PlanConfig differs on {label}"
+        );
+        assert_eq!(
+            serial_best.per_instance.throughput_tokens, rep.best.per_instance.throughput_tokens,
+            "winning per-instance throughput differs on {label}"
+        );
+        assert_eq!(
+            serial_best.total_throughput, rep.best.total_throughput,
+            "winning total throughput differs on {label}"
+        );
+
+        let r_serial = bencher.run(&format!("{label}/serial"), || {
+            let _ = search_splits_serial(&model, &tb, seq, &params);
+        });
+        let r_search = bencher.run(&format!("{label}/search"), || {
+            let _ = search_splits(&model, &tb, seq, &params);
+        });
+        sum_serial += r_serial.mean_s();
+        sum_search += r_search.mean_s();
+        let st = &rep.stats;
+        table.row(&[
+            label.clone(),
+            st.candidates.to_string(),
+            st.solved.to_string(),
+            st.pruned.to_string(),
+            fmt_duration(r_serial.mean_s()),
+            fmt_duration(r_search.mean_s()),
+            format!("{:.2}x", r_serial.mean_s() / r_search.mean_s()),
+            format!("{} {:.0} tok/s", rep.best.candidate.describe(), rep.best.total_throughput),
+        ]);
+        let mut e = JsonObj::new();
+        e.insert("instance", Json::Str(label));
+        e.insert("candidates", Json::Num(st.candidates as f64));
+        e.insert("solved", Json::Num(st.solved as f64));
+        e.insert("pruned", Json::Num(st.pruned as f64));
+        e.insert("infeasible", Json::Num(st.infeasible as f64));
+        e.insert("threads", Json::Num(st.threads as f64));
+        e.insert("serial_mean_s", Json::Num(r_serial.mean_s()));
+        e.insert("search_mean_s", Json::Num(r_search.mean_s()));
+        e.insert("speedup", Json::Num(r_serial.mean_s() / r_search.mean_s()));
+        e.insert("winner_replicas", Json::Num(rep.best.candidate.replicas as f64));
+        e.insert("winner_ag", Json::Num(rep.best.candidate.split.ag as f64));
+        e.insert("winner_eg", Json::Num(rep.best.candidate.split.eg as f64));
+        e.insert("winner_config", Json::Str(rep.best.per_instance.config.describe()));
+        e.insert("winner_total_tokens_per_s", Json::Num(rep.best.total_throughput));
+        entries.push(Json::Obj(e));
+    }
+    table.print();
+    println!(
+        "aggregate split-search wall time: serial {} vs optimized {} -> {:.2}x",
+        fmt_duration(sum_serial),
+        fmt_duration(sum_search),
+        sum_serial / sum_search
+    );
+    // The acceptance gate: the enlarged search must be strictly faster
+    // than the serial cold-solve-per-split sweep of the same space.
+    assert!(
+        sum_search < sum_serial,
+        "pruned+parallel+topology-reuse search ({sum_search:.6}s) must beat the serial \
+         cold sweep ({sum_serial:.6}s)"
+    );
+    report.insert("instances", Json::Arr(entries));
+    report.insert("aggregate_serial_s", Json::Num(sum_serial));
+    report.insert("aggregate_search_s", Json::Num(sum_search));
+    report.insert("aggregate_speedup", Json::Num(sum_serial / sum_search));
+    std::fs::write("BENCH_splitsearch.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_splitsearch.json");
+    println!("wrote BENCH_splitsearch.json");
+}

@@ -71,6 +71,9 @@ pub struct BatcherConfig {
     pub linger: Duration,
     /// Memoize Adaptive plans per shape (shared across workers).
     pub cache_plans: bool,
+    /// Pick each replica's Adaptive planning split with the split-search
+    /// solver layer at startup instead of the fixed `(1, eg)` view.
+    pub auto_split: bool,
 }
 
 impl Default for BatcherConfig {
@@ -84,6 +87,7 @@ impl Default for BatcherConfig {
             workers: 2,
             linger: Duration::from_millis(1),
             cache_plans: true,
+            auto_split: false,
         }
     }
 }
@@ -121,6 +125,11 @@ impl Batcher {
         let (resp_tx, resp_rx) = channel::<Response>();
 
         let mut threads = Vec::with_capacity(workers + 1);
+        // The split search is deterministic in (model, plan testbed,
+        // seq), so run it on the first replica only and hand the chosen
+        // split to the rest — re-running it per worker would also
+        // re-clear the shared plan cache under the earlier workers.
+        let mut chosen_split = None;
         {
             let metrics = metrics.clone();
             let linger = cfg.linger;
@@ -140,6 +149,12 @@ impl Batcher {
                 plan_cache.clone(),
             )?;
             server.cache_plans = cfg.cache_plans;
+            if cfg.auto_split {
+                match chosen_split {
+                    None => chosen_split = Some(server.select_plan_split()),
+                    Some(split) => server.plan_split = split,
+                }
+            }
             let work_rx = work_rx.clone();
             let resp_tx = resp_tx.clone();
             let policy = cfg.policy;

@@ -220,6 +220,58 @@ impl Server {
         &self.plan_cache
     }
 
+    /// Re-pick the Adaptive policy's emulated (ag, eg) planning split:
+    /// every split of the plan testbed (enumerated by the split-search
+    /// solver layer; single instance — this server drives one pipeline
+    /// replica) is scored under the *serving* objective — the exact
+    /// per-shape solve the Adaptive path runs (`solve_online_bucketed`
+    /// restricted to the compiled attention buckets, with the same
+    /// brute-force fallback) at the largest capacity this server plans.
+    /// Scoring offline instead (plain Algorithm 1) could adopt a split
+    /// whose optimum needs an uncompiled `m_a`. Max capacity is a
+    /// heuristic for the traffic mix: real batches also pad to smaller
+    /// shapes, which only the stream itself can reveal. If no split
+    /// yields a servable plan, the offline split search decides.
+    /// Clears the plan cache when the split changes, since cached
+    /// solutions were solved against the old split. Returns the split
+    /// in effect afterwards.
+    pub fn select_plan_split(&mut self) -> GroupSplit {
+        let model = self.pipeline.model().model.clone();
+        let seq = self.pipeline.model().seq_len;
+        let capacity = self.solver_params.r1_cap * self.max_ma();
+        let mut best: Option<(f64, GroupSplit)> = None;
+        for cand in
+            solver::splitsearch::enumerate_candidates(self.plan_testbed.n_gpus, false)
+        {
+            if let Some(sol) = self.solve_shape_for_split(cand.split, capacity) {
+                if best.as_ref().map_or(true, |(t, _)| sol.throughput_tokens > *t) {
+                    best = Some((sol.throughput_tokens, cand.split));
+                }
+            }
+        }
+        let split = match best {
+            Some((_, s)) => Some(s),
+            // No split serves the max shape: fall back to the offline
+            // split search (pruned; only the winner is needed).
+            None => {
+                let params = solver::SearchParams {
+                    solver: self.solver_params,
+                    multi_replica: false,
+                    ..Default::default()
+                };
+                solver::search_splits(&model, &self.plan_testbed, seq, &params)
+                    .map(|r| r.best.candidate.split)
+            }
+        };
+        if let Some(split) = split {
+            if split != self.plan_split {
+                self.plan_split = split;
+                self.plan_cache.clear();
+            }
+        }
+        self.plan_split
+    }
+
     /// Largest attention bucket (preferred m_a).
     fn max_ma(&self) -> usize {
         self.pipeline
@@ -266,10 +318,18 @@ impl Server {
     /// online solver calls the shape infeasible (e.g. an emulated
     /// testbed whose memory model rejects it).
     fn solve_adaptive_shape(&self, capacity: usize) -> Option<Solution> {
+        self.solve_shape_for_split(self.plan_split, capacity)
+    }
+
+    /// The serving solve for one padded shape against an explicit
+    /// split — the scoring primitive [`Server::select_plan_split`]
+    /// ranks candidate splits with, so selection and serving share one
+    /// objective.
+    fn solve_shape_for_split(&self, split: GroupSplit, capacity: usize) -> Option<Solution> {
         let inst = Instance::new(
             self.pipeline.model().model.clone(),
             self.plan_testbed.clone(),
-            self.plan_split,
+            split,
             self.pipeline.model().seq_len,
         );
         let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;

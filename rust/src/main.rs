@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `solve`    — run Algorithm 1 for a (model, testbed, split, S) and
 //!   print the chosen configuration + predicted throughput.
+//! * `search-splits` — search the (ag, eg) split itself (plus
+//!   multi-replica tilings) with the pruned parallel split-search
+//!   solver layer; print the per-candidate table and the winner.
 //! * `compare`  — naive vs PPPipe vs FinDEP on the simulator, with an
 //!   ASCII Gantt of each schedule.
 //! * `serve`    — real execution: load AOT artifacts, serve synthetic
@@ -30,13 +33,14 @@ fn main() {
     let rest = if args.is_empty() { vec![] } else { args[1..].to_vec() };
     let code = match cmd {
         "solve" => cmd_solve(&rest),
+        "search-splits" => cmd_search_splits(&rest),
         "compare" => cmd_compare(&rest),
         "serve" => cmd_serve(&rest),
         "calibrate" => cmd_calibrate(&rest),
         _ => {
             eprintln!(
                 "findep — fine-grained scheduling for disaggregated expert parallelism\n\n\
-                 usage: findep <solve|compare|serve|calibrate> [--help]"
+                 usage: findep <solve|search-splits|compare|serve|calibrate> [--help]"
             );
             if cmd == "help" {
                 0
@@ -82,6 +86,93 @@ fn cmd_solve(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_search_splits(args: &[String]) -> i32 {
+    let spec = Spec::new(
+        "findep search-splits",
+        "search (ag, eg) splits and replica tilings on top of Algorithm 1",
+    )
+    .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
+    .opt("testbed", "A", "testbed A|B|C|D")
+    .opt("seq", "2048", "sequence length S")
+    .opt("threads", "0", "worker threads (0 = all cores)")
+    .flag("no-prune", "disable the analytic branch-and-bound pruning")
+    .flag("no-replicas", "single-instance splits only (no cluster tilings)")
+    .flag("serial", "also run the serial cold sweep and report its wall time");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let Some(testbed) = Testbed::by_name(p.get("testbed")) else {
+        eprintln!("unknown testbed");
+        return 2;
+    };
+    let Some(model) = ModelConfig::paper_preset(p.get("model"), p.get("testbed")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let seq = p.get_usize("seq");
+    let params = solver::SearchParams {
+        solver: SolverParams::default(),
+        threads: p.get_usize("threads"),
+        prune: !p.has_flag("no-prune"),
+        multi_replica: !p.has_flag("no-replicas"),
+    };
+    let Some(report) = solver::search_splits(&model, &testbed, seq, &params) else {
+        eprintln!("no feasible (ag, eg) split on this testbed");
+        return 1;
+    };
+    let mut table = Table::new(
+        &format!("split search: {} on {} S={seq}", model.name, testbed.name),
+        &["placement", "per-instance config", "total tokens/s", "note"],
+    );
+    let mut rows: Vec<&solver::SplitSolution> = report.evaluated.iter().collect();
+    rows.sort_by(|a, b| b.total_throughput.total_cmp(&a.total_throughput));
+    for s in rows {
+        table.row(&[
+            s.candidate.describe(),
+            s.per_instance.config.describe(),
+            format!("{:.0}", s.total_throughput),
+            if s.candidate == report.best.candidate { "best".into() } else { String::new() },
+        ]);
+    }
+    table.print();
+    let st = &report.stats;
+    println!(
+        "{} candidates: {} solved, {} pruned by bound, {} infeasible — {:.1} ms on {} threads \
+         ({} Algorithm-1 probes)",
+        st.candidates,
+        st.solved,
+        st.pruned,
+        st.infeasible,
+        st.solve_seconds * 1e3,
+        st.threads,
+        st.evals,
+    );
+    if params.prune && st.pruned > 0 {
+        println!(
+            "note: the winner and stats are deterministic, but which non-winning candidates \
+             get solved before the bound prunes them depends on thread timing — pass \
+             --no-prune for the full (and stable) per-split table."
+        );
+    }
+    if p.has_flag("serial") {
+        let t0 = std::time::Instant::now();
+        let serial = solver::search_splits_serial(&model, &testbed, seq, &params);
+        let dt = t0.elapsed().as_secs_f64();
+        match serial {
+            Some(s) => println!(
+                "serial cold sweep: {:.1} ms ({:.2}x slower), same winner: {}",
+                dt * 1e3,
+                dt / st.solve_seconds.max(1e-12),
+                s.candidate == report.best.candidate
+                    && s.total_throughput == report.best.total_throughput,
+            ),
+            None => println!("serial cold sweep: infeasible (disagrees with search!)"),
+        }
+    }
+    0
 }
 
 fn cmd_compare(args: &[String]) -> i32 {
@@ -153,6 +244,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("linger-us", "500", "batch-fill window in µs (queue mode)")
         .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
+        .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
     let p = match spec.parse(args) {
         Ok(p) => p,
@@ -205,6 +297,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             workers: p.get_usize("workers"),
             linger: std::time::Duration::from_micros(p.get_u64("linger-us")),
             cache_plans: !p.has_flag("no-plan-cache"),
+            auto_split: p.has_flag("auto-split"),
         };
         let total = match p.get_usize("requests") {
             0 => n_batches * batch_size,
@@ -256,6 +349,10 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     let mut srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
     srv.cache_plans = !p.has_flag("no-plan-cache");
+    if p.has_flag("auto-split") {
+        let split = srv.select_plan_split();
+        println!("auto-split: adaptive plans target (ag={}, eg={})", split.ag, split.eg);
+    }
     let t0 = std::time::Instant::now();
     let mut tokens = 0usize;
     for b in 0..n_batches {

@@ -14,4 +14,4 @@
 pub mod analytic;
 pub mod plan;
 
-pub use plan::{Order, Plan, PlanBuffers, PlanConfig, Resource, Task, TaskKind};
+pub use plan::{Order, Plan, PlanBuffers, PlanConfig, Resource, Task, TaskKind, TopologyKey};

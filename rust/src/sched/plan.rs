@@ -29,7 +29,7 @@ use crate::perfmodel::StageModels;
 
 /// Execution order of attention vs shared-expert segments on the AG
 /// (§4.2 "Determine the order of Attention and Shared Expert").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Order {
     /// Attention-Shared alternating: A0 S0 A1 S1 …
     Asas,
@@ -190,6 +190,15 @@ impl PlanConfig {
         Self { m_a, r1: 1, r2: 1, m_e, order: Order::Asas, fuse_shared: true }
     }
 
+    /// Total tokens one forward pass of this configuration processes
+    /// across an AG of `ag` GPUs at sequence length `seq_len` — the
+    /// numerator of Eq. 6 scaled to tokens. The single source of the
+    /// formula: `Plan::build_into` stores it on the plan and the
+    /// solver's skip-resimulation path recomputes it from here.
+    pub fn total_tokens(&self, ag: usize, seq_len: usize) -> f64 {
+        (self.r1 * self.m_a * ag * seq_len) as f64
+    }
+
     pub fn describe(&self) -> String {
         format!(
             "m_a={} r1={} r2={} m_e={:.1} order={}{}",
@@ -201,6 +210,26 @@ impl PlanConfig {
             if self.fuse_shared { " (shared fused)" } else { "" }
         )
     }
+}
+
+/// Identity of a plan's task-DAG *structure*: two canonically-built
+/// plans with equal keys have identical tasks (up to duration),
+/// identical dependency edges, and identical issue orders — they differ
+/// only in task durations (which come from the stage models and
+/// `(m_a, m_e)`). This is what lets an outer search (different splits,
+/// different micro-batch sizes, same pipeline shape) reuse the
+/// simulator's CSR topology and rebuild only durations.
+///
+/// `shared_tasks` is the collapsed form of `(has_shared, fuse_shared)`:
+/// a fused shared expert and an absent shared expert produce the same
+/// topology, so they share a key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TopologyKey {
+    pub r1: u32,
+    pub r2: u32,
+    pub order: Order,
+    pub shared_tasks: bool,
+    pub n_layers: u32,
 }
 
 /// A fully-materialized schedule: tasks + precedence + per-resource
@@ -222,6 +251,11 @@ pub struct Plan {
     /// Total tokens processed per forward pass across the whole AG
     /// (numerator of Eq. 6 scaled to tokens).
     pub total_tokens: f64,
+    /// True when this plan was produced by [`Plan::build_into`]'s
+    /// canonical layout, which makes [`Plan::topology_key`] a faithful
+    /// structural identity. Raw/test-built plans stay `false` so they
+    /// can never alias a cached topology.
+    canonical: bool,
 }
 
 /// Reusable arena for plan construction: Algorithm 1's candidate loop
@@ -249,6 +283,7 @@ impl PlanBuffers {
                 dep_pool: Vec::new(),
                 issue_order: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
                 total_tokens: 0.0,
+                canonical: false,
             },
         }
     }
@@ -300,6 +335,33 @@ impl Plan {
         let t_e = models.expert_time(cfg.m_e);
         let t_c = models.comm_time(cfg.m_e);
 
+        // Duration-only fast path: if the arena already holds a plan of
+        // this exact topology, only the durations (and the scalar
+        // config/token fields) can differ — rewrite those in one pass
+        // and skip task/dep/issue-order construction entirely. Output
+        // is bit-identical to a full rebuild (pinned by tests).
+        let key = TopologyKey {
+            r1: r1 as u32,
+            r2: r2 as u32,
+            order: cfg.order,
+            shared_tasks,
+            n_layers: n_layers as u32,
+        };
+        if buf.plan.topology_key() == Some(key) {
+            let plan = &mut buf.plan;
+            plan.config = cfg;
+            plan.total_tokens = cfg.total_tokens(ag, seq_len);
+            for t in &mut plan.tasks {
+                t.duration = match t.kind {
+                    TaskKind::Attention => t_a,
+                    TaskKind::SharedExpert => t_s,
+                    TaskKind::Expert => t_e,
+                    TaskKind::A2E | TaskKind::E2A => t_c,
+                };
+            }
+            return &buf.plan;
+        }
+
         let n_sh = if shared_tasks { r1 } else { 0 };
         let per_layer = r1 + n_sh + 3 * r1 * r2;
 
@@ -307,7 +369,8 @@ impl Plan {
         plan.config = cfg;
         plan.n_layers = n_layers;
         plan.has_shared_tasks = shared_tasks;
-        plan.total_tokens = (cfg.r1 * cfg.m_a * ag * seq_len) as f64;
+        plan.canonical = true;
+        plan.total_tokens = cfg.total_tokens(ag, seq_len);
         let tasks = &mut plan.tasks;
         let pool = &mut plan.dep_pool;
         tasks.clear();
@@ -440,6 +503,25 @@ impl Plan {
         self.tasks.len()
     }
 
+    /// Structural identity of this plan's task DAG (see
+    /// [`TopologyKey`]), or `None` for plans not produced by the
+    /// canonical builder. Consumers (the simulator's topology cache,
+    /// the duration-only rebuild path) treat equal keys as a guarantee
+    /// of identical dependency edges and issue orders; mutating a built
+    /// plan's structure by hand voids that guarantee.
+    pub fn topology_key(&self) -> Option<TopologyKey> {
+        if !self.canonical {
+            return None;
+        }
+        Some(TopologyKey {
+            r1: self.config.r1 as u32,
+            r2: self.config.r2 as u32,
+            order: self.config.order,
+            shared_tasks: self.has_shared_tasks,
+            n_layers: self.n_layers as u32,
+        })
+    }
+
     /// Dependency edges of task `i` (indices of tasks that must finish
     /// before it may start).
     pub fn deps(&self, i: usize) -> &[u32] {
@@ -490,6 +572,7 @@ impl Plan {
             dep_pool: pool,
             issue_order,
             total_tokens: 1.0,
+            canonical: false,
         }
     }
 }
@@ -658,6 +741,61 @@ mod tests {
         }
         assert_eq!(buf.plan.tasks.capacity(), cap_tasks, "task arena reallocated");
         assert_eq!(buf.plan.dep_pool.capacity(), cap_pool, "dep arena reallocated");
+    }
+
+    #[test]
+    fn duration_only_rebuild_matches_full_build() {
+        // Same (r1, r2, order, shared, layers) with a different m_a /
+        // m_e (and even different stage models) takes the duration-only
+        // fast path — the result must be bit-identical to a fresh
+        // build, and the topology key must be stable.
+        let sm_a = models(true);
+        let sm_b = StageModels::new(
+            &ModelConfig::deepseek_v2(4),
+            &Testbed::b(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let mut buf = PlanBuffers::new();
+        Plan::build_into(&mut buf, &sm_a, cfg(2, 3, Order::Asas), 4, 3, 2048);
+        let key = buf.plan().topology_key().expect("built plans are canonical");
+        for (sm, m_a, m_e, seq) in
+            [(&sm_a, 4usize, 96.0f64, 2048usize), (&sm_b, 1, 12.5, 4096), (&sm_a, 2, 64.0, 2048)]
+        {
+            let c = PlanConfig::findep(m_a, 2, 3, m_e, Order::Asas);
+            let reused = Plan::build_into(&mut buf, sm, c, 4, 3, seq).clone();
+            let fresh = Plan::build(sm, c, 4, 3, seq);
+            assert_eq!(reused, fresh, "duration-only rebuild drifted for {}", c.describe());
+            assert_eq!(reused.topology_key(), Some(key));
+        }
+        // A topology change (different r2) must fall back to a full
+        // rebuild and still match.
+        let c = PlanConfig::findep(2, 2, 4, 48.0, Order::Aass);
+        let reused = Plan::build_into(&mut buf, &sm_a, c, 4, 3, 2048).clone();
+        assert_eq!(reused, Plan::build(&sm_a, c, 4, 3, 2048));
+        assert_ne!(reused.topology_key(), Some(key));
+    }
+
+    #[test]
+    fn topology_key_collapses_fused_and_absent_shared() {
+        // Fused-shared (DeepSeek, fuse_shared) and no-shared (Qwen)
+        // plans have no shared tasks — identical topologies, one key.
+        let with = models(true);
+        let without = models(false);
+        let mut fused = cfg(2, 2, Order::Asas);
+        fused.fuse_shared = true;
+        let a = Plan::build(&with, fused, 3, 3, 2048);
+        let b = Plan::build(&without, cfg(2, 2, Order::Asas), 3, 4, 2048);
+        assert_eq!(a.topology_key(), b.topology_key());
+        // Separately-scheduled shared tasks change the topology.
+        let c = Plan::build(&with, cfg(2, 2, Order::Asas), 3, 3, 2048);
+        assert_ne!(a.topology_key(), c.topology_key());
+        // Raw plans carry no key.
+        let raw = Plan::from_raw_parts(
+            vec![(TaskKind::Expert, 1.0, vec![])],
+            [Vec::new(), vec![0], Vec::new(), Vec::new()],
+        );
+        assert_eq!(raw.topology_key(), None);
     }
 
     #[test]

@@ -18,12 +18,25 @@
 //! CSR adjacency, indegrees, the ready stack, and the start/finish
 //! vectors are all rewritten in place, so Algorithm 1's candidate loop
 //! performs zero allocations per probe once the arena is warm.
+//!
+//! Plans with the same [`TopologyKey`] (same `(r1, r2, order,
+//! shared-tasks, n_layers)` shape) share their dependency structure and
+//! differ only in task durations, so the arena additionally memoizes
+//! the built CSR adjacency / indegree / resource-predecessor arrays per
+//! key: a repeat shape takes a duration-only fast path that skips both
+//! CSR construction passes and runs Kahn propagation directly against
+//! the cached topology. The fast path is bit-identical to a full
+//! rebuild (pinned by tests); plans without a key (hand-built test
+//! plans) always rebuild into scratch storage.
+//!
 //! [`simulate`] is the one-shot wrapper. Cyclic plans (impossible from
 //! `Plan::build`, but reachable from hand-built or corrupted
 //! `PlanConfig` search states) surface as a [`SimError`] naming the
 //! stuck task and its resource queue instead of aborting the solver.
 
-use crate::sched::{Plan, Resource};
+use std::collections::HashMap;
+
+use crate::sched::{Plan, Resource, TopologyKey};
 
 /// Execution schedule of one plan.
 #[derive(Debug, Clone, Default)]
@@ -70,23 +83,54 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
-/// Reusable simulation arena: one warm `SimBuffers` makes every
-/// subsequent [`simulate_into`] allocation-free.
+/// One built topology: the duration-independent half of a simulation —
+/// resource-order predecessors, the CSR dependents adjacency (dep edges
+/// + resource-order edges), and the pristine indegree vector Kahn
+/// propagation starts from.
 #[derive(Debug, Clone, Default)]
-pub struct SimBuffers {
-    result: SimResult,
-    /// Remaining unmet predecessor count per task.
-    indeg: Vec<u32>,
+struct Topology {
     /// Resource-order predecessor per task (`u32::MAX` = none).
     res_pred: Vec<u32>,
     /// CSR offsets into `adj` (length n + 1).
     adj_off: Vec<u32>,
-    /// CSR dependents adjacency (dep edges + resource-order edges).
+    /// CSR dependents adjacency.
     adj: Vec<u32>,
-    /// Fill cursor scratch for CSR construction.
-    cursor: Vec<u32>,
+    /// Initial unmet-predecessor count per task (deps + resource
+    /// order); copied into the working vector per simulation.
+    indeg0: Vec<u32>,
+}
+
+impl Topology {
+    fn size_u32s(&self) -> usize {
+        self.res_pred.len() + self.adj_off.len() + self.adj.len() + self.indeg0.len()
+    }
+}
+
+/// Total u32s the per-arena topology cache may hold (~16 MiB) before it
+/// is dropped wholesale — a crude but deterministic bound that keeps a
+/// long-lived search evaluator from accumulating every shape it ever
+/// probed.
+const TOPO_CACHE_BUDGET_U32S: usize = 4 << 20;
+
+/// Reusable simulation arena: one warm `SimBuffers` makes every
+/// subsequent [`simulate_into`] allocation-free, and the per-key
+/// topology cache makes repeat shapes skip CSR construction entirely.
+#[derive(Debug, Clone, Default)]
+pub struct SimBuffers {
+    result: SimResult,
+    /// Working unmet-predecessor counts (consumed by Kahn propagation).
+    indeg: Vec<u32>,
     /// Ready stack.
     ready: Vec<u32>,
+    /// Fill cursor scratch for CSR construction.
+    cursor: Vec<u32>,
+    /// Rebuilt-per-call topology for plans without a key.
+    scratch: Topology,
+    /// Memoized topologies for canonical plans, keyed by shape.
+    cache: HashMap<TopologyKey, Topology>,
+    cached_u32s: usize,
+    topo_hits: u64,
+    topo_misses: u64,
 }
 
 impl SimBuffers {
@@ -100,113 +144,172 @@ impl SimBuffers {
     pub fn result(&self) -> &SimResult {
         &self.result
     }
+
+    /// Simulations that reused a cached topology (duration-only fast
+    /// path, no CSR construction).
+    pub fn topo_hits(&self) -> u64 {
+        self.topo_hits
+    }
+
+    /// Simulations of a keyed plan that had to build its topology.
+    pub fn topo_misses(&self) -> u64 {
+        self.topo_misses
+    }
+
+    /// Number of memoized topologies currently held.
+    pub fn cached_topologies(&self) -> usize {
+        self.cache.len()
+    }
 }
 
 const NO_PRED: u32 = u32::MAX;
+
+/// Build `plan`'s duration-independent structure into `topo` (CSR in
+/// two passes, exactly the seed's construction order so downstream
+/// traversal — and therefore the schedule — is bit-identical).
+fn build_topology(plan: &Plan, topo: &mut Topology, cursor: &mut Vec<u32>) {
+    let n = plan.tasks.len();
+    topo.indeg0.clear();
+    topo.indeg0.extend((0..n).map(|i| plan.deps(i).len() as u32));
+    topo.res_pred.clear();
+    topo.res_pred.resize(n, NO_PRED);
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            topo.res_pred[w[1] as usize] = w[0];
+            topo.indeg0[w[1] as usize] += 1;
+        }
+    }
+
+    // Pass 1: out-degree per task.
+    cursor.clear();
+    cursor.resize(n, 0);
+    for i in 0..n {
+        for &d in plan.deps(i) {
+            cursor[d as usize] += 1;
+        }
+    }
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            cursor[w[0] as usize] += 1;
+        }
+    }
+    // Prefix sums -> offsets; cursor becomes the fill position.
+    topo.adj_off.clear();
+    topo.adj_off.reserve(n + 1);
+    let mut acc = 0u32;
+    topo.adj_off.push(0);
+    for i in 0..n {
+        acc += cursor[i];
+        topo.adj_off.push(acc);
+        cursor[i] = topo.adj_off[i];
+    }
+    // Pass 2: fill.
+    topo.adj.clear();
+    topo.adj.resize(acc as usize, 0);
+    for i in 0..n {
+        for &d in plan.deps(i) {
+            let c = &mut cursor[d as usize];
+            topo.adj[*c as usize] = i as u32;
+            *c += 1;
+        }
+    }
+    for q in &plan.issue_order {
+        for w in q.windows(2) {
+            let c = &mut cursor[w[0] as usize];
+            topo.adj[*c as usize] = w[1];
+            *c += 1;
+        }
+    }
+}
 
 /// Simulate a plan into a reusable arena. Returns a borrow of the
 /// schedule, or a [`SimError`] naming the stuck task if the plan is
 /// cyclic — callers in the solver treat that as a skipped candidate.
 pub fn simulate_into<'a>(plan: &Plan, buf: &'a mut SimBuffers) -> Result<&'a SimResult, SimError> {
     let n = plan.tasks.len();
+    let key = plan.topology_key();
+    {
+        let SimBuffers {
+            result,
+            indeg,
+            ready,
+            cursor,
+            scratch,
+            cache,
+            cached_u32s,
+            topo_hits,
+            topo_misses,
+        } = &mut *buf;
 
-    // --- Arena reset (len changes, capacity persists). ---------------
-    buf.indeg.clear();
-    buf.indeg.extend((0..n).map(|i| plan.deps(i).len() as u32));
-    buf.res_pred.clear();
-    buf.res_pred.resize(n, NO_PRED);
-    for q in &plan.issue_order {
-        for w in q.windows(2) {
-            buf.res_pred[w[1] as usize] = w[0];
-            buf.indeg[w[1] as usize] += 1;
-        }
-    }
+        // --- Topology: cached per shape, rebuilt only on a miss. ------
+        let topo: &Topology = if let Some(k) = key {
+            if cache.contains_key(&k) {
+                *topo_hits += 1;
+            } else {
+                *topo_misses += 1;
+                let mut t = Topology::default();
+                build_topology(plan, &mut t, cursor);
+                let sz = t.size_u32s();
+                if *cached_u32s + sz > TOPO_CACHE_BUDGET_U32S {
+                    cache.clear();
+                    *cached_u32s = 0;
+                }
+                *cached_u32s += sz;
+                cache.insert(k, t);
+            }
+            cache.get(&k).expect("topology just ensured")
+        } else {
+            build_topology(plan, scratch, cursor);
+            scratch
+        };
+        debug_assert_eq!(topo.indeg0.len(), n, "cached topology does not match plan shape");
 
-    // --- CSR dependents adjacency in two passes. ----------------------
-    // Pass 1: out-degree per task.
-    buf.cursor.clear();
-    buf.cursor.resize(n, 0);
-    for i in 0..n {
-        for &d in plan.deps(i) {
-            buf.cursor[d as usize] += 1;
-        }
-    }
-    for q in &plan.issue_order {
-        for w in q.windows(2) {
-            buf.cursor[w[0] as usize] += 1;
-        }
-    }
-    // Prefix sums -> offsets; cursor becomes the fill position.
-    buf.adj_off.clear();
-    buf.adj_off.reserve(n + 1);
-    let mut acc = 0u32;
-    buf.adj_off.push(0);
-    for i in 0..n {
-        acc += buf.cursor[i];
-        buf.adj_off.push(acc);
-        buf.cursor[i] = buf.adj_off[i];
-    }
-    // Pass 2: fill.
-    buf.adj.clear();
-    buf.adj.resize(acc as usize, 0);
-    for i in 0..n {
-        for &d in plan.deps(i) {
-            let c = &mut buf.cursor[d as usize];
-            buf.adj[*c as usize] = i as u32;
-            *c += 1;
-        }
-    }
-    for q in &plan.issue_order {
-        for w in q.windows(2) {
-            let c = &mut buf.cursor[w[0] as usize];
-            buf.adj[*c as usize] = w[1];
-            *c += 1;
-        }
-    }
-
-    // --- Kahn ready propagation. --------------------------------------
-    let result = &mut buf.result;
-    result.start.clear();
-    result.start.resize(n, 0.0);
-    result.finish.clear();
-    result.finish.resize(n, 0.0);
-    buf.ready.clear();
-    buf.ready.extend((0..n as u32).filter(|&i| buf.indeg[i as usize] == 0));
-    let mut done = 0usize;
-    while let Some(i) = buf.ready.pop() {
-        let i = i as usize;
-        let mut s = 0.0f64;
-        for &d in plan.deps(i) {
-            s = s.max(result.finish[d as usize]);
-        }
-        let p = buf.res_pred[i];
-        if p != NO_PRED {
-            s = s.max(result.finish[p as usize]);
-        }
-        result.start[i] = s;
-        result.finish[i] = s + plan.tasks[i].duration;
-        done += 1;
-        for k in buf.adj_off[i] as usize..buf.adj_off[i + 1] as usize {
-            let nidx = buf.adj[k] as usize;
-            buf.indeg[nidx] -= 1;
-            if buf.indeg[nidx] == 0 {
-                buf.ready.push(nidx as u32);
+        // --- Kahn ready propagation (duration-dependent half). --------
+        indeg.clear();
+        indeg.extend_from_slice(&topo.indeg0);
+        result.start.clear();
+        result.start.resize(n, 0.0);
+        result.finish.clear();
+        result.finish.resize(n, 0.0);
+        ready.clear();
+        ready.extend((0..n as u32).filter(|&i| indeg[i as usize] == 0));
+        let mut done = 0usize;
+        while let Some(i) = ready.pop() {
+            let i = i as usize;
+            let mut s = 0.0f64;
+            for &d in plan.deps(i) {
+                s = s.max(result.finish[d as usize]);
+            }
+            let p = topo.res_pred[i];
+            if p != NO_PRED {
+                s = s.max(result.finish[p as usize]);
+            }
+            result.start[i] = s;
+            result.finish[i] = s + plan.tasks[i].duration;
+            done += 1;
+            for k in topo.adj_off[i] as usize..topo.adj_off[i + 1] as usize {
+                let nidx = topo.adj[k] as usize;
+                indeg[nidx] -= 1;
+                if indeg[nidx] == 0 {
+                    ready.push(nidx as u32);
+                }
             }
         }
+        if done != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).unwrap_or(0);
+            // Leave the arena's result in a consistent (empty) state
+            // rather than a half-written schedule mixed with a stale
+            // makespan.
+            result.start.clear();
+            result.finish.clear();
+            result.makespan = 0.0;
+            return Err(SimError {
+                task: plan.tasks[stuck].label(),
+                resource: plan.tasks[stuck].resource().name(),
+            });
+        }
+        result.makespan = result.finish.iter().copied().fold(0.0f64, f64::max);
     }
-    if done != n {
-        let stuck = (0..n).find(|&i| buf.indeg[i] > 0).unwrap_or(0);
-        // Leave the arena's result in a consistent (empty) state rather
-        // than a half-written schedule mixed with a stale makespan.
-        result.start.clear();
-        result.finish.clear();
-        result.makespan = 0.0;
-        return Err(SimError {
-            task: plan.tasks[stuck].label(),
-            resource: plan.tasks[stuck].resource().name(),
-        });
-    }
-    result.makespan = result.finish.iter().copied().fold(0.0f64, f64::max);
     Ok(&buf.result)
 }
 
@@ -222,14 +325,16 @@ pub fn simulate(plan: &Plan) -> SimResult {
     buf.result
 }
 
-/// Busy intervals of one resource, sorted by start time.
+/// Busy intervals of one resource, sorted by start time. Total order
+/// (`f64::total_cmp`), so a NaN interval from a corrupted plan sorts
+/// deterministically instead of panicking trace tooling.
 pub fn resource_intervals(plan: &Plan, sim: &SimResult, res: Resource) -> Vec<(f64, f64)> {
     let mut iv: Vec<(f64, f64)> = plan.issue_order[res.index()]
         .iter()
         .map(|&t| (sim.start[t as usize], sim.finish[t as usize]))
         .filter(|(s, f)| f > s)
         .collect();
-    iv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     iv
 }
 
@@ -352,12 +457,7 @@ mod tests {
         // Warm the arena on the largest plan first.
         let warm = build(2, 3, 4, Order::Asas, 4);
         simulate_into(&warm, &mut buf).unwrap();
-        let caps = (
-            buf.result.start.capacity(),
-            buf.adj.capacity(),
-            buf.adj_off.capacity(),
-            buf.indeg.capacity(),
-        );
+        let caps = (buf.result.start.capacity(), buf.indeg.capacity());
         for (r1, r2, order) in [(2, 2, Order::Aass), (3, 4, Order::Asas), (1, 1, Order::Asas)] {
             let plan = build(2, r1, r2, order, 4);
             let one_shot = simulate(&plan);
@@ -368,14 +468,90 @@ mod tests {
         }
         assert_eq!(
             caps,
-            (
-                buf.result.start.capacity(),
-                buf.adj.capacity(),
-                buf.adj_off.capacity(),
-                buf.indeg.capacity()
-            ),
+            (buf.result.start.capacity(), buf.indeg.capacity()),
             "simulation arena reallocated"
         );
+        // (3, 4, ASAS) repeated the warm plan's topology: exactly one
+        // hit, one cached entry per distinct shape.
+        assert_eq!(buf.topo_hits(), 1);
+        assert_eq!(buf.topo_misses(), 3);
+        assert_eq!(buf.cached_topologies(), 3);
+    }
+
+    #[test]
+    fn duration_only_fast_path_is_bit_identical_to_full_rebuild() {
+        // Same topology, different durations (different m_a / m_e /
+        // stage models): the cached-topology fast path must produce the
+        // exact same schedule — bit for bit — as a cold full rebuild.
+        let sm_a = models();
+        let sm_b = StageModels::new(
+            &ModelConfig::deepseek_v2(4),
+            &Testbed::b(),
+            GroupSplit::new(3, 5),
+            4096,
+        );
+        let mut warm = SimBuffers::new();
+        for order in Order::both() {
+            for (sm, m_a) in [(&sm_a, 1usize), (&sm_a, 2), (&sm_b, 2), (&sm_b, 4)] {
+                let m_e = sm.m_e(m_a as f64, 3);
+                let plan = Plan::build(
+                    sm,
+                    PlanConfig::findep(m_a, 2, 3, m_e, order),
+                    4,
+                    3,
+                    2048,
+                );
+                // Cold arena per plan: always a topology miss (the
+                // full-rebuild reference).
+                let mut cold = SimBuffers::new();
+                let full = simulate_into(&plan, &mut cold).unwrap().clone();
+                assert_eq!(cold.topo_hits(), 0);
+                // Warm arena: everything after the first per order is a
+                // duration-only hit.
+                let fast = simulate_into(&plan, &mut warm).unwrap();
+                let ctx = format!("fast path drifted ({}, m_a={m_a})", order.name());
+                assert_eq!(fast.start, full.start, "{ctx}");
+                assert_eq!(fast.finish, full.finish);
+                assert_eq!(fast.makespan, full.makespan);
+            }
+        }
+        // 2 orders × 4 duration variants over one shape each: 2 misses,
+        // 6 hits.
+        assert_eq!(warm.topo_misses(), 2);
+        assert_eq!(warm.topo_hits(), 6);
+    }
+
+    #[test]
+    fn nan_durations_cannot_reach_or_break_interval_sorting() {
+        // Defensive hardening, not a reachable panic: a NaN-duration
+        // task yields a NaN interval, but `f > s` is false for NaN so
+        // the filter drops it before the sort ever sees it (and
+        // `f64::max` discards the NaN for successors). The switch to
+        // `total_cmp` removes the residual `partial_cmp(..).unwrap()`
+        // trap should a future caller feed unfiltered intervals.
+        let plan = Plan::from_raw_parts(
+            vec![
+                (TaskKind::Expert, f64::NAN, vec![]),
+                (TaskKind::Expert, 1.0, vec![]),
+                (TaskKind::Expert, 2.0, vec![]),
+            ],
+            [Vec::new(), vec![0, 1, 2], Vec::new(), Vec::new()],
+        );
+        let sim = simulate(&plan);
+        assert!(sim.finish[0].is_nan());
+        let iv = resource_intervals(&plan, &sim, Resource::EgCompute);
+        // The NaN interval was filtered; the finite ones stay sorted.
+        assert_eq!(iv.len(), 2);
+        assert!(iv.iter().all(|(s, f)| s.is_finite() && f.is_finite()));
+        assert!(iv[0].0 <= iv[1].0);
+        // The comparator itself is total: sorting adversarial NaN data
+        // directly must not panic and must order NaN deterministically.
+        let mut raw = vec![(f64::NAN, 1.0), (0.5, 2.0), (0.0, f64::NAN)];
+        raw.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        assert_eq!(raw[0].0, 0.0);
+        assert!(raw[0].1.is_nan());
+        assert_eq!(raw[1], (0.5, 2.0));
+        assert!(raw[2].0.is_nan());
     }
 
     #[test]

@@ -20,16 +20,18 @@ pub fn best_for_fixed_ma_r1_with(
     r1: usize,
     r2_cap: usize,
 ) -> (PlanConfig, f64, f64) {
-    let sm = ev.stage_models().clone();
-    let max_r2 = (sm.m_e(m_a as f64, 1).floor() as usize).clamp(1, r2_cap);
+    // Borrow the models' scalars instead of cloning per (m_a, r1) visit.
+    let k_tokens = ev.stage_models().k_tokens;
+    let has_shared = ev.stage_models().has_shared;
+    let m_e_for = |r2: usize| k_tokens * m_a as f64 / r2 as f64;
+    let max_r2 = (m_e_for(1).floor() as usize).clamp(1, r2_cap);
     let mut best: Option<(PlanConfig, f64, f64)> = None;
     for order in Order::both() {
-        if !sm.has_shared && order == Order::Aass {
+        if !has_shared && order == Order::Aass {
             continue;
         }
         for r2 in 1..=max_r2 {
-            let m_e = sm.m_e(m_a as f64, r2);
-            let cfg = PlanConfig::findep(m_a, r1, r2, m_e, order);
+            let cfg = PlanConfig::findep(m_a, r1, r2, m_e_for(r2), order);
             let (ms, tput) = ev.evaluate(cfg);
             if best.as_ref().map_or(true, |b| tput > b.2) {
                 best = Some((cfg, ms, tput));

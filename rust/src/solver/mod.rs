@@ -13,15 +13,25 @@
 //! the serving loop solves once per shape, not once per batch;
 //! [`algorithm1::solve_online_bucketed`] is the serving entry that
 //! restricts `m_a` to the runtime's compiled attention buckets.
+//! [`splitsearch`] sits above Algorithm 1: it searches the (ag, eg)
+//! disaggregation split itself — plus multi-replica tilings of the
+//! cluster — with analytic branch-and-bound pruning, parallel workers,
+//! and cross-split topology reuse, bit-identical to the serial
+//! exhaustive sweep.
 
 pub mod algorithm1;
 pub mod bruteforce;
 pub mod cache;
 pub mod memory;
+pub mod splitsearch;
 
 pub use algorithm1::{
-    solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode, EvalMode,
-    Evaluator, Instance, Solution, SolverParams,
+    solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode, solve_with,
+    EvalMode, Evaluator, Instance, Solution, SolverParams,
 };
 pub use cache::{bucket_up, shape_key, PlanCache};
 pub use memory::MemoryModel;
+pub use splitsearch::{
+    search as search_splits, search_serial as search_splits_serial, SearchParams, SearchReport,
+    SearchStats, SplitCandidate, SplitSolution,
+};

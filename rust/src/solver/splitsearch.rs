@@ -1,0 +1,410 @@
+//! Split search: promote the (ag, eg) disaggregation ratio — and
+//! multi-replica tilings of the cluster — from an ablation sweep to a
+//! first-class solver layer.
+//!
+//! The paper's Algorithm 1 solves one fixed [`GroupSplit`]; §5's
+//! deployments (and MegaScale-Infer's placement search) pick the split
+//! itself. [`search`] enumerates every feasible split of a testbed,
+//! plus placements that tile the cluster with `k` identical instances
+//! of an `n/k`-GPU split, runs Algorithm 1 on each, and returns the
+//! global argmax by total tokens/s. Three compounding optimisations
+//! keep the enlarged space cheaper than a cold sweep:
+//!
+//! 1. **Branch-and-bound pruning.** Every candidate gets an optimistic
+//!    throughput upper bound from the §4.2 closed forms alone (no DAG,
+//!    no engine): the engine's makespan is at least the busiest
+//!    resource's total occupancy, which per layer is at least
+//!    `F = max(X, Y)` evaluated at `r2 = 1` and the largest
+//!    memory-feasible `m_a` (the per-part launch overheads `r2·α` only
+//!    grow with r2, and Theorem 1 makes the ratio `m_a / F(m_a)`
+//!    non-decreasing). Candidates whose bound cannot beat the incumbent
+//!    are skipped without ever building a model; best-bound-first
+//!    ordering tightens the incumbent early.
+//! 2. **Parallel search** across candidates on `std::thread::scope`
+//!    workers (no new dependencies), with a shared atomic incumbent.
+//!    The final winner is reduced deterministically — max total
+//!    throughput, ties to the lowest candidate index — so the result is
+//!    bit-identical to [`search_serial`]'s strict-improvement sweep at
+//!    any thread count, and pruning can never change it: a pruned
+//!    candidate is strictly below some evaluated throughput, hence
+//!    strictly below the winner.
+//! 3. **Topology reuse.** Each worker carries one [`Evaluator`] across
+//!    candidates ([`solve_with`]): candidate plans of different splits
+//!    share task-DAG topologies and differ only in durations, so the
+//!    engine serves them from its per-shape CSR cache
+//!    (`sched::TopologyKey`) through the duration-only fast path.
+//!
+//! [`search_serial`] is the reference: the pre-existing behaviour of
+//! `benches/ablations.rs` — a serial, cold, unpruned Algorithm-1 solve
+//! per split — kept as the oracle for tests and the baseline
+//! `benches/split_search.rs` measures against.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::sched::analytic::Analytic;
+use crate::solver::algorithm1::{
+    self, solve_with, EvalMode, Evaluator, Instance, Solution, SolverParams,
+};
+use crate::solver::memory::MemoryModel;
+
+/// One placement candidate: `replicas` identical instances, each owning
+/// `split.ag + split.eg` GPUs of the testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitCandidate {
+    pub replicas: usize,
+    pub split: GroupSplit,
+}
+
+impl SplitCandidate {
+    pub fn describe(&self) -> String {
+        if self.replicas == 1 {
+            format!("({},{})", self.split.ag, self.split.eg)
+        } else {
+            format!("{}x({},{})", self.replicas, self.split.ag, self.split.eg)
+        }
+    }
+}
+
+/// Split-search knobs on top of the inner Algorithm-1 parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    pub solver: SolverParams,
+    /// Worker threads; 0 = all available cores.
+    pub threads: usize,
+    /// Branch-and-bound pruning on the analytic throughput bound.
+    pub prune: bool,
+    /// Include multi-replica tilings of the cluster.
+    pub multi_replica: bool,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { solver: SolverParams::default(), threads: 0, prune: true, multi_replica: true }
+    }
+}
+
+/// One solved candidate.
+#[derive(Debug, Clone)]
+pub struct SplitSolution {
+    pub candidate: SplitCandidate,
+    /// Algorithm 1's solution for a single instance of the candidate.
+    pub per_instance: Solution,
+    /// Cluster-wide tokens/s: `replicas × per-instance throughput`.
+    pub total_throughput: f64,
+}
+
+/// Search diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchStats {
+    /// Candidates enumerated.
+    pub candidates: usize,
+    /// Candidates skipped by the branch-and-bound test.
+    pub pruned: usize,
+    /// Candidates that were infeasible (bound 0 or Algorithm 1 `None`).
+    pub infeasible: usize,
+    /// Candidates actually solved to a feasible solution.
+    pub solved: usize,
+    /// Total Algorithm-1 probe evaluations across solved candidates.
+    pub evals: usize,
+    /// Worker threads used.
+    pub threads: usize,
+    /// Wall time of the whole search.
+    pub solve_seconds: f64,
+}
+
+/// Search output: the winner plus every solved candidate (in canonical
+/// candidate order — the per-split table `benches/ablations.rs` prints).
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub best: SplitSolution,
+    pub evaluated: Vec<SplitSolution>,
+    pub stats: SearchStats,
+}
+
+/// All placement candidates of an `n_gpus` testbed in canonical order:
+/// replicas ascending (1 first), then ag ascending. `replicas` must
+/// divide `n_gpus` and leave at least 2 GPUs per instance (both groups
+/// non-empty).
+pub fn enumerate_candidates(n_gpus: usize, multi_replica: bool) -> Vec<SplitCandidate> {
+    let mut out = Vec::new();
+    let max_r = if multi_replica { n_gpus / 2 } else { 1 };
+    for replicas in 1..=max_r.max(1) {
+        if n_gpus % replicas != 0 {
+            continue;
+        }
+        let per = n_gpus / replicas;
+        if per < 2 {
+            continue;
+        }
+        for split in GroupSplit::enumerate(per) {
+            out.push(SplitCandidate { replicas, split });
+        }
+    }
+    out
+}
+
+/// The testbed one instance of a `replicas`-way tiling sees: same
+/// per-GPU constants, `n_gpus / replicas` GPUs. (Conservative for
+/// multi-node testbeds — a tile that fits inside one node would see
+/// better links than the cluster-wide constants assume.)
+fn instance_testbed(tb: &Testbed, replicas: usize) -> Testbed {
+    let mut t = tb.clone();
+    t.n_gpus = tb.n_gpus / replicas;
+    t
+}
+
+/// Optimistic tokens/s upper bound for one *instance* of a split, from
+/// the §4.2 closed forms only. Admissible: for every configuration
+/// Algorithm 1 can evaluate, the engine's makespan over `T` layers is
+/// at least `T · r1 · F(m_a, r2)` (each resource executes its tasks
+/// non-preemptively), `F` at fixed `m_a` is minimized at `r2 = 1`
+/// (the per-part launch overheads scale with r2 while the `β` terms are
+/// conserved), and `m_a / F(m_a, 1)` is non-decreasing in `m_a`
+/// (Theorem 1), so the bound evaluated at the largest memory-feasible
+/// `m_a` dominates every candidate. Returns 0.0 for infeasible splits.
+pub fn throughput_bound(
+    model: &ModelConfig,
+    tb: &Testbed,
+    split: GroupSplit,
+    seq_len: usize,
+    params: &SolverParams,
+) -> f64 {
+    let mem = MemoryModel::new(model, tb, split, seq_len);
+    if !mem.eg_feasible() {
+        return 0.0;
+    }
+    let ma_max = mem.max_samples_per_ag_gpu().min(params.ma_cap);
+    if ma_max == 0 {
+        return 0.0;
+    }
+    let sm = crate::perfmodel::StageModels::new(model, tb, split, seq_len);
+    // F = max(X, r2·Y) at r2 = 1 — the per-layer pipeline period floor.
+    let floor = Analytic::new(&sm, ma_max as f64, 1, 1).f;
+    if floor <= 0.0 {
+        // Degenerate all-zero models: nothing to bound.
+        return f64::INFINITY;
+    }
+    // In the AG-bound regime the bound is *tight* (an ASAS schedule
+    // achieves makespan = T·r1·X exactly), and the engine computes that
+    // makespan in a different summation order than the closed form —
+    // within ~1e-14 relative (pinned by simulator_vs_analytic). Inflate
+    // by 1e-9 relative so admissibility survives floating point;
+    // candidates differ by far more than this, so no pruning is lost.
+    (ma_max * split.ag * seq_len) as f64 / (model.n_layers as f64 * floor) * (1.0 + 1e-9)
+}
+
+/// The serial reference sweep: cold Algorithm-1 solve per candidate,
+/// strict-improvement argmax in canonical order — no pruning, no
+/// parallelism, no cross-candidate arena reuse. This is what
+/// `benches/ablations.rs` did before the solver layer existed; tests
+/// use it as the oracle and `benches/split_search.rs` as the baseline.
+pub fn search_serial(
+    model: &ModelConfig,
+    testbed: &Testbed,
+    seq_len: usize,
+    params: &SearchParams,
+) -> Option<SplitSolution> {
+    let mut best: Option<SplitSolution> = None;
+    for candidate in enumerate_candidates(testbed.n_gpus, params.multi_replica) {
+        let tb = instance_testbed(testbed, candidate.replicas);
+        let inst = Instance::new(model.clone(), tb, candidate.split, seq_len);
+        let Some(sol) = algorithm1::solve(&inst, &params.solver) else { continue };
+        let total = candidate.replicas as f64 * sol.throughput_tokens;
+        if best.as_ref().map_or(true, |b| total > b.total_throughput) {
+            best = Some(SplitSolution { candidate, per_instance: sol, total_throughput: total });
+        }
+    }
+    best
+}
+
+/// The optimised search: branch-and-bound pruned, parallel,
+/// topology-reusing. Bit-identical winner to [`search_serial`] at any
+/// thread count (see the module docs for why pruning and scheduling
+/// races cannot change the argmax). Returns `None` when no candidate
+/// is feasible.
+pub fn search(
+    model: &ModelConfig,
+    testbed: &Testbed,
+    seq_len: usize,
+    params: &SearchParams,
+) -> Option<SearchReport> {
+    let t0 = Instant::now();
+    let candidates = enumerate_candidates(testbed.n_gpus, params.multi_replica);
+    let bounds: Vec<f64> = candidates
+        .iter()
+        .map(|c| {
+            let tb = instance_testbed(testbed, c.replicas);
+            c.replicas as f64 * throughput_bound(model, &tb, c.split, seq_len, &params.solver)
+        })
+        .collect();
+    // Best-bound-first: the strongest candidates set the incumbent
+    // early, so weaker ones prune without solving.
+    let mut visit: Vec<usize> = (0..candidates.len()).collect();
+    visit.sort_by(|&a, &b| bounds[b].total_cmp(&bounds[a]).then(a.cmp(&b)));
+
+    let requested = if params.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        params.threads
+    };
+    let threads = requested.clamp(1, candidates.len().max(1));
+
+    let cursor = AtomicUsize::new(0);
+    // Incumbent total throughput as f64 bits — non-negative floats
+    // order identically to their bit patterns, so fetch_max works.
+    let incumbent = AtomicU64::new(0);
+    let pruned = AtomicUsize::new(0);
+    let infeasible = AtomicUsize::new(0);
+    let evals = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, SplitSolution)>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut ev: Option<Evaluator> = None;
+                loop {
+                    let next = cursor.fetch_add(1, Ordering::Relaxed);
+                    if next >= visit.len() {
+                        break;
+                    }
+                    let idx = visit[next];
+                    let candidate = candidates[idx];
+                    let bound = bounds[idx];
+                    if bound <= 0.0 {
+                        infeasible.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    if params.prune {
+                        let inc = f64::from_bits(incumbent.load(Ordering::Acquire));
+                        if bound < inc {
+                            pruned.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                    let tb = instance_testbed(testbed, candidate.replicas);
+                    let inst = Instance::new(model.clone(), tb, candidate.split, seq_len);
+                    let ev = ev.get_or_insert_with(|| Evaluator::new(&inst));
+                    match solve_with(&inst, &params.solver, EvalMode::Buffered, ev) {
+                        None => {
+                            infeasible.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Some(sol) => {
+                            evals.fetch_add(sol.evals, Ordering::Relaxed);
+                            let total = candidate.replicas as f64 * sol.throughput_tokens;
+                            incumbent.fetch_max(total.to_bits(), Ordering::AcqRel);
+                            results.lock().unwrap().push((
+                                idx,
+                                SplitSolution {
+                                    candidate,
+                                    per_instance: sol,
+                                    total_throughput: total,
+                                },
+                            ));
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let mut solved = results.into_inner().unwrap();
+    solved.sort_by_key(|(idx, _)| *idx);
+    // Deterministic reduction: canonical order + strict improvement —
+    // exactly search_serial's rule, so ties break to the lowest index.
+    let mut best: Option<SplitSolution> = None;
+    for (_, s) in &solved {
+        if best.as_ref().map_or(true, |b| s.total_throughput > b.total_throughput) {
+            best = Some(s.clone());
+        }
+    }
+    let stats = SearchStats {
+        candidates: candidates.len(),
+        pruned: pruned.into_inner(),
+        infeasible: infeasible.into_inner(),
+        solved: solved.len(),
+        evals: evals.into_inner(),
+        threads,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+    };
+    best.map(|best| SearchReport {
+        best,
+        evaluated: solved.into_iter().map(|(_, s)| s).collect(),
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case() -> (ModelConfig, Testbed) {
+        (ModelConfig::deepseek_v2(4), Testbed::a())
+    }
+
+    #[test]
+    fn enumeration_is_canonical() {
+        let c = enumerate_candidates(8, true);
+        // 7 single-instance splits + 3 of (2x4 GPUs) + 1 of (4x2 GPUs).
+        assert_eq!(c.len(), 11);
+        assert_eq!(c[0], SplitCandidate { replicas: 1, split: GroupSplit::new(1, 7) });
+        assert_eq!(c[7], SplitCandidate { replicas: 2, split: GroupSplit::new(1, 3) });
+        assert_eq!(c[10], SplitCandidate { replicas: 4, split: GroupSplit::new(1, 1) });
+        assert_eq!(enumerate_candidates(8, false).len(), 7);
+        // 32 GPUs: 31 + 15 + 7 + 3 + 1.
+        assert_eq!(enumerate_candidates(32, true).len(), 57);
+        // A 2-GPU cluster has exactly one placement.
+        assert_eq!(enumerate_candidates(2, true).len(), 1);
+    }
+
+    #[test]
+    fn search_finds_feasible_winner_with_stats() {
+        let (model, tb) = case();
+        let report = search(&model, &tb, 2048, &SearchParams::default()).expect("feasible");
+        assert!(report.best.total_throughput > 0.0);
+        assert_eq!(
+            report.best.total_throughput,
+            report.best.candidate.replicas as f64 * report.best.per_instance.throughput_tokens
+        );
+        assert_eq!(report.stats.candidates, 11);
+        assert_eq!(
+            report.stats.solved + report.stats.pruned + report.stats.infeasible,
+            report.stats.candidates
+        );
+        assert_eq!(report.stats.solved, report.evaluated.len());
+        // evaluated is in canonical candidate order.
+        for w in report.evaluated.windows(2) {
+            let key = |s: &SplitSolution| (s.candidate.replicas, s.candidate.split.ag);
+            assert!(key(&w[0]) < key(&w[1]));
+        }
+    }
+
+    #[test]
+    fn bounds_dominate_solutions() {
+        let (model, tb) = case();
+        let params = SearchParams { prune: false, ..Default::default() };
+        let report = search(&model, &tb, 2048, &params).unwrap();
+        for s in &report.evaluated {
+            let itb = instance_testbed(&tb, s.candidate.replicas);
+            let b = s.candidate.replicas as f64
+                * throughput_bound(&model, &itb, s.candidate.split, 2048, &params.solver);
+            assert!(
+                b >= s.total_throughput,
+                "bound {b} < achieved {} on {}",
+                s.total_throughput,
+                s.candidate.describe()
+            );
+        }
+    }
+
+    #[test]
+    fn fully_infeasible_model_returns_none() {
+        // Experts far beyond every split's EG memory on 24 GB cards.
+        let model = ModelConfig::deepseek_v2(64);
+        let tb = Testbed::b();
+        assert!(search(&model, &tb, 2048, &SearchParams::default()).is_none());
+        assert!(search_serial(&model, &tb, 2048, &SearchParams::default()).is_none());
+    }
+}

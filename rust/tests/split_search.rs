@@ -1,0 +1,143 @@
+//! Integration: the split-search solver layer vs the serial exhaustive
+//! sweep. The parallel, pruned, topology-reusing search is a pure
+//! optimisation — on every paper instance it must return a winner
+//! bit-identical to the serial cold sweep at any thread count, and
+//! pruning must never discard the true argmax (checked against the
+//! pruning-disabled oracle).
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::solver::{search_splits, search_splits_serial, SearchParams, SplitSolution};
+
+fn paper_cases() -> Vec<(String, ModelConfig, Testbed, usize)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for (model, name) in [
+            (ModelConfig::deepseek_v2(8), "deepseek"),
+            (ModelConfig::qwen3_moe(12), "qwen"),
+        ] {
+            out.push((format!("{name}/{}", tb.name), model, tb.clone(), 2048));
+        }
+    }
+    out
+}
+
+fn assert_same_winner(label: &str, a: &SplitSolution, b: &SplitSolution) {
+    assert_eq!(a.candidate, b.candidate, "placement drift on {label}");
+    assert_eq!(a.per_instance.config, b.per_instance.config, "config drift on {label}");
+    assert_eq!(
+        a.per_instance.throughput_tokens, b.per_instance.throughput_tokens,
+        "per-instance throughput drift on {label}"
+    );
+    assert_eq!(a.per_instance.makespan, b.per_instance.makespan, "makespan drift on {label}");
+    assert_eq!(a.total_throughput, b.total_throughput, "total throughput drift on {label}");
+}
+
+#[test]
+fn search_matches_serial_sweep_at_any_thread_count() {
+    for (label, model, tb, seq) in paper_cases() {
+        let serial = search_splits_serial(&model, &tb, seq, &SearchParams::default());
+        for threads in [1usize, 2, 3, 8] {
+            let params = SearchParams { threads, ..Default::default() };
+            let searched = search_splits(&model, &tb, seq, &params);
+            match (&serial, &searched) {
+                (Some(s), Some(o)) => {
+                    assert_same_winner(&format!("{label} t={threads}"), s, &o.best)
+                }
+                (None, None) => {}
+                (s, o) => panic!(
+                    "feasibility drift on {label} t={threads}: serial={} search={}",
+                    s.is_some(),
+                    o.is_some()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn pruning_never_discards_the_argmax() {
+    for (label, model, tb, seq) in paper_cases() {
+        let oracle = search_splits(
+            &model,
+            &tb,
+            seq,
+            &SearchParams { prune: false, threads: 2, ..Default::default() },
+        );
+        let pruned = search_splits(
+            &model,
+            &tb,
+            seq,
+            &SearchParams { prune: true, threads: 2, ..Default::default() },
+        );
+        match (&oracle, &pruned) {
+            (Some(o), Some(p)) => {
+                assert_same_winner(&label, &o.best, &p.best);
+                // The oracle solves everything it doesn't mark
+                // infeasible; pruning only ever removes work.
+                assert_eq!(o.stats.pruned, 0);
+                assert!(p.stats.solved <= o.stats.solved, "pruning added work on {label}");
+            }
+            (None, None) => {}
+            (o, p) => panic!(
+                "feasibility drift on {label}: oracle={} pruned={}",
+                o.is_some(),
+                p.is_some()
+            ),
+        }
+    }
+}
+
+#[test]
+fn multi_replica_tilings_can_win_and_scale_totals() {
+    // Every solved candidate's total is exactly replicas × per-instance
+    // throughput, and single-replica restriction is honoured.
+    let (model, tb) = (ModelConfig::deepseek_v2(8), Testbed::a());
+    let full = search_splits(&model, &tb, 2048, &SearchParams::default()).expect("feasible");
+    for s in &full.evaluated {
+        assert_eq!(
+            s.total_throughput,
+            s.candidate.replicas as f64 * s.per_instance.throughput_tokens
+        );
+        assert_eq!(s.candidate.replicas * (s.candidate.split.ag + s.candidate.split.eg), 8);
+    }
+    let single = search_splits(
+        &model,
+        &tb,
+        2048,
+        &SearchParams { multi_replica: false, ..Default::default() },
+    )
+    .expect("feasible");
+    assert!(single.evaluated.iter().all(|s| s.candidate.replicas == 1));
+    assert_eq!(single.stats.candidates, 7);
+    // The unrestricted search can only do better or equal.
+    assert!(full.best.total_throughput >= single.best.total_throughput);
+}
+
+#[test]
+fn paper_default_split_is_at_or_near_the_optimum() {
+    // §5.3's chosen splits should be competitive with the searched
+    // optimum on the single-replica space (the paper picked them by
+    // exactly this sweep).
+    let (model, tb) = (ModelConfig::deepseek_v2(8), Testbed::a());
+    // Pruning is off so `evaluated` holds every feasible split, not just
+    // the ones that could still beat the incumbent.
+    let report = search_splits(
+        &model,
+        &tb,
+        2048,
+        &SearchParams { multi_replica: false, prune: false, ..Default::default() },
+    )
+    .expect("feasible");
+    let paper = GroupSplit::paper_default(&tb, true);
+    let paper_tput = report
+        .evaluated
+        .iter()
+        .find(|s| s.candidate.split == paper)
+        .map(|s| s.total_throughput)
+        .expect("paper split is feasible");
+    assert!(
+        paper_tput >= 0.5 * report.best.total_throughput,
+        "paper split {paper_tput} implausibly far from searched optimum {}",
+        report.best.total_throughput
+    );
+}
