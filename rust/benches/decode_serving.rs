@@ -1,0 +1,307 @@
+//! Decode-phase serving claims:
+//!
+//! 1. **Decode plans beat prefill plans on decode traffic** — the
+//!    acceptance gate. On the paper instance (DeepSeek-V2 8L, testbed
+//!    A, split (3,5), S = kv = 2048) Algorithm 1's decode-phase solve
+//!    must yield strictly higher decoded-tokens/s than running decode
+//!    under the prefill-phase winning configuration: prefill optima
+//!    keep r2 > 1 to overlap A2E behind big expert GEMMs, while decode
+//!    conservation (one token per sample) makes every fine-grained
+//!    part overhead — EPS-MoE's observation that the winning schedule
+//!    is phase-dependent. A per-testbed table reports the same trio
+//!    everywhere (decode can tie prefill where both collapse to
+//!    r2 = 1, so the strict gate is pinned to the paper instance and a
+//!    no-regression bound holds elsewhere).
+//! 2. **Phase-keyed plan caching over a growing KV stream** — decoding
+//!    re-solves per *KV bucket*, not per token: a 512-step stream must
+//!    miss once per power-of-two KV bucket, never alias the prefill
+//!    entry, and the memoized stream must be strictly faster than
+//!    cold-solving every step.
+//! 3. **Queue-fed autoregressive serving** (needs `make artifacts`;
+//!    skipped gracefully otherwise) — requests with decode re-entry
+//!    through the continuous batcher: all responses arrive, and the
+//!    plan cache holds separate prefill and decode shapes.
+//!
+//! Emits `BENCH_decode.json`. Run: `cargo bench --bench decode_serving`
+
+use std::time::{Duration, Instant};
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::server::{EmbeddedRequest, Policy};
+use findep::runtime::artifacts_dir;
+use findep::sched::PlanConfig;
+use findep::solver::{
+    self, shape_key, shape_key_decode, Instance, PlanCache, Solution, SolverParams,
+};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+
+/// Decode-phase throughput of a configuration chosen elsewhere (the
+/// prefill winner, here): rebuild it under decode token conservation
+/// (`m_e` is implied by routing, not carried over) and evaluate it
+/// exactly on the discrete-event engine.
+fn eval_on_decode(dec: &Instance, cfg: &PlanConfig) -> (f64, f64) {
+    let mut ev = dec.evaluator();
+    let m_e = ev.stage_models().m_e(cfg.m_a as f64, cfg.r2);
+    let mut cross = PlanConfig::findep(cfg.m_a, cfg.r1, cfg.r2, m_e, cfg.order);
+    cross.fuse_shared = cfg.fuse_shared;
+    ev.evaluate(cross)
+}
+
+fn phase_pair(
+    model: &ModelConfig,
+    tb: &Testbed,
+    split: GroupSplit,
+    s: usize,
+    kv: usize,
+    params: &SolverParams,
+) -> Option<(Solution, Solution, f64)> {
+    let pre_inst = Instance::new(model.clone(), tb.clone(), split, s);
+    let dec_inst = Instance::decode(model.clone(), tb.clone(), split, kv);
+    let pre = solver::solve(&pre_inst, params)?;
+    let dec = solver::solve(&dec_inst, params)?;
+    let (_, cross_tput) = eval_on_decode(&dec_inst, &pre.config);
+    Some((pre, dec, cross_tput))
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let params = SolverParams::default();
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("decode_serving".into()));
+    report.insert("quick", Json::Bool(quick));
+
+    // --- 1. Per-phase plans: decode solve vs prefill-plan-on-decode. --
+    let mut table = Table::new(
+        "Decode vs prefill plans (S = kv = 2048, paper splits)",
+        &[
+            "backbone",
+            "testbed",
+            "prefill plan",
+            "decode plan",
+            "decode tok/s",
+            "prefill-plan-on-decode",
+            "gain",
+        ],
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    let mut paper_gate: Option<(f64, f64)> = None;
+    for (backbone, deepseek) in [("DeepSeek", true), ("Qwen", false)] {
+        for tb in Testbed::all() {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            let split = if tb.n_gpus >= 32 {
+                GroupSplit::new(8, 24)
+            } else if deepseek {
+                GroupSplit::new(3, 5)
+            } else {
+                GroupSplit::new(4, 4)
+            };
+            let Some((pre, dec, cross)) = phase_pair(&model, &tb, split, 2048, 2048, &params)
+            else {
+                table.row(&[
+                    backbone.into(),
+                    tb.name.clone(),
+                    "infeasible".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            };
+            // A plan solved *for* decode never loses to the prefill
+            // plan replayed on decode traffic (ties allowed off the
+            // paper instance — e.g. compute-rich testbeds where both
+            // phases collapse to r2 = 1).
+            assert!(
+                dec.throughput_tokens >= cross * (1.0 - 1e-12),
+                "{backbone}/{}: decode solve {} lost to prefill-plan-on-decode {}",
+                tb.name,
+                dec.throughput_tokens,
+                cross
+            );
+            if deepseek && tb.name.starts_with('A') {
+                paper_gate = Some((dec.throughput_tokens, cross));
+            }
+            table.row(&[
+                backbone.into(),
+                tb.name.clone(),
+                pre.config.describe(),
+                dec.config.describe(),
+                format!("{:.0}", dec.throughput_tokens),
+                format!("{cross:.0}"),
+                format!("{:.2}x", dec.throughput_tokens / cross),
+            ]);
+            let mut e = JsonObj::new();
+            e.insert("backbone", Json::Str(backbone.into()));
+            e.insert("testbed", Json::Str(tb.name.clone()));
+            e.insert("prefill_config", Json::Str(pre.config.describe()));
+            e.insert("decode_config", Json::Str(dec.config.describe()));
+            e.insert("prefill_tokens_per_s", Json::Num(pre.throughput_tokens));
+            e.insert("decode_tokens_per_s", Json::Num(dec.throughput_tokens));
+            e.insert("prefill_plan_on_decode_tokens_per_s", Json::Num(cross));
+            e.insert("gain", Json::Num(dec.throughput_tokens / cross));
+            entries.push(Json::Obj(e));
+        }
+    }
+    table.print();
+    // The acceptance gate, on the paper instance: strictly better, not
+    // merely tied — prefill keeps r2 > 1 there while decode collapses
+    // to r2 = 1, so the gap is real (≈6x analytically).
+    let (dec_tput, cross_tput) = paper_gate.expect("paper instance must be feasible");
+    assert!(
+        dec_tput > cross_tput,
+        "decode plan ({dec_tput} tok/s) must strictly beat prefill-plan-on-decode \
+         ({cross_tput} tok/s) on the paper instance"
+    );
+    println!(
+        "paper-instance gate: decode plan {dec_tput:.0} tok/s vs prefill-plan-on-decode \
+         {cross_tput:.0} tok/s ({:.2}x)",
+        dec_tput / cross_tput
+    );
+    report.insert("phase_plans", Json::Arr(entries));
+
+    // --- 2. Phase-keyed caching over a KV-growing stream. -------------
+    let model = ModelConfig::deepseek_v2(8);
+    let tb = Testbed::a();
+    let split = GroupSplit::new(3, 5);
+    let steps = if quick { 96 } else { 512 };
+    let prompt = 2048usize;
+    let batch = 4usize;
+
+    let solve_step = |kv: usize| {
+        let inst =
+            Instance::decode(model.clone(), tb.clone(), split, findep::solver::bucket_up(kv));
+        solver::solve_online(&inst, batch, &params)
+    };
+
+    // Correctness: one miss per KV bucket, prefill entry never aliased.
+    let cache = PlanCache::new();
+    let pre_inst = Instance::new(model.clone(), tb.clone(), split, prompt);
+    let pre_sol = cache.get_or_solve(shape_key(prompt, batch), || {
+        solver::solve_online(&pre_inst, batch, &params)
+    });
+    assert!(pre_sol.is_some(), "prefill shape must be plannable");
+    for step in 0..steps {
+        let kv = prompt + step;
+        let sol = cache.get_or_solve(shape_key_decode(kv, batch), || solve_step(kv));
+        assert!(sol.is_some(), "decode step at kv={kv} must be plannable");
+    }
+    let kv_buckets: std::collections::BTreeSet<usize> =
+        (0..steps).map(|s| findep::solver::bucket_up(prompt + s)).collect();
+    assert_eq!(
+        cache.misses() as usize,
+        kv_buckets.len() + 1,
+        "one solve per KV bucket plus the prefill shape"
+    );
+    assert_eq!(cache.len(), kv_buckets.len() + 1, "prefill and decode shapes must coexist");
+    assert!((cache.misses() as usize) < steps, "caching must beat per-token re-solving");
+    println!(
+        "KV stream: {steps} decode steps -> {} bucket solves + 1 prefill shape, {} hits",
+        kv_buckets.len(),
+        cache.hits()
+    );
+
+    let r_cold = bencher.run("decode stream (cold solve per step)", || {
+        for step in (0..steps).step_by(8) {
+            let _ = solve_step(prompt + step);
+        }
+    });
+    let stream_cache = PlanCache::new();
+    let r_cached = bencher.run("decode stream (phase-keyed cache)", || {
+        for step in (0..steps).step_by(8) {
+            let kv = prompt + step;
+            let _ = stream_cache.get_or_solve(shape_key_decode(kv, batch), || solve_step(kv));
+        }
+    });
+    let mut t2 = Table::new(
+        &format!("Decode planning over a KV-growing stream ({} sampled steps)", steps / 8),
+        &["path", "mean / stream", "speedup"],
+    );
+    t2.row(&["cold solve".into(), fmt_duration(r_cold.mean_s()), "1.00x".into()]);
+    t2.row(&[
+        "phase-keyed cache".into(),
+        fmt_duration(r_cached.mean_s()),
+        format!("{:.0}x", r_cold.mean_s() / r_cached.mean_s()),
+    ]);
+    t2.print();
+    assert!(
+        r_cached.mean_s() < r_cold.mean_s(),
+        "cached decode planning ({:.9}s) must beat per-step cold solve ({:.9}s)",
+        r_cached.mean_s(),
+        r_cold.mean_s()
+    );
+    let mut kvj = JsonObj::new();
+    kvj.insert("steps", Json::Num(steps as f64));
+    kvj.insert("kv_buckets", Json::Num(kv_buckets.len() as f64));
+    kvj.insert("cold_mean_s", Json::Num(r_cold.mean_s()));
+    kvj.insert("cached_mean_s", Json::Num(r_cached.mean_s()));
+    kvj.insert("speedup", Json::Num(r_cold.mean_s() / r_cached.mean_s()));
+    report.insert("kv_stream_cache", Json::Obj(kvj));
+
+    // --- 3. Queue-fed autoregressive serving (needs artifacts). -------
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let handle = ModelHandle::load(&dir, true).expect("artifacts load");
+        let (s, m) = (handle.seq_len, handle.model.embed);
+        let n_requests = if quick { 8 } else { 24 };
+        let out_len = if quick { 3 } else { 6 };
+        let cfg = BatcherConfig {
+            policy: Policy::Adaptive,
+            workers: 2,
+            max_batch: 8,
+            queue_depth: 128,
+            linger: Duration::from_micros(500),
+            ..Default::default()
+        };
+        let batcher = Batcher::new(handle, cfg).expect("batcher");
+        let t0 = Instant::now();
+        for i in 0..n_requests {
+            batcher
+                .submit(EmbeddedRequest::synthetic_autoregressive(i as u64, s, m, out_len))
+                .expect("submit");
+        }
+        let resps = batcher.drain(n_requests, Duration::from_secs(60));
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(resps.len(), n_requests, "autoregressive serving lost responses");
+        assert_eq!(
+            batcher.metrics().counter("decode_steps"),
+            (n_requests * out_len) as u64,
+            "every output token must run as a decode step"
+        );
+        assert_eq!(batcher.metrics().counter("decode_tokens"), (n_requests * out_len) as u64);
+        assert!(
+            batcher.plan_cache().len() >= 2,
+            "prefill and decode shapes must be cached separately"
+        );
+        let tokens = n_requests * (s + out_len);
+        println!(
+            "queue-fed autoregressive: {n_requests} requests x {out_len} decode steps in \
+             {dt:.2}s -> {:.1} tokens/s ({} plan shapes: prefill + decode KV buckets)",
+            tokens as f64 / dt,
+            batcher.plan_cache().len(),
+        );
+        let mut sj = JsonObj::new();
+        sj.insert("requests", Json::Num(n_requests as f64));
+        sj.insert("decode_steps_per_request", Json::Num(out_len as f64));
+        sj.insert("wall_s", Json::Num(dt));
+        sj.insert("tokens_per_s", Json::Num(tokens as f64 / dt));
+        sj.insert("plan_shapes", Json::Num(batcher.plan_cache().len() as f64));
+        report.insert("serving", Json::Obj(sj));
+    } else {
+        println!("artifacts missing: skipping queue-fed decode serving (run `make artifacts`)");
+        report.insert("serving", Json::Str("skipped: artifacts missing".into()));
+    }
+
+    std::fs::write("BENCH_decode.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_decode.json");
+    println!("\nwrote BENCH_decode.json");
+}

@@ -232,7 +232,7 @@ fn main() {
             assert_eq!(resps.len(), n_requests, "{name}: lost responses");
             let lat: Vec<f64> = resps.iter().map(|r| r.latency_s).collect();
             let rps = n_requests as f64 / dt;
-            let qw = batcher.metrics().histogram_mean("queue_wait") * 1e3;
+            let qw = batcher.metrics().histogram_mean("queue_wait").unwrap_or(0.0) * 1e3;
             let (hits, misses) =
                 (batcher.plan_cache().hits(), batcher.plan_cache().misses());
             table.row(&[

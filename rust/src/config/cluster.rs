@@ -32,6 +32,10 @@ pub struct Testbed {
     pub link_bw: f64,
     /// Network/transfer startup latency, seconds (α_c).
     pub alpha_comm_s: f64,
+    /// Achieved device-memory (HBM) streaming bandwidth, bytes/s — the
+    /// decode-phase attention regime is bound by KV-cache reads at this
+    /// rate rather than by attention FLOPs.
+    pub hbm_bw: f64,
     pub nvlink: bool,
     pub multi_node: bool,
 }
@@ -51,6 +55,7 @@ impl Testbed {
             // PCIe-4 fabric with contention.
             link_bw: 12e9,
             alpha_comm_s: 30e-6,
+            hbm_bw: 768e9, // GDDR6 A6000
             nvlink: true,
             multi_node: false,
         }
@@ -68,6 +73,7 @@ impl Testbed {
             alpha_attn_s: 25e-6,
             link_bw: 8e9, // PCIe 4.0 shared fabric, no NVLink (comm-bound)
             alpha_comm_s: 40e-6,
+            hbm_bw: 600e9, // GDDR6 A10
             nvlink: false,
             multi_node: false,
         }
@@ -85,6 +91,7 @@ impl Testbed {
             alpha_attn_s: 18e-6,
             link_bw: 300e9, // NVSwitch effective per-GPU (comm-cheap)
             alpha_comm_s: 20e-6,
+            hbm_bw: 4000e9, // HBM3 H20
             nvlink: true,
             multi_node: false,
         }
@@ -104,6 +111,7 @@ impl Testbed {
             alpha_attn_s: 18e-6,
             link_bw: 35e9, // 400G-class NICs across nodes (balanced)
             alpha_comm_s: 80e-6,
+            hbm_bw: 4000e9, // HBM3 H20
             nvlink: true,
             multi_node: true,
         }
@@ -134,6 +142,7 @@ impl Testbed {
         o.insert("alpha_attn_s", Json::Num(self.alpha_attn_s));
         o.insert("link_bw", Json::Num(self.link_bw));
         o.insert("alpha_comm_s", Json::Num(self.alpha_comm_s));
+        o.insert("hbm_bw", Json::Num(self.hbm_bw));
         o.insert("nvlink", Json::Bool(self.nvlink));
         o.insert("multi_node", Json::Bool(self.multi_node));
         Json::Obj(o)
@@ -187,6 +196,13 @@ mod tests {
         assert!(d.link_bw < c.link_bw);
         assert_eq!(d.n_gpus, 32);
         assert!(!b.nvlink && a.nvlink && c.nvlink);
+        // HBM streaming (the decode-attention bound) dwarfs the
+        // inter-group links everywhere, and the H20 testbeds stream KV
+        // far faster than the GDDR cards.
+        for t in Testbed::all() {
+            assert!(t.hbm_bw > 10.0 * t.link_bw, "{}", t.name);
+        }
+        assert!(c.hbm_bw > 4.0 * a.hbm_bw);
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod cluster;
 pub mod model;
 
 pub use cluster::{GroupSplit, Testbed};
-pub use model::{AttentionKind, ModelConfig};
+pub use model::{AttentionKind, ModelConfig, Phase};

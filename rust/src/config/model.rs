@@ -7,6 +7,73 @@
 
 use crate::util::json::{Json, JsonObj};
 
+/// Serving phase of a request / batch (MegaScale-Infer's disaggregated
+/// split serves both; EPS-MoE shows the winning pipeline schedule
+/// differs between them, so the solver must see the phase).
+///
+/// * **Prefill** processes the whole prompt at once: `S` tokens per
+///   sample per forward pass, writing `S` KV entries.
+/// * **Decode** is one autoregressive step: 1 token per sample, reading
+///   the `kv_len` cached entries (and this step's fresh one) and
+///   writing 1 — attention turns memory-bound on the KV reads and the
+///   expert GEMMs shrink to one token per sample.
+///
+/// The variant order (`Prefill < Decode`, decode ordered by `kv_len`)
+/// gives the derived `Ord` used by phase-keyed plan-cache keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode {
+        /// KV entries already cached per sample (prompt + generated so
+        /// far) that this step reads.
+        kv_len: usize,
+    },
+}
+
+impl Phase {
+    pub fn is_decode(self) -> bool {
+        matches!(self, Phase::Decode { .. })
+    }
+
+    /// Tokens one sample contributes to a forward pass of this phase:
+    /// the whole prompt for prefill, one generated token for decode.
+    pub fn tokens_per_sample(self, seq_len: usize) -> usize {
+        match self {
+            Phase::Prefill => seq_len,
+            Phase::Decode { .. } => 1,
+        }
+    }
+
+    /// KV entries resident per sample while this phase executes:
+    /// prefill writes `seq_len`; decode holds `kv_len` cached plus the
+    /// entry it writes.
+    pub fn kv_resident(self, seq_len: usize) -> usize {
+        match self {
+            Phase::Prefill => seq_len,
+            Phase::Decode { kv_len } => kv_len + 1,
+        }
+    }
+
+    /// KV length the *next* decode step of the same request reads —
+    /// the single source of the KV-growth rule: a prefill pass leaves
+    /// `prompt_len` cached entries, each decode step adds the one it
+    /// wrote. Shared by the workload generator and the coordinator's
+    /// decode re-entry.
+    pub fn next_kv_len(self, prompt_len: usize) -> usize {
+        match self {
+            Phase::Prefill => prompt_len,
+            Phase::Decode { kv_len } => kv_len + 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode { .. } => "decode",
+        }
+    }
+}
+
 /// Attention flavour. Both are modeled through `t_attn`/`t_gm` (§3.1);
 /// the flavour matters for workload coefficients and KV-cache size.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -169,16 +236,23 @@ impl ModelConfig {
         3 * self.embed * self.ffn_hidden * self.bytes_per_elem
     }
 
-    /// KV-cache bytes for one sample of sequence length `s` across all
-    /// layers (resident on its AG device for the whole forward pass).
-    /// MLA stores the compressed latent (c_KV + decoupled RoPE key,
-    /// 512+64 dims in DeepSeek-V2) instead of per-head K/V.
-    pub fn kv_bytes_per_sample(&self, s: usize) -> usize {
+    /// KV-cache bytes one token occupies in one layer. MLA stores the
+    /// compressed latent (c_KV + decoupled RoPE key, 512+64 dims in
+    /// DeepSeek-V2) instead of per-head K/V. The per-layer form is what
+    /// the decode cost model needs: a decode step streams this many
+    /// bytes per cached token per layer through the attention kernel.
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
         let per_token = match self.attention {
             AttentionKind::Mha => self.n_heads * (self.d_k + self.d_v),
             AttentionKind::Mla => 512 + 64,
         };
-        self.n_layers * s * per_token * self.bytes_per_elem
+        per_token * self.bytes_per_elem
+    }
+
+    /// KV-cache bytes for one sample of sequence length `s` across all
+    /// layers (resident on its AG device for the whole forward pass).
+    pub fn kv_bytes_per_sample(&self, s: usize) -> usize {
+        self.n_layers * s * self.kv_bytes_per_token_layer()
     }
 
     /// Serialize to JSON (mirrors python/compile/configs.py).
@@ -281,5 +355,20 @@ mod tests {
     fn by_name_lookup() {
         assert!(ModelConfig::by_name("deepseek-v2").is_some());
         assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn phase_token_and_kv_accounting() {
+        let s = 2048;
+        assert_eq!(Phase::Prefill.tokens_per_sample(s), s);
+        assert_eq!(Phase::Decode { kv_len: 4096 }.tokens_per_sample(s), 1);
+        // Prefill writes S entries; decode reads kv_len and writes 1.
+        assert_eq!(Phase::Prefill.kv_resident(s), s);
+        assert_eq!(Phase::Decode { kv_len: 4096 }.kv_resident(s), 4097);
+        assert!(Phase::Decode { kv_len: 1 }.is_decode() && !Phase::Prefill.is_decode());
+        // The derived order separates phases and sorts decode by KV —
+        // the property the phase-keyed plan cache relies on.
+        assert!(Phase::Prefill < Phase::Decode { kv_len: 0 });
+        assert!(Phase::Decode { kv_len: 64 } < Phase::Decode { kv_len: 65 });
     }
 }

@@ -5,30 +5,44 @@
 //!
 //! ```text
 //!   submit() ──▶ bounded queue ──▶ assembler (FIFO, linger window,
-//!        │                         size-bucketed batches)
-//!        │                              │ bounded work channel
-//!        │                              ▼
-//!        │                     worker 0 .. W-1  (one Server +
-//!        │                     pipeline replica each; shared
-//!        │                     Registry + PlanCache)
+//!        │                    ▲    mixed prefill/decode batches)
+//!        │       decode steps │         │ bounded work channel
+//!        │       (KV-growing  │         ▼
+//!        │        re-entry)   │  worker 0 .. W-1  (one Server +
+//!        │                    └── pipeline replica each; shared
+//!        │                        Registry + PlanCache)
 //!        │                              │
-//!        ◀──────── responses ───────────┘
+//!        ◀──── final responses ─────────┘
 //! ```
 //!
 //! Invariants:
 //!
 //! * **FIFO draining** — the assembler forms batches strictly in
-//!   arrival order; with one worker, responses come back in submission
-//!   order regardless of how the stream was cut into batches.
+//!   arrival order; with one worker and no decode traffic, responses
+//!   come back in submission order regardless of how the stream was cut
+//!   into batches. Decode re-entries take priority over fresh
+//!   submissions (finish what is in flight), so equal-output requests
+//!   still complete in submission order.
+//! * **Continuous decode batching** — a request submitted with
+//!   `output_len > 0` re-enters the queue after its prefill as one
+//!   decode step per output token, KV growing each step; each window
+//!   may therefore mix phases, and the server schedules its prefill and
+//!   decode chunks under separate phase-keyed cached plans. The client
+//!   receives exactly one response, after the last step.
 //! * **Backpressure** — the submit queue is a bounded `sync_channel`:
 //!   `submit` blocks when the queue is full, `try_submit` rejects (and
-//!   counts `queue_rejected`).
-//! * **Per-request latency** — each response's `latency_s` is rewritten
-//!   to the true enqueue→response time, and the enqueue→dispatch wait
-//!   lands in the shared registry's `queue_wait` histogram.
+//!   counts `queue_rejected`). The decode re-entry lane is unbounded so
+//!   workers can never deadlock against a full queue; its depth is
+//!   bounded by the requests already admitted.
+//! * **Per-request latency** — each final response's `latency_s` is
+//!   rewritten to the true submit→response time (prefill plus every
+//!   decode step), and each queue pass's wait lands in the shared
+//!   registry's `queue_wait` histogram.
 //! * **Shared planning** — workers share one [`PlanCache`], so an
-//!   Adaptive shape solved on any worker is a hit on all of them.
+//!   Adaptive shape solved on any worker is a hit on all of them —
+//!   prefill and decode shapes memoized separately.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
     TrySendError,
@@ -39,16 +53,26 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::config::Phase;
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
 use crate::coordinator::server::{EmbeddedRequest, Policy, Response, Server};
 use crate::metrics::Registry;
 use crate::solver::PlanCache;
 
-/// A request plus its enqueue timestamp (the latency reference).
+/// How often the assembler re-polls the decode re-entry lane while
+/// blocked waiting for fresh submissions.
+const DECODE_POLL: Duration = Duration::from_micros(200);
+
+/// A request plus its timestamps: `enqueued` is when *this entry*
+/// joined the stream (the queue-wait reference — a decode step's wait
+/// counts from its re-entry), `submitted` is the original client
+/// submission (the end-to-end latency reference for the final
+/// response).
 struct QueuedRequest {
     req: EmbeddedRequest,
     enqueued: Instant,
+    submitted: Instant,
 }
 
 /// Continuous-batcher knobs.
@@ -104,6 +128,9 @@ pub struct Batcher {
     /// are rejected at submit time so they can never sink a whole
     /// assembled batch inside a worker.
     req_elems: usize,
+    /// Requests still owed a final response (in the queue, in flight,
+    /// or looping through decode re-entry).
+    open: Arc<AtomicUsize>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -118,6 +145,17 @@ impl Batcher {
         let req_elems = model.seq_len * model.model.embed;
 
         let (submit_tx, submit_rx) = sync_channel::<QueuedRequest>(cfg.queue_depth.max(1));
+        // Decode re-entry lane: workers push finished-prefill requests
+        // back as KV-grown decode steps. Unbounded on purpose — a
+        // worker must never block re-entering its own output while the
+        // assembler blocks handing it the next batch (that cycle would
+        // deadlock the pool); depth is bounded anyway by
+        // `open` ≤ queue_depth + workers·max_batch in-flight requests.
+        let (decode_tx, decode_rx) = channel::<QueuedRequest>();
+        // Requests inside the system that still owe the client a final
+        // response; shutdown drains until this reaches zero so pending
+        // decode steps are never dropped.
+        let open = Arc::new(AtomicUsize::new(0));
         // Bounded work channel: the assembler runs at most `workers`
         // batches ahead of the slowest replica.
         let (work_tx, work_rx) = sync_channel::<Vec<QueuedRequest>>(workers);
@@ -133,10 +171,15 @@ impl Batcher {
         {
             let metrics = metrics.clone();
             let linger = cfg.linger;
+            let open = open.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("findep-batcher".into())
-                    .spawn(move || assembler_loop(submit_rx, work_tx, max_batch, linger, metrics))
+                    .spawn(move || {
+                        assembler_loop(
+                            submit_rx, decode_rx, work_tx, max_batch, linger, open, metrics,
+                        )
+                    })
                     .context("spawn batch assembler")?,
             );
         }
@@ -157,11 +200,13 @@ impl Batcher {
             }
             let work_rx = work_rx.clone();
             let resp_tx = resp_tx.clone();
+            let decode_tx = decode_tx.clone();
+            let open = open.clone();
             let policy = cfg.policy;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("findep-serve{w}"))
-                    .spawn(move || worker_loop(server, policy, work_rx, resp_tx))
+                    .spawn(move || worker_loop(server, policy, work_rx, resp_tx, decode_tx, open))
                     .context("spawn serving worker")?,
             );
         }
@@ -172,6 +217,7 @@ impl Batcher {
             metrics,
             plan_cache,
             req_elems,
+            open,
             threads,
         })
     }
@@ -192,12 +238,18 @@ impl Batcher {
 
     /// Enqueue a request, blocking while the queue is full
     /// (backpressure). Errors on malformed requests or after shutdown.
+    /// A request with `output_len > 0` re-enters the stream as that
+    /// many KV-growing decode steps after its prefill completes; the
+    /// single response arrives once the last step finishes.
     pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
         self.validate(&req)?;
         let tx = self.submit_tx.as_ref().context("batcher closed")?;
-        tx.send(QueuedRequest { req, enqueued: Instant::now() })
-            .ok()
-            .context("batcher workers gone")?;
+        self.open.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
+        if tx.send(QueuedRequest { req, enqueued: now, submitted: now }).is_err() {
+            self.open.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("batcher workers gone");
+        }
         self.metrics.inc("queued", 1);
         Ok(())
     }
@@ -207,16 +259,20 @@ impl Batcher {
     pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
         self.validate(&req)?;
         let tx = self.submit_tx.as_ref().context("batcher closed")?;
-        match tx.try_send(QueuedRequest { req, enqueued: Instant::now() }) {
+        self.open.fetch_add(1, Ordering::SeqCst);
+        let now = Instant::now();
+        match tx.try_send(QueuedRequest { req, enqueued: now, submitted: now }) {
             Ok(()) => {
                 self.metrics.inc("queued", 1);
                 Ok(true)
             }
             Err(TrySendError::Full(_)) => {
+                self.open.fetch_sub(1, Ordering::SeqCst);
                 self.metrics.inc("queue_rejected", 1);
                 Ok(false)
             }
             Err(TrySendError::Disconnected(_)) => {
+                self.open.fetch_sub(1, Ordering::SeqCst);
                 anyhow::bail!("batcher workers gone")
             }
         }
@@ -259,40 +315,95 @@ impl Drop for Batcher {
     }
 }
 
+/// Pop the next request for assembly. Decode re-entries take priority
+/// over fresh submissions (finish what is in flight — the standard
+/// continuous-batching discipline, and the one that bounds per-request
+/// completion time). Blocks until something arrives; returns `None`
+/// only when the submit side has closed *and* no request still owes a
+/// response (`open == 0`), so pending decode loops always drain.
+fn next_request(
+    submit_rx: &Receiver<QueuedRequest>,
+    decode_rx: &Receiver<QueuedRequest>,
+    open: &AtomicUsize,
+) -> Option<QueuedRequest> {
+    loop {
+        if let Ok(q) = decode_rx.try_recv() {
+            return Some(q);
+        }
+        match submit_rx.recv_timeout(DECODE_POLL) {
+            Ok(q) => return Some(q),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Submissions closed: drain the in-flight decode work. A
+    // disconnected decode lane means every worker has exited — no step
+    // can ever arrive again, so stop even if `open` never reached zero
+    // (a crashed worker's requests are lost either way; spinning here
+    // would hang shutdown).
+    loop {
+        match decode_rx.recv_timeout(DECODE_POLL) {
+            Ok(q) => return Some(q),
+            Err(RecvTimeoutError::Disconnected) => return None,
+            Err(RecvTimeoutError::Timeout) => {}
+        }
+        if open.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+    }
+}
+
 /// FIFO batch assembly with a linger window: take the first request
 /// (blocking), then fill up to `max_batch` from whatever arrives within
-/// `linger`, draining already-queued requests without waiting.
+/// `linger` — decode re-entries first, then fresh submissions — so a
+/// window naturally forms a *mixed* batch that the server splits into
+/// its prefill and decode chunks.
 fn assembler_loop(
-    rx: Receiver<QueuedRequest>,
+    submit_rx: Receiver<QueuedRequest>,
+    decode_rx: Receiver<QueuedRequest>,
     work_tx: SyncSender<Vec<QueuedRequest>>,
     max_batch: usize,
     linger: Duration,
+    open: Arc<AtomicUsize>,
     metrics: Arc<Registry>,
 ) {
+    let mut submit_open = true;
     loop {
-        let first = match rx.recv() {
-            Ok(q) => q,
-            Err(_) => return, // queue closed and drained
+        let Some(first) = next_request(&submit_rx, &decode_rx, &open) else {
+            return; // closed and fully drained
         };
         let mut batch = Vec::with_capacity(max_batch);
         batch.push(first);
         let deadline = Instant::now() + linger;
         while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(q) => {
-                    batch.push(q);
-                    continue;
+            if let Ok(q) = decode_rx.try_recv() {
+                batch.push(q);
+                continue;
+            }
+            if submit_open {
+                match submit_rx.try_recv() {
+                    Ok(q) => {
+                        batch.push(q);
+                        continue;
+                    }
+                    Err(TryRecvError::Disconnected) => submit_open = false,
+                    Err(TryRecvError::Empty) => {}
                 }
-                Err(TryRecvError::Disconnected) => break,
-                Err(TryRecvError::Empty) => {}
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 break;
             }
-            match rx.recv_timeout(remaining) {
-                Ok(q) => batch.push(q),
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            if submit_open {
+                match submit_rx.recv_timeout(remaining.min(DECODE_POLL)) {
+                    Ok(q) => batch.push(q),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => submit_open = false,
+                }
+            } else {
+                // Only decode re-entries can still arrive; poll them at
+                // the same cadence for the rest of the window.
+                std::thread::sleep(remaining.min(DECODE_POLL));
             }
         }
         for q in &batch {
@@ -306,14 +417,36 @@ fn assembler_loop(
     }
 }
 
-/// One serving replica: pop the next assembled batch, serve it, rewrite
-/// per-request latencies to enqueue→response, emit responses.
+/// Releases a batch's `open` slots when dropped — including during a
+/// panic unwind, so a worker dying mid-batch can never strand the
+/// assembler's shutdown drain waiting on slots nobody will release.
+/// Requests that re-enter as decode steps re-add their slot explicitly
+/// before this guard drops (transient over-count, never under-count —
+/// the drain must not observe a spurious zero).
+struct OpenSlots<'a> {
+    open: &'a AtomicUsize,
+    n: usize,
+}
+
+impl Drop for OpenSlots<'_> {
+    fn drop(&mut self) {
+        self.open.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// One serving replica: pop the next assembled batch, serve it, then
+/// per request either re-enqueue the next KV-grown decode step (output
+/// remaining) or emit the final response with its true
+/// submit→response latency.
 fn worker_loop(
     server: Server,
     policy: Policy,
     work_rx: Arc<Mutex<Receiver<Vec<QueuedRequest>>>>,
     resp_tx: Sender<Response>,
+    decode_tx: Sender<QueuedRequest>,
+    open: Arc<AtomicUsize>,
 ) {
+    let prompt_len = server.pipeline.model().seq_len;
     loop {
         // Hold the lock only for the pop; serving runs unlocked so the
         // other replicas pipeline their own batches meanwhile.
@@ -323,27 +456,61 @@ fn worker_loop(
         };
         let Ok(batch) = batch else { return };
         let mut reqs = Vec::with_capacity(batch.len());
-        let mut enqueued = Vec::with_capacity(batch.len());
+        let mut meta = Vec::with_capacity(batch.len());
         for q in batch {
+            meta.push((q.submitted, q.req.phase, q.req.output_len));
             reqs.push(q.req);
-            enqueued.push(q.enqueued);
         }
+        let slots = OpenSlots { open: &open, n: reqs.len() };
         match server.serve_batch(&reqs, policy) {
             Ok((responses, _stats)) => {
-                for (mut resp, t) in responses.into_iter().zip(enqueued) {
-                    resp.latency_s = t.elapsed().as_secs_f64();
+                for (mut resp, (submitted, phase, output_len)) in
+                    responses.into_iter().zip(meta)
+                {
+                    if output_len > 0 {
+                        // Autoregressive re-entry: this pass's output is
+                        // the next step's input, the KV cache grows by
+                        // the entry this pass wrote. The re-entry keeps
+                        // the request open: add its slot before the
+                        // batch guard releases this pass's.
+                        let next = EmbeddedRequest {
+                            id: resp.id,
+                            hidden: resp.hidden,
+                            phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
+                            output_len: output_len - 1,
+                        };
+                        server.metrics.inc("decode_steps", 1);
+                        open.fetch_add(1, Ordering::SeqCst);
+                        if decode_tx
+                            .send(QueuedRequest {
+                                req: next,
+                                enqueued: Instant::now(),
+                                submitted,
+                            })
+                            .is_err()
+                        {
+                            // Assembler gone mid-shutdown: the request
+                            // can never finish, release its slot.
+                            open.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        continue;
+                    }
+                    resp.latency_s = submitted.elapsed().as_secs_f64();
                     server.metrics.observe("request_latency", resp.latency_s);
                     if resp_tx.send(resp).is_err() {
-                        return;
+                        return; // guard releases the batch's slots
                     }
                 }
             }
             Err(e) => {
                 // Drop the batch but keep the replica alive; callers
-                // see the gap via the serve_errors counter.
+                // see the gap via the serve_errors counter. Every
+                // request of the failed batch is done for (the guard
+                // releases their slots).
                 server.metrics.inc("serve_errors", 1);
                 eprintln!("serving worker: batch failed: {e:#}");
             }
         }
+        drop(slots);
     }
 }

@@ -27,22 +27,35 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{GroupSplit, Testbed};
+use crate::config::{GroupSplit, Phase, Testbed};
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
 use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
 use crate::metrics::Registry;
 use crate::runtime::tensor::Tensor;
 use crate::sched::Order;
-use crate::solver::{self, Instance, PlanCache, Solution, SolverParams};
+use crate::solver::{self, bucket_up, Instance, PlanCache, ShapeKey, Solution, SolverParams};
 
 /// One embedded request: hidden states for a fixed-S prompt (embedding
 /// lookup is out of scope for the tiny model; requests arrive as
 /// `[S, M]` activations).
+///
+/// The phase drives *planning and accounting*, not artifact shapes: a
+/// decode step still executes through the fixed-S compiled stages (the
+/// tiny model is the numerics emulator), but it is scheduled under the
+/// decode-phase plan — solved against the emulated testbed where
+/// attention is KV-read-bound and experts see one token per sample —
+/// and it counts one generated token.
 #[derive(Debug, Clone)]
 pub struct EmbeddedRequest {
     pub id: u64,
     pub hidden: Tensor, // [S, M]
+    /// Prefill, or one autoregressive step against `kv_len` cached
+    /// entries.
+    pub phase: Phase,
+    /// Decode steps still to run after this pass (continuous-batching
+    /// re-entry in the batcher); 0 = this pass is the last.
+    pub output_len: usize,
 }
 
 impl EmbeddedRequest {
@@ -54,7 +67,15 @@ impl EmbeddedRequest {
                 ((x % 199) as f32 - 99.0) * 0.005
             })
             .collect();
-        Self { id, hidden: Tensor::new(vec![s, m], data) }
+        Self { id, hidden: Tensor::new(vec![s, m], data), phase: Phase::Prefill, output_len: 0 }
+    }
+
+    /// Synthetic autoregressive request: prefill now, `output_len`
+    /// decode steps to follow.
+    pub fn synthetic_autoregressive(id: u64, s: usize, m: usize, output_len: usize) -> Self {
+        let mut r = Self::synthetic(id, s, m);
+        r.output_len = output_len;
+        r
     }
 }
 
@@ -235,6 +256,13 @@ impl Server {
     /// Clears the plan cache when the split changes, since cached
     /// solutions were solved against the old split. Returns the split
     /// in effect afterwards.
+    ///
+    /// Splits are scored on the *prefill* serving solve: the split is
+    /// picked once at startup, before the stream reveals its
+    /// prefill/decode mix, and prefill is the phase whose throughput
+    /// the split genuinely moves (decode plans collapse to `r2 = 1`
+    /// and are KV-read-bound on the AG either way). Scoring by an
+    /// observed traffic mix is future work.
     pub fn select_plan_split(&mut self) -> GroupSplit {
         let model = self.pipeline.model().model.clone();
         let seq = self.pipeline.model().seq_len;
@@ -243,7 +271,7 @@ impl Server {
         for cand in
             solver::splitsearch::enumerate_candidates(self.plan_testbed.n_gpus, false)
         {
-            if let Some(sol) = self.solve_shape_for_split(cand.split, capacity) {
+            if let Some(sol) = self.solve_shape_for_split(cand.split, capacity, Phase::Prefill) {
                 if best.as_ref().map_or(true, |(t, _)| sol.throughput_tokens > *t) {
                     best = Some((sol.throughput_tokens, cand.split));
                 }
@@ -317,21 +345,35 @@ impl Server {
     /// the exhaustive fixed-`(m_a, r1)` scan as the fallback when the
     /// online solver calls the shape infeasible (e.g. an emulated
     /// testbed whose memory model rejects it).
-    fn solve_adaptive_shape(&self, capacity: usize) -> Option<Solution> {
-        self.solve_shape_for_split(self.plan_split, capacity)
+    fn solve_adaptive_shape(&self, capacity: usize, phase: Phase) -> Option<Solution> {
+        self.solve_shape_for_split(self.plan_split, capacity, phase)
     }
 
     /// The serving solve for one padded shape against an explicit
     /// split — the scoring primitive [`Server::select_plan_split`]
     /// ranks candidate splits with, so selection and serving share one
-    /// objective.
-    fn solve_shape_for_split(&self, split: GroupSplit, capacity: usize) -> Option<Solution> {
-        let inst = Instance::new(
-            self.pipeline.model().model.clone(),
-            self.plan_testbed.clone(),
-            split,
-            self.pipeline.model().seq_len,
-        );
+    /// objective. Decode shapes solve a decode-phase instance whose KV
+    /// length is normalized to its cache bucket's ceiling, so the plan
+    /// is conservative for (and shared by) every KV in the bucket and
+    /// cache-on/off runs stay byte-identical.
+    fn solve_shape_for_split(
+        &self,
+        split: GroupSplit,
+        capacity: usize,
+        phase: Phase,
+    ) -> Option<Solution> {
+        let model = self.pipeline.model().model.clone();
+        let inst = match phase {
+            Phase::Prefill => Instance::new(
+                model,
+                self.plan_testbed.clone(),
+                split,
+                self.pipeline.model().seq_len,
+            ),
+            Phase::Decode { kv_len } => {
+                Instance::decode(model, self.plan_testbed.clone(), split, bucket_up(kv_len))
+            }
+        };
         let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;
         solver::solve_online_bucketed(&inst, capacity, &self.solver_params, buckets)
             .or_else(|| self.bruteforce_shape(&inst, capacity, buckets))
@@ -372,17 +414,29 @@ impl Server {
         best
     }
 
+    /// Choose (m_a, r1, ExecConfig) for an Adaptive prefill batch of
+    /// `n` requests.
+    pub fn plan_adaptive(&self, n: usize) -> (usize, usize, ExecConfig) {
+        self.plan_adaptive_phase(n, Phase::Prefill)
+    }
+
     /// Choose (m_a, r1, ExecConfig) for an Adaptive batch of `n`
-    /// requests. Cached per `(seq len, padded capacity)` shape; a
+    /// requests in `phase`. Cached per `(phase, seq len, padded
+    /// capacity)` shape — decode KV lengths bucket into power-of-two
+    /// windows so plans are reused while the cache grows token by
+    /// token, and prefill/decode plans can never alias. A
     /// cache-disabled server runs the identical solve per batch, so the
     /// two modes produce byte-identical configurations.
-    pub fn plan_adaptive(&self, n: usize) -> (usize, usize, ExecConfig) {
+    pub fn plan_adaptive_phase(&self, n: usize, phase: Phase) -> (usize, usize, ExecConfig) {
         let capacity = self.padded_capacity(n);
-        let key = (self.pipeline.model().seq_len, capacity);
+        let key = match phase {
+            Phase::Prefill => ShapeKey::prefill(self.pipeline.model().seq_len, capacity),
+            Phase::Decode { kv_len } => ShapeKey::decode(kv_len, capacity),
+        };
         let sol = if self.cache_plans {
-            self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity))
+            self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity, phase))
         } else {
-            self.solve_adaptive_shape(capacity)
+            self.solve_adaptive_shape(capacity, phase)
         };
         match sol {
             Some(s) => (
@@ -426,7 +480,10 @@ impl Server {
     /// request order (padding samples dropped) and the stitched
     /// pipeline stats. Batches beyond the policy's capacity are split
     /// into capacity-sized chunks and served back to back, unless
-    /// [`Server::strict`] restores the pre-queue error.
+    /// [`Server::strict`] restores the pre-queue error. A batch mixing
+    /// prefill and decode requests is split into a prefill chunk and a
+    /// decode chunk, each scheduled under its own (separately cached)
+    /// phase plan, with responses stitched back in request order.
     pub fn serve_batch(
         &self,
         reqs: &[EmbeddedRequest],
@@ -446,8 +503,71 @@ impl Server {
         let cap = self.capacity(policy);
         anyhow::ensure!(cap > 0, "policy {policy:?} has zero capacity (r1 must be >= 1)");
         let t0 = Instant::now();
+
+        let n_decode = reqs.iter().filter(|r| r.phase.is_decode()).count();
+        if n_decode == 0 || n_decode == reqs.len() {
+            return self.serve_phase_batch(reqs, policy, t0);
+        }
+
+        // Mixed window: split into the prefill chunk and the decode
+        // chunk (order preserved within each class), serve each under
+        // its phase plan, and stitch responses back by original
+        // position. The split clones request tensors — only mixed
+        // windows pay it; the single-phase steady state (all-prefill or
+        // all-decode streams) keeps the zero-allocation arena path.
+        let mut pre = Vec::with_capacity(reqs.len() - n_decode);
+        let mut dec = Vec::with_capacity(n_decode);
+        let mut dec_pos = Vec::with_capacity(n_decode);
+        let mut pre_pos = Vec::with_capacity(reqs.len() - n_decode);
+        for (i, r) in reqs.iter().enumerate() {
+            if r.phase.is_decode() {
+                dec.push(r.clone());
+                dec_pos.push(i);
+            } else {
+                pre.push(r.clone());
+                pre_pos.push(i);
+            }
+        }
+        let mut stats = ForwardStats::default();
+        let mut slots: Vec<Option<Response>> = vec![None; reqs.len()];
+        for (chunk, pos) in [(&pre, &pre_pos), (&dec, &dec_pos)] {
+            let (resp, st) = self.serve_phase_batch(chunk, policy, t0)?;
+            stats.absorb(&st);
+            for (r, &i) in resp.into_iter().zip(pos.iter()) {
+                slots[i] = Some(r);
+            }
+        }
+        let responses = slots
+            .into_iter()
+            .map(|r| r.expect("every request slot filled by its phase chunk"))
+            .collect();
+        Ok((responses, stats))
+    }
+
+    /// Representative phase of a single-phase chunk: decode chunks plan
+    /// at their largest resident KV (padding model — the plan must hold
+    /// the longest cache in the chunk).
+    fn chunk_phase(reqs: &[EmbeddedRequest]) -> Phase {
+        reqs.iter()
+            .filter_map(|r| match r.phase {
+                Phase::Decode { kv_len } => Some(kv_len),
+                Phase::Prefill => None,
+            })
+            .max()
+            .map_or(Phase::Prefill, |kv_len| Phase::Decode { kv_len })
+    }
+
+    /// Serve a single-phase batch, chunking it by capacity.
+    fn serve_phase_batch(
+        &self,
+        reqs: &[EmbeddedRequest],
+        policy: Policy,
+        t0: Instant,
+    ) -> Result<(Vec<Response>, ForwardStats)> {
+        let phase = Self::chunk_phase(reqs);
+        let cap = self.capacity(policy);
         if reqs.len() <= cap {
-            return self.serve_chunk(reqs, policy, t0);
+            return self.serve_chunk(reqs, policy, t0, phase);
         }
         anyhow::ensure!(
             !self.strict,
@@ -457,7 +577,7 @@ impl Server {
         let mut responses = Vec::with_capacity(reqs.len());
         let mut stats = ForwardStats::default();
         for chunk in reqs.chunks(cap) {
-            let (r, st) = self.serve_chunk(chunk, policy, t0)?;
+            let (r, st) = self.serve_chunk(chunk, policy, t0, phase)?;
             responses.extend(r);
             stats.absorb(&st);
         }
@@ -472,6 +592,7 @@ impl Server {
         reqs: &[EmbeddedRequest],
         policy: Policy,
         t0: Instant,
+        phase: Phase,
     ) -> Result<(Vec<Response>, ForwardStats)> {
         let t_chunk = Instant::now();
         let (m_a, r1, cfg) = match policy {
@@ -483,7 +604,7 @@ impl Server {
             Policy::FinDep { r1, r2, order } => {
                 (self.fit_ma(reqs.len(), r1), r1, ExecConfig::findep(r1, r2, order))
             }
-            Policy::Adaptive => self.plan_adaptive(reqs.len()),
+            Policy::Adaptive => self.plan_adaptive_phase(reqs.len(), phase),
         };
         let s = self.pipeline.model().seq_len;
         let m = self.pipeline.model().model.embed;
@@ -518,7 +639,14 @@ impl Server {
 
         self.metrics.inc("batches", 1);
         self.metrics.inc("requests", responses.len() as u64);
-        self.metrics.inc("tokens", (responses.len() * s) as u64);
+        // Token accounting follows the phase: a prefill pass processed
+        // the whole prompt, a decode pass generated one token per
+        // sample.
+        let tok = phase.tokens_per_sample(s);
+        self.metrics.inc("tokens", (responses.len() * tok) as u64);
+        if phase.is_decode() {
+            self.metrics.inc("decode_tokens", responses.len() as u64);
+        }
         self.metrics.observe("batch_latency", chunk_latency);
         Ok((responses, stats))
     }

@@ -63,21 +63,38 @@ fn cmd_solve(args: &[String]) -> i32 {
     let spec = Spec::new("findep solve", "run Algorithm 1 and print the best configuration")
         .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
         .opt("testbed", "A", "testbed A|B|C|D")
-        .opt("seq", "2048", "sequence length S");
+        .opt("seq", "2048", "sequence length S")
+        .opt("phase", "prefill", "serving phase: prefill|decode")
+        .opt("kv", "0", "decode KV length per sample (0 = --seq)");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
     };
-    let Some(inst) = instance_from(&p) else {
+    let Some(mut inst) = instance_from(&p) else {
         eprintln!("unknown model or testbed");
         return 2;
     };
+    if p.get("phase") == "decode" {
+        let kv = match p.get_usize("kv") {
+            0 => p.get_usize("seq"),
+            kv => kv,
+        };
+        inst = solver::Instance::decode(inst.model.clone(), inst.testbed.clone(), inst.split, kv);
+    } else if p.get("phase") != "prefill" {
+        eprintln!("unknown phase '{}' (prefill|decode)", p.get("phase"));
+        return 2;
+    }
     match solver::solve(&inst, &SolverParams::default()) {
         Some(sol) => {
-            println!("instance: {} on {} S={}", inst.model.name, inst.testbed.name, inst.seq_len);
+            let phase_note = match inst.phase {
+                findep::config::Phase::Prefill => format!("S={}", inst.seq_len),
+                findep::config::Phase::Decode { kv_len } => format!("decode kv={kv_len}"),
+            };
+            println!("instance: {} on {} {}", inst.model.name, inst.testbed.name, phase_note);
             println!("best config: {}", sol.config.describe());
             println!("makespan: {:.3} ms", sol.makespan * 1e3);
-            println!("throughput: {:.2} tokens/s", sol.throughput_tokens);
+            let unit = if inst.phase.is_decode() { "decoded tokens/s" } else { "tokens/s" };
+            println!("throughput: {:.2} {unit}", sol.throughput_tokens);
             println!("solver: {:.1} ms, {} evaluations", sol.solve_seconds * 1e3, sol.evals);
             0
         }
@@ -243,6 +260,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("max-batch", "8", "max requests per assembled batch (queue mode)")
         .opt("linger-us", "500", "batch-fill window in µs (queue mode)")
         .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
+        .opt("decode-steps", "0", "decode steps per request after prefill (KV-growing)")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
@@ -283,6 +301,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
     let n_batches = p.get_usize("batches");
     let batch_size = p.get_usize("batch-size");
+    let decode_steps = p.get_usize("decode-steps");
 
     // Queue mode: the continuous batcher pipelines in-flight batches
     // through a pool of serving replicas.
@@ -312,7 +331,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         };
         let t0 = std::time::Instant::now();
         for i in 0..total {
-            if let Err(e) = batcher.submit(EmbeddedRequest::synthetic(i as u64, s, m)) {
+            let req = EmbeddedRequest::synthetic_autoregressive(i as u64, s, m, decode_steps);
+            if let Err(e) = batcher.submit(req) {
                 eprintln!("submit failed: {e:#}");
                 return 1;
             }
@@ -323,24 +343,25 @@ fn cmd_serve(args: &[String]) -> i32 {
             eprintln!("timed out: {} of {total} responses", resps.len());
             return 1;
         }
+        let tokens = total * (s + decode_steps);
         println!(
-            "served {total} requests ({} tokens) in {:.2}s -> {:.1} req/s, {:.1} tokens/s \
-             ({:?}, {} workers, max batch {})",
-            total * s,
+            "served {total} requests ({tokens} tokens, {} decoded) in {:.2}s -> {:.1} req/s, \
+             {:.1} tokens/s ({:?}, {} workers, max batch {})",
+            total * decode_steps,
             dt,
             total as f64 / dt,
-            (total * s) as f64 / dt,
+            tokens as f64 / dt,
             policy,
             cfg.workers,
             cfg.max_batch,
         );
         let cache = batcher.plan_cache();
         println!(
-            "plan cache: {} hits / {} misses ({} shapes); queue wait mean {:.3} ms over {} reqs",
+            "plan cache: {} hits / {} misses ({} shapes); queue wait mean {:.3} ms over {} passes",
             cache.hits(),
             cache.misses(),
             cache.len(),
-            batcher.metrics().histogram_mean("queue_wait") * 1e3,
+            batcher.metrics().histogram_mean("queue_wait").unwrap_or(0.0) * 1e3,
             batcher.metrics().histogram_count("queue_wait"),
         );
         println!("{}", findep::util::json::to_string_pretty(&batcher.metrics().snapshot_json()));
@@ -371,6 +392,30 @@ fn cmd_serve(args: &[String]) -> i32 {
                     stats.shared * 1e3,
                     stats.wait * 1e3
                 );
+                // Autoregressive tail: each response feeds the next
+                // KV-grown decode step, scheduled under the decode plan.
+                let mut hidden: Vec<_> = resp.into_iter().map(|r| (r.id, r.hidden)).collect();
+                for step in 0..decode_steps {
+                    let dreqs: Vec<EmbeddedRequest> = hidden
+                        .drain(..)
+                        .map(|(id, h)| EmbeddedRequest {
+                            id,
+                            hidden: h,
+                            phase: findep::config::Phase::Decode { kv_len: s + step },
+                            output_len: 0,
+                        })
+                        .collect();
+                    match srv.serve_batch(&dreqs, policy) {
+                        Ok((dresp, _)) => {
+                            tokens += dresp.len();
+                            hidden = dresp.into_iter().map(|r| (r.id, r.hidden)).collect();
+                        }
+                        Err(e) => {
+                            eprintln!("batch {b} decode step {step} failed: {e:#}");
+                            return 1;
+                        }
+                    }
+                }
             }
             Err(e) => {
                 eprintln!("batch {b} failed: {e:#}");

@@ -160,9 +160,11 @@ impl Registry {
         self.histograms.lock().unwrap().get(name).map(|h| h.count()).unwrap_or(0)
     }
 
-    /// Mean of a histogram (0.0 when it was never observed).
-    pub fn histogram_mean(&self, name: &str) -> f64 {
-        self.histograms.lock().unwrap().get(name).map(|h| h.mean()).unwrap_or(0.0)
+    /// Mean of a histogram, or `None` when no histogram of that name
+    /// was ever observed — distinguishable from a true zero mean (the
+    /// old 0.0 sentinel was not).
+    pub fn histogram_mean(&self, name: &str) -> Option<f64> {
+        self.histograms.lock().unwrap().get(name).map(|h| h.mean())
     }
 
     pub fn snapshot_json(&self) -> Json {
@@ -230,8 +232,12 @@ mod tests {
         assert!(r.histogram_json("lat").is_some());
         assert!(r.histogram_json("missing").is_none());
         assert_eq!(r.histogram_count("lat"), 400);
-        assert!((r.histogram_mean("lat") - 0.001).abs() < 1e-9);
+        assert!((r.histogram_mean("lat").unwrap() - 0.001).abs() < 1e-9);
         assert_eq!(r.histogram_count("missing"), 0);
-        assert_eq!(r.histogram_mean("missing"), 0.0);
+        // An unknown histogram is None, not a fake zero mean; a real
+        // all-zero histogram still reads back as Some(0.0).
+        assert_eq!(r.histogram_mean("missing"), None);
+        r.observe("zero", 0.0);
+        assert_eq!(r.histogram_mean("zero"), Some(0.0));
     }
 }

@@ -18,7 +18,7 @@
 //! * `t_a2e(m_e) = α_c + β_c·(E/eg)·m_e·M·bytes`, and t_e2a = t_a2e
 //!   (full-duplex symmetric links, §3.1).
 
-use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::config::{GroupSplit, ModelConfig, Phase, Testbed};
 use crate::perfmodel::linear::LinearModel;
 
 /// The three hardware component models fitted by micro-benchmarks
@@ -51,6 +51,19 @@ impl CompModels {
     }
 }
 
+/// Projection-GEMM workload scale per attention flavour: MLA's Q/KV
+/// projections factor through low-rank latents (DeepSeek-V2: q_lora
+/// 1536, c_KV 512+64), which cuts the projection workload to roughly
+/// 0.35x of the equivalent full-rank MHA projections. One table shared
+/// by the prefill and decode derivations so a recalibration cannot
+/// diverge the phases.
+fn proj_factor(model: &ModelConfig) -> f64 {
+    match model.attention {
+        crate::config::AttentionKind::Mha => 1.0,
+        crate::config::AttentionKind::Mla => 0.35,
+    }
+}
+
 /// Per-stage layer models for a concrete (model, testbed, split, S).
 ///
 /// All four stage times are linear in their micro-batch variable; this
@@ -79,6 +92,81 @@ impl StageModels {
         Self::from_components(model, &comp, split, seq_len)
     }
 
+    /// Phase-aware constructor: prefill keeps the Eqs. 10-11 derivation
+    /// at `S = seq_len`; decode re-derives every coefficient for the
+    /// autoregressive regime (one token per sample, KV-read-bound
+    /// attention at the testbed's HBM bandwidth). The struct shape is
+    /// identical either way — the phase is baked into the α/β
+    /// coefficients and `k_tokens`, so everything downstream (plans,
+    /// analytic closed forms, simulator, Algorithm 1) is phase-agnostic.
+    pub fn for_phase(
+        model: &ModelConfig,
+        tb: &Testbed,
+        split: GroupSplit,
+        seq_len: usize,
+        phase: Phase,
+    ) -> Self {
+        let comp = CompModels::from_testbed(tb, split);
+        match phase {
+            Phase::Prefill => Self::from_components(model, &comp, split, seq_len),
+            Phase::Decode { kv_len } => Self::decode_from_components(
+                model,
+                &comp,
+                split,
+                kv_len,
+                LinearModel::new(0.0, 1.0 / tb.hbm_bw),
+            ),
+        }
+    }
+
+    /// Decode-phase stage models: one generated token per sample per
+    /// forward pass. Relative to the prefill derivation (Eqs. 10-11 at
+    /// `S = 1`), the only structural change is the attention term —
+    /// instead of the `S²` score workload, each sample streams its
+    /// `kv_len + 1` resident KV entries (the cache plus this step's
+    /// write) per layer, so the cost is the *max* of the score FLOPs at
+    /// that KV length and the KV bytes through `kv_read` (seconds per
+    /// byte of device memory). On every paper testbed the byte term
+    /// dominates by orders of magnitude: decode attention is
+    /// memory-bound. Expert/shared GEMMs and the A2E transfer keep
+    /// their per-token coefficients; token conservation becomes
+    /// `m_a·ag·top_k·1 = m_e·r2·E`, shrinking `m_e` to roughly one
+    /// token per expert — which is why decode optima collapse to
+    /// `r2 = 1` (per-part launch overhead dwarfs the β terms).
+    pub fn decode_from_components(
+        model: &ModelConfig,
+        comp: &CompModels,
+        split: GroupSplit,
+        kv_len: usize,
+        kv_read: LinearModel,
+    ) -> Self {
+        // Everything except attention — shared-expert, expert, and
+        // transfer α/β plus token conservation — *is* the prefill
+        // derivation at S = 1 (one token per sample), so derive it
+        // there and keep one source for those formulas.
+        let mut sm = Self::from_components(model, comp, split, 1);
+
+        let m = model.embed as f64;
+        let nh = model.n_heads as f64;
+        let dk = model.d_k as f64;
+        let dv = model.d_v as f64;
+        // Q/K/V/O projections for one token per sample (same term
+        // `from_components` derives at S = 1; recomputed rather than
+        // subtracted back out of `sm.t_a.beta` so no floating-point
+        // residue of the S² score term leaks in), plus the KV regime
+        // replacing that score term: workload y = n_h·1·kv·(d_k+d_v)
+        // vs streaming the resident KV bytes of one layer — whichever
+        // bounds the kernel.
+        let kv_total = kv_len as f64 + 1.0;
+        let beta_gemm =
+            comp.gemm.beta * proj_factor(model) * (2.0 * m * nh * dk + 2.0 * m * nh * dv);
+        let y_decode = kv_total * nh * (dk + dv);
+        let kv_bytes_layer = kv_total * model.kv_bytes_per_token_layer() as f64;
+        let beta_attn = (comp.attn.beta * y_decode).max(kv_read.eval(kv_bytes_layer));
+        sm.t_a = LinearModel::new(sm.t_a.alpha, beta_gemm + beta_attn);
+        sm
+    }
+
     /// Build stage models from already-fitted component models (the path
     /// used after Fig.-7-style calibration).
     pub fn from_components(
@@ -98,19 +186,12 @@ impl StageModels {
         let nsh = model.n_shared as f64;
         let bytes = model.bytes_per_elem as f64;
 
-        // Eq. 1 -> Eqs. 10-11. For MLA the Q/KV projections factor
-        // through low-rank latents (DeepSeek-V2: q_lora 1536, c_KV
-        // 512+64), which cuts the projection GEMM workload to roughly
-        // 0.35x of the equivalent full-rank MHA projections; the S²
-        // attention term keeps the paper's n_h·(d_k+d_v) form ("MLA can
-        // also be modeled using similar formulations", §3.1).
-        let proj_factor = match model.attention {
-            crate::config::AttentionKind::Mha => 1.0,
-            crate::config::AttentionKind::Mla => 0.35,
-        };
+        // Eq. 1 -> Eqs. 10-11; the S² attention term keeps the paper's
+        // n_h·(d_k+d_v) form ("MLA can also be modeled using similar
+        // formulations", §3.1).
         let alpha_a = 4.0 * comp.gemm.alpha + comp.attn.alpha;
         let beta_a = comp.gemm.beta
-            * proj_factor
+            * proj_factor(model)
             * (2.0 * s * m * nh * dk + 2.0 * s * m * nh * dv)
             + comp.attn.beta * s * s * nh * (dk + dv);
 
@@ -238,6 +319,71 @@ mod tests {
         let per_byte_even = even.t_a2e.beta / (160.0 / 4.0);
         let per_byte_skewed = skewed.t_a2e.beta / (160.0 / 2.0);
         assert!(per_byte_skewed > per_byte_even);
+    }
+
+    fn decode_models(kv: usize) -> StageModels {
+        StageModels::for_phase(
+            &ModelConfig::deepseek_v2(8),
+            &Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+            Phase::Decode { kv_len: kv },
+        )
+    }
+
+    #[test]
+    fn for_phase_prefill_matches_new() {
+        let model = ModelConfig::deepseek_v2(8);
+        let tb = Testbed::a();
+        let split = GroupSplit::new(3, 5);
+        let a = StageModels::new(&model, &tb, split, 2048);
+        let b = StageModels::for_phase(&model, &tb, split, 2048, Phase::Prefill);
+        assert_eq!(a, b, "prefill phase must be the existing derivation, bit for bit");
+    }
+
+    #[test]
+    fn decode_token_conservation_is_one_token_per_sample() {
+        // m_a·ag·top_k·1 = m_e·r2·E: a decode step feeds each expert
+        // well under one token per sample.
+        let sm = decode_models(2048);
+        assert!((sm.k_tokens - 3.0 * 6.0 / 160.0).abs() < 1e-15);
+        assert!(sm.m_e(4.0, 1) < 1.0, "m_e = {}", sm.m_e(4.0, 1));
+    }
+
+    #[test]
+    fn decode_attention_is_kv_read_bound_and_grows_with_kv() {
+        let model = ModelConfig::deepseek_v2(8);
+        let tb = Testbed::a();
+        let split = GroupSplit::new(3, 5);
+        let comp = CompModels::from_testbed(&tb, split);
+        let sm = decode_models(2048);
+        // The KV-read term dominates the score FLOPs by orders of
+        // magnitude on every paper testbed: subtracting the projection
+        // GEMM part leaves exactly bytes / hbm_bw.
+        let beta_gemm =
+            comp.gemm.beta * 0.35 * (2.0 * 5120.0 * 128.0 * 192.0 + 2.0 * 5120.0 * 128.0 * 128.0);
+        let kv_bytes = 2049.0 * model.kv_bytes_per_token_layer() as f64;
+        let expect_mem = kv_bytes / tb.hbm_bw;
+        assert!((sm.t_a.beta - beta_gemm - expect_mem).abs() < 1e-12 * expect_mem);
+        // …and it genuinely is the binding term (the max picked it over
+        // the score FLOPs; MLA's compressed latent keeps the ratio
+        // modest, MHA models are memory-bound by orders of magnitude).
+        assert!(expect_mem > comp.attn.beta * 2049.0 * 128.0 * 320.0, "not memory-bound");
+        // Longer KV costs more attention; expert/comm coefficients are
+        // KV-independent.
+        let long = decode_models(8192);
+        assert!(long.attn_time(1.0) > sm.attn_time(1.0));
+        assert_eq!(long.t_e, sm.t_e);
+        assert_eq!(long.t_a2e, sm.t_a2e);
+    }
+
+    #[test]
+    fn decode_shared_expert_runs_on_one_token() {
+        let pre = models(); // S = 2048
+        let dec = decode_models(2048);
+        // Shared-expert β shrinks by exactly the S factor.
+        assert!((pre.t_s.beta / dec.t_s.beta - 2048.0).abs() < 1e-9 * 2048.0);
+        assert_eq!(pre.t_s.alpha, dec.t_s.alpha);
     }
 
     #[test]

@@ -39,7 +39,7 @@
 
 use std::time::Instant;
 
-use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::config::{GroupSplit, ModelConfig, Phase, Testbed};
 use crate::perfmodel::StageModels;
 use crate::sched::analytic::Analytic;
 use crate::sched::{Order, Plan, PlanBuffers, PlanConfig};
@@ -48,25 +48,43 @@ use crate::solver::memory::MemoryModel;
 use crate::util::stats::ternary_min_int;
 
 /// A solver problem instance.
+///
+/// `seq_len` is the tokens each sample contributes to one forward pass:
+/// the prompt length for prefill instances, 1 for decode instances
+/// (whose KV length lives in `phase`) — so `throughput_tokens` counts
+/// prompt tokens/s for prefill and generated tokens/s for decode.
 #[derive(Debug, Clone)]
 pub struct Instance {
     pub model: ModelConfig,
     pub testbed: Testbed,
     pub split: GroupSplit,
     pub seq_len: usize,
+    pub phase: Phase,
 }
 
 impl Instance {
     pub fn new(model: ModelConfig, testbed: Testbed, split: GroupSplit, seq_len: usize) -> Self {
-        Self { model, testbed, split, seq_len }
+        // The solve boundary: an empty batch shape (S = 0, e.g. from an
+        // empty serving window) must fail loudly here, not surface as a
+        // degenerate all-zero-duration plan winning the argmax.
+        assert!(seq_len >= 1, "zero-length sequence reached the solver");
+        Self { model, testbed, split, seq_len, phase: Phase::Prefill }
+    }
+
+    /// A decode-phase instance: every sample generates one token per
+    /// forward pass against `kv_len` cached KV entries.
+    pub fn decode(model: ModelConfig, testbed: Testbed, split: GroupSplit, kv_len: usize) -> Self {
+        let mut inst = Self::new(model, testbed, split, 1);
+        inst.phase = Phase::Decode { kv_len };
+        inst
     }
 
     pub fn stage_models(&self) -> StageModels {
-        StageModels::new(&self.model, &self.testbed, self.split, self.seq_len)
+        StageModels::for_phase(&self.model, &self.testbed, self.split, self.seq_len, self.phase)
     }
 
     pub fn memory(&self) -> MemoryModel {
-        MemoryModel::new(&self.model, &self.testbed, self.split, self.seq_len)
+        MemoryModel::for_phase(&self.model, &self.testbed, self.split, self.seq_len, self.phase)
     }
 
     /// Build the reusable candidate evaluator for this instance.
@@ -546,6 +564,42 @@ mod tests {
         assert_eq!(a.throughput_tokens, b.throughput_tokens);
         // No bucket divides the batch -> infeasible.
         assert!(solve_online_bucketed(&inst, 9, &params, &[2, 4]).is_none());
+    }
+
+    #[test]
+    fn decode_phase_solves_per_phase_plans() {
+        // Decode on the paper instance: token conservation at one token
+        // per sample makes m_e < 1, so the fine-grained split collapses
+        // to r2 = 1 — while the prefill solve of the same (model,
+        // testbed, split) keeps r2 > 1. The two phases genuinely need
+        // different plans (the premise of phase-keyed caching).
+        let params = SolverParams::default();
+        let dec = Instance::decode(
+            ModelConfig::deepseek_v2(8),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let d = solve(&dec, &params).expect("decode feasible");
+        assert_eq!(d.config.r2, 1, "decode m_e < 1 token must force r2 = 1");
+        assert!(d.throughput_tokens > 0.0);
+        let p = solve(&inst_deepseek(Testbed::a()), &params).unwrap();
+        assert!(p.config.r2 > 1, "prefill keeps fine-grained parts");
+        assert_ne!(p.config, d.config);
+        // Online decode mode respects the arriving batch.
+        let o = solve_online(&dec, 8, &params).expect("online decode feasible");
+        assert_eq!(o.config.m_a * o.config.r1, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-length sequence")]
+    fn zero_seq_len_rejected_at_solve_boundary() {
+        let _ = Instance::new(
+            ModelConfig::deepseek_v2(8),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            0,
+        );
     }
 
     #[test]

@@ -21,26 +21,58 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::config::Phase;
 use crate::solver::Solution;
 
 /// Round up to the next power of two — the shape-bucketing used for
 /// arbitrary online shapes (a 2-approximation keyspace keeps the cache
-/// small under lognormal prompt lengths).
+/// small under lognormal prompt lengths and token-by-token KV growth).
 pub fn bucket_up(x: usize) -> usize {
     x.max(1).next_power_of_two()
 }
 
-/// Cache key for an arbitrary `(seq_len, batch)` online shape. Serving
-/// paths with exact padded capacities (the coordinator pads to
-/// `r1 · m_a`) should key on those directly instead.
-pub fn shape_key(seq_len: usize, batch: usize) -> (usize, usize) {
-    (bucket_up(seq_len), bucket_up(batch))
+/// A plan-cache key: serving phase + sequence bucket + batch bucket.
+/// The phase is part of the identity, so a prefill plan and a decode
+/// plan of numerically identical `(seq, batch)` can never alias — they
+/// are solved against different stage models (the decode variant also
+/// carries its KV bucket inside [`Phase::Decode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ShapeKey {
+    pub phase: Phase,
+    pub seq: usize,
+    pub batch: usize,
 }
 
-/// Memoized `(seq bucket, batch bucket) -> Solution` store.
+impl ShapeKey {
+    /// Exact-valued prefill key (serving paths with exact padded
+    /// capacities — the coordinator pads to `r1 · m_a` — key on those
+    /// directly).
+    pub fn prefill(seq: usize, batch: usize) -> Self {
+        Self { phase: Phase::Prefill, seq, batch }
+    }
+
+    /// Decode key with the KV length bucketed: the cache stays small
+    /// while KV grows token by token, and one plan (solved at the
+    /// bucket ceiling, i.e. conservatively) serves the whole bucket.
+    pub fn decode(kv_len: usize, batch: usize) -> Self {
+        Self { phase: Phase::Decode { kv_len: bucket_up(kv_len) }, seq: 1, batch }
+    }
+}
+
+/// Cache key for an arbitrary online prefill `(seq_len, batch)` shape.
+pub fn shape_key(seq_len: usize, batch: usize) -> ShapeKey {
+    ShapeKey::prefill(bucket_up(seq_len), bucket_up(batch))
+}
+
+/// Cache key for an online decode `(kv_len, batch)` shape.
+pub fn shape_key_decode(kv_len: usize, batch: usize) -> ShapeKey {
+    ShapeKey::decode(kv_len, bucket_up(batch))
+}
+
+/// Memoized `ShapeKey -> Solution` store.
 #[derive(Debug, Default)]
 pub struct PlanCache {
-    map: Mutex<BTreeMap<(usize, usize), Option<Solution>>>,
+    map: Mutex<BTreeMap<ShapeKey, Option<Solution>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -55,7 +87,7 @@ impl PlanCache {
     /// infeasible).
     pub fn get_or_solve(
         &self,
-        key: (usize, usize),
+        key: ShapeKey,
         solve: impl FnOnce() -> Option<Solution>,
     ) -> Option<Solution> {
         let mut map = self.map.lock().unwrap();
@@ -71,7 +103,7 @@ impl PlanCache {
 
     /// Cached solution without solving (`None` = never solved; a cached
     /// infeasible shape reads back as `Some(None)`).
-    pub fn peek(&self, key: (usize, usize)) -> Option<Option<Solution>> {
+    pub fn peek(&self, key: ShapeKey) -> Option<Option<Solution>> {
         self.map.lock().unwrap().get(&key).cloned()
     }
 
@@ -114,7 +146,11 @@ mod tests {
         assert_eq!(bucket_up(1), 1);
         assert_eq!(bucket_up(5), 8);
         assert_eq!(bucket_up(8), 8);
-        assert_eq!(shape_key(3000, 6), (4096, 8));
+        assert_eq!(shape_key(3000, 6), ShapeKey::prefill(4096, 8));
+        assert_eq!(
+            shape_key_decode(3000, 6),
+            ShapeKey { phase: Phase::Decode { kv_len: 4096 }, seq: 1, batch: 8 }
+        );
     }
 
     #[test]
@@ -122,7 +158,7 @@ mod tests {
         let cache = PlanCache::new();
         let mut solves = 0usize;
         for _ in 0..5 {
-            let sol = cache.get_or_solve((2048, 8), || {
+            let sol = cache.get_or_solve(ShapeKey::prefill(2048, 8), || {
                 solves += 1;
                 solve_online(&paper_instance(), 8, &SolverParams::default())
             });
@@ -141,14 +177,48 @@ mod tests {
         let params = SolverParams::default();
         let fresh = solve_online(&inst, 8, &params).unwrap();
         let cached = cache
-            .get_or_solve((2048, 8), || solve_online(&inst, 8, &params))
+            .get_or_solve(ShapeKey::prefill(2048, 8), || solve_online(&inst, 8, &params))
             .unwrap();
         let hit = cache
-            .get_or_solve((2048, 8), || panic!("must not re-solve"))
+            .get_or_solve(ShapeKey::prefill(2048, 8), || panic!("must not re-solve"))
             .unwrap();
         assert_eq!(fresh.config, cached.config);
         assert_eq!(fresh.config, hit.config);
         assert_eq!(fresh.throughput_tokens, hit.throughput_tokens);
+    }
+
+    #[test]
+    fn prefill_and_decode_keys_never_alias() {
+        // Numerically identical (seq, batch) values under different
+        // phases are distinct cache entries: the decode solve must run
+        // even though the prefill shape is already memoized (and vice
+        // versa), and each phase's hit returns its own plan.
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let pre_inst = paper_instance();
+        let dec_inst = Instance::decode(
+            ModelConfig::deepseek_v2(8),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        let pre_key = ShapeKey::prefill(1, 8);
+        let dec_key = ShapeKey::decode(1, 8);
+        assert_ne!(pre_key, dec_key, "phase must be part of the key identity");
+        let pre = cache.get_or_solve(pre_key, || solve_online(&pre_inst, 8, &params)).unwrap();
+        assert_eq!(cache.misses(), 1);
+        let dec = cache.get_or_solve(dec_key, || solve_online(&dec_inst, 8, &params)).unwrap();
+        assert_eq!(cache.misses(), 2, "decode shape must not hit the prefill entry");
+        assert_eq!(cache.len(), 2);
+        // Hits stay phase-local and return the phase's own plan.
+        let pre_hit = cache.get_or_solve(pre_key, || panic!("prefill must hit")).unwrap();
+        let dec_hit = cache.get_or_solve(dec_key, || panic!("decode must hit")).unwrap();
+        assert_eq!(pre.config, pre_hit.config);
+        assert_eq!(dec.config, dec_hit.config);
+        assert_eq!(cache.hits(), 2);
+        // Decode KV buckets key separate plans too.
+        let far_key = ShapeKey::decode(100_000, 8);
+        assert_ne!(far_key, dec_key);
     }
 
     #[test]

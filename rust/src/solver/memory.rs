@@ -9,15 +9,20 @@
 //! (weights either fit or the split is invalid); the AG check bounds
 //! `r1·m_a`.
 
-use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::config::{GroupSplit, ModelConfig, Phase, Testbed};
 
-/// Memory occupancy calculator for one (model, testbed, split, S).
+/// Memory occupancy calculator for one (model, testbed, split, S,
+/// phase).
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
     pub model: ModelConfig,
     pub mem_bytes: usize,
     pub split: GroupSplit,
     pub seq_len: usize,
+    /// Serving phase: prefill holds `seq_len` KV entries plus the
+    /// full-prompt activation slab per sample; decode holds its
+    /// (grown) KV cache but only a one-token activation slab.
+    pub phase: Phase,
     /// Fraction of device memory usable for model state (the rest is
     /// framework overhead / fragmentation slack).
     pub usable_frac: f64,
@@ -25,11 +30,22 @@ pub struct MemoryModel {
 
 impl MemoryModel {
     pub fn new(model: &ModelConfig, tb: &Testbed, split: GroupSplit, seq_len: usize) -> Self {
+        Self::for_phase(model, tb, split, seq_len, Phase::Prefill)
+    }
+
+    pub fn for_phase(
+        model: &ModelConfig,
+        tb: &Testbed,
+        split: GroupSplit,
+        seq_len: usize,
+        phase: Phase,
+    ) -> Self {
         Self {
             model: model.clone(),
             mem_bytes: tb.mem_bytes,
             split,
             seq_len,
+            phase,
             usable_frac: 0.90,
         }
     }
@@ -54,10 +70,14 @@ impl MemoryModel {
 
     /// Per-sample dynamic bytes on an AG device: KV cache across all
     /// layers plus an activation working set (hidden states for one
-    /// layer, double-buffered).
+    /// layer, double-buffered). Prefill writes `seq_len` KV entries and
+    /// carries the full-prompt activation slab; a decode step holds its
+    /// `kv_len` cached entries plus the one it writes, but activations
+    /// for only the single generated token.
     pub fn ag_bytes_per_sample(&self) -> usize {
-        let kv = self.model.kv_bytes_per_sample(self.seq_len);
-        let act = 2 * self.seq_len * self.model.embed * self.model.bytes_per_elem;
+        let kv = self.model.kv_bytes_per_sample(self.phase.kv_resident(self.seq_len));
+        let tokens = self.phase.tokens_per_sample(self.seq_len);
+        let act = 2 * tokens * self.model.embed * self.model.bytes_per_elem;
         kv + act
     }
 
@@ -128,6 +148,44 @@ mod tests {
         );
         assert!(!m.eg_feasible());
         assert_eq!(m.get_max_r1(1, 8), 0);
+    }
+
+    fn mm_decode(kv: usize) -> MemoryModel {
+        MemoryModel::for_phase(
+            &ModelConfig::deepseek_v2(8),
+            &Testbed::a(),
+            GroupSplit::new(3, 5),
+            1,
+            Phase::Decode { kv_len: kv },
+        )
+    }
+
+    #[test]
+    fn decode_per_sample_bytes_pin_kv_growth() {
+        // Decode at kv_len reads kv_len entries and writes 1, with a
+        // one-token activation slab — the exact per-sample formula.
+        let model = ModelConfig::deepseek_v2(8);
+        let m = mm_decode(2048);
+        assert_eq!(
+            m.ag_bytes_per_sample(),
+            model.kv_bytes_per_sample(2049) + 2 * model.embed * model.bytes_per_elem
+        );
+        // KV growth monotonically squeezes capacity, step by step.
+        let samples = |kv: usize| mm_decode(kv).max_samples_per_ag_gpu();
+        assert!(samples(2049) <= samples(2048));
+        assert!(samples(8192) < samples(1024));
+    }
+
+    #[test]
+    fn decode_fits_more_samples_than_prefill_at_equal_kv() {
+        // Same resident KV, but no full-prompt activation slab: the
+        // decode phase holds strictly more in-flight samples (the slab
+        // dominates for MLA models whose latent KV is small).
+        let pre = mm(2048);
+        let dec = mm_decode(2047); // kv_resident = 2048, matching prefill
+        assert!(dec.max_samples_per_ag_gpu() > 2 * pre.max_samples_per_ag_gpu());
+        // And the r1 bound follows.
+        assert!(dec.get_max_r1(4, 1_000_000) > pre.get_max_r1(4, 1_000_000));
     }
 
     #[test]

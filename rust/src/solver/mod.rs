@@ -10,7 +10,9 @@
 //! [`bruteforce`] provides the exhaustive engine-only reference used by
 //! tests and by the Tables 3/4 monotonicity experiments. [`cache`]
 //! memoizes online solutions per `(seq bucket, batch bucket)` shape so
-//! the serving loop solves once per shape, not once per batch;
+//! the serving loop solves once per shape, not once per batch — with
+//! the serving phase part of the key, so prefill and decode plans can
+//! never alias;
 //! [`algorithm1::solve_online_bucketed`] is the serving entry that
 //! restricts `m_a` to the runtime's compiled attention buckets.
 //! [`splitsearch`] sits above Algorithm 1: it searches the (ag, eg)
@@ -29,7 +31,7 @@ pub use algorithm1::{
     solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode, solve_with,
     EvalMode, Evaluator, Instance, Solution, SolverParams,
 };
-pub use cache::{bucket_up, shape_key, PlanCache};
+pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, ShapeKey};
 pub use memory::MemoryModel;
 pub use splitsearch::{
     search as search_splits, search_serial as search_splits_serial, SearchParams, SearchReport,

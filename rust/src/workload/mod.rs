@@ -6,10 +6,19 @@
 //!   prompt lengths; batches form per arrival window and the scheduler
 //!   re-solves per batch. Scenarios are parameterized by the *mean
 //!   arriving token count* (the paper uses 3072 and 6144).
+//! * Decode mode (MegaScale-Infer's steady state): each request also
+//!   samples an *output length*; after its prompt prefills, the request
+//!   re-enters the stream as autoregressive decode steps — one token
+//!   per step, KV cache growing by one entry each time
+//!   ([`crate::config::Phase::next_kv_len`] is the shared growth rule;
+//!   [`Request::next_decode_step`] applies it to workload requests the
+//!   way the coordinator's batcher applies it to embedded ones).
 
+use crate::config::Phase;
 use crate::util::rng::Rng;
 
-/// One inference request.
+/// One inference request (or one autoregressive step of one — the
+/// phase distinguishes them).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
@@ -17,25 +26,56 @@ pub struct Request {
     pub seq_len: usize,
     /// Arrival time, seconds from epoch start.
     pub arrival_s: f64,
+    /// Prefill (process the whole prompt) or one decode step against a
+    /// grown KV cache.
+    pub phase: Phase,
+    /// Decode steps still to run after this pass completes (the
+    /// remaining sampled output length); 0 = this pass is the last.
+    pub output_len: usize,
 }
 
 impl Request {
+    /// A plain prefill-only request (no decode re-entry).
+    pub fn prefill(id: u64, seq_len: usize, arrival_s: f64) -> Self {
+        Self { id, seq_len, arrival_s, phase: Phase::Prefill, output_len: 0 }
+    }
+
+    /// Tokens this pass contributes: the prompt for prefill, one
+    /// generated token for a decode step.
     pub fn tokens(&self) -> usize {
-        self.seq_len
+        self.phase.tokens_per_sample(self.seq_len)
+    }
+
+    /// KV entries resident while this pass executes.
+    pub fn kv_resident(&self) -> usize {
+        self.phase.kv_resident(self.seq_len)
+    }
+
+    /// The decode step that follows this pass, its KV grown by the
+    /// entry this pass wrote ([`Phase::next_kv_len`]) — or `None` when
+    /// the sampled output is exhausted.
+    pub fn next_decode_step(&self) -> Option<Request> {
+        if self.output_len == 0 {
+            return None;
+        }
+        Some(Request {
+            phase: Phase::Decode { kv_len: self.phase.next_kv_len(self.seq_len) },
+            output_len: self.output_len - 1,
+            ..self.clone()
+        })
     }
 }
 
 /// Offline batch generator: `count` requests of identical length.
 pub fn offline_batch(count: usize, seq_len: usize) -> Vec<Request> {
-    (0..count)
-        .map(|i| Request { id: i as u64, seq_len, arrival_s: 0.0 })
-        .collect()
+    (0..count).map(|i| Request::prefill(i as u64, seq_len, 0.0)).collect()
 }
 
 /// Online arrival process: Poisson arrivals at `rate_per_s`, lognormal
-/// prompt lengths with the given mean/std, truncated to
-/// [min_len, max_len] and rounded to a multiple of `round_to` (shape
-/// buckets).
+/// prompt lengths with the given mean/std, rounded up to a multiple of
+/// `round_to` (shape buckets) and truncated to [min_len, max_len] —
+/// never above `max_len`, so every emitted length fits a compiled
+/// bucket.
 #[derive(Debug, Clone)]
 pub struct OnlineWorkload {
     pub rate_per_s: f64,
@@ -65,13 +105,94 @@ impl OnlineWorkload {
         (0..n)
             .map(|i| {
                 t += rng.exponential(self.rate_per_s);
-                let raw = rng.lognormal_mean_std(self.mean_len, self.std_len);
-                let len = (raw as usize).clamp(self.min_len, self.max_len);
-                let len = (len.div_ceil(self.round_to)) * self.round_to;
-                Request { id: i as u64, seq_len: len, arrival_s: t }
+                let len = self.sample_len(rng);
+                Request::prefill(i as u64, len, t)
             })
             .collect()
     }
+
+    /// One bucketed, bounded length. Rounding happens *before* the
+    /// clamp, and the clamp itself runs on the grid points inside
+    /// [min_len, max_len] (min rounded up, max rounded down), so an
+    /// emitted length is always a `round_to` multiple and never above
+    /// `max_len` — the old clamp-then-round order emitted
+    /// `max_len + round_to` whenever `max_len` was off the bucket grid,
+    /// overflowing the largest compiled attention bucket. Bounds so
+    /// tight that no grid point lies between them fall back to
+    /// `max_len` itself (bounded beats bucketed).
+    fn sample_len(&self, rng: &mut Rng) -> usize {
+        let raw = rng.lognormal_mean_std(self.mean_len, self.std_len);
+        let bucketed = (raw as usize).max(1).div_ceil(self.round_to) * self.round_to;
+        let grid_min = self.min_len.div_ceil(self.round_to) * self.round_to;
+        let grid_max = (self.max_len / self.round_to) * self.round_to;
+        if grid_min > grid_max {
+            return self.max_len;
+        }
+        bucketed.clamp(grid_min, grid_max)
+    }
+}
+
+/// Autoregressive serving workload: online prompt arrivals plus a
+/// lognormal *output length* per request. A generated request starts as
+/// a prefill pass carrying `output_len` pending decode steps; walking
+/// [`Request::next_decode_step`] yields the KV-growing step sequence.
+#[derive(Debug, Clone)]
+pub struct DecodeWorkload {
+    pub prompt: OnlineWorkload,
+    pub mean_output: f64,
+    pub std_output: f64,
+    pub min_output: usize,
+    pub max_output: usize,
+}
+
+impl DecodeWorkload {
+    /// Decode scenario over a Table-6 prompt distribution: mean output
+    /// 256 tokens, spread 0.5×, bounded to [16, 1024].
+    pub fn paper_scenario(mean_prompt_tokens: usize) -> Self {
+        Self {
+            prompt: OnlineWorkload::paper_scenario(mean_prompt_tokens),
+            mean_output: 256.0,
+            std_output: 128.0,
+            min_output: 16,
+            max_output: 1024,
+        }
+    }
+
+    /// Generate `n` requests (prefill passes with sampled pending
+    /// output lengths, Poisson arrivals from the prompt process).
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<Request> {
+        let mut reqs = self.prompt.generate(n, rng);
+        for r in &mut reqs {
+            let raw = rng.lognormal_mean_std(self.mean_output, self.std_output);
+            r.output_len = (raw as usize).clamp(self.min_output, self.max_output);
+        }
+        reqs
+    }
+}
+
+/// All passes of one request, prefill first then every KV-growing
+/// decode step (`1 + output_len` entries).
+pub fn decode_steps(req: &Request) -> Vec<Request> {
+    let mut out = vec![req.clone()];
+    while let Some(next) = out.last().unwrap().next_decode_step() {
+        out.push(next);
+    }
+    out
+}
+
+/// Split a mixed batch into its prefill and decode sub-batches,
+/// preserving order within each class — the shape the coordinator
+/// schedules under two separate cached plans.
+pub fn split_phases(batch: &[Request]) -> (Vec<Request>, Vec<Request>) {
+    let (mut pre, mut dec) = (Vec::new(), Vec::new());
+    for r in batch {
+        if r.phase.is_decode() {
+            dec.push(r.clone());
+        } else {
+            pre.push(r.clone());
+        }
+    }
+    (pre, dec)
 }
 
 /// Group online requests into serving batches: consecutive arrivals
@@ -101,9 +222,18 @@ pub fn window_batches(reqs: &[Request], window_s: f64, max_batch: usize) -> Vec<
 
 /// Representative sequence length for a batch: the max (padding model —
 /// every sample is padded up to the bucket the artifact was compiled
-/// for).
+/// for). The solve boundary: an empty batch has no shape and must be
+/// skipped by the caller before planning, never solved as `S = 0`.
 pub fn batch_seq_len(batch: &[Request]) -> usize {
-    batch.iter().map(|r| r.seq_len).max().unwrap_or(0)
+    assert!(!batch.is_empty(), "empty batch reached planning; skip it upstream");
+    batch.iter().map(|r| r.seq_len).max().unwrap()
+}
+
+/// Representative KV length for a decode sub-batch: the max resident
+/// KV (padding model). Same non-empty contract as [`batch_seq_len`].
+pub fn batch_kv_len(batch: &[Request]) -> usize {
+    assert!(!batch.is_empty(), "empty batch reached planning; skip it upstream");
+    batch.iter().map(|r| r.kv_resident()).max().unwrap()
 }
 
 #[cfg(test)]
@@ -116,6 +246,7 @@ mod tests {
         assert_eq!(b.len(), 16);
         assert!(b.iter().all(|r| r.seq_len == 2048 && r.arrival_s == 0.0));
         assert_eq!(b[3].tokens(), 2048);
+        assert!(b.iter().all(|r| r.phase == Phase::Prefill && r.output_len == 0));
     }
 
     #[test]
@@ -126,7 +257,7 @@ mod tests {
         assert_eq!(reqs.len(), 500);
         for r in &reqs {
             assert!(r.seq_len >= w.min_len);
-            assert!(r.seq_len <= w.max_len + w.round_to);
+            assert!(r.seq_len <= w.max_len, "len {} above max_len {}", r.seq_len, w.max_len);
             assert_eq!(r.seq_len % w.round_to, 0);
         }
         // Arrivals strictly increase.
@@ -140,10 +271,62 @@ mod tests {
     }
 
     #[test]
+    fn off_grid_bounds_still_emit_bucketed_lengths() {
+        // min_len off the grid: the lower clamp rounds up to the next
+        // grid point instead of emitting an off-bucket 300.
+        let w = OnlineWorkload {
+            rate_per_s: 4.0,
+            mean_len: 600.0,
+            std_len: 500.0,
+            min_len: 300,
+            max_len: 4096,
+            round_to: 256,
+        };
+        let mut rng = Rng::new(21);
+        for r in w.generate(500, &mut rng) {
+            assert_eq!(r.seq_len % 256, 0, "len {} off the bucket grid", r.seq_len);
+            assert!(r.seq_len >= 300 && r.seq_len <= 4096);
+        }
+        // Pathological band with no grid point inside: bounded wins.
+        let tight = OnlineWorkload { min_len: 300, max_len: 400, round_to: 256, ..w };
+        let mut rng = Rng::new(22);
+        for r in tight.generate(100, &mut rng) {
+            assert_eq!(r.seq_len, 400, "must fall back to max_len");
+        }
+    }
+
+    #[test]
+    fn clamp_happens_after_rounding() {
+        // Regression for the bucket-overflow bug: with max_len off the
+        // bucket grid and the mean pushed against it, the old
+        // clamp-then-round order rounded clamped lengths up to
+        // max_len + (round_to - max_len % round_to) — above max_len,
+        // missing every compiled bucket. Every length must stay
+        // ≤ max_len and on the bucket grid.
+        let w = OnlineWorkload {
+            rate_per_s: 4.0,
+            mean_len: 800.0,
+            std_len: 600.0,
+            min_len: 256,
+            max_len: 1000, // not a multiple of round_to
+            round_to: 256,
+        };
+        let mut rng = Rng::new(9);
+        let reqs = w.generate(2000, &mut rng);
+        // The effective ceiling is the largest grid point under
+        // max_len, and it must actually be hit.
+        assert!(reqs.iter().any(|r| r.seq_len == 768), "clamp never exercised");
+        for r in &reqs {
+            assert!(r.seq_len <= w.max_len, "len {} overflows max_len", r.seq_len);
+            assert!(r.seq_len >= w.min_len);
+            assert_eq!(r.seq_len % w.round_to, 0);
+        }
+    }
+
+    #[test]
     fn windows_respect_size_and_time() {
-        let reqs: Vec<Request> = (0..10)
-            .map(|i| Request { id: i, seq_len: 512, arrival_s: i as f64 * 0.1 })
-            .collect();
+        let reqs: Vec<Request> =
+            (0..10).map(|i| Request::prefill(i, 512, i as f64 * 0.1)).collect();
         let batches = window_batches(&reqs, 0.25, 3);
         assert!(batches.iter().all(|b| b.len() <= 3));
         let total: usize = batches.iter().map(|b| b.len()).sum();
@@ -154,12 +337,106 @@ mod tests {
     }
 
     #[test]
-    fn batch_seq_len_is_max() {
-        let b = vec![
-            Request { id: 0, seq_len: 512, arrival_s: 0.0 },
-            Request { id: 1, seq_len: 1024, arrival_s: 0.1 },
+    fn window_flushes_on_max_batch_mid_burst() {
+        // 7 requests in one instantaneous burst with max_batch = 3: the
+        // size cap must cut the burst into 3/3/1 in arrival order, and
+        // every flush re-heads the window at the overflowing request.
+        let reqs: Vec<Request> = (0..7).map(|i| Request::prefill(i, 512, 1.0)).collect();
+        let batches = window_batches(&reqs, 10.0, 3);
+        let sizes: Vec<usize> = batches.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+        let ids: Vec<u64> = batches.iter().flatten().map(|r| r.id).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>(), "flush reordered the burst");
+    }
+
+    #[test]
+    fn window_boundary_arrival_is_inclusive() {
+        // A request arriving exactly window_s after the batch head
+        // satisfies `arrival - head <= window_s` and joins the batch;
+        // one epsilon later starts a new batch.
+        let exact = vec![
+            Request::prefill(0, 512, 1.0),
+            Request::prefill(1, 512, 1.5), // == head + window_s
         ];
+        assert_eq!(window_batches(&exact, 0.5, 10).len(), 1);
+        let beyond = vec![
+            Request::prefill(0, 512, 1.0),
+            Request::prefill(1, 512, 1.5 + 1e-9),
+        ];
+        assert_eq!(window_batches(&beyond, 0.5, 10).len(), 2);
+        // The boundary is measured from the batch *head*, not the
+        // previous request: two in-window arrivals don't extend it.
+        let chain = vec![
+            Request::prefill(0, 512, 1.0),
+            Request::prefill(1, 512, 1.4),
+            Request::prefill(2, 512, 1.8), // 0.4 after prev, 0.8 after head
+        ];
+        assert_eq!(window_batches(&chain, 0.5, 10).len(), 2);
+    }
+
+    #[test]
+    fn batch_seq_len_is_max() {
+        let b = vec![Request::prefill(0, 512, 0.0), Request::prefill(1, 1024, 0.1)];
         assert_eq!(batch_seq_len(&b), 1024);
-        assert_eq!(batch_seq_len(&[]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch")]
+    fn batch_seq_len_rejects_empty_batches() {
+        let _ = batch_seq_len(&[]);
+    }
+
+    #[test]
+    fn decode_steps_grow_kv_one_token_at_a_time() {
+        let mut req = Request::prefill(7, 2048, 0.5);
+        req.output_len = 3;
+        let steps = decode_steps(&req);
+        assert_eq!(steps.len(), 4, "prefill + output_len decode steps");
+        assert_eq!(steps[0].phase, Phase::Prefill);
+        assert_eq!(steps[0].tokens(), 2048);
+        // Step t reads the prompt plus the t-1 tokens generated so far.
+        for (t, s) in steps[1..].iter().enumerate() {
+            assert_eq!(s.phase, Phase::Decode { kv_len: 2048 + t });
+            assert_eq!(s.tokens(), 1);
+            assert_eq!(s.kv_resident(), 2048 + t + 1);
+            assert_eq!(s.id, 7);
+        }
+        assert_eq!(steps[3].output_len, 0);
+        assert!(steps[3].next_decode_step().is_none());
+    }
+
+    #[test]
+    fn decode_workload_samples_bounded_outputs() {
+        let w = DecodeWorkload::paper_scenario(3072);
+        let mut rng = Rng::new(3);
+        let reqs = w.generate(300, &mut rng);
+        for r in &reqs {
+            assert_eq!(r.phase, Phase::Prefill, "requests enter as prefill");
+            assert!(r.output_len >= w.min_output && r.output_len <= w.max_output);
+            assert!(r.seq_len <= w.prompt.max_len);
+        }
+        // Outputs vary (it is a distribution, not a constant)...
+        let first = reqs[0].output_len;
+        assert!(reqs.iter().any(|r| r.output_len != first));
+        // ...with the mean near the target.
+        let mean: f64 =
+            reqs.iter().map(|r| r.output_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!((mean - 256.0).abs() / 256.0 < 0.25, "mean output {mean}");
+    }
+
+    #[test]
+    fn split_phases_preserves_order_within_class() {
+        let mut batch = Vec::new();
+        for i in 0..6u64 {
+            let mut r = Request::prefill(i, 512, 0.0);
+            if i % 2 == 0 {
+                r.phase = Phase::Decode { kv_len: 512 + i as usize };
+            }
+            batch.push(r);
+        }
+        let (pre, dec) = split_phases(&batch);
+        assert_eq!(pre.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 5]);
+        assert_eq!(dec.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(batch_kv_len(&dec), 512 + 4 + 1);
     }
 }

@@ -1,0 +1,254 @@
+//! Decode-phase serving tests: KV-growth accounting, phase-keyed plan
+//! cache isolation, per-phase solver behaviour, and (artifact-gated)
+//! mixed prefill/decode batch serving with FIFO fairness through the
+//! continuous batcher.
+
+use std::time::Duration;
+
+use findep::config::{GroupSplit, ModelConfig, Phase, Testbed};
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::runtime::artifacts_dir;
+use findep::solver::{self, Instance, MemoryModel, PlanCache, ShapeKey, SolverParams};
+use findep::util::rng::Rng;
+use findep::workload::{decode_steps, DecodeWorkload, Request};
+
+fn model() -> ModelConfig {
+    ModelConfig::deepseek_v2(8)
+}
+
+fn split() -> GroupSplit {
+    GroupSplit::new(3, 5)
+}
+
+// ---- KV-growth accounting ---------------------------------------------
+
+#[test]
+fn decode_memory_reads_kv_and_writes_one() {
+    let m = model();
+    let tb = Testbed::a();
+    // The decode phase at kv_len holds kv_len + 1 KV entries (reads the
+    // cache, writes this step's entry) and a one-token activation slab.
+    let mm = MemoryModel::for_phase(&m, &tb, split(), 1, Phase::Decode { kv_len: 2048 });
+    assert_eq!(
+        mm.ag_bytes_per_sample(),
+        m.kv_bytes_per_sample(2049) + 2 * m.embed * m.bytes_per_elem
+    );
+    // Walking a request's decode steps grows the resident KV by exactly
+    // one entry per generated token.
+    let mut req = Request::prefill(0, 2048, 0.0);
+    req.output_len = 8;
+    let steps = decode_steps(&req);
+    assert_eq!(steps.len(), 9);
+    let residents: Vec<usize> = steps[1..].iter().map(|s| s.kv_resident()).collect();
+    assert_eq!(residents, (2049..=2056).collect::<Vec<_>>());
+    // ...and the memory model tracks it monotonically.
+    let samples_at = |kv: usize| {
+        MemoryModel::for_phase(&m, &tb, split(), 1, Phase::Decode { kv_len: kv })
+            .max_samples_per_ag_gpu()
+    };
+    assert!(samples_at(2056) <= samples_at(2049));
+    assert!(samples_at(32768) < samples_at(2049));
+}
+
+#[test]
+fn decode_holds_more_inflight_samples_than_prefill() {
+    // Same resident KV, no full-prompt activation slab: the whole point
+    // of disaggregated decode serving is the much deeper in-flight
+    // sample pool (MegaScale-Infer's steady state).
+    let m = model();
+    let tb = Testbed::a();
+    let pre = MemoryModel::new(&m, &tb, split(), 2048);
+    let dec = MemoryModel::for_phase(&m, &tb, split(), 1, Phase::Decode { kv_len: 2047 });
+    assert!(dec.max_samples_per_ag_gpu() > pre.max_samples_per_ag_gpu());
+}
+
+// ---- per-phase solving ------------------------------------------------
+
+#[test]
+fn solver_produces_distinct_phase_plans() {
+    let params = SolverParams::default();
+    let pre = solver::solve(&Instance::new(model(), Testbed::a(), split(), 2048), &params)
+        .expect("prefill feasible");
+    let dec = solver::solve(&Instance::decode(model(), Testbed::a(), split(), 2048), &params)
+        .expect("decode feasible");
+    // Prefill overlaps communication behind fine-grained parts; decode
+    // token conservation (m_e < 1) collapses to r2 = 1.
+    assert!(pre.config.r2 > 1);
+    assert_eq!(dec.config.r2, 1);
+    assert_ne!(pre.config, dec.config);
+}
+
+// ---- phase-keyed cache isolation --------------------------------------
+
+#[test]
+fn plan_cache_isolates_phases() {
+    let params = SolverParams::default();
+    let cache = PlanCache::new();
+    let batch = 8usize;
+
+    // Solve and memoize the prefill shape first.
+    let pre_inst = Instance::new(model(), Testbed::a(), split(), 2048);
+    let mut solves = 0usize;
+    let pre = cache
+        .get_or_solve(ShapeKey::prefill(1, batch), || {
+            solves += 1;
+            solver::solve_online(&pre_inst, batch, &params)
+        })
+        .expect("prefill feasible");
+
+    // The decode shape with *numerically identical* (seq, batch) must
+    // miss — the phase is part of the key — and yield the decode plan.
+    let dec_inst = Instance::decode(model(), Testbed::a(), split(), 2048);
+    let dec = cache
+        .get_or_solve(ShapeKey::decode(1, batch), || {
+            solves += 1;
+            solver::solve_online(&dec_inst, batch, &params)
+        })
+        .expect("decode feasible");
+    assert_eq!(solves, 2, "decode must not alias the prefill entry");
+    assert_eq!(cache.len(), 2);
+
+    // Each phase's hit returns its own plan unchanged.
+    let pre_hit =
+        cache.get_or_solve(ShapeKey::prefill(1, batch), || panic!("prefill must hit")).unwrap();
+    let dec_hit =
+        cache.get_or_solve(ShapeKey::decode(1, batch), || panic!("decode must hit")).unwrap();
+    assert_eq!(pre.config, pre_hit.config);
+    assert_eq!(dec.config, dec_hit.config);
+    assert_ne!(pre_hit.config.r2, dec_hit.config.r2, "phases cached each other's plan");
+
+    // KV growth within one power-of-two bucket reuses the entry; a new
+    // bucket misses once.
+    assert_eq!(ShapeKey::decode(2049, batch), ShapeKey::decode(4096, batch));
+    assert_ne!(ShapeKey::decode(2048, batch), ShapeKey::decode(2049, batch));
+}
+
+// ---- decode workload shapes -------------------------------------------
+
+#[test]
+fn decode_workload_streams_are_plannable() {
+    // Every step of every generated request must produce a feasible
+    // online solve on the paper instance (the serving loop's invariant).
+    let w = DecodeWorkload::paper_scenario(3072);
+    let mut rng = Rng::new(11);
+    let reqs = w.generate(4, &mut rng);
+    let params = SolverParams::default();
+    for req in &reqs {
+        // Probe the prefill pass and a sample of decode steps (first,
+        // middle, last) rather than all ~256 for test speed.
+        let steps = decode_steps(req);
+        assert_eq!(steps.len(), 1 + req.output_len);
+        for idx in [0, 1, steps.len() / 2, steps.len() - 1] {
+            let step = &steps[idx];
+            let inst = match step.phase {
+                Phase::Prefill => Instance::new(model(), Testbed::a(), split(), step.seq_len),
+                Phase::Decode { kv_len } => {
+                    Instance::decode(model(), Testbed::a(), split(), kv_len)
+                }
+            };
+            let sol = solver::solve_online(&inst, 4, &params);
+            assert!(sol.is_some(), "step {idx} of request {} infeasible", req.id);
+        }
+    }
+}
+
+// ---- artifact-gated: mixed batches through the real coordinator -------
+
+fn skip() -> bool {
+    let missing = !artifacts_dir().join("manifest.json").exists();
+    if missing {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    missing
+}
+
+#[test]
+fn mixed_batch_preserves_request_order_and_numerics() {
+    if skip() {
+        return;
+    }
+    let srv = Server::new(ModelHandle::load(&artifacts_dir(), true).unwrap(), 2, None).unwrap();
+    let s = srv.pipeline.model().seq_len;
+    let m = srv.pipeline.model().model.embed;
+    // Interleave prefill and decode requests in one batch.
+    let batch: Vec<EmbeddedRequest> = (0..6u64)
+        .map(|i| {
+            let mut r = EmbeddedRequest::synthetic(i, s, m);
+            if i % 2 == 0 {
+                r.phase = Phase::Decode { kv_len: s + i as usize };
+            }
+            r
+        })
+        .collect();
+    let (resp, stats) = srv.serve_batch(&batch, Policy::Adaptive).unwrap();
+    assert_eq!(resp.len(), 6);
+    assert!(stats.total > 0.0);
+    // Responses come back in original request order despite the
+    // phase split...
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "mixed batch reordered responses");
+    }
+    // ...with numerics identical to serving each request alone (the
+    // phase changes scheduling and accounting, never values).
+    for (i, r) in resp.iter().enumerate() {
+        let (solo, _) = srv.serve_batch(&batch[i..i + 1], Policy::Naive).unwrap();
+        let diff = r.hidden.max_abs_diff(&solo[0].hidden);
+        assert!(diff < 1e-4, "request {i} drifted by {diff} in the mixed batch");
+    }
+    // Both phase plans were solved and cached separately.
+    assert!(srv.plan_cache().len() >= 2, "expected prefill + decode cached shapes");
+    // Token accounting: 3 prefill prompts + 3 decoded tokens... plus
+    // the 6 solo naive serves above (all prefill-priced except the
+    // decode solos).
+    assert_eq!(srv.metrics.counter("decode_tokens"), 3 + 3);
+}
+
+#[test]
+fn batcher_decode_reentry_completes_fifo() {
+    if skip() {
+        return;
+    }
+    let model = ModelHandle::load(&artifacts_dir(), true).unwrap();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let cfg = BatcherConfig {
+        workers: 1,
+        max_batch: 4,
+        policy: Policy::Adaptive,
+        linger: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let batcher = Batcher::new(model, cfg).unwrap();
+    let out_len = 3usize;
+    for i in 0..8u64 {
+        batcher
+            .submit(EmbeddedRequest::synthetic_autoregressive(i, s, m, out_len))
+            .unwrap();
+    }
+    let resps = batcher.drain(8, Duration::from_secs(60));
+    assert_eq!(resps.len(), 8, "autoregressive requests lost responses");
+    // Mixed-batch FIFO fairness: equal-output requests submitted in
+    // order finish in order (decode re-entries take priority over
+    // later submissions, so nobody leapfrogs a request that entered
+    // the decode loop earlier).
+    let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "responses missing or duplicated");
+    assert_eq!(ids, sorted, "equal-output requests completed out of submission order");
+    // Exactly output_len decode steps per request ran, each counted as
+    // one generated token; latency covers the whole loop.
+    assert_eq!(batcher.metrics().counter("decode_steps"), 8 * out_len as u64);
+    assert_eq!(batcher.metrics().counter("decode_tokens"), 8 * out_len as u64);
+    for r in &resps {
+        assert!(r.latency_s > 0.0);
+    }
+    // Every pass (prefill + each decode step) crossed the queue once.
+    assert_eq!(
+        batcher.metrics().histogram_count("queue_wait"),
+        8 * (1 + out_len) as u64
+    );
+    // Prefill and decode shapes live side by side in the shared cache.
+    assert!(batcher.plan_cache().len() >= 2);
+}

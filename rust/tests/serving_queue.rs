@@ -170,7 +170,12 @@ fn batcher_drains_fifo_with_one_worker() {
 
     // Malformed requests are rejected at the submission boundary (a
     // bad request must never sink an assembled batch in a worker).
-    let bad = EmbeddedRequest { id: 99, hidden: Tensor::zeros(vec![1]) };
+    let bad = EmbeddedRequest {
+        id: 99,
+        hidden: Tensor::zeros(vec![1]),
+        phase: findep::config::Phase::Prefill,
+        output_len: 0,
+    };
     assert!(batcher.submit(bad).is_err());
     assert_eq!(batcher.metrics().counter("queued"), 12, "rejected request was queued");
 }
