@@ -1,0 +1,211 @@
+//! Calibration-profile gates: fit → persist → solve must be lossless.
+//!
+//! Two hard gates, asserted before any timing:
+//!
+//! 1. **Bit-identity** — a synthetic profile whose constants equal
+//!    Table-2's, routed through its *serialized JSON form* (exactly the
+//!    `calibrate --out` → `solve --profile` workflow), produces
+//!    bit-identical plans, makespans, and throughputs to the
+//!    hand-constant path on every paper instance, prefill and decode.
+//! 2. **No cross-profile aliasing** — a perturbed profile produces a
+//!    *different* cached plan: the plan cache keyed by profile
+//!    fingerprint holds both entries, each hit returns its own plan,
+//!    and the hand-constant keyspace stays untouched.
+//!
+//! Also times the profile-driven solve against the hand-constant solve
+//! (the indirection must be free — both paths run the same Testbed
+//! derivation) and the JSON round-trip itself.
+//!
+//! Emits a `BENCH_calibration.json` trajectory file.
+//!
+//! Run: `cargo bench --bench calibration`
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::perfmodel::{CalibrationProfile, ProfileThresholds};
+use findep::solver::{self, Instance, PlanCache, ShapeKey, SolverParams};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+use findep::util::json::{parse, to_string_pretty, Json, JsonObj};
+
+fn paper_cases() -> Vec<(String, ModelConfig, Testbed, GroupSplit)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for (deepseek, name) in [(true, "deepseek"), (false, "qwen")] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+            out.push((format!("{name}/{}", tb.name), model, tb.clone(), split));
+        }
+    }
+    out
+}
+
+/// Route a profile through its serialized form, as the CLI would.
+fn round_trip(prof: &CalibrationProfile) -> CalibrationProfile {
+    let text = to_string_pretty(&prof.to_json());
+    CalibrationProfile::from_json(&parse(&text).expect("profile JSON parses"))
+        .expect("profile JSON loads")
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let params = SolverParams::default();
+    let seq = 2048usize;
+
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("calibration".into()));
+    report.insert("quick", Json::Bool(quick));
+
+    // ---- Gate 1: Table-2-equivalent profile is bit-identical. --------
+    let mut table = Table::new(
+        "Profile-driven solve vs hand constants (Table-2-equivalent profile)",
+        &["instance", "phase", "tokens/s", "bit-identical", "hand solve", "profile solve"],
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    let (mut sum_hand, mut sum_prof) = (0.0f64, 0.0f64);
+    for (label, model, tb, split) in paper_cases() {
+        let prof = round_trip(&CalibrationProfile::from_testbed(&tb));
+        prof.validate(&ProfileThresholds::default()).expect("synthetic profile valid");
+        let cal_tb = Testbed::from_profile(&tb, &prof);
+        for (phase_name, inst, cal_inst) in [
+            (
+                "prefill",
+                Instance::new(model.clone(), tb.clone(), split, seq),
+                Instance::new(model.clone(), cal_tb.clone(), split, seq),
+            ),
+            (
+                "decode",
+                Instance::decode(model.clone(), tb.clone(), split, seq),
+                Instance::decode(model.clone(), cal_tb.clone(), split, seq),
+            ),
+        ] {
+            let hand = solver::solve(&inst, &params);
+            let cal = solver::solve(&cal_inst, &params);
+            let (hand, cal) = match (hand, cal) {
+                (Some(h), Some(c)) => (h, c),
+                (None, None) => continue,
+                (h, c) => panic!(
+                    "feasibility disagreement on {label}/{phase_name}: hand={} profile={}",
+                    h.is_some(),
+                    c.is_some()
+                ),
+            };
+            assert_eq!(hand.config, cal.config, "plan differs on {label}/{phase_name}");
+            assert_eq!(
+                hand.throughput_tokens.to_bits(),
+                cal.throughput_tokens.to_bits(),
+                "throughput differs on {label}/{phase_name}"
+            );
+            assert_eq!(
+                hand.makespan.to_bits(),
+                cal.makespan.to_bits(),
+                "makespan differs on {label}/{phase_name}"
+            );
+
+            let r_hand = bencher.run(&format!("{label}/{phase_name}/hand"), || {
+                let _ = solver::solve(&inst, &params);
+            });
+            let r_prof = bencher.run(&format!("{label}/{phase_name}/profile"), || {
+                let _ = solver::solve(&cal_inst, &params);
+            });
+            sum_hand += r_hand.mean_s();
+            sum_prof += r_prof.mean_s();
+            table.row(&[
+                label.clone(),
+                phase_name.to_string(),
+                format!("{:.0}", hand.throughput_tokens),
+                "yes".into(),
+                fmt_duration(r_hand.mean_s()),
+                fmt_duration(r_prof.mean_s()),
+            ]);
+            let mut e = JsonObj::new();
+            e.insert("instance", Json::Str(label.clone()));
+            e.insert("phase", Json::Str(phase_name.into()));
+            e.insert("config", Json::Str(hand.config.describe()));
+            e.insert("tokens_per_s", Json::Num(hand.throughput_tokens));
+            e.insert("bit_identical", Json::Bool(true));
+            e.insert("hand_solve_mean_s", Json::Num(r_hand.mean_s()));
+            e.insert("profile_solve_mean_s", Json::Num(r_prof.mean_s()));
+            entries.push(Json::Obj(e));
+        }
+    }
+    table.print();
+    println!(
+        "aggregate solve time: hand {} vs profile-driven {} (same derivation, must be ~free)",
+        fmt_duration(sum_hand),
+        fmt_duration(sum_prof)
+    );
+    report.insert("instances", Json::Arr(entries));
+    report.insert("aggregate_hand_solve_s", Json::Num(sum_hand));
+    report.insert("aggregate_profile_solve_s", Json::Num(sum_prof));
+
+    // ---- Gate 2: perturbed profile → different plan, no aliasing. ----
+    let model = ModelConfig::deepseek_v2(8);
+    let tb = Testbed::a();
+    let split = GroupSplit::new(3, 5);
+    let table2 = round_trip(&CalibrationProfile::from_testbed(&tb));
+    // Strictly slower GEMM + link: every candidate's makespan strictly
+    // grows, so the winning throughput must strictly drop — "different
+    // plan" is guaranteed by monotonicity, not by luck.
+    let mut perturbed = CalibrationProfile::from_testbed(&tb);
+    perturbed.gemm.unit_per_s *= 0.5;
+    perturbed.comm.unit_per_s *= 0.5;
+    let perturbed = round_trip(&perturbed);
+    assert_ne!(table2.fingerprint(), perturbed.fingerprint(), "fingerprints must separate");
+
+    let cache = PlanCache::new();
+    let batch = 8usize;
+    let solve_under = |prof: &CalibrationProfile| {
+        let inst = Instance::new(model.clone(), Testbed::from_profile(&tb, prof), split, seq);
+        cache
+            .get_or_solve(ShapeKey::prefill(seq, batch).with_profile(prof.fingerprint()), || {
+                solver::solve_online(&inst, batch, &params)
+            })
+            .expect("paper instance is feasible")
+    };
+    let base = solve_under(&table2);
+    let moved = solve_under(&perturbed);
+    assert_eq!(cache.misses(), 2, "each profile must solve its own entry (no aliasing)");
+    assert_eq!(cache.hits(), 0);
+    assert_eq!(cache.len(), 2);
+    assert_ne!(
+        base.throughput_tokens.to_bits(),
+        moved.throughput_tokens.to_bits(),
+        "perturbed constants must move the cached plan"
+    );
+    let base2 = solve_under(&table2);
+    let moved2 = solve_under(&perturbed);
+    assert_eq!(cache.hits(), 2, "re-queries hit their own keyspaces");
+    assert_eq!(base.config, base2.config);
+    assert_eq!(moved.config, moved2.config);
+    println!(
+        "cross-profile isolation: {} entries, perturbed plan {} vs base {} tokens/s",
+        cache.len(),
+        moved.throughput_tokens,
+        base.throughput_tokens
+    );
+    let mut iso = JsonObj::new();
+    iso.insert("cache_entries", Json::Num(cache.len() as f64));
+    iso.insert("base_tokens_per_s", Json::Num(base.throughput_tokens));
+    iso.insert("perturbed_tokens_per_s", Json::Num(moved.throughput_tokens));
+    iso.insert("base_config", Json::Str(base.config.describe()));
+    iso.insert("perturbed_config", Json::Str(moved.config.describe()));
+    report.insert("isolation", Json::Obj(iso));
+
+    // ---- Round-trip cost (serialize + parse + validate). -------------
+    let prof = CalibrationProfile::from_testbed(&tb);
+    let r_rt = bencher.run("profile/json_round_trip", || {
+        let back = round_trip(&prof);
+        assert_eq!(back.fingerprint(), prof.fingerprint());
+    });
+    println!("profile JSON round-trip: {}", r_rt.report());
+    report.insert("round_trip_mean_s", Json::Num(r_rt.mean_s()));
+
+    std::fs::write("BENCH_calibration.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_calibration.json");
+    println!("wrote BENCH_calibration.json");
+}

@@ -39,7 +39,7 @@ fn main() {
         let s = probe::gemm_sample(&client, m, k, n, warmup, trials).expect("gemm probe");
         gemm_samples.push(s);
     }
-    let (gemm_model, gemm_r2) = calibrate::fit(&gemm_samples);
+    let (gemm_model, gemm_r2) = calibrate::fit(&gemm_samples).expect("gemm fit");
     for (s, &(m, k, n)) in gemm_samples.iter().zip(gemm_shapes) {
         let fit = gemm_model.eval(s.workload);
         t.row(&[
@@ -64,7 +64,7 @@ fn main() {
         attn_samples
             .push(probe::attention_sample(&client, hb, s, d, warmup, trials).expect("attn probe"));
     }
-    let (attn_model, attn_r2) = calibrate::fit(&attn_samples);
+    let (attn_model, attn_r2) = calibrate::fit(&attn_samples).expect("attention fit");
     let mut t = Table::new(
         "Fig. 7a (attention): measured vs fitted",
         &["heads·batch, S, d", "workload", "measured", "fitted"],
@@ -89,7 +89,8 @@ fn main() {
     } else {
         vec![1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 23]
     };
-    let (comm_model, comm_r2, comm_samples) = calibrate::calibrate_copy_link(&sizes);
+    let (comm_model, comm_r2, comm_samples) =
+        calibrate::calibrate_copy_link(&sizes, warmup, trials).expect("transfer calibration");
     let mut t = Table::new(
         "Fig. 7b (A2E/E2A transfer): measured vs fitted",
         &["bytes", "measured", "fitted"],

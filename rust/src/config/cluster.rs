@@ -117,6 +117,32 @@ impl Testbed {
         }
     }
 
+    /// Replace the measured component constants with a calibration
+    /// profile's fitted values, keeping `base`'s cluster topology (GPU
+    /// count, device memory, link kind, node layout): host probes can
+    /// measure throughputs and launch overheads, not how many GPUs the
+    /// deployment has. This is the trace-driven counterpart of the
+    /// hand-written Table-2 constructors — everything downstream
+    /// (stage models, memory model, solver, simulator) is untouched,
+    /// so a profile whose constants equal Table-2's reproduces the
+    /// hand-constant solve bit for bit.
+    pub fn from_profile(
+        base: &Testbed,
+        profile: &crate::perfmodel::profile::CalibrationProfile,
+    ) -> Self {
+        Self {
+            name: format!("{} [calibrated: {}]", base.name, profile.host),
+            gemm_flops: profile.gemm.unit_per_s,
+            alpha_comp_s: profile.gemm.alpha_s,
+            attn_flops: profile.attn.unit_per_s,
+            alpha_attn_s: profile.attn.alpha_s,
+            link_bw: profile.comm.unit_per_s,
+            alpha_comm_s: profile.comm.alpha_s,
+            hbm_bw: profile.hbm.unit_per_s,
+            ..base.clone()
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Self> {
         match name.to_uppercase().as_str() {
             "A" => Some(Self::a()),
@@ -210,6 +236,35 @@ mod tests {
         assert_eq!(Testbed::a().mem_bytes, 48 << 30);
         assert_eq!(Testbed::b().mem_bytes, 24 << 30);
         assert_eq!(Testbed::c().mem_bytes, 96 << 30);
+    }
+
+    #[test]
+    fn from_profile_swaps_constants_keeps_topology() {
+        use crate::perfmodel::profile::CalibrationProfile;
+        let base = Testbed::b();
+        // A Table-2-equivalent profile reproduces the constants bitwise.
+        let same = Testbed::from_profile(&base, &CalibrationProfile::from_testbed(&base));
+        for (a, b) in [
+            (same.gemm_flops, base.gemm_flops),
+            (same.attn_flops, base.attn_flops),
+            (same.alpha_comp_s, base.alpha_comp_s),
+            (same.alpha_attn_s, base.alpha_attn_s),
+            (same.link_bw, base.link_bw),
+            (same.alpha_comm_s, base.alpha_comm_s),
+            (same.hbm_bw, base.hbm_bw),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(same.name.contains("calibrated"));
+        // A measured profile moves only the measured constants.
+        let mut p = CalibrationProfile::from_testbed(&base);
+        p.gemm.unit_per_s = 42e12;
+        let cal = Testbed::from_profile(&base, &p);
+        assert_eq!(cal.gemm_flops, 42e12);
+        assert_eq!(cal.n_gpus, base.n_gpus);
+        assert_eq!(cal.mem_bytes, base.mem_bytes);
+        assert_eq!(cal.nvlink, base.nvlink);
+        assert_eq!(cal.multi_node, base.multi_node);
     }
 
     #[test]

@@ -136,8 +136,23 @@ pub struct Batcher {
 
 impl Batcher {
     /// Spin up the assembler and `cfg.workers` serving replicas over
-    /// one loaded model.
+    /// one loaded model, planning against the hand-written testbed
+    /// constants.
     pub fn new(model: ModelHandle, cfg: BatcherConfig) -> Result<Batcher> {
+        Self::with_profile(model, cfg, None)
+    }
+
+    /// [`Batcher::new`] with every replica's Adaptive planner driven by
+    /// a calibration profile's measured constants. The profile is
+    /// applied before the optional auto-split selection, so the split
+    /// itself is chosen under the calibrated view; its fingerprint
+    /// rides every plan-cache key, keeping calibrated and
+    /// hand-constant plans in disjoint keyspaces of the shared cache.
+    pub fn with_profile(
+        model: ModelHandle,
+        cfg: BatcherConfig,
+        profile: Option<&crate::perfmodel::profile::CalibrationProfile>,
+    ) -> Result<Batcher> {
         let metrics = Arc::new(Registry::new());
         let plan_cache = Arc::new(PlanCache::new());
         let workers = cfg.workers.max(1);
@@ -192,6 +207,9 @@ impl Batcher {
                 plan_cache.clone(),
             )?;
             server.cache_plans = cfg.cache_plans;
+            if let Some(p) = profile {
+                server.set_calibration_profile(p);
+            }
             if cfg.auto_split {
                 match chosen_split {
                     None => chosen_split = Some(server.select_plan_split()),

@@ -32,6 +32,7 @@ use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
 use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
 use crate::metrics::Registry;
+use crate::perfmodel::profile::{CalibrationProfile, ProfileId};
 use crate::runtime::tensor::Tensor;
 use crate::sched::Order;
 use crate::solver::{self, bucket_up, Instance, PlanCache, ShapeKey, Solution, SolverParams};
@@ -186,7 +187,11 @@ pub struct Server {
     /// Emulated testbed used by the Adaptive policy's solver (the tiny
     /// model's real CPU constants would make every schedule look alike;
     /// the solver plans against the testbed the deployment targets).
-    pub plan_testbed: Testbed,
+    /// Private on purpose: its constants and `plan_profile` must move
+    /// together — every mutation goes through
+    /// [`Server::set_calibration_profile`], otherwise a swapped testbed
+    /// would keep hitting plans cached under the old constants.
+    plan_testbed: Testbed,
     pub plan_split: GroupSplit,
     /// Memoize Adaptive plans per shape (disable to re-solve every
     /// batch — the cold-solve baseline of `benches/serving_speed.rs`).
@@ -194,6 +199,11 @@ pub struct Server {
     /// Pre-queue behaviour: error on batches beyond capacity instead of
     /// splitting them into chunks.
     pub strict: bool,
+    /// Identity of the constants `plan_testbed` carries — part of
+    /// every plan-cache key, so plans solved against different
+    /// calibration profiles (or the hand constants) can never alias
+    /// even though workers share one cache.
+    plan_profile: ProfileId,
     solver_params: SolverParams,
     plan_cache: Arc<PlanCache>,
     batch_buf: Mutex<BatchBuffers>,
@@ -231,6 +241,7 @@ impl Server {
             plan_split,
             cache_plans: true,
             strict: false,
+            plan_profile: ProfileId::HAND,
             solver_params: SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 8 },
             plan_cache,
             batch_buf: Mutex::new(BatchBuffers::new()),
@@ -239,6 +250,28 @@ impl Server {
 
     pub fn plan_cache(&self) -> &Arc<PlanCache> {
         &self.plan_cache
+    }
+
+    /// Drive the Adaptive planner with a calibration profile's measured
+    /// constants: the plan testbed's component constants are replaced
+    /// via [`Testbed::from_profile`] (cluster topology kept), and every
+    /// subsequent plan-cache key carries the profile's fingerprint —
+    /// cached hand-constant plans stay keyed under [`ProfileId::HAND`],
+    /// so switching profiles can never alias plans.
+    pub fn set_calibration_profile(&mut self, profile: &CalibrationProfile) {
+        self.plan_testbed = Testbed::from_profile(&self.plan_testbed, profile);
+        self.plan_profile = profile.fingerprint();
+    }
+
+    /// The constant-identity the planner keys its cache entries with.
+    pub fn plan_profile(&self) -> ProfileId {
+        self.plan_profile
+    }
+
+    /// The testbed the Adaptive planner currently solves against
+    /// (read-only — see [`Server::set_calibration_profile`]).
+    pub fn plan_testbed(&self) -> &Testbed {
+        &self.plan_testbed
     }
 
     /// Re-pick the Adaptive policy's emulated (ag, eg) planning split:
@@ -422,9 +455,10 @@ impl Server {
 
     /// Choose (m_a, r1, ExecConfig) for an Adaptive batch of `n`
     /// requests in `phase`. Cached per `(phase, seq len, padded
-    /// capacity)` shape — decode KV lengths bucket into power-of-two
-    /// windows so plans are reused while the cache grows token by
-    /// token, and prefill/decode plans can never alias. A
+    /// capacity, constants identity)` shape — decode KV lengths bucket
+    /// into power-of-two windows so plans are reused while the cache
+    /// grows token by token, and neither prefill/decode plans nor
+    /// plans solved under different calibration profiles can alias. A
     /// cache-disabled server runs the identical solve per batch, so the
     /// two modes produce byte-identical configurations.
     pub fn plan_adaptive_phase(&self, n: usize, phase: Phase) -> (usize, usize, ExecConfig) {
@@ -432,7 +466,8 @@ impl Server {
         let key = match phase {
             Phase::Prefill => ShapeKey::prefill(self.pipeline.model().seq_len, capacity),
             Phase::Decode { kv_len } => ShapeKey::decode(kv_len, capacity),
-        };
+        }
+        .with_profile(self.plan_profile);
         let sol = if self.cache_plans {
             self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity, phase))
         } else {

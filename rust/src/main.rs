@@ -19,7 +19,7 @@ use findep::coordinator::batcher::{Batcher, BatcherConfig};
 use findep::coordinator::links::LinkDelay;
 use findep::coordinator::moe::ModelHandle;
 use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
-use findep::perfmodel::calibrate;
+use findep::perfmodel::{calibrate, profile, CalibrationProfile, ComponentFit, ProfileThresholds};
 use findep::runtime::{artifacts_dir, probe};
 use findep::sched::{Order, Plan};
 use findep::simulator::{simulate, ScheduleTrace};
@@ -52,6 +52,41 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Load, gate, and announce a command's `--profile` argument ("" =
+/// hand constants); `Err` carries the process exit code. The
+/// validation layer runs here, at the use boundary: a profile that
+/// fails the R²/degeneracy gate never reaches a solver.
+fn profile_for(
+    p: &findep::util::args::Parsed,
+    doing: &str,
+) -> Result<Option<CalibrationProfile>, i32> {
+    let path = p.get("profile");
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let loaded = CalibrationProfile::load(std::path::Path::new(path))
+        .map_err(|e| format!("--profile {path}: {e}"))
+        .and_then(|prof| {
+            prof.validate(&ProfileThresholds::default())
+                .map_err(|e| format!("--profile {path} rejected: {e}"))
+                .map(|()| prof)
+        });
+    match loaded {
+        Ok(prof) => {
+            println!(
+                "{doing} under calibration profile {} (fingerprint {:016x})",
+                prof.host,
+                prof.fingerprint().0
+            );
+            Ok(Some(prof))
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            Err(2)
+        }
+    }
+}
+
 fn instance_from(p: &findep::util::args::Parsed) -> Option<Instance> {
     let testbed = Testbed::by_name(p.get("testbed"))?;
     let model = ModelConfig::paper_preset(p.get("model"), p.get("testbed"))?;
@@ -65,7 +100,8 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("testbed", "A", "testbed A|B|C|D")
         .opt("seq", "2048", "sequence length S")
         .opt("phase", "prefill", "serving phase: prefill|decode")
-        .opt("kv", "0", "decode KV length per sample (0 = --seq)");
+        .opt("kv", "0", "decode KV length per sample (0 = --seq)")
+        .opt("profile", "", "calibration profile JSON (from `calibrate --out`)");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
@@ -83,6 +119,34 @@ fn cmd_solve(args: &[String]) -> i32 {
     } else if p.get("phase") != "prefill" {
         eprintln!("unknown phase '{}' (prefill|decode)", p.get("phase"));
         return 2;
+    }
+    match profile_for(&p, "solving") {
+        Err(code) => return code,
+        Ok(Some(prof)) => {
+            let mut t = Table::new(
+                "calibrated vs Table-2 stage times (at m_a = 1, r2 = 1)",
+                &["stage", "Table-2", "calibrated", "delta"],
+            );
+            let deltas = profile::stage_deltas(
+                &inst.model,
+                &inst.testbed,
+                &prof,
+                inst.split,
+                inst.seq_len,
+                inst.phase,
+            );
+            for d in deltas {
+                t.row(&[
+                    d.stage.to_string(),
+                    format!("{:.4} ms", d.hand_s * 1e3),
+                    format!("{:.4} ms", d.calibrated_s * 1e3),
+                    format!("{:+.1}%", d.delta_pct()),
+                ]);
+            }
+            t.print();
+            inst.testbed = Testbed::from_profile(&inst.testbed, &prof);
+        }
+        Ok(None) => {}
     }
     match solver::solve(&inst, &SolverParams::default()) {
         Some(sol) => {
@@ -114,6 +178,7 @@ fn cmd_search_splits(args: &[String]) -> i32 {
     .opt("testbed", "A", "testbed A|B|C|D")
     .opt("seq", "2048", "sequence length S")
     .opt("threads", "0", "worker threads (0 = all cores)")
+    .opt("profile", "", "calibration profile JSON (from `calibrate --out`)")
     .flag("no-prune", "disable the analytic branch-and-bound pruning")
     .flag("no-replicas", "single-instance splits only (no cluster tilings)")
     .flag("serial", "also run the serial cold sweep and report its wall time");
@@ -128,6 +193,11 @@ fn cmd_search_splits(args: &[String]) -> i32 {
     let Some(model) = ModelConfig::paper_preset(p.get("model"), p.get("testbed")) else {
         eprintln!("unknown model");
         return 2;
+    };
+    let testbed = match profile_for(&p, "searching") {
+        Err(code) => return code,
+        Ok(Some(prof)) => Testbed::from_profile(&testbed, &prof),
+        Ok(None) => testbed,
     };
     let seq = p.get_usize("seq");
     let params = solver::SearchParams {
@@ -197,15 +267,21 @@ fn cmd_compare(args: &[String]) -> i32 {
         .opt("model", "deepseek-v2", "model preset")
         .opt("testbed", "A", "testbed A|B|C|D")
         .opt("seq", "2048", "sequence length S")
+        .opt("profile", "", "calibration profile JSON (from `calibrate --out`)")
         .flag("gantt", "print ASCII Gantt charts");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
     };
-    let Some(inst) = instance_from(&p) else {
+    let Some(mut inst) = instance_from(&p) else {
         eprintln!("unknown model or testbed");
         return 2;
     };
+    match profile_for(&p, "comparing") {
+        Err(code) => return code,
+        Ok(Some(prof)) => inst.testbed = Testbed::from_profile(&inst.testbed, &prof),
+        Ok(None) => {}
+    }
     let params = SolverParams::default();
     let naive = baselines::best_naive(&inst, params.ma_cap);
     let pp = baselines::best_pppipe(&inst, &params);
@@ -261,12 +337,17 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("linger-us", "500", "batch-fill window in µs (queue mode)")
         .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
         .opt("decode-steps", "0", "decode steps per request after prefill (KV-growing)")
+        .opt("profile", "", "calibration profile JSON driving the adaptive planner")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
+    };
+    let prof = match profile_for(&p, "adaptive planning") {
+        Ok(prof) => prof,
+        Err(code) => return code,
     };
     let dir = artifacts_dir();
     let model = match ModelHandle::load(&dir, !p.has_flag("noshared")) {
@@ -322,7 +403,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             0 => n_batches * batch_size,
             r => r,
         };
-        let batcher = match Batcher::new(model, cfg) {
+        let batcher = match Batcher::with_profile(model, cfg, prof.as_ref()) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("failed to start batcher: {e:#}");
@@ -370,6 +451,9 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     let mut srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
     srv.cache_plans = !p.has_flag("no-plan-cache");
+    if let Some(pr) = &prof {
+        srv.set_calibration_profile(pr);
+    }
     if p.has_flag("auto-split") {
         let split = srv.select_plan_split();
         println!("auto-split: adaptive plans target (ag={}, eg={})", split.ag, split.eg);
@@ -435,38 +519,173 @@ fn cmd_serve(args: &[String]) -> i32 {
 }
 
 fn cmd_calibrate(args: &[String]) -> i32 {
-    let spec = Spec::new("findep calibrate", "fit α-β models on this host (Fig. 7)")
-        .opt("trials", "9", "timed trials per point");
+    let spec = Spec::new(
+        "findep calibrate",
+        "fit α-β models on this host (Fig. 7) and optionally persist them as a profile",
+    )
+    .opt("trials", "9", "timed trials per point")
+    .opt("warmup", "3", "warmup runs per point")
+    .opt("out", "", "write the fitted calibration profile JSON here")
+    .opt("host", "", "host tag recorded in the profile (default $HOSTNAME)")
+    .flag("quick", "CI smoke mode: fewer probe points, caps trials at 3 and warmup at 1");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
     };
-    let trials = p.get_usize("trials");
+    let quick = p.has_flag("quick");
+    let trials = if quick { p.get_usize("trials").min(3) } else { p.get_usize("trials") };
+    let warmup = if quick { p.get_usize("warmup").min(1) } else { p.get_usize("warmup") };
     let client = xla::PjRtClient::cpu().expect("PJRT CPU client");
-    let mut gemm_samples = Vec::new();
-    for &(m, k, n) in
+
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(32, 64, 64), (64, 64, 128), (128, 128, 128)]
+    } else {
         &[(32, 64, 64), (64, 64, 128), (128, 128, 128), (256, 128, 256), (256, 256, 512)]
-    {
-        let s = probe::gemm_sample(&client, m, k, n, 3, trials).expect("gemm probe");
+    };
+    let mut gemm_samples = Vec::new();
+    for &(m, k, n) in gemm_shapes {
+        let s = probe::gemm_sample(&client, m, k, n, warmup, trials).expect("gemm probe");
         println!("gemm {m}x{k}x{n}: {:.3} ms", s.seconds * 1e3);
         gemm_samples.push(s);
     }
-    let (gm, r2g) = calibrate::fit(&gemm_samples);
+    let (gm, r2g) = match calibrate::fit(&gemm_samples) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("gemm: {e}");
+            return 1;
+        }
+    };
     println!("t_gm(x) = {:.3e} + {:.3e}·x  (R² = {:.6})", gm.alpha, gm.beta, r2g);
 
+    let attn_shapes: &[(usize, usize, usize)] = if quick {
+        &[(4, 16, 16), (8, 32, 16), (8, 64, 16)]
+    } else {
+        &[(4, 16, 16), (8, 32, 16), (8, 64, 16), (16, 64, 32)]
+    };
     let mut attn_samples = Vec::new();
-    for &(hb, s, d) in &[(4, 16, 16), (8, 32, 16), (8, 64, 16), (16, 64, 32)] {
-        let smp = probe::attention_sample(&client, hb, s, d, 3, trials).expect("attn probe");
+    for &(hb, s, d) in attn_shapes {
+        let smp = probe::attention_sample(&client, hb, s, d, warmup, trials).expect("attn probe");
         println!("attn hb={hb} S={s} d={d}: {:.3} ms", smp.seconds * 1e3);
         attn_samples.push(smp);
     }
-    let (am, r2a) = calibrate::fit(&attn_samples);
+    let (am, r2a) = match calibrate::fit(&attn_samples) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("attention: {e}");
+            return 1;
+        }
+    };
     println!("t_attn(y) = {:.3e} + {:.3e}·y  (R² = {:.6})", am.alpha, am.beta, r2a);
 
-    let (cm, r2c, _) =
-        calibrate::calibrate_copy_link(&[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22]);
+    let comm_sizes: &[usize] = if quick {
+        &[1 << 14, 1 << 16, 1 << 18]
+    } else {
+        &[1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22]
+    };
+    let comm = calibrate::calibrate_copy_link(comm_sizes, warmup, trials);
+    let (cm, r2c, comm_samples) = match comm {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("transfer: {e}");
+            return 1;
+        }
+    };
     println!("t_c(z) = {:.3e} + {:.3e}·z  (R² = {:.6})", cm.alpha, cm.beta, r2c);
+
+    let hbm_sizes: &[usize] = if quick {
+        &[1 << 18, 1 << 20, 1 << 22]
+    } else {
+        &[1 << 20, 1 << 22, 1 << 24, 1 << 25]
+    };
+    let hbm_samples: Vec<calibrate::Sample> =
+        hbm_sizes.iter().map(|&n| probe::hbm_stream_sample(n, warmup, trials)).collect();
+    let (hm, r2h) = match calibrate::fit(&hbm_samples) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("hbm: {e}");
+            return 1;
+        }
+    };
+    println!("t_hbm(z) = {:.3e} + {:.3e}·z  (R² = {:.6})", hm.alpha, hm.beta, r2h);
+
+    let host = match p.get("host") {
+        "" => std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown-host".into()),
+        h => h.to_string(),
+    };
+    let created_unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let built = build_profile(
+        host,
+        created_unix_s,
+        trials,
+        (gm, r2g, gemm_samples),
+        (am, r2a, attn_samples),
+        (cm, r2c, comm_samples),
+        (hm, r2h, hbm_samples),
+    );
+    let prof = match built {
+        Ok(prof) => prof,
+        Err(e) => {
+            eprintln!("refusing to build a profile from a degenerate fit — {e}");
+            return 1;
+        }
+    };
+    let th = ProfileThresholds::default();
+    // A smoke run on a noisy host may legitimately miss the R² bar, so
+    // this is a warning, not a failure: rejection is enforced where it
+    // matters, at every `--profile` load.
+    let valid = match prof.validate(&th) {
+        Ok(()) => {
+            println!("profile valid: every component clears R² ≥ {}", th.min_r2);
+            true
+        }
+        Err(e) => {
+            println!("WARNING: {e} — `--profile` loads will reject this calibration");
+            false
+        }
+    };
+    let out = p.get("out");
+    if !out.is_empty() {
+        if let Err(e) = prof.save(std::path::Path::new(out)) {
+            eprintln!("{e}");
+            return 1;
+        }
+        let note = if valid { "" } else { " — fails validation, kept for diagnosis only" };
+        println!("wrote {out} (fingerprint {:016x}){note}", prof.fingerprint().0);
+    }
     0
+}
+
+/// One fitted component as `calibrate` produces it: (model, R², samples).
+type Fit = (findep::perfmodel::LinearModel, f64, Vec<calibrate::Sample>);
+
+/// Assemble the persisted profile from the four component fits; a
+/// degenerate component (e.g. a slope clamped to zero) surfaces as an
+/// error naming it.
+fn build_profile(
+    host: String,
+    created_unix_s: u64,
+    trials: usize,
+    gemm: Fit,
+    attn: Fit,
+    comm: Fit,
+    hbm: Fit,
+) -> Result<CalibrationProfile, String> {
+    let mk = |name: &str, (m, r2, samples): Fit| {
+        ComponentFit::from_fit(m, r2, samples).map_err(|e| format!("{name}: {e}"))
+    };
+    Ok(CalibrationProfile {
+        version: profile::PROFILE_VERSION,
+        host,
+        created_unix_s,
+        trials,
+        gemm: mk("gemm", gemm)?,
+        attn: mk("attention", attn)?,
+        comm: mk("transfer", comm)?,
+        hbm: mk("hbm", hbm)?,
+    })
 }
 
 fn usage(msg: String) -> i32 {

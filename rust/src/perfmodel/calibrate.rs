@@ -9,23 +9,52 @@
 //! the simulator's testbed models use the analytic constants in
 //! `config::cluster` instead.
 
+use std::fmt;
 use std::time::Instant;
 
 use crate::perfmodel::{CompModels, LinearModel};
 use crate::util::stats;
 
 /// A single calibration observation: workload and measured seconds.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Sample {
     pub workload: f64,
     pub seconds: f64,
 }
 
-/// Fit an α-β model from samples, returning (model, R²).
-pub fn fit(samples: &[Sample]) -> (LinearModel, f64) {
+/// Error from fitting, validating, or persisting calibration data — a
+/// degenerate probe run must surface here, loudly, instead of producing
+/// NaN/∞ coefficients that would panic in `LinearModel::new` or
+/// silently poison a profile-driven solve.
+#[derive(Debug, Clone)]
+pub struct CalibrationError {
+    msg: String,
+}
+
+impl CalibrationError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for CalibrationError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "calibration error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for CalibrationError {}
+
+/// Fit an α-β model from samples, returning (model, R²). Errors on
+/// degenerate inputs (fewer than 2 samples, zero workload variance,
+/// non-finite measurements) — the strictness the profile validation
+/// layer builds on.
+pub fn fit(samples: &[Sample]) -> Result<(LinearModel, f64), CalibrationError> {
     let x: Vec<f64> = samples.iter().map(|s| s.workload).collect();
     let y: Vec<f64> = samples.iter().map(|s| s.seconds).collect();
-    LinearModel::fit(&x, &y)
+    LinearModel::try_fit(&x, &y).map_err(|e| {
+        CalibrationError::new(format!("cannot fit α-β model from {} samples: {e}", samples.len()))
+    })
 }
 
 /// Measure `f` with `warmup` throwaway runs and `trials` timed runs,
@@ -44,26 +73,38 @@ pub fn measure<F: FnMut()>(warmup: usize, trials: usize, mut f: F) -> f64 {
     stats::percentile(&times, 50.0)
 }
 
-/// Calibrate a host-side "transfer" model by timing buffer copies of
-/// increasing size through a channel (our A2E/E2A link substrate).
-/// Returns (model, R², samples).
-pub fn calibrate_copy_link(sizes: &[usize]) -> (LinearModel, f64, Vec<Sample>) {
+/// Calibrate a host-side "transfer" model by timing payload copies of
+/// increasing size through a channel handshake (our A2E/E2A link
+/// substrate). Returns (model, R², samples).
+///
+/// Setup stays out of the timed region: the channel is built once for
+/// the whole calibration and source/destination buffers are
+/// pre-allocated per size — the measured closure performs only the
+/// payload copy (the link's β, bytes through memory) and the channel
+/// send/recv round-trip (the link's α). The earlier version cloned the
+/// source and constructed a fresh channel inside the timed closure, so
+/// the fitted β mostly measured allocator throughput.
+pub fn calibrate_copy_link(
+    sizes: &[usize],
+    warmup: usize,
+    trials: usize,
+) -> Result<(LinearModel, f64, Vec<Sample>), CalibrationError> {
     use std::sync::mpsc;
-    let samples: Vec<Sample> = sizes
-        .iter()
-        .map(|&n| {
-            let src = vec![1.0f32; n / 4];
-            let seconds = measure(3, 9, || {
-                let (tx, rx) = mpsc::channel::<Vec<f32>>();
-                tx.send(src.clone()).unwrap();
-                let got = rx.recv().unwrap();
-                assert_eq!(got.len(), src.len());
-            });
-            Sample { workload: n as f64, seconds }
-        })
-        .collect();
-    let (m, r2) = fit(&samples);
-    (m, r2, samples)
+    let (tx, rx) = mpsc::channel::<usize>();
+    let mut samples = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        let src = vec![1.0f32; n / 4];
+        let mut dst = vec![0.0f32; n / 4];
+        let seconds = measure(warmup, trials, || {
+            dst.copy_from_slice(&src);
+            tx.send(n).unwrap();
+            assert_eq!(rx.recv().unwrap(), n);
+            std::hint::black_box(&dst);
+        });
+        samples.push(Sample { workload: n as f64, seconds });
+    }
+    let (m, r2) = fit(&samples)?;
+    Ok((m, r2, samples))
 }
 
 /// Build component models from three fitted pieces.
@@ -83,10 +124,27 @@ mod tests {
                 Sample { workload: w, seconds: 2e-5 + 1e-12 * w }
             })
             .collect();
-        let (m, r2) = fit(&samples);
+        let (m, r2) = fit(&samples).unwrap();
         assert!((m.alpha - 2e-5).abs() < 1e-9);
         assert!((m.beta - 1e-12).abs() < 1e-16);
         assert!(r2 > 0.999999, "r2={r2}");
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_calibration_inputs() {
+        // Too few points.
+        assert!(fit(&[]).is_err());
+        assert!(fit(&[Sample { workload: 1e6, seconds: 1e-3 }]).is_err());
+        // Zero-variance workloads: every probe ran the same shape.
+        let flat: Vec<Sample> =
+            (0..5).map(|i| Sample { workload: 4096.0, seconds: 1e-3 + i as f64 * 1e-5 }).collect();
+        assert!(fit(&flat).is_err());
+        // A non-finite measurement (e.g. a timer bug) must not fit.
+        let nan = vec![
+            Sample { workload: 1e6, seconds: 1e-3 },
+            Sample { workload: 2e6, seconds: f64::NAN },
+        ];
+        assert!(fit(&nan).is_err());
     }
 
     #[test]
@@ -103,8 +161,10 @@ mod tests {
 
     #[test]
     fn copy_link_calibration_is_monotone_enough() {
-        // Small sizes to stay fast; we only check the fit is usable.
-        let (m, _r2, samples) = calibrate_copy_link(&[1 << 12, 1 << 14, 1 << 16, 1 << 18]);
+        // Small sizes to stay fast; we only check the fit is usable and
+        // the CLI trial count is honored (3 warmup + 5 timed here).
+        let (m, _r2, samples) =
+            calibrate_copy_link(&[1 << 12, 1 << 14, 1 << 16, 1 << 18], 3, 5).unwrap();
         assert_eq!(samples.len(), 4);
         assert!(m.beta >= 0.0);
         assert!(m.alpha >= 0.0);

@@ -1,7 +1,7 @@
 //! The α-β linear time model (Eqs. 7-9): `t(x) = α + β·x`, with α the
 //! fixed launch/startup overhead and β the per-unit marginal cost.
 
-use crate::util::stats::{self, LinFit};
+use crate::util::stats::{self, FitError, LinFit};
 
 /// `t(x) = alpha + beta * x`, times in seconds.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,10 +24,29 @@ impl LinearModel {
 
     /// Least-squares fit from (workload, seconds) samples, clamping a
     /// (noise-induced) negative intercept to zero so the model stays a
-    /// valid cost function. Returns the model and the fit's R².
+    /// valid cost function. Returns the model and its R².
     pub fn fit(x: &[f64], y: &[f64]) -> (Self, f64) {
-        let LinFit { alpha, beta, r2 } = stats::linear_fit(x, y);
-        (Self { alpha: alpha.max(0.0), beta: beta.max(0.0) }, r2)
+        Self::clamped(stats::linear_fit(x, y), x, y)
+    }
+
+    /// Strict fit for calibration inputs: errors on degenerate samples
+    /// (fewer than 2 points, zero workload variance, non-finite values)
+    /// instead of returning a flat fallback model that would silently
+    /// poison a profile-driven solve.
+    pub fn try_fit(x: &[f64], y: &[f64]) -> Result<(Self, f64), FitError> {
+        Ok(Self::clamped(stats::try_linear_fit(x, y)?, x, y))
+    }
+
+    /// Clamp a raw least-squares fit into the valid cost cone. R² must
+    /// describe the model actually returned: when clamping changed a
+    /// coefficient, the residuals changed too, so re-score against the
+    /// clamped line instead of reporting the unclamped fit's quality
+    /// (which overstates it exactly when clamping mattered).
+    fn clamped(fit: LinFit, x: &[f64], y: &[f64]) -> (Self, f64) {
+        let LinFit { alpha, beta, r2 } = fit;
+        let (ca, cb) = (alpha.max(0.0), beta.max(0.0));
+        let r2 = if ca == alpha && cb == beta { r2 } else { stats::r_squared(x, y, ca, cb) };
+        (Self { alpha: ca, beta: cb }, r2)
     }
 
     /// Scale the marginal cost (e.g. derive β_s = 3·N_shared·β_gm·S·M·H
@@ -66,6 +85,43 @@ mod tests {
         let y = [0.9, 2.05, 3.0];
         let (m, _) = LinearModel::fit(&x, &y);
         assert!(m.alpha >= 0.0);
+    }
+
+    #[test]
+    fn clamped_fit_reports_clamped_r2() {
+        // A markedly negative intercept: the raw least-squares line fits
+        // these points exactly (R² = 1), but the clamped model (α = 0)
+        // does not — reporting the unclamped R² would claim a perfect
+        // fit for a model with visible residuals.
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| -1.0 + 2.0 * v).collect();
+        let raw = crate::util::stats::linear_fit(&x, &y);
+        assert!((raw.r2 - 1.0).abs() < 1e-12, "raw fit is exact");
+        let (m, r2) = LinearModel::fit(&x, &y);
+        assert_eq!(m.alpha, 0.0, "intercept clamped");
+        assert!(r2 < raw.r2, "clamped R² must drop: {r2} vs {}", raw.r2);
+        assert_eq!(r2, crate::util::stats::r_squared(&x, &y, m.alpha, m.beta));
+    }
+
+    #[test]
+    fn fit_without_clamping_keeps_least_squares_r2() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.1, 2.9, 4.2, 4.8];
+        let raw = crate::util::stats::linear_fit(&x, &y);
+        assert!(raw.alpha >= 0.0 && raw.beta >= 0.0, "no clamping in this case");
+        let (_, r2) = LinearModel::fit(&x, &y);
+        assert_eq!(r2, raw.r2);
+    }
+
+    #[test]
+    fn try_fit_errors_on_degenerate_inputs() {
+        assert!(LinearModel::try_fit(&[1.0], &[2.0]).is_err());
+        assert!(LinearModel::try_fit(&[3.0, 3.0], &[1.0, 2.0]).is_err());
+        assert!(LinearModel::try_fit(&[1.0, 2.0], &[f64::NAN, 1.0]).is_err());
+        let (m, r2) = LinearModel::try_fit(&[1.0, 2.0, 3.0], &[1.5, 2.5, 3.5]).unwrap();
+        assert!((m.beta - 1.0).abs() < 1e-12);
+        assert!((m.alpha - 0.5).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
     }
 
     #[test]

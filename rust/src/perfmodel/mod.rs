@@ -9,7 +9,10 @@
 
 pub mod calibrate;
 pub mod linear;
+pub mod profile;
 pub mod stage;
 
+pub use calibrate::CalibrationError;
 pub use linear::LinearModel;
+pub use profile::{CalibrationProfile, ComponentFit, ProfileId, ProfileThresholds};
 pub use stage::{CompModels, StageModels};

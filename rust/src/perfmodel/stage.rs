@@ -49,6 +49,20 @@ impl CompModels {
             comm: LinearModel::new(tb.alpha_comm_s, fanout / tb.link_bw),
         }
     }
+
+    /// Component models driven by a calibration profile's measured
+    /// constants instead of the hand-written Table-2 values: the
+    /// profile is substituted into `base` via [`Testbed::from_profile`]
+    /// and run through the *same* derivation, so the calibrated and
+    /// hand-constant paths cannot drift — identical constants produce
+    /// bit-identical models.
+    pub fn from_profile(
+        profile: &crate::perfmodel::profile::CalibrationProfile,
+        base: &Testbed,
+        split: GroupSplit,
+    ) -> Self {
+        Self::from_testbed(&Testbed::from_profile(base, profile), split)
+    }
 }
 
 /// Projection-GEMM workload scale per attention flavour: MLA's Q/KV
@@ -319,6 +333,24 @@ mod tests {
         let per_byte_even = even.t_a2e.beta / (160.0 / 4.0);
         let per_byte_skewed = skewed.t_a2e.beta / (160.0 / 2.0);
         assert!(per_byte_skewed > per_byte_even);
+    }
+
+    #[test]
+    fn profile_driven_comp_models_match_testbed_bitwise() {
+        use crate::perfmodel::profile::CalibrationProfile;
+        let tb = Testbed::c();
+        let split = GroupSplit::new(4, 4);
+        let hand = CompModels::from_testbed(&tb, split);
+        let cal = CompModels::from_profile(&CalibrationProfile::from_testbed(&tb), &tb, split);
+        assert_eq!(hand, cal, "Table-2-equivalent profile must not move a single bit");
+        // ...including through the full stage derivation for both phases.
+        let model = ModelConfig::qwen3_moe(12);
+        let cal_tb = Testbed::from_profile(&tb, &CalibrationProfile::from_testbed(&tb));
+        for phase in [Phase::Prefill, Phase::Decode { kv_len: 4096 }] {
+            let a = StageModels::for_phase(&model, &tb, split, 2048, phase);
+            let b = StageModels::for_phase(&model, &cal_tb, split, 2048, phase);
+            assert_eq!(a, b, "{phase:?}");
+        }
     }
 
     fn decode_models(kv: usize) -> StageModels {

@@ -80,6 +80,26 @@ pub fn attention_sample(
     Ok(Sample { workload: (heads_batch * s * s * 2 * d) as f64, seconds })
 }
 
+/// Measure sustained memory-streaming bandwidth by summing a buffer of
+/// `n_bytes` host memory; workload = bytes per pass. This is the
+/// calibration source for `Testbed::hbm_bw`, the rate the decode-phase
+/// attention regime is KV-read-bound at — fitted with the same α-β
+/// shape as the other components so a profile carries all four models.
+pub fn hbm_stream_sample(n_bytes: usize, warmup: usize, trials: usize) -> Sample {
+    let words = (n_bytes / 8).max(1);
+    let buf: Vec<u64> = (0..words as u64).collect();
+    let mut acc = 0u64;
+    let seconds = measure(warmup, trials, || {
+        let mut sum = 0u64;
+        for &w in &buf {
+            sum = sum.wrapping_add(w);
+        }
+        acc = acc.wrapping_add(std::hint::black_box(sum));
+    });
+    std::hint::black_box(acc);
+    Sample { workload: (words * 8) as f64, seconds }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,5 +118,12 @@ mod tests {
         let s = attention_sample(&client, 2, 16, 8, 1, 3).unwrap();
         assert!(s.seconds > 0.0);
         assert_eq!(s.workload, (2 * 16 * 16 * 16) as f64);
+    }
+
+    #[test]
+    fn hbm_stream_probe_runs() {
+        let s = hbm_stream_sample(1 << 16, 1, 3);
+        assert_eq!(s.workload, (1 << 16) as f64);
+        assert!(s.seconds > 0.0);
     }
 }

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::config::Phase;
+use crate::perfmodel::profile::ProfileId;
 use crate::solver::Solution;
 
 /// Round up to the next power of two — the shape-bucketing used for
@@ -31,31 +32,52 @@ pub fn bucket_up(x: usize) -> usize {
     x.max(1).next_power_of_two()
 }
 
-/// A plan-cache key: serving phase + sequence bucket + batch bucket.
+/// A plan-cache key: serving phase + sequence bucket + batch bucket +
+/// the identity of the constants the plan was solved against.
 /// The phase is part of the identity, so a prefill plan and a decode
 /// plan of numerically identical `(seq, batch)` can never alias — they
 /// are solved against different stage models (the decode variant also
-/// carries its KV bucket inside [`Phase::Decode`]).
+/// carries its KV bucket inside [`Phase::Decode`]). The profile
+/// fingerprint is part of the identity for the same reason: a plan
+/// solved against a calibration profile's measured constants must
+/// never be returned for the hand-constant keyspace (or another
+/// profile's), no matter how the shapes coincide — switching profiles
+/// can never alias plans.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeKey {
     pub phase: Phase,
     pub seq: usize,
     pub batch: usize,
+    /// [`ProfileId::HAND`] for the hand-written Table-2 constants,
+    /// otherwise the calibration profile's fingerprint.
+    pub profile: ProfileId,
 }
 
 impl ShapeKey {
     /// Exact-valued prefill key (serving paths with exact padded
     /// capacities — the coordinator pads to `r1 · m_a` — key on those
-    /// directly).
+    /// directly). Keys the hand-constant keyspace; chain
+    /// [`ShapeKey::with_profile`] for a calibrated one.
     pub fn prefill(seq: usize, batch: usize) -> Self {
-        Self { phase: Phase::Prefill, seq, batch }
+        Self { phase: Phase::Prefill, seq, batch, profile: ProfileId::HAND }
     }
 
     /// Decode key with the KV length bucketed: the cache stays small
     /// while KV grows token by token, and one plan (solved at the
     /// bucket ceiling, i.e. conservatively) serves the whole bucket.
     pub fn decode(kv_len: usize, batch: usize) -> Self {
-        Self { phase: Phase::Decode { kv_len: bucket_up(kv_len) }, seq: 1, batch }
+        Self {
+            phase: Phase::Decode { kv_len: bucket_up(kv_len) },
+            seq: 1,
+            batch,
+            profile: ProfileId::HAND,
+        }
+    }
+
+    /// Re-key onto a calibration profile's keyspace.
+    pub fn with_profile(mut self, profile: ProfileId) -> Self {
+        self.profile = profile;
+        self
     }
 }
 
@@ -149,8 +171,33 @@ mod tests {
         assert_eq!(shape_key(3000, 6), ShapeKey::prefill(4096, 8));
         assert_eq!(
             shape_key_decode(3000, 6),
-            ShapeKey { phase: Phase::Decode { kv_len: 4096 }, seq: 1, batch: 8 }
+            ShapeKey {
+                phase: Phase::Decode { kv_len: 4096 },
+                seq: 1,
+                batch: 8,
+                profile: ProfileId::HAND,
+            }
         );
+    }
+
+    #[test]
+    fn profiles_key_separate_plans() {
+        // The same shape under different constant identities must be
+        // distinct cache entries: a calibrated solve can never serve
+        // (or be served by) the hand-constant keyspace.
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let hand_key = ShapeKey::prefill(2048, 8);
+        let cal_key = hand_key.with_profile(ProfileId(0x5eed));
+        assert_ne!(hand_key, cal_key);
+        let _ = cache.get_or_solve(hand_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 1);
+        let _ = cache.get_or_solve(cal_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 2, "calibrated shape must not hit the hand entry");
+        assert_eq!(cache.len(), 2);
+        let _ = cache.get_or_solve(hand_key, || panic!("hand key must hit"));
+        let _ = cache.get_or_solve(cal_key, || panic!("calibrated key must hit"));
+        assert_eq!(cache.hits(), 2);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! tests and by the Tables 3/4 monotonicity experiments. [`cache`]
 //! memoizes online solutions per `(seq bucket, batch bucket)` shape so
 //! the serving loop solves once per shape, not once per batch — with
-//! the serving phase part of the key, so prefill and decode plans can
-//! never alias;
+//! the serving phase and the calibration-profile fingerprint part of
+//! the key, so prefill/decode plans and plans solved against different
+//! measured constants can never alias;
 //! [`algorithm1::solve_online_bucketed`] is the serving entry that
 //! restricts `m_a` to the runtime's compiled attention buckets.
 //! [`splitsearch`] sits above Algorithm 1: it searches the (ag, eg)
@@ -32,6 +33,7 @@ pub use algorithm1::{
     EvalMode, Evaluator, Instance, Solution, SolverParams,
 };
 pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, ShapeKey};
+pub use crate::perfmodel::profile::ProfileId;
 pub use memory::MemoryModel;
 pub use splitsearch::{
     search as search_splits, search_serial as search_splits_serial, SearchParams, SearchReport,

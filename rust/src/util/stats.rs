@@ -62,6 +62,82 @@ pub struct LinFit {
     pub r2: f64,
 }
 
+/// Why [`try_linear_fit`] refused to fit. Calibration inputs that would
+/// produce meaningless or non-finite coefficients must fail loudly here
+/// instead of poisoning a downstream solve (the lenient [`linear_fit`]
+/// keeps its flat-model fallbacks for non-calibration callers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitError {
+    /// Fewer than 2 samples: a line is not identifiable.
+    TooFewSamples(usize),
+    /// All workloads identical: the slope is not identifiable.
+    ZeroVariance,
+    /// A sample (or the resulting coefficient) is NaN/∞.
+    NonFinite,
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::TooFewSamples(n) => {
+                write!(f, "need at least 2 samples to fit a line, got {n}")
+            }
+            FitError::ZeroVariance => {
+                write!(f, "all workloads are identical (zero variance); slope unidentifiable")
+            }
+            FitError::NonFinite => write!(f, "non-finite sample or coefficient"),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
+/// Strict least-squares fit: errors on degenerate inputs (fewer than 2
+/// samples, zero workload variance, non-finite values) instead of
+/// returning the flat-model fallbacks [`linear_fit`] uses.
+pub fn try_linear_fit(x: &[f64], y: &[f64]) -> Result<LinFit, FitError> {
+    assert_eq!(x.len(), y.len(), "try_linear_fit: length mismatch");
+    if x.len() < 2 {
+        return Err(FitError::TooFewSamples(x.len()));
+    }
+    if x.iter().chain(y).any(|v| !v.is_finite()) {
+        return Err(FitError::NonFinite);
+    }
+    let mx = mean(x);
+    if x.iter().map(|xi| (xi - mx) * (xi - mx)).sum::<f64>() == 0.0 {
+        return Err(FitError::ZeroVariance);
+    }
+    let fit = linear_fit(x, y);
+    if !fit.alpha.is_finite() || !fit.beta.is_finite() || !fit.r2.is_finite() {
+        return Err(FitError::NonFinite);
+    }
+    Ok(fit)
+}
+
+/// R² of an *explicit* line `y ≈ alpha + beta·x` against the data — not
+/// necessarily the least-squares line, so the value can be negative
+/// (worse than predicting the mean). Used to re-score a fit after its
+/// coefficients were clamped into the valid cost cone. For zero-variance
+/// `y`, returns 1.0 on zero residual and -∞ otherwise.
+pub fn r_squared(x: &[f64], y: &[f64], alpha: f64, beta: f64) -> f64 {
+    assert_eq!(x.len(), y.len(), "r_squared: length mismatch");
+    if y.is_empty() {
+        return 0.0;
+    }
+    let my = mean(y);
+    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
+    let ss_res: f64 = x.iter().zip(y).map(|(xi, yi)| (yi - (alpha + beta * xi)).powi(2)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 {
+            1.0
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
 /// Least-squares fit of y = alpha + beta*x. Panics on len mismatch;
 /// returns a flat model when x has no variance.
 pub fn linear_fit(x: &[f64], y: &[f64]) -> LinFit {
@@ -79,12 +155,10 @@ pub fn linear_fit(x: &[f64], y: &[f64]) -> LinFit {
     }
     let beta = sxy / sxx;
     let alpha = my - beta * mx;
-    let ss_tot: f64 = y.iter().map(|yi| (yi - my) * (yi - my)).sum();
-    let ss_res: f64 =
-        x.iter().zip(y).map(|(xi, yi)| (yi - (alpha + beta * xi)).powi(2)).sum();
-    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
     let _ = n;
-    LinFit { alpha, beta, r2 }
+    // The least-squares line has zero residual whenever y is flat, so
+    // r_squared's conventions coincide with the old inline computation.
+    LinFit { alpha, beta, r2: r_squared(x, y, alpha, beta) }
 }
 
 /// Minimize a convex (or unimodal) function over the integer interval
@@ -191,6 +265,35 @@ mod tests {
         let fit = linear_fit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]);
         assert_eq!(fit.beta, 0.0);
         assert_eq!(fit.alpha, 2.0);
+    }
+
+    #[test]
+    fn try_fit_rejects_degenerate_inputs() {
+        assert_eq!(try_linear_fit(&[], &[]), Err(FitError::TooFewSamples(0)));
+        assert_eq!(try_linear_fit(&[1.0], &[2.0]), Err(FitError::TooFewSamples(1)));
+        assert_eq!(try_linear_fit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]), Err(FitError::ZeroVariance));
+        assert_eq!(try_linear_fit(&[1.0, f64::NAN], &[1.0, 2.0]), Err(FitError::NonFinite));
+        assert_eq!(try_linear_fit(&[1.0, 2.0], &[1.0, f64::INFINITY]), Err(FitError::NonFinite));
+    }
+
+    #[test]
+    fn try_fit_matches_lenient_fit_on_good_inputs() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 0.5 + 2.0 * v).collect();
+        assert_eq!(try_linear_fit(&x, &y).unwrap(), linear_fit(&x, &y));
+    }
+
+    #[test]
+    fn r_squared_scores_explicit_lines() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 0.5 + 2.0 * v).collect();
+        // The true line explains everything; a wrong line can score
+        // below zero (worse than the mean predictor).
+        assert!((r_squared(&x, &y, 0.5, 2.0) - 1.0).abs() < 1e-12);
+        assert!(r_squared(&x, &y, 100.0, -3.0) < 0.0);
+        // Zero-variance y: exact flat line is perfect, anything else -∞.
+        assert_eq!(r_squared(&[1.0, 2.0], &[5.0, 5.0], 5.0, 0.0), 1.0);
+        assert_eq!(r_squared(&[1.0, 2.0], &[5.0, 5.0], 0.0, 0.0), f64::NEG_INFINITY);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Calibration-profile integration tests: fit → persist → solve.
+//!
+//! Pins the tentpole contract end to end: a profile round-trips through
+//! JSON bit-exactly, the validation layer rejects what it must, a
+//! Table-2-equivalent profile reproduces the hand-constant solve bit
+//! for bit on every paper instance, and plans solved under distinct
+//! profiles occupy disjoint plan-cache keyspaces.
+
+use findep::config::{GroupSplit, ModelConfig, Phase, Testbed};
+use findep::perfmodel::{profile, CalibrationProfile, CompModels, ProfileId, ProfileThresholds};
+use findep::solver::{self, Instance, PlanCache, ShapeKey, SolverParams};
+use findep::util::json;
+
+fn paper_instances() -> Vec<(ModelConfig, Testbed)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        out.push((ModelConfig::deepseek_v2(8), tb.clone()));
+        out.push((ModelConfig::qwen3_moe(12), tb));
+    }
+    out
+}
+
+#[test]
+fn profile_file_round_trip_preserves_comp_models_bitwise() {
+    let tb = Testbed::a();
+    let prof = CalibrationProfile::from_testbed(&tb);
+    let path = std::env::temp_dir().join("findep_profile_roundtrip_test.json");
+    prof.save(&path).unwrap();
+    let loaded = CalibrationProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded, prof, "write → read must be lossless");
+    assert_eq!(loaded.fingerprint(), prof.fingerprint());
+    loaded.validate(&ProfileThresholds::default()).unwrap();
+    // The derived component models — the interface the whole solver
+    // stack consumes — are bit-identical across the round trip and
+    // equal to the hand-constant derivation.
+    for split in [GroupSplit::new(3, 5), GroupSplit::new(4, 4), GroupSplit::new(6, 2)] {
+        let hand = CompModels::from_testbed(&tb, split);
+        let from_loaded = CompModels::from_profile(&loaded, &tb, split);
+        assert_eq!(hand, from_loaded, "split {split:?}");
+    }
+}
+
+#[test]
+fn load_rejects_malformed_profiles() {
+    let dir = std::env::temp_dir();
+    let garbage = dir.join("findep_profile_garbage_test.json");
+    std::fs::write(&garbage, "{not json").unwrap();
+    assert!(CalibrationProfile::load(&garbage).is_err());
+    std::fs::write(&garbage, r#"{"version": 1, "host": "x"}"#).unwrap();
+    let err = CalibrationProfile::load(&garbage).unwrap_err().to_string();
+    assert!(err.contains("gemm"), "missing component named: {err}");
+    std::fs::remove_file(&garbage).ok();
+    assert!(CalibrationProfile::load(&dir.join("findep_no_such_profile.json")).is_err());
+}
+
+#[test]
+fn validation_gates_r2_and_degenerate_fits() {
+    let th = ProfileThresholds::default();
+    let mut prof = CalibrationProfile::from_testbed(&Testbed::b());
+    prof.validate(&th).unwrap();
+    prof.gemm.r2 = th.min_r2 - 1e-6;
+    let err = prof.validate(&th).unwrap_err().to_string();
+    assert!(err.contains("gemm") && err.contains("R²"), "{err}");
+    // A stricter bar rejects what the default accepts.
+    let mut prof = CalibrationProfile::from_testbed(&Testbed::b());
+    prof.attn.r2 = 0.95;
+    prof.validate(&th).unwrap();
+    assert!(prof.validate(&ProfileThresholds { min_r2: 0.999, ..th }).is_err());
+    // Degenerate constants never pass, whatever the thresholds.
+    let mut prof = CalibrationProfile::from_testbed(&Testbed::b());
+    prof.hbm.unit_per_s = 0.0;
+    assert!(prof.validate(&th).is_err());
+}
+
+#[test]
+fn table2_equivalent_profile_solves_bit_identically_everywhere() {
+    let params = SolverParams::default();
+    for (model, tb) in paper_instances() {
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        let prof = CalibrationProfile::from_testbed(&tb);
+        // Route the profile through its serialized form, exactly as a
+        // `calibrate --out` → `solve --profile` workflow would.
+        let text = json::to_string_pretty(&prof.to_json());
+        let prof = CalibrationProfile::from_json(&json::parse(&text).unwrap()).unwrap();
+        let cal_tb = Testbed::from_profile(&tb, &prof);
+
+        for inst in [
+            Instance::new(model.clone(), tb.clone(), split, 2048),
+            Instance::decode(model.clone(), tb.clone(), split, 2048),
+        ] {
+            let cal_inst = match inst.phase {
+                Phase::Prefill => Instance::new(model.clone(), cal_tb.clone(), split, inst.seq_len),
+                Phase::Decode { kv_len } => {
+                    Instance::decode(model.clone(), cal_tb.clone(), split, kv_len)
+                }
+            };
+            let hand = solver::solve(&inst, &params);
+            let cal = solver::solve(&cal_inst, &params);
+            match (hand, cal) {
+                (Some(h), Some(c)) => {
+                    assert_eq!(
+                        h.config,
+                        c.config,
+                        "{} on {} {:?}",
+                        model.name,
+                        tb.name,
+                        inst.phase
+                    );
+                    assert_eq!(
+                        h.throughput_tokens.to_bits(),
+                        c.throughput_tokens.to_bits(),
+                        "{} on {} {:?}",
+                        model.name,
+                        tb.name,
+                        inst.phase
+                    );
+                    assert_eq!(h.makespan.to_bits(), c.makespan.to_bits());
+                }
+                (None, None) => {}
+                (h, c) => panic!(
+                    "feasibility must agree: hand={} cal={} ({} on {})",
+                    h.is_some(),
+                    c.is_some(),
+                    model.name,
+                    tb.name
+                ),
+            }
+        }
+        // And the stage-delta report confirms zero movement, in both
+        // phase derivations.
+        for phase in [Phase::Prefill, Phase::Decode { kv_len: 2048 }] {
+            for d in profile::stage_deltas(&model, &tb, &prof, split, 2048, phase) {
+                assert_eq!(d.hand_s.to_bits(), d.calibrated_s.to_bits(), "{}", d.stage);
+            }
+        }
+    }
+}
+
+#[test]
+fn distinct_profiles_never_alias_cached_plans() {
+    let model = ModelConfig::deepseek_v2(8);
+    let tb = Testbed::a();
+    let split = GroupSplit::new(3, 5);
+    let params = SolverParams::default();
+
+    let table2 = CalibrationProfile::from_testbed(&tb);
+    let mut slower = CalibrationProfile::from_testbed(&tb);
+    slower.gemm.unit_per_s *= 0.5; // half the measured GEMM throughput
+    assert_ne!(table2.fingerprint(), slower.fingerprint());
+
+    let cache = PlanCache::new();
+    let solve_under = |prof: &CalibrationProfile| {
+        let inst = Instance::new(model.clone(), Testbed::from_profile(&tb, prof), split, 2048);
+        cache
+            .get_or_solve(ShapeKey::prefill(2048, 8).with_profile(prof.fingerprint()), || {
+                solver::solve_online(&inst, 8, &params)
+            })
+            .expect("paper instance is feasible")
+    };
+    let a = solve_under(&table2);
+    assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    let b = solve_under(&slower);
+    assert_eq!((cache.hits(), cache.misses()), (0, 2), "second profile must not hit the first");
+    assert_eq!(cache.len(), 2);
+    assert_ne!(
+        a.throughput_tokens.to_bits(),
+        b.throughput_tokens.to_bits(),
+        "halved GEMM throughput must move the solve"
+    );
+    // Re-query both keyspaces: each hit returns its own plan.
+    let a2 = solve_under(&table2);
+    let b2 = solve_under(&slower);
+    assert_eq!((cache.hits(), cache.misses()), (2, 2));
+    assert_eq!(a.config, a2.config);
+    assert_eq!(b.config, b2.config);
+    assert_eq!(a.throughput_tokens.to_bits(), a2.throughput_tokens.to_bits());
+    assert_eq!(b.throughput_tokens.to_bits(), b2.throughput_tokens.to_bits());
+    // The hand keyspace is a third, independent one.
+    let inst = Instance::new(model.clone(), tb.clone(), split, 2048);
+    let hand = cache
+        .get_or_solve(ShapeKey::prefill(2048, 8), || solver::solve_online(&inst, 8, &params))
+        .unwrap();
+    assert_eq!(cache.misses(), 3);
+    assert_eq!(cache.len(), 3);
+    assert_eq!(ShapeKey::prefill(2048, 8).profile, ProfileId::HAND);
+    assert_eq!(hand.throughput_tokens.to_bits(), a.throughput_tokens.to_bits());
+}
+
+/// Artifact-gated: the serving stack keys Adaptive plans by the
+/// server's active profile, so switching a replica onto calibrated
+/// constants re-solves instead of reusing hand-constant plans.
+#[test]
+fn server_rekeys_plans_after_profile_switch() {
+    use findep::coordinator::moe::ModelHandle;
+    use findep::coordinator::server::Server;
+    use findep::runtime::artifacts_dir;
+
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let model = ModelHandle::load(&dir, true).unwrap();
+    let mut srv = Server::new(model, 2, None).unwrap();
+    assert_eq!(srv.plan_profile(), ProfileId::HAND);
+    let (ma_hand, r1_hand, _) = srv.plan_adaptive(3);
+    let after_hand = srv.plan_cache().len();
+    assert!(after_hand >= 1);
+
+    let prof = CalibrationProfile::from_testbed(srv.plan_testbed());
+    srv.set_calibration_profile(&prof);
+    assert_eq!(srv.plan_profile(), prof.fingerprint());
+    let (ma_cal, r1_cal, _) = srv.plan_adaptive(3);
+    assert_eq!(
+        srv.plan_cache().len(),
+        after_hand + 1,
+        "calibrated plan must occupy its own cache entry"
+    );
+    // Constants are Table-2-equivalent, so the plan itself agrees even
+    // though the cache entries are disjoint.
+    assert_eq!((ma_hand, r1_hand), (ma_cal, r1_cal));
+}
