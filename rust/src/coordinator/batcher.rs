@@ -1,79 +1,72 @@
-//! Continuous batching: a bounded request queue in front of a pool of
-//! pipelined serving workers (the EPS-MoE / MegaScale-Infer serving
-//! shape — many in-flight micro-batches keep the disaggregated
-//! attention/expert groups busy).
+//! Continuous batching, event-driven: a pure planning state machine
+//! ([`super::planner`]) behind one mutex, drained by condvar-parked
+//! serving workers ([`super::executor`]) that lease pipeline replicas
+//! from a shared pool (the EPS-MoE / MegaScale-Infer serving shape —
+//! many in-flight micro-batches keep the disaggregated attention and
+//! expert groups busy, with no polling cadence anywhere).
 //!
 //! ```text
-//!   submit() ──▶ bounded queue ──▶ assembler (FIFO, linger window,
-//!        │                    ▲    mixed prefill/decode batches)
-//!        │       decode steps │         │ bounded work channel
-//!        │       (KV-growing  │         ▼
-//!        │        re-entry)   │  worker 0 .. W-1  (one Server +
-//!        │                    └── pipeline replica each; shared
-//!        │                        Registry + PlanCache)
-//!        │                              │
-//!        ◀──── final responses ─────────┘
+//!   submit() ──▶ ┌─────────────────────────┐     worker 0 .. W-1
+//!        │       │ Planner (one mutex)     │  (parked on the `work`
+//!        │       │  bounded submit queue   │◀── condvar; window-full,
+//!        │       │  decode lane (priority) │    linger-expiry, or
+//!        │       │  linger window (FIFO)   │    shutdown-drain wakes
+//!        │       └─────────────────────────┘    exactly one)
+//!        │  decode steps ▲      │ Execute(batch)
+//!        │  (KV-growing  │      ▼
+//!        │   re-entry)   │   ReplicaPool lease ──▶ Server::serve_batch
+//!        │               └──────┤ (shared Registry + PlanCache)
+//!        ◀──── final responses ─┘
 //! ```
 //!
-//! Invariants:
+//! Invariants (unchanged from the retired thread-pool design, which
+//! lives on as the measured baseline in [`super::threadpool`]):
 //!
-//! * **FIFO draining** — the assembler forms batches strictly in
-//!   arrival order; with one worker and no decode traffic, responses
-//!   come back in submission order regardless of how the stream was cut
-//!   into batches. Decode re-entries take priority over fresh
-//!   submissions (finish what is in flight), so equal-output requests
-//!   still complete in submission order.
+//! * **FIFO draining** — windows form strictly in arrival order; with
+//!   one worker and no decode traffic, responses come back in
+//!   submission order regardless of how the stream was cut into
+//!   batches. Decode re-entries take priority over fresh submissions
+//!   (finish what is in flight), so equal-output requests still
+//!   complete in submission order.
 //! * **Continuous decode batching** — a request submitted with
-//!   `output_len > 0` re-enters the queue after its prefill as one
+//!   `output_len > 0` re-enters the planner after its prefill as one
 //!   decode step per output token, KV growing each step; each window
 //!   may therefore mix phases, and the server schedules its prefill and
 //!   decode chunks under separate phase-keyed cached plans. The client
 //!   receives exactly one response, after the last step.
-//! * **Backpressure** — the submit queue is a bounded `sync_channel`:
-//!   `submit` blocks when the queue is full, `try_submit` rejects (and
+//! * **Backpressure** — the submit queue is bounded: `submit` parks on
+//!   the `space` condvar while it is full, `try_submit` rejects (and
 //!   counts `queue_rejected`). The decode re-entry lane is unbounded so
 //!   workers can never deadlock against a full queue; its depth is
 //!   bounded by the requests already admitted.
+//! * **Event-driven idleness** — an idle batcher performs no wakeups:
+//!   every worker parks until a submit, a decode re-entry, a linger
+//!   expiry, or shutdown arrives (the baseline woke every 200µs to
+//!   re-poll its decode lane).
 //! * **Per-request latency** — each final response's `latency_s` is
 //!   rewritten to the true submit→response time (prefill plus every
 //!   decode step), and each queue pass's wait lands in the shared
 //!   registry's `queue_wait` histogram.
 //! * **Shared planning** — workers share one [`PlanCache`], so an
 //!   Adaptive shape solved on any worker is a hit on all of them —
-//!   prefill and decode shapes memoized separately.
+//!   prefill and decode shapes memoized separately, hits returned as
+//!   `Arc<Solution>` without cloning plan bodies under a lock.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
-    TrySendError,
-};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::config::Phase;
+use crate::coordinator::executor::{run_worker, EventCore};
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
-use crate::coordinator::server::{EmbeddedRequest, Policy, Response, Server};
+use crate::coordinator::planner::{PlannerConfig, QueuedRequest};
+use crate::coordinator::server::{EmbeddedRequest, Policy, ReplicaPool, Response, Server};
 use crate::metrics::Registry;
 use crate::solver::PlanCache;
-
-/// How often the assembler re-polls the decode re-entry lane while
-/// blocked waiting for fresh submissions.
-const DECODE_POLL: Duration = Duration::from_micros(200);
-
-/// A request plus its timestamps: `enqueued` is when *this entry*
-/// joined the stream (the queue-wait reference — a decode step's wait
-/// counts from its re-entry), `submitted` is the original client
-/// submission (the end-to-end latency reference for the final
-/// response).
-struct QueuedRequest {
-    req: EmbeddedRequest,
-    enqueued: Instant,
-    submitted: Instant,
-}
 
 /// Continuous-batcher knobs.
 #[derive(Debug, Clone, Copy)]
@@ -90,8 +83,8 @@ pub struct BatcherConfig {
     pub queue_depth: usize,
     /// Serving workers = pipeline replicas = in-flight batches.
     pub workers: usize,
-    /// How long the assembler waits to fill a batch after the first
-    /// request arrives.
+    /// How long a window lingers to fill after the first request
+    /// arrives.
     pub linger: Duration,
     /// Memoize Adaptive plans per shape (shared across workers).
     pub cache_plans: bool,
@@ -116,11 +109,10 @@ impl Default for BatcherConfig {
     }
 }
 
-/// The continuous batcher: owns the queue, the assembler, and the
-/// worker pool. Dropping it drains in-flight work and joins every
-/// thread.
+/// The continuous batcher: owns the event core and the worker pool.
+/// Dropping it drains in-flight work and joins every thread.
 pub struct Batcher {
-    submit_tx: Option<SyncSender<QueuedRequest>>,
+    core: Arc<EventCore>,
     resp_rx: Receiver<Response>,
     metrics: Arc<Registry>,
     plan_cache: Arc<PlanCache>,
@@ -128,16 +120,12 @@ pub struct Batcher {
     /// are rejected at submit time so they can never sink a whole
     /// assembled batch inside a worker.
     req_elems: usize,
-    /// Requests still owed a final response (in the queue, in flight,
-    /// or looping through decode re-entry).
-    open: Arc<AtomicUsize>,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl Batcher {
-    /// Spin up the assembler and `cfg.workers` serving replicas over
-    /// one loaded model, planning against the hand-written testbed
-    /// constants.
+    /// Spin up `cfg.workers` serving replicas over one loaded model,
+    /// planning against the hand-written testbed constants.
     pub fn new(model: ModelHandle, cfg: BatcherConfig) -> Result<Batcher> {
         Self::with_profile(model, cfg, None)
     }
@@ -156,49 +144,22 @@ impl Batcher {
         let metrics = Arc::new(Registry::new());
         let plan_cache = Arc::new(PlanCache::new());
         let workers = cfg.workers.max(1);
-        let max_batch = cfg.max_batch.max(1);
         let req_elems = model.seq_len * model.model.embed;
+        let prompt_len = model.seq_len;
 
-        let (submit_tx, submit_rx) = sync_channel::<QueuedRequest>(cfg.queue_depth.max(1));
-        // Decode re-entry lane: workers push finished-prefill requests
-        // back as KV-grown decode steps. Unbounded on purpose — a
-        // worker must never block re-entering its own output while the
-        // assembler blocks handing it the next batch (that cycle would
-        // deadlock the pool); depth is bounded anyway by
-        // `open` ≤ queue_depth + workers·max_batch in-flight requests.
-        let (decode_tx, decode_rx) = channel::<QueuedRequest>();
-        // Requests inside the system that still owe the client a final
-        // response; shutdown drains until this reaches zero so pending
-        // decode steps are never dropped.
-        let open = Arc::new(AtomicUsize::new(0));
-        // Bounded work channel: the assembler runs at most `workers`
-        // batches ahead of the slowest replica.
-        let (work_tx, work_rx) = sync_channel::<Vec<QueuedRequest>>(workers);
-        let work_rx = Arc::new(Mutex::new(work_rx));
-        let (resp_tx, resp_rx) = channel::<Response>();
+        let core = Arc::new(EventCore::new(PlannerConfig {
+            max_batch: cfg.max_batch,
+            linger: cfg.linger,
+            queue_depth: cfg.queue_depth,
+        }));
 
-        let mut threads = Vec::with_capacity(workers + 1);
         // The split search is deterministic in (model, plan testbed,
         // seq), so run it on the first replica only and hand the chosen
-        // split to the rest — re-running it per worker would also
-        // re-clear the shared plan cache under the earlier workers.
+        // split to the rest — re-running it per replica would also
+        // re-clear the shared plan cache under earlier replicas.
+        let mut replicas = Vec::with_capacity(workers);
         let mut chosen_split = None;
-        {
-            let metrics = metrics.clone();
-            let linger = cfg.linger;
-            let open = open.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("findep-batcher".into())
-                    .spawn(move || {
-                        assembler_loop(
-                            submit_rx, decode_rx, work_tx, max_batch, linger, open, metrics,
-                        )
-                    })
-                    .context("spawn batch assembler")?,
-            );
-        }
-        for w in 0..workers {
+        for _ in 0..workers {
             let mut server = Server::with_shared(
                 model.clone(),
                 cfg.eg,
@@ -216,28 +177,36 @@ impl Batcher {
                     Some(split) => server.plan_split = split,
                 }
             }
-            let work_rx = work_rx.clone();
+            replicas.push(server);
+        }
+        let pool = Arc::new(ReplicaPool::new(replicas));
+
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let mut threads = Vec::with_capacity(workers);
+        for w in 0..workers {
+            // Register before spawning: a submit racing the spawn must
+            // never observe an empty pool and refuse legal work.
+            core.register_worker();
+            let core = core.clone();
+            let metrics = metrics.clone();
+            let pool = pool.clone();
             let resp_tx = resp_tx.clone();
-            let decode_tx = decode_tx.clone();
-            let open = open.clone();
             let policy = cfg.policy;
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("findep-serve{w}"))
-                    .spawn(move || worker_loop(server, policy, work_rx, resp_tx, decode_tx, open))
+                    .spawn(move || {
+                        let c = core.clone();
+                        let m = metrics.clone();
+                        run_worker(&core, &metrics, move |batch| {
+                            serve_assembled(&c, &pool, &m, &resp_tx, policy, prompt_len, batch)
+                        })
+                    })
                     .context("spawn serving worker")?,
             );
         }
 
-        Ok(Batcher {
-            submit_tx: Some(submit_tx),
-            resp_rx,
-            metrics,
-            plan_cache,
-            req_elems,
-            open,
-            threads,
-        })
+        Ok(Batcher { core, resp_rx, metrics, plan_cache, req_elems, threads })
     }
 
     /// A malformed request must fail at the submission boundary — once
@@ -254,20 +223,14 @@ impl Batcher {
         Ok(())
     }
 
-    /// Enqueue a request, blocking while the queue is full
+    /// Enqueue a request, parking while the queue is full
     /// (backpressure). Errors on malformed requests or after shutdown.
     /// A request with `output_len > 0` re-enters the stream as that
     /// many KV-growing decode steps after its prefill completes; the
     /// single response arrives once the last step finishes.
     pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
         self.validate(&req)?;
-        let tx = self.submit_tx.as_ref().context("batcher closed")?;
-        self.open.fetch_add(1, Ordering::SeqCst);
-        let now = Instant::now();
-        if tx.send(QueuedRequest { req, enqueued: now, submitted: now }).is_err() {
-            self.open.fetch_sub(1, Ordering::SeqCst);
-            anyhow::bail!("batcher workers gone");
-        }
+        self.core.submit(req)?;
         self.metrics.inc("queued", 1);
         Ok(())
     }
@@ -276,23 +239,12 @@ impl Batcher {
     /// request is rejected and counted).
     pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
         self.validate(&req)?;
-        let tx = self.submit_tx.as_ref().context("batcher closed")?;
-        self.open.fetch_add(1, Ordering::SeqCst);
-        let now = Instant::now();
-        match tx.try_send(QueuedRequest { req, enqueued: now, submitted: now }) {
-            Ok(()) => {
-                self.metrics.inc("queued", 1);
-                Ok(true)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.open.fetch_sub(1, Ordering::SeqCst);
-                self.metrics.inc("queue_rejected", 1);
-                Ok(false)
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                self.open.fetch_sub(1, Ordering::SeqCst);
-                anyhow::bail!("batcher workers gone")
-            }
+        if self.core.try_submit(req)? {
+            self.metrics.inc("queued", 1);
+            Ok(true)
+        } else {
+            self.metrics.inc("queue_rejected", 1);
+            Ok(false)
         }
     }
 
@@ -320,215 +272,110 @@ impl Batcher {
     pub fn plan_cache(&self) -> &Arc<PlanCache> {
         &self.plan_cache
     }
+
+    /// Requests anywhere in the system still owed a final response.
+    pub fn open(&self) -> usize {
+        self.core.open()
+    }
+
+    /// Total worker condvar wakeups since startup (an idle batcher
+    /// accumulates none — the event-driven regression surface).
+    pub fn wakeups(&self) -> u64 {
+        self.core.wakeups()
+    }
+
+    /// Wakeups whose poll found nothing to execute.
+    pub fn idle_wakeups(&self) -> u64 {
+        self.core.idle_wakeups()
+    }
 }
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        // Close the queue: the assembler drains what's pending, then
-        // the work channel closes and every worker exits.
-        self.submit_tx.take();
+        // Close the planner: admitted submits and in-flight decode
+        // loops drain (`open` reaches zero), then every worker exits.
+        self.core.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-/// Pop the next request for assembly. Decode re-entries take priority
-/// over fresh submissions (finish what is in flight — the standard
-/// continuous-batching discipline, and the one that bounds per-request
-/// completion time). Blocks until something arrives; returns `None`
-/// only when the submit side has closed *and* no request still owes a
-/// response (`open == 0`), so pending decode loops always drain.
-fn next_request(
-    submit_rx: &Receiver<QueuedRequest>,
-    decode_rx: &Receiver<QueuedRequest>,
-    open: &AtomicUsize,
-) -> Option<QueuedRequest> {
-    loop {
-        if let Ok(q) = decode_rx.try_recv() {
-            return Some(q);
-        }
-        match submit_rx.recv_timeout(DECODE_POLL) {
-            Ok(q) => return Some(q),
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    // Submissions closed: drain the in-flight decode work. A
-    // disconnected decode lane means every worker has exited — no step
-    // can ever arrive again, so stop even if `open` never reached zero
-    // (a crashed worker's requests are lost either way; spinning here
-    // would hang shutdown).
-    loop {
-        match decode_rx.recv_timeout(DECODE_POLL) {
-            Ok(q) => return Some(q),
-            Err(RecvTimeoutError::Disconnected) => return None,
-            Err(RecvTimeoutError::Timeout) => {}
-        }
-        if open.load(Ordering::SeqCst) == 0 {
-            return None;
-        }
-    }
-}
-
-/// FIFO batch assembly with a linger window: take the first request
-/// (blocking), then fill up to `max_batch` from whatever arrives within
-/// `linger` — decode re-entries first, then fresh submissions — so a
-/// window naturally forms a *mixed* batch that the server splits into
-/// its prefill and decode chunks.
-fn assembler_loop(
-    submit_rx: Receiver<QueuedRequest>,
-    decode_rx: Receiver<QueuedRequest>,
-    work_tx: SyncSender<Vec<QueuedRequest>>,
-    max_batch: usize,
-    linger: Duration,
-    open: Arc<AtomicUsize>,
-    metrics: Arc<Registry>,
-) {
-    let mut submit_open = true;
-    loop {
-        let Some(first) = next_request(&submit_rx, &decode_rx, &open) else {
-            return; // closed and fully drained
-        };
-        let mut batch = Vec::with_capacity(max_batch);
-        batch.push(first);
-        let deadline = Instant::now() + linger;
-        while batch.len() < max_batch {
-            if let Ok(q) = decode_rx.try_recv() {
-                batch.push(q);
-                continue;
-            }
-            if submit_open {
-                match submit_rx.try_recv() {
-                    Ok(q) => {
-                        batch.push(q);
-                        continue;
-                    }
-                    Err(TryRecvError::Disconnected) => submit_open = false,
-                    Err(TryRecvError::Empty) => {}
-                }
-            }
-            let remaining = deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            if submit_open {
-                match submit_rx.recv_timeout(remaining.min(DECODE_POLL)) {
-                    Ok(q) => batch.push(q),
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => submit_open = false,
-                }
-            } else {
-                // Only decode re-entries can still arrive; poll them at
-                // the same cadence for the rest of the window.
-                std::thread::sleep(remaining.min(DECODE_POLL));
-            }
-        }
-        for q in &batch {
-            metrics.observe("queue_wait", q.enqueued.elapsed().as_secs_f64());
-        }
-        metrics.inc("batches_assembled", 1);
-        metrics.observe("batch_fill", batch.len() as f64);
-        if work_tx.send(batch).is_err() {
-            return; // all workers gone
-        }
-    }
-}
-
 /// Releases a batch's `open` slots when dropped — including during a
 /// panic unwind, so a worker dying mid-batch can never strand the
-/// assembler's shutdown drain waiting on slots nobody will release.
-/// Requests that re-enter as decode steps re-add their slot explicitly
-/// before this guard drops (transient over-count, never under-count —
-/// the drain must not observe a spurious zero).
+/// shutdown drain waiting on slots nobody will release. Requests that
+/// re-enter as decode steps re-add their slot explicitly before this
+/// guard drops (transient over-count, never under-count — the drain
+/// must not observe a spurious zero).
 struct OpenSlots<'a> {
-    open: &'a AtomicUsize,
+    core: &'a EventCore,
     n: usize,
 }
 
 impl Drop for OpenSlots<'_> {
     fn drop(&mut self) {
-        self.open.fetch_sub(self.n, Ordering::SeqCst);
+        self.core.release_open(self.n);
     }
 }
 
-/// One serving replica: pop the next assembled batch, serve it, then
-/// per request either re-enqueue the next KV-grown decode step (output
-/// remaining) or emit the final response with its true
-/// submit→response latency.
-fn worker_loop(
-    server: Server,
+/// Execute one assembled window on a leased replica, then per request
+/// either re-enter the next KV-grown decode step (output remaining) or
+/// emit the final response with its true submit→response latency.
+fn serve_assembled(
+    core: &EventCore,
+    pool: &ReplicaPool,
+    metrics: &Registry,
+    resp_tx: &Sender<Response>,
     policy: Policy,
-    work_rx: Arc<Mutex<Receiver<Vec<QueuedRequest>>>>,
-    resp_tx: Sender<Response>,
-    decode_tx: Sender<QueuedRequest>,
-    open: Arc<AtomicUsize>,
+    prompt_len: usize,
+    batch: Vec<QueuedRequest>,
 ) {
-    let prompt_len = server.pipeline.model().seq_len;
-    loop {
-        // Hold the lock only for the pop; serving runs unlocked so the
-        // other replicas pipeline their own batches meanwhile.
-        let batch = {
-            let rx = work_rx.lock().unwrap();
-            rx.recv()
-        };
-        let Ok(batch) = batch else { return };
-        let mut reqs = Vec::with_capacity(batch.len());
-        let mut meta = Vec::with_capacity(batch.len());
-        for q in batch {
-            meta.push((q.submitted, q.req.phase, q.req.output_len));
-            reqs.push(q.req);
-        }
-        let slots = OpenSlots { open: &open, n: reqs.len() };
-        match server.serve_batch(&reqs, policy) {
-            Ok((responses, _stats)) => {
-                for (mut resp, (submitted, phase, output_len)) in
-                    responses.into_iter().zip(meta)
-                {
-                    if output_len > 0 {
-                        // Autoregressive re-entry: this pass's output is
-                        // the next step's input, the KV cache grows by
-                        // the entry this pass wrote. The re-entry keeps
-                        // the request open: add its slot before the
-                        // batch guard releases this pass's.
-                        let next = EmbeddedRequest {
-                            id: resp.id,
-                            hidden: resp.hidden,
-                            phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
-                            output_len: output_len - 1,
-                        };
-                        server.metrics.inc("decode_steps", 1);
-                        open.fetch_add(1, Ordering::SeqCst);
-                        if decode_tx
-                            .send(QueuedRequest {
-                                req: next,
-                                enqueued: Instant::now(),
-                                submitted,
-                            })
-                            .is_err()
-                        {
-                            // Assembler gone mid-shutdown: the request
-                            // can never finish, release its slot.
-                            open.fetch_sub(1, Ordering::SeqCst);
-                        }
-                        continue;
-                    }
-                    resp.latency_s = submitted.elapsed().as_secs_f64();
-                    server.metrics.observe("request_latency", resp.latency_s);
-                    if resp_tx.send(resp).is_err() {
-                        return; // guard releases the batch's slots
-                    }
-                }
-            }
-            Err(e) => {
-                // Drop the batch but keep the replica alive; callers
-                // see the gap via the serve_errors counter. Every
-                // request of the failed batch is done for (the guard
-                // releases their slots).
-                server.metrics.inc("serve_errors", 1);
-                eprintln!("serving worker: batch failed: {e:#}");
-            }
-        }
-        drop(slots);
+    let mut reqs = Vec::with_capacity(batch.len());
+    let mut meta = Vec::with_capacity(batch.len());
+    for q in batch {
+        meta.push((q.submitted, q.req.phase, q.req.output_len));
+        reqs.push(q.req);
     }
+    let slots = OpenSlots { core, n: reqs.len() };
+    // With workers == replicas the lease is immediate; the pool exists
+    // so execution capacity is a handoff, not a thread's identity.
+    let server = pool.lease();
+    match server.serve_batch(&reqs, policy) {
+        Ok((responses, _stats)) => {
+            for (mut resp, (submitted, phase, output_len)) in responses.into_iter().zip(meta) {
+                if output_len > 0 {
+                    // Autoregressive re-entry: this pass's output is
+                    // the next step's input, the KV cache grows by the
+                    // entry this pass wrote. The re-entry keeps the
+                    // request open: add its slot before the batch
+                    // guard releases this pass's.
+                    let next = EmbeddedRequest {
+                        id: resp.id,
+                        hidden: resp.hidden,
+                        phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
+                        output_len: output_len - 1,
+                    };
+                    metrics.inc("decode_steps", 1);
+                    core.add_open(1);
+                    core.reenter_decode(QueuedRequest::reentry(next, submitted));
+                    continue;
+                }
+                resp.latency_s = submitted.elapsed().as_secs_f64();
+                metrics.observe("request_latency", resp.latency_s);
+                // A gone receiver just means the client stopped
+                // listening; the drain accounting still completes.
+                let _ = resp_tx.send(resp);
+            }
+        }
+        Err(e) => {
+            // Drop the batch but keep the replica alive; callers see
+            // the gap via the serve_errors counter. Every request of
+            // the failed batch is done for (the guard releases their
+            // slots).
+            metrics.inc("serve_errors", 1);
+            eprintln!("serving worker: batch failed: {e:#}");
+        }
+    }
+    drop(server);
+    drop(slots);
 }

@@ -1,0 +1,341 @@
+//! The **execution** half of the event-driven coordinator: an
+//! [`EventCore`] wraps the pure [`Planner`] state machine in one mutex
+//! plus two condvars, and [`run_worker`] is the work-stealing worker
+//! loop that drains it.
+//!
+//! ```text
+//!   submit()/try_submit() ──▶ ┌──────────────────────────┐
+//!     (blocked submitters     │  Mutex<Planner>          │
+//!      park on `space`)       │   submit queue (bounded) │
+//!                             │   decode lane (priority) │
+//!   reenter_decode() ───────▶ │   linger window          │──▶ Step
+//!     (prefill-done unlocks   └──────────────────────────┘
+//!      the decode step)                 ▲
+//!                 notify_one            │ poll under the lock
+//!   workers ◀───────────────────────────┘
+//!   (parked on the `work` condvar — Park = indefinitely,
+//!    ParkUntil = until the open window's linger deadline;
+//!    an idle core performs no wakeups at all)
+//! ```
+//!
+//! Every state transition is event-driven: a submit, a decode
+//! re-entry, a linger expiry, or shutdown notifies exactly the waiters
+//! that can make progress. There is no polling cadence anywhere — the
+//! regression tests assert a fully idle core stays at (near) zero
+//! wakeups, where the retired thread-pool design woke its assembler
+//! every 200µs to re-check the decode lane
+//! ([`super::threadpool`] keeps that design as the measured baseline).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::planner::{Planner, PlannerConfig, Poll, QueuedRequest, Step, SubmitOutcome};
+use crate::coordinator::server::EmbeddedRequest;
+use crate::metrics::Registry;
+
+/// Shared event state: the planner behind a mutex, the two wait sets,
+/// and the system-wide accounting the planner's drain logic needs.
+pub struct EventCore {
+    planner: Mutex<Planner>,
+    /// Workers park here (notified on submit, decode re-entry,
+    /// batch completion during shutdown, and close).
+    work: Condvar,
+    /// Backpressured submitters park here (notified when a poll frees
+    /// bounded-queue slots, on close, and on worker death).
+    space: Condvar,
+    /// Requests anywhere in the system that still owe a final
+    /// response; shutdown drains until this reaches zero so pending
+    /// decode loops are never dropped.
+    open: AtomicUsize,
+    /// Workers currently registered (spawned and not yet exited); a
+    /// submit against a dead pool errors instead of queueing forever.
+    live_workers: AtomicUsize,
+    /// Times any worker returned from a condvar wait. An idle core
+    /// must not accumulate these — pinned by the idle-parking
+    /// regression test.
+    wakeups: AtomicU64,
+    /// Wakeups whose next poll found nothing to execute (spurious or
+    /// linger-herd wakeups).
+    idle_wakeups: AtomicU64,
+}
+
+impl EventCore {
+    pub fn new(cfg: PlannerConfig) -> Self {
+        Self {
+            planner: Mutex::new(Planner::new(cfg)),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            open: AtomicUsize::new(0),
+            live_workers: AtomicUsize::new(0),
+            wakeups: AtomicU64::new(0),
+            idle_wakeups: AtomicU64::new(0),
+        }
+    }
+
+    /// Recover the planner even if a worker panicked while holding the
+    /// lock: planner state is a set of queues that stays structurally
+    /// valid mid-mutation, and losing one request to a panicking
+    /// worker is already accounted by its open-slot guard.
+    fn lock(&self) -> MutexGuard<'_, Planner> {
+        self.planner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Requests still owed a final response.
+    pub fn open(&self) -> usize {
+        self.open.load(Ordering::SeqCst)
+    }
+
+    /// Take `n` open slots (requests entering the system or decode
+    /// steps re-entering it).
+    pub fn add_open(&self, n: usize) {
+        self.open.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Release `n` open slots (final responses emitted, or requests
+    /// abandoned by a failed batch).
+    pub fn release_open(&self, n: usize) {
+        self.open.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::SeqCst)
+    }
+
+    pub fn idle_wakeups(&self) -> u64 {
+        self.idle_wakeups.load(Ordering::SeqCst)
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.live_workers.load(Ordering::SeqCst)
+    }
+
+    /// Register a worker **before** spawning its thread, so a submit
+    /// racing the spawn never observes an empty pool.
+    pub fn register_worker(&self) {
+        self.live_workers.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Enqueue a fresh request, parking while the bounded queue is
+    /// full (backpressure). Errors after close or when every worker
+    /// has died.
+    pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
+        let mut p = self.lock();
+        loop {
+            anyhow::ensure!(!p.is_closed(), "batcher closed");
+            anyhow::ensure!(self.live_workers() > 0, "batcher workers gone");
+            if p.has_space() {
+                break;
+            }
+            p = self.space.wait(p).unwrap_or_else(PoisonError::into_inner);
+        }
+        self.add_open(1);
+        let outcome = p.offer_submit(QueuedRequest::fresh(req));
+        debug_assert_eq!(outcome, SubmitOutcome::Accepted);
+        drop(p);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking enqueue: `Ok(false)` when the bounded queue is
+    /// full.
+    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
+        let mut p = self.lock();
+        anyhow::ensure!(!p.is_closed(), "batcher closed");
+        anyhow::ensure!(self.live_workers() > 0, "batcher workers gone");
+        if !p.has_space() {
+            return Ok(false);
+        }
+        self.add_open(1);
+        let outcome = p.offer_submit(QueuedRequest::fresh(req));
+        debug_assert_eq!(outcome, SubmitOutcome::Accepted);
+        drop(p);
+        self.work.notify_one();
+        Ok(true)
+    }
+
+    /// Re-enter a decode step whose prefill (or previous step) just
+    /// completed. The caller must already hold the request's open slot
+    /// (`add_open`); the decode lane is unbounded so this never blocks
+    /// — a worker re-entering its own output must not deadlock against
+    /// a full queue.
+    pub fn reenter_decode(&self, q: QueuedRequest) {
+        self.lock().push_decode(q);
+        self.work.notify_one();
+    }
+
+    /// Begin shutdown: admitted work drains, then workers exit.
+    pub fn close(&self) {
+        self.lock().close();
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().is_closed()
+    }
+}
+
+/// The work-stealing worker loop: poll the planner under the lock,
+/// execute ready batches outside it, park on the `work` condvar when
+/// nothing is ready (until the linger deadline when a window is open,
+/// indefinitely otherwise).
+///
+/// `exec` runs one assembled batch end to end and owns the response /
+/// decode-re-entry / open-slot bookkeeping (the batcher passes a
+/// closure over its replica pool; tests pass no-op executors). The
+/// loop itself records the assembly metrics every batch crosses —
+/// `queue_wait` per request, `batches_assembled`, `batch_fill` — so
+/// the planner stays clock-free.
+pub fn run_worker<E>(core: &EventCore, metrics: &Registry, mut exec: E)
+where
+    E: FnMut(Vec<QueuedRequest>),
+{
+    /// Deregisters on exit — including panic unwinds — and wakes both
+    /// wait sets so blocked submitters can observe a dead pool and
+    /// parked peers can re-evaluate the exit condition.
+    struct LiveGuard<'a>(&'a EventCore);
+    impl Drop for LiveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.live_workers.fetch_sub(1, Ordering::SeqCst);
+            self.0.work.notify_all();
+            self.0.space.notify_all();
+        }
+    }
+    let guard = LiveGuard(core);
+    let mut p = core.lock();
+    // Whether the previous iteration woke from a park (to classify the
+    // wakeup as productive or idle once the next poll answers).
+    let mut woke = false;
+    loop {
+        let Poll { step, freed } = p.poll(Instant::now(), core.open());
+        if freed > 0 {
+            core.space.notify_all();
+        }
+        match step {
+            Step::Execute(batch) => {
+                woke = false;
+                drop(p);
+                let now = Instant::now();
+                for q in &batch {
+                    metrics.observe("queue_wait", now.duration_since(q.enqueued).as_secs_f64());
+                }
+                metrics.inc("batches_assembled", 1);
+                metrics.observe("batch_fill", batch.len() as f64);
+                exec(batch);
+                p = core.lock();
+                // A completed batch may have released the last open
+                // slots (or re-entered decode steps): during shutdown
+                // the parked peers must re-evaluate Exit.
+                if p.is_closed() {
+                    core.work.notify_all();
+                }
+            }
+            Step::Park => {
+                if woke {
+                    core.idle_wakeups.fetch_add(1, Ordering::SeqCst);
+                }
+                p = core.work.wait(p).unwrap_or_else(PoisonError::into_inner);
+                core.wakeups.fetch_add(1, Ordering::SeqCst);
+                woke = true;
+            }
+            Step::ParkUntil(deadline) => {
+                if woke {
+                    core.idle_wakeups.fetch_add(1, Ordering::SeqCst);
+                }
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                let (g, _) = core
+                    .work
+                    .wait_timeout(p, timeout)
+                    .unwrap_or_else(PoisonError::into_inner);
+                p = g;
+                core.wakeups.fetch_add(1, Ordering::SeqCst);
+                woke = true;
+            }
+            Step::Exit => {
+                drop(p);
+                drop(guard); // notifies peers: they re-poll and exit too
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn cfg(max_batch: usize, linger_us: u64, depth: usize) -> PlannerConfig {
+        PlannerConfig {
+            max_batch,
+            linger: Duration::from_micros(linger_us),
+            queue_depth: depth,
+        }
+    }
+
+    fn spawn_noop_workers(
+        core: &Arc<EventCore>,
+        metrics: &Arc<Registry>,
+        n: usize,
+    ) -> (Vec<std::thread::JoinHandle<()>>, std::sync::mpsc::Receiver<u64>) {
+        let (done_tx, done_rx) = channel::<u64>();
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            core.register_worker();
+            let core = core.clone();
+            let metrics = metrics.clone();
+            let done_tx = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = core.clone();
+                run_worker(&core, &metrics, move |batch| {
+                    let n = batch.len();
+                    for q in batch {
+                        let _ = done_tx.send(q.req.id);
+                    }
+                    c.release_open(n);
+                });
+            }));
+        }
+        (handles, done_rx)
+    }
+
+    #[test]
+    fn submits_flow_through_workers_and_drain_on_close() {
+        let core = Arc::new(EventCore::new(cfg(4, 200, 16)));
+        let metrics = Arc::new(Registry::new());
+        let (handles, done_rx) = spawn_noop_workers(&core, &metrics, 3);
+        for i in 0..20u64 {
+            core.submit(EmbeddedRequest::synthetic(i, 2, 2)).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..20 {
+            got.push(done_rx.recv_timeout(Duration::from_secs(10)).expect("request completed"));
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+        core.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(core.open(), 0);
+        assert_eq!(core.live_workers(), 0);
+        assert_eq!(metrics.histogram_count("queue_wait"), 20);
+        assert!(core.submit(EmbeddedRequest::synthetic(99, 2, 2)).is_err());
+    }
+
+    #[test]
+    fn try_submit_backpressures_at_queue_depth() {
+        // No workers: nothing drains the queue, so the bound is exact.
+        let core = EventCore::new(cfg(4, 200, 2));
+        core.register_worker(); // pretend one exists so submits are legal
+        assert!(core.try_submit(EmbeddedRequest::synthetic(0, 2, 2)).unwrap());
+        assert!(core.try_submit(EmbeddedRequest::synthetic(1, 2, 2)).unwrap());
+        assert!(!core.try_submit(EmbeddedRequest::synthetic(2, 2, 2)).unwrap());
+        assert_eq!(core.open(), 2, "rejected submissions must not hold open slots");
+    }
+}

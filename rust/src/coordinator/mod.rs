@@ -15,14 +15,22 @@
 //! tasks in the planned order — the same vocabulary the simulator
 //! executes analytically.
 //!
-//! [`batcher`] stacks continuous batching on top: a bounded request
-//! queue drains into size-bucketed batches pipelined across a pool of
-//! server replicas that share one metrics registry and one memoized
-//! plan cache.
+//! [`batcher`] stacks continuous batching on top, split event-driven
+//! into a planning half and an execution half: [`planner`] is the pure
+//! batch-assembly state machine (bounded submit queue, priority decode
+//! re-entry lane, FIFO linger window, shutdown drain), [`executor`]
+//! wraps it in one mutex plus condvars and runs work-stealing workers
+//! that lease [`server::ReplicaPool`] replicas per ready batch — all
+//! replicas share one metrics registry and one memoized plan cache.
+//! [`threadpool`] preserves the retired polling thread-pool batcher as
+//! the measured baseline for `benches/event_coordinator.rs`.
 
 pub mod batcher;
+pub mod executor;
 pub mod links;
 pub mod moe;
 pub mod pipeline;
+pub mod planner;
 pub mod router;
 pub mod server;
+pub mod threadpool;

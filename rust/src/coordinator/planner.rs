@@ -1,0 +1,414 @@
+//! The **planning** half of the event-driven coordinator (the
+//! planner/executor phase split): batch assembly, linger-window
+//! accounting, decode re-entry scheduling, and the drain state machine,
+//! as one pure synchronous state machine with no threads, locks, or
+//! clocks of its own.
+//!
+//! The planner is advanced by [`poll`](Planner::poll) under the
+//! executor's lock: events (a submit, a decode re-entry, a linger
+//! expiry, shutdown) mutate the queues, and `poll` answers the only
+//! question the executor asks — *is a batch's dependency satisfied?*
+//! The dependency edges are exactly the serving DAG's:
+//!
+//! * **window-full** or **linger-expiry** unlocks batch assembly
+//!   (a sealed window moves to the ready side as an executable batch);
+//! * **prefill-done** unlocks that request's decode step (the executor
+//!   re-enters it through the decode lane, which outranks fresh
+//!   submissions — finish what is in flight);
+//! * **submit-close + zero open requests** unlocks worker exit
+//!   (drain-on-shutdown: pending decode loops always finish first).
+//!
+//! Keeping this half pure makes the FIFO/linger/drain semantics
+//! directly unit-testable with fabricated clocks (see the tests below)
+//! — the executor only adds parking and wakeups on top.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::EmbeddedRequest;
+
+/// A request plus its timestamps: `enqueued` is when *this entry*
+/// joined the stream (the queue-wait reference — a decode step's wait
+/// counts from its re-entry), `submitted` is the original client
+/// submission (the end-to-end latency reference for the final
+/// response).
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub req: EmbeddedRequest,
+    pub enqueued: Instant,
+    pub submitted: Instant,
+}
+
+impl QueuedRequest {
+    /// A fresh client submission: both timestamps are now.
+    pub fn fresh(req: EmbeddedRequest) -> Self {
+        let now = Instant::now();
+        Self { req, enqueued: now, submitted: now }
+    }
+
+    /// A decode re-entry: the queue-wait clock restarts, the
+    /// end-to-end latency reference is inherited from the original
+    /// submission.
+    pub fn reentry(req: EmbeddedRequest, submitted: Instant) -> Self {
+        Self { req, enqueued: Instant::now(), submitted }
+    }
+}
+
+/// Planner knobs (the assembly-relevant subset of `BatcherConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// Most requests per assembled batch.
+    pub max_batch: usize,
+    /// How long an unfilled window waits for more arrivals after its
+    /// first request.
+    pub linger: Duration,
+    /// Bounded submit-queue depth (fresh submissions beyond it are
+    /// backpressured; the decode lane is never bounded).
+    pub queue_depth: usize,
+}
+
+/// What the executor should do next, as decided by one `poll`.
+#[derive(Debug)]
+pub enum Step {
+    /// A batch's dependency is satisfied (window full, linger expired,
+    /// or the shutdown drain sealed it) — execute it.
+    Execute(Vec<QueuedRequest>),
+    /// Nothing can happen until an event arrives: park indefinitely.
+    Park,
+    /// An open window is lingering: park until its deadline (an event
+    /// may still arrive and fill it earlier).
+    ParkUntil(Instant),
+    /// Closed and fully drained — the worker may exit.
+    Exit,
+}
+
+/// One `poll` outcome: the step to take plus how many bounded-queue
+/// slots the poll freed (the executor turns `freed > 0` into a
+/// backpressure wakeup for blocked submitters).
+#[derive(Debug)]
+pub struct Poll {
+    pub step: Step,
+    pub freed: usize,
+}
+
+/// Batch-assembly state machine. All methods are synchronous and
+/// non-blocking; the executor serializes access behind its mutex.
+#[derive(Debug)]
+pub struct Planner {
+    cfg: PlannerConfig,
+    /// Fresh client submissions, FIFO, bounded by `queue_depth`.
+    submits: VecDeque<QueuedRequest>,
+    /// Decode re-entries, FIFO, unbounded on purpose — a worker must
+    /// never block re-entering its own output (that cycle would
+    /// deadlock the pool); depth is bounded anyway by the requests
+    /// already admitted.
+    decodes: VecDeque<QueuedRequest>,
+    /// The window being assembled, in arrival order.
+    window: Vec<QueuedRequest>,
+    /// Linger deadline of the open window (set when its first request
+    /// arrived; `None` iff the window is empty).
+    deadline: Option<Instant>,
+    closed: bool,
+}
+
+/// Outcome of offering a fresh submission to the bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Accepted,
+    /// Queue at `queue_depth` — backpressure.
+    Full,
+    /// Shutdown has begun; no new work is admitted.
+    Closed,
+}
+
+impl Planner {
+    pub fn new(cfg: PlannerConfig) -> Self {
+        Self {
+            cfg: PlannerConfig {
+                max_batch: cfg.max_batch.max(1),
+                linger: cfg.linger,
+                queue_depth: cfg.queue_depth.max(1),
+            },
+            submits: VecDeque::new(),
+            decodes: VecDeque::new(),
+            window: Vec::new(),
+            deadline: None,
+            closed: false,
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Fresh submissions still waiting in the bounded queue.
+    pub fn queued(&self) -> usize {
+        self.submits.len()
+    }
+
+    /// Whether the bounded queue can admit another fresh submission.
+    pub fn has_space(&self) -> bool {
+        self.submits.len() < self.cfg.queue_depth
+    }
+
+    /// Offer a fresh submission to the bounded queue.
+    pub fn offer_submit(&mut self, q: QueuedRequest) -> SubmitOutcome {
+        if self.closed {
+            return SubmitOutcome::Closed;
+        }
+        if !self.has_space() {
+            return SubmitOutcome::Full;
+        }
+        self.submits.push_back(q);
+        SubmitOutcome::Accepted
+    }
+
+    /// Push a decode re-entry (prefill-done unlocked this step). Never
+    /// bounded, accepted during shutdown too — the drain must finish
+    /// every admitted request's decode loop.
+    pub fn push_decode(&mut self, q: QueuedRequest) {
+        self.decodes.push_back(q);
+    }
+
+    /// Begin shutdown: no new submissions, everything already admitted
+    /// still drains.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Move queued requests into the open window, decode lane first
+    /// (the continuous-batching priority), fresh submissions after,
+    /// strictly FIFO within each lane. Opens the linger window when the
+    /// first request lands. Returns how many bounded-queue slots were
+    /// freed.
+    fn ingest(&mut self, now: Instant) -> usize {
+        let mut freed = 0;
+        while self.window.len() < self.cfg.max_batch {
+            let q = match self.decodes.pop_front() {
+                Some(q) => q,
+                None => match self.submits.pop_front() {
+                    Some(q) => {
+                        freed += 1;
+                        q
+                    }
+                    None => break,
+                },
+            };
+            if self.window.is_empty() {
+                self.deadline = Some(now + self.cfg.linger);
+            }
+            self.window.push(q);
+        }
+        freed
+    }
+
+    /// Seal the open window into an executable batch.
+    fn seal(&mut self) -> Vec<QueuedRequest> {
+        self.deadline = None;
+        std::mem::take(&mut self.window)
+    }
+
+    /// Advance the state machine. `now` is the caller's clock (tests
+    /// fabricate it); `open` is a snapshot of the requests still owed a
+    /// final response anywhere in the system (queues, window, or in
+    /// flight inside an executor). A stale-high `open` only delays the
+    /// shutdown fast-seal until the linger deadline — never loses work.
+    pub fn poll(&mut self, now: Instant, open: usize) -> Poll {
+        let freed = self.ingest(now);
+        if !self.window.is_empty() {
+            let full = self.window.len() >= self.cfg.max_batch;
+            let expired = self.deadline.map_or(true, |d| now >= d);
+            // Shutdown fast path: every open request is already in the
+            // window, so no arrival can ever fill it further —
+            // lingering would wait for nobody.
+            let drained = self.closed && open == self.window.len();
+            let step = if full || expired || drained {
+                Step::Execute(self.seal())
+            } else {
+                Step::ParkUntil(self.deadline.expect("open window has a deadline"))
+            };
+            return Poll { step, freed };
+        }
+        // Empty window ⇒ both queues are empty (ingest drained them).
+        let step = if self.closed && open == 0 {
+            Step::Exit
+        } else {
+            // Either still serving, or closed with requests in flight
+            // whose decode re-entries / completions will wake us.
+            Step::Park
+        };
+        Poll { step, freed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> QueuedRequest {
+        QueuedRequest::fresh(EmbeddedRequest::synthetic(id, 2, 2))
+    }
+
+    fn planner(max_batch: usize, linger_us: u64, depth: usize) -> Planner {
+        Planner::new(PlannerConfig {
+            max_batch,
+            linger: Duration::from_micros(linger_us),
+            queue_depth: depth,
+        })
+    }
+
+    fn ids(batch: &[QueuedRequest]) -> Vec<u64> {
+        batch.iter().map(|q| q.req.id).collect()
+    }
+
+    #[test]
+    fn empty_planner_parks() {
+        let mut p = planner(4, 100, 8);
+        assert!(matches!(p.poll(Instant::now(), 0).step, Step::Park));
+    }
+
+    #[test]
+    fn window_full_executes_immediately_in_fifo_order() {
+        let mut p = planner(3, 1_000_000, 8);
+        for i in 0..5 {
+            assert_eq!(p.offer_submit(req(i)), SubmitOutcome::Accepted);
+        }
+        let now = Instant::now();
+        // First poll: window fills to max_batch straight from the
+        // queue — no lingering, strict submission order.
+        match p.poll(now, 5).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![0, 1, 2]),
+            s => panic!("expected Execute, got {s:?}"),
+        }
+        // Remainder lingers (2 < max_batch) until the deadline.
+        match p.poll(now, 2).step {
+            Step::ParkUntil(d) => assert!(d > now),
+            s => panic!("expected ParkUntil, got {s:?}"),
+        }
+        match p.poll(now + Duration::from_secs(2), 2).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![3, 4]),
+            s => panic!("expected Execute at expiry, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn linger_window_fills_across_polls() {
+        let mut p = planner(4, 500, 8);
+        let t0 = Instant::now();
+        p.offer_submit(req(0));
+        let deadline = match p.poll(t0, 1).step {
+            Step::ParkUntil(d) => d,
+            s => panic!("expected ParkUntil, got {s:?}"),
+        };
+        // More arrivals within the window join the same batch; the
+        // deadline does not reset.
+        p.offer_submit(req(1));
+        p.offer_submit(req(2));
+        match p.poll(t0 + Duration::from_micros(100), 3).step {
+            Step::ParkUntil(d) => assert_eq!(d, deadline, "linger deadline must not reset"),
+            s => panic!("expected ParkUntil, got {s:?}"),
+        }
+        p.offer_submit(req(3));
+        match p.poll(t0 + Duration::from_micros(200), 4).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![0, 1, 2, 3]),
+            s => panic!("window reached max_batch, expected Execute, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_reentries_outrank_fresh_submissions() {
+        let mut p = planner(4, 1_000_000, 8);
+        p.offer_submit(req(10));
+        p.offer_submit(req(11));
+        p.push_decode(req(1));
+        p.push_decode(req(2));
+        match p.poll(Instant::now(), 4).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![1, 2, 10, 11]),
+            s => panic!("expected Execute, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressures_fresh_but_not_decode() {
+        let mut p = planner(8, 100, 2);
+        assert_eq!(p.offer_submit(req(0)), SubmitOutcome::Accepted);
+        assert_eq!(p.offer_submit(req(1)), SubmitOutcome::Accepted);
+        assert_eq!(p.offer_submit(req(2)), SubmitOutcome::Full);
+        // The decode lane is never bounded.
+        for i in 0..32 {
+            p.push_decode(req(100 + i));
+        }
+        // Drain everything: 32 decodes seal as four full windows (no
+        // submit slots freed), then the two fresh submissions form a
+        // partial window that lingers and seals at its deadline. Every
+        // bounded slot is reported freed exactly once.
+        let mut now = Instant::now();
+        let mut freed = 0;
+        let mut executed = 0;
+        let mut polls = 0;
+        loop {
+            polls += 1;
+            assert!(polls < 64, "drain did not converge");
+            let poll = p.poll(now, 34);
+            freed += poll.freed;
+            match poll.step {
+                Step::Execute(b) => executed += b.len(),
+                Step::ParkUntil(d) => now = d, // jump past the linger
+                Step::Park => break,
+                Step::Exit => panic!("not closed, must not exit"),
+            }
+        }
+        assert_eq!(executed, 34);
+        assert_eq!(freed, 2, "every bounded slot must be reported freed exactly once");
+        assert!(p.has_space());
+    }
+
+    #[test]
+    fn close_rejects_new_submits_but_drains_admitted_work() {
+        let mut p = planner(4, 1_000_000, 8);
+        p.offer_submit(req(0));
+        p.close();
+        assert_eq!(p.offer_submit(req(1)), SubmitOutcome::Closed);
+        // Decode re-entries are still admitted during the drain.
+        p.push_decode(req(2));
+        let now = Instant::now();
+        // open == window.len() after ingest (2 requests, both in the
+        // window): no arrival can fill the window further — seal now
+        // instead of waiting out the linger.
+        match p.poll(now, 2).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![2, 0]),
+            s => panic!("expected shutdown fast-seal, got {s:?}"),
+        }
+        // Drained and closed: exit.
+        assert!(matches!(p.poll(now, 0).step, Step::Exit));
+    }
+
+    #[test]
+    fn closed_with_inflight_work_parks_instead_of_exiting() {
+        let mut p = planner(4, 100, 8);
+        p.close();
+        // 3 requests are inside an executor (open > 0): their decode
+        // re-entries may still arrive, so the planner parks rather than
+        // exits — the executor's completion events re-poll it.
+        assert!(matches!(p.poll(Instant::now(), 3).step, Step::Park));
+        assert!(matches!(p.poll(Instant::now(), 0).step, Step::Exit));
+    }
+
+    #[test]
+    fn closed_window_with_inflight_peers_lingers_until_deadline() {
+        let mut p = planner(4, 500, 8);
+        p.close();
+        p.push_decode(req(0));
+        let t0 = Instant::now();
+        // open = 3: two other requests are mid-execution elsewhere, so
+        // their re-entries could still join this window — linger.
+        match p.poll(t0, 3).step {
+            Step::ParkUntil(d) => assert!(d > t0),
+            s => panic!("expected ParkUntil, got {s:?}"),
+        }
+        match p.poll(t0 + Duration::from_millis(10), 3).step {
+            Step::Execute(b) => assert_eq!(ids(&b), vec![0]),
+            s => panic!("expected Execute at expiry, got {s:?}"),
+        }
+    }
+}

@@ -22,7 +22,8 @@
 //!   responses back in request order; set [`Server::strict`] to restore
 //!   the pre-queue "split upstream" error.
 
-use std::sync::{Arc, Mutex};
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -468,10 +469,14 @@ impl Server {
             Phase::Decode { kv_len } => ShapeKey::decode(kv_len, capacity),
         }
         .with_profile(self.plan_profile);
+        // The cache hands back `Arc<Solution>` (a hit is a pointer
+        // bump, not a deep clone under a lock); the cache-disabled
+        // baseline wraps its fresh solve the same way so both arms
+        // read identically below.
         let sol = if self.cache_plans {
             self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity, phase))
         } else {
-            self.solve_adaptive_shape(capacity, phase)
+            self.solve_adaptive_shape(capacity, phase).map(Arc::new)
         };
         match sol {
             Some(s) => (
@@ -684,6 +689,82 @@ impl Server {
         }
         self.metrics.observe("batch_latency", chunk_latency);
         Ok((responses, stats))
+    }
+}
+
+/// A pool of serving replicas leased by the event-driven batcher's
+/// workers: execution capacity is a handoff, not a thread's identity —
+/// any parked worker can pick up any ready batch and lease whichever
+/// replica is free (the retired thread-pool design bound one replica
+/// to one thread for life through a channel fan-out, so a stalled
+/// thread idled its replica even while batches queued).
+pub struct ReplicaPool {
+    replicas: Mutex<Vec<Server>>,
+    freed: Condvar,
+}
+
+impl ReplicaPool {
+    pub fn new(replicas: Vec<Server>) -> Self {
+        Self { replicas: Mutex::new(replicas), freed: Condvar::new() }
+    }
+
+    /// Recover the pool even if a holder panicked mid-push: the vec of
+    /// parked replicas is structurally valid at every point.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Server>> {
+        self.replicas.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Replicas currently parked (free) in the pool.
+    pub fn available(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Lease a replica, parking until one is returned.
+    pub fn lease(&self) -> ReplicaLease<'_> {
+        let mut replicas = self.lock();
+        loop {
+            if let Some(server) = replicas.pop() {
+                return ReplicaLease { pool: self, server: Some(server) };
+            }
+            replicas = self.freed.wait(replicas).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Lease a replica only if one is free right now.
+    pub fn try_lease(&self) -> Option<ReplicaLease<'_>> {
+        self.lock().pop().map(|server| ReplicaLease { pool: self, server: Some(server) })
+    }
+}
+
+/// RAII lease on one pooled replica: dereferences to [`Server`], and
+/// returns the replica (waking one parked leaser) on drop — including
+/// during a panic unwind, so a worker dying mid-batch never leaks its
+/// replica out of the pool.
+pub struct ReplicaLease<'a> {
+    pool: &'a ReplicaPool,
+    server: Option<Server>,
+}
+
+impl Deref for ReplicaLease<'_> {
+    type Target = Server;
+
+    fn deref(&self) -> &Server {
+        self.server.as_ref().expect("lease holds a replica until drop")
+    }
+}
+
+impl DerefMut for ReplicaLease<'_> {
+    fn deref_mut(&mut self) -> &mut Server {
+        self.server.as_mut().expect("lease holds a replica until drop")
+    }
+}
+
+impl Drop for ReplicaLease<'_> {
+    fn drop(&mut self) {
+        if let Some(server) = self.server.take() {
+            self.pool.lock().push(server);
+            self.pool.freed.notify_one();
+        }
     }
 }
 

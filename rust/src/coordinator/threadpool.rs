@@ -1,0 +1,402 @@
+//! The retired thread-and-channel batcher, preserved verbatim as the
+//! measured baseline for the event-driven coordinator
+//! ([`super::planner`] / [`super::executor`]): a bounded
+//! `sync_channel` submit queue in front of a dedicated assembler
+//! thread that busy-polls the decode re-entry lane at 200µs
+//! ([`DECODE_POLL`]) and fans assembled batches out to per-thread
+//! pipeline replicas over one `Mutex<Receiver>`.
+//!
+//! Behaviourally equivalent to [`super::batcher::Batcher`] (same FIFO,
+//! linger, decode-re-entry, backpressure, and drain-on-shutdown
+//! semantics); the differences are purely mechanical and are exactly
+//! what `benches/event_coordinator.rs` measures:
+//!
+//! * idle threads wake every `DECODE_POLL` instead of parking — the
+//!   `poll_wakeups` counter records every fruitless timeout so the
+//!   bench (and the idle regression test) can compare against the
+//!   event core's near-zero wakeups;
+//! * batch assembly is a thread, not a state machine, so every request
+//!   crosses two channel hops (submit → assembler → worker) before
+//!   serving instead of one lock acquisition.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::Phase;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::moe::ModelHandle;
+use crate::coordinator::planner::QueuedRequest;
+use crate::coordinator::server::{EmbeddedRequest, Policy, Response, Server};
+use crate::metrics::Registry;
+use crate::solver::PlanCache;
+
+/// How often the assembler re-polls the decode re-entry lane while
+/// blocked waiting for fresh submissions.
+pub const DECODE_POLL: Duration = Duration::from_micros(200);
+
+/// The polling thread-pool batcher (baseline). Owns the queue, the
+/// assembler, and the worker pool; dropping it drains in-flight work
+/// and joins every thread. Same API surface as
+/// [`super::batcher::Batcher`].
+pub struct ThreadPoolBatcher {
+    submit_tx: Option<SyncSender<QueuedRequest>>,
+    resp_rx: Receiver<Response>,
+    metrics: Arc<Registry>,
+    plan_cache: Arc<PlanCache>,
+    req_elems: usize,
+    /// Requests still owed a final response (in the queue, in flight,
+    /// or looping through decode re-entry).
+    open: Arc<AtomicUsize>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPoolBatcher {
+    pub fn new(model: ModelHandle, cfg: BatcherConfig) -> Result<ThreadPoolBatcher> {
+        let metrics = Arc::new(Registry::new());
+        let plan_cache = Arc::new(PlanCache::new());
+        let workers = cfg.workers.max(1);
+        let max_batch = cfg.max_batch.max(1);
+        let req_elems = model.seq_len * model.model.embed;
+
+        let (submit_tx, submit_rx) = sync_channel::<QueuedRequest>(cfg.queue_depth.max(1));
+        // Decode re-entry lane: unbounded on purpose — a worker must
+        // never block re-entering its own output while the assembler
+        // blocks handing it the next batch (that cycle would deadlock
+        // the pool).
+        let (decode_tx, decode_rx) = channel::<QueuedRequest>();
+        let open = Arc::new(AtomicUsize::new(0));
+        // Bounded work channel: the assembler runs at most `workers`
+        // batches ahead of the slowest replica.
+        let (work_tx, work_rx) = sync_channel::<Vec<QueuedRequest>>(workers);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (resp_tx, resp_rx) = channel::<Response>();
+
+        let mut threads = Vec::with_capacity(workers + 1);
+        {
+            let metrics = metrics.clone();
+            let linger = cfg.linger;
+            let open = open.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("findep-poolbatch".into())
+                    .spawn(move || {
+                        assembler_loop(
+                            submit_rx, decode_rx, work_tx, max_batch, linger, open, metrics,
+                        )
+                    })
+                    .context("spawn batch assembler")?,
+            );
+        }
+        for w in 0..workers {
+            let mut server = Server::with_shared(
+                model.clone(),
+                cfg.eg,
+                cfg.link_delay,
+                metrics.clone(),
+                plan_cache.clone(),
+            )?;
+            server.cache_plans = cfg.cache_plans;
+            let work_rx = work_rx.clone();
+            let resp_tx = resp_tx.clone();
+            let decode_tx = decode_tx.clone();
+            let open = open.clone();
+            let policy = cfg.policy;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("findep-poolserve{w}"))
+                    .spawn(move || worker_loop(server, policy, work_rx, resp_tx, decode_tx, open))
+                    .context("spawn serving worker")?,
+            );
+        }
+
+        Ok(ThreadPoolBatcher {
+            submit_tx: Some(submit_tx),
+            resp_rx,
+            metrics,
+            plan_cache,
+            req_elems,
+            open,
+            threads,
+        })
+    }
+
+    fn validate(&self, req: &EmbeddedRequest) -> Result<()> {
+        anyhow::ensure!(
+            req.hidden.data.len() == self.req_elems,
+            "request {} has {} elements, expected {} (S·M)",
+            req.id,
+            req.hidden.data.len(),
+            self.req_elems
+        );
+        Ok(())
+    }
+
+    /// Enqueue a request, blocking while the queue is full.
+    pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
+        self.validate(&req)?;
+        let tx = self.submit_tx.as_ref().context("batcher closed")?;
+        self.open.fetch_add(1, Ordering::SeqCst);
+        if tx.send(QueuedRequest::fresh(req)).is_err() {
+            self.open.fetch_sub(1, Ordering::SeqCst);
+            anyhow::bail!("batcher workers gone");
+        }
+        self.metrics.inc("queued", 1);
+        Ok(())
+    }
+
+    /// Non-blocking enqueue: `Ok(false)` when the queue is full.
+    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
+        self.validate(&req)?;
+        let tx = self.submit_tx.as_ref().context("batcher closed")?;
+        self.open.fetch_add(1, Ordering::SeqCst);
+        match tx.try_send(QueuedRequest::fresh(req)) {
+            Ok(()) => {
+                self.metrics.inc("queued", 1);
+                Ok(true)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.open.fetch_sub(1, Ordering::SeqCst);
+                self.metrics.inc("queue_rejected", 1);
+                Ok(false)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.open.fetch_sub(1, Ordering::SeqCst);
+                anyhow::bail!("batcher workers gone")
+            }
+        }
+    }
+
+    /// Next completed response, or `None` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.resp_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Collect up to `n` responses, waiting at most `timeout` for each.
+    pub fn drain(&self, n: usize, timeout: Duration) -> Vec<Response> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.recv_timeout(timeout) {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
+    }
+
+    /// Fruitless 200µs poll timeouts since startup (the idle-cost
+    /// counter the event-driven design eliminates).
+    pub fn poll_wakeups(&self) -> u64 {
+        self.metrics.counter("poll_wakeups")
+    }
+}
+
+impl Drop for ThreadPoolBatcher {
+    fn drop(&mut self) {
+        // Close the queue: the assembler drains what's pending, then
+        // the work channel closes and every worker exits.
+        self.submit_tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Pop the next request for assembly. Decode re-entries take priority
+/// over fresh submissions. Blocks until something arrives; returns
+/// `None` only when the submit side has closed *and* no request still
+/// owes a response (`open == 0`), so pending decode loops always
+/// drain. Every fruitless timeout counts one `poll_wakeups`.
+fn next_request(
+    submit_rx: &Receiver<QueuedRequest>,
+    decode_rx: &Receiver<QueuedRequest>,
+    open: &AtomicUsize,
+    metrics: &Registry,
+) -> Option<QueuedRequest> {
+    loop {
+        if let Ok(q) = decode_rx.try_recv() {
+            return Some(q);
+        }
+        match submit_rx.recv_timeout(DECODE_POLL) {
+            Ok(q) => return Some(q),
+            Err(RecvTimeoutError::Timeout) => {
+                metrics.inc("poll_wakeups", 1);
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Submissions closed: drain the in-flight decode work. A
+    // disconnected decode lane means every worker has exited — no step
+    // can ever arrive again, so stop even if `open` never reached zero
+    // (a crashed worker's requests are lost either way; spinning here
+    // would hang shutdown).
+    loop {
+        match decode_rx.recv_timeout(DECODE_POLL) {
+            Ok(q) => return Some(q),
+            Err(RecvTimeoutError::Disconnected) => return None,
+            Err(RecvTimeoutError::Timeout) => metrics.inc("poll_wakeups", 1),
+        }
+        if open.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+    }
+}
+
+/// FIFO batch assembly with a linger window: take the first request
+/// (blocking), then fill up to `max_batch` from whatever arrives within
+/// `linger` — decode re-entries first, then fresh submissions.
+///
+/// Public so `benches/event_coordinator.rs` can drive the *actual*
+/// retired assembly loop (not a reconstruction) against the event core
+/// with a model-free executor.
+pub fn assembler_loop(
+    submit_rx: Receiver<QueuedRequest>,
+    decode_rx: Receiver<QueuedRequest>,
+    work_tx: SyncSender<Vec<QueuedRequest>>,
+    max_batch: usize,
+    linger: Duration,
+    open: Arc<AtomicUsize>,
+    metrics: Arc<Registry>,
+) {
+    let mut submit_open = true;
+    loop {
+        let Some(first) = next_request(&submit_rx, &decode_rx, &open, &metrics) else {
+            return; // closed and fully drained
+        };
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + linger;
+        while batch.len() < max_batch {
+            if let Ok(q) = decode_rx.try_recv() {
+                batch.push(q);
+                continue;
+            }
+            if submit_open {
+                match submit_rx.try_recv() {
+                    Ok(q) => {
+                        batch.push(q);
+                        continue;
+                    }
+                    Err(TryRecvError::Disconnected) => submit_open = false,
+                    Err(TryRecvError::Empty) => {}
+                }
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            if submit_open {
+                match submit_rx.recv_timeout(remaining.min(DECODE_POLL)) {
+                    Ok(q) => batch.push(q),
+                    Err(RecvTimeoutError::Timeout) => metrics.inc("poll_wakeups", 1),
+                    Err(RecvTimeoutError::Disconnected) => submit_open = false,
+                }
+            } else {
+                // Only decode re-entries can still arrive; poll them at
+                // the same cadence for the rest of the window.
+                std::thread::sleep(remaining.min(DECODE_POLL));
+                metrics.inc("poll_wakeups", 1);
+            }
+        }
+        for q in &batch {
+            metrics.observe("queue_wait", q.enqueued.elapsed().as_secs_f64());
+        }
+        metrics.inc("batches_assembled", 1);
+        metrics.observe("batch_fill", batch.len() as f64);
+        if work_tx.send(batch).is_err() {
+            return; // all workers gone
+        }
+    }
+}
+
+/// Releases a batch's `open` slots when dropped — including during a
+/// panic unwind.
+struct OpenSlots<'a> {
+    open: &'a AtomicUsize,
+    n: usize,
+}
+
+impl Drop for OpenSlots<'_> {
+    fn drop(&mut self) {
+        self.open.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// One serving replica: pop the next assembled batch, serve it, then
+/// per request either re-enqueue the next KV-grown decode step (output
+/// remaining) or emit the final response with its true
+/// submit→response latency.
+fn worker_loop(
+    server: Server,
+    policy: Policy,
+    work_rx: Arc<Mutex<Receiver<Vec<QueuedRequest>>>>,
+    resp_tx: Sender<Response>,
+    decode_tx: Sender<QueuedRequest>,
+    open: Arc<AtomicUsize>,
+) {
+    let prompt_len = server.pipeline.model().seq_len;
+    loop {
+        // Hold the lock only for the pop; serving runs unlocked so the
+        // other replicas pipeline their own batches meanwhile.
+        let batch = {
+            let rx = work_rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(batch) = batch else { return };
+        let mut reqs = Vec::with_capacity(batch.len());
+        let mut meta = Vec::with_capacity(batch.len());
+        for q in batch {
+            meta.push((q.submitted, q.req.phase, q.req.output_len));
+            reqs.push(q.req);
+        }
+        let slots = OpenSlots { open: &open, n: reqs.len() };
+        match server.serve_batch(&reqs, policy) {
+            Ok((responses, _stats)) => {
+                for (mut resp, (submitted, phase, output_len)) in responses.into_iter().zip(meta) {
+                    if output_len > 0 {
+                        let next = EmbeddedRequest {
+                            id: resp.id,
+                            hidden: resp.hidden,
+                            phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
+                            output_len: output_len - 1,
+                        };
+                        server.metrics.inc("decode_steps", 1);
+                        open.fetch_add(1, Ordering::SeqCst);
+                        if decode_tx.send(QueuedRequest::reentry(next, submitted)).is_err() {
+                            // Assembler gone mid-shutdown: the request
+                            // can never finish, release its slot.
+                            open.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        continue;
+                    }
+                    resp.latency_s = submitted.elapsed().as_secs_f64();
+                    server.metrics.observe("request_latency", resp.latency_s);
+                    if resp_tx.send(resp).is_err() {
+                        return; // guard releases the batch's slots
+                    }
+                }
+            }
+            Err(e) => {
+                server.metrics.inc("serve_errors", 1);
+                eprintln!("serving worker: batch failed: {e:#}");
+            }
+        }
+        drop(slots);
+    }
+}

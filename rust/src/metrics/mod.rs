@@ -1,15 +1,26 @@
 //! Serving metrics: counters, latency histograms, and throughput meters
 //! used by the coordinator and the bench harnesses.
+//!
+//! The [`Registry`] is sharded for the event-driven coordinator's
+//! worker pool: each thread binds (round-robin) to one of
+//! [`N_SHARDS`] shards and writes only there — counter increments are
+//! lock-free atomic adds under a shared read lock, histogram
+//! observations contend only within a shard — while every read-side
+//! accessor (`counter`, `histogram_*`, `snapshot_json`) merges across
+//! shards on scrape. The merged output is shape-identical to the old
+//! single-mutex registry, so dashboards and tests read the same JSON.
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::cell::Cell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError, RwLock};
 use std::time::Instant;
 
 use crate::util::json::{Json, JsonObj};
 use crate::util::stats;
 
 /// Latency histogram with fixed log-spaced buckets (1 µs .. ~100 s).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Histogram {
     /// Bucket upper bounds in seconds.
     bounds: Vec<f64>,
@@ -19,6 +30,9 @@ pub struct Histogram {
     max_samples: usize,
     total: u64,
     sum: f64,
+    /// Largest observed value (0.0 when empty) — the SLO tail beyond
+    /// the reservoir's percentile reach.
+    max: f64,
 }
 
 impl Default for Histogram {
@@ -36,7 +50,15 @@ impl Histogram {
             b *= 2.0;
         }
         let n = bounds.len();
-        Self { bounds, counts: vec![0; n + 1], samples: Vec::new(), max_samples: 65_536, total: 0, sum: 0.0 }
+        Self {
+            bounds,
+            counts: vec![0; n + 1],
+            samples: Vec::new(),
+            max_samples: 65_536,
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
     }
 
     pub fn record(&mut self, seconds: f64) {
@@ -44,9 +66,25 @@ impl Histogram {
         self.counts[idx] += 1;
         self.total += 1;
         self.sum += seconds;
+        self.max = self.max.max(seconds);
         if self.samples.len() < self.max_samples {
             self.samples.push(seconds);
         }
+    }
+
+    /// Fold another histogram (same fixed bounds — all histograms
+    /// share one constructor) into this one: the scrape-side merge of
+    /// the sharded registry. The sample reservoir absorbs the other's
+    /// samples up to capacity; counts, sum, and max merge exactly.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        let room = self.max_samples.saturating_sub(self.samples.len());
+        self.samples.extend(other.samples.iter().take(room).copied());
     }
 
     pub fn count(&self) -> u64 {
@@ -61,6 +99,11 @@ impl Histogram {
         }
     }
 
+    /// Largest observed value (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
     pub fn percentile(&self, p: f64) -> f64 {
         stats::percentile(&self.samples, p)
     }
@@ -72,6 +115,7 @@ impl Histogram {
         o.insert("p50_s", Json::Num(self.percentile(50.0)));
         o.insert("p95_s", Json::Num(self.percentile(95.0)));
         o.insert("p99_s", Json::Num(self.percentile(99.0)));
+        o.insert("max_s", Json::Num(self.max));
         Json::Obj(o)
     }
 }
@@ -122,11 +166,51 @@ impl ThroughputMeter {
     }
 }
 
-/// Thread-safe metrics registry shared across coordinator components.
+/// Shard count: comfortably above the batcher's worker counts so
+/// threads rarely share a shard, small enough that scrape-side merges
+/// stay trivial.
+const N_SHARDS: usize = 16;
+
+/// Hands each thread a stable shard index, round-robin across every
+/// thread that ever touches any registry (shards are per-registry;
+/// only the index assignment is global).
+static SHARD_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn shard_index() -> usize {
+    SHARD.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = SHARD_SEQ.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// One registry shard: atomic counters behind a name-map read lock
+/// (the write lock is taken once per name, to create the atomic), and
+/// locally-locked histograms.
 #[derive(Debug, Default)]
-pub struct Registry {
-    counters: Mutex<BTreeMap<String, u64>>,
+struct Shard {
+    counters: RwLock<BTreeMap<String, AtomicU64>>,
     histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+/// Thread-safe metrics registry shared across coordinator components,
+/// sharded per worker thread and merged on scrape.
+#[derive(Debug)]
+pub struct Registry {
+    shards: Vec<Shard>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self { shards: (0..N_SHARDS).map(|_| Shard::default()).collect() }
+    }
 }
 
 impl Registry {
@@ -134,49 +218,125 @@ impl Registry {
         Self::default()
     }
 
+    /// This thread's home shard.
+    fn shard(&self) -> &Shard {
+        &self.shards[shard_index() % self.shards.len()]
+    }
+
     pub fn inc(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+        let shard = self.shard();
+        {
+            // Hot path: the counter exists in this shard — a shared
+            // lock plus one atomic add, no exclusive section at all.
+            let counters = shard.counters.read().unwrap_or_else(PoisonError::into_inner);
+            if let Some(c) = counters.get(name) {
+                c.fetch_add(by, Ordering::Relaxed);
+                return;
+            }
+        }
+        shard
+            .counters
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
+            .entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        self.shards
+            .iter()
+            .map(|s| {
+                s.counters
+                    .read()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .get(name)
+                    .map(|c| c.load(Ordering::Relaxed))
+                    .unwrap_or(0)
+            })
+            .sum()
     }
 
     pub fn observe(&self, name: &str, seconds: f64) {
-        self.histograms
+        self.shard()
+            .histograms
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .entry(name.to_string())
             .or_default()
             .record(seconds);
     }
 
+    /// Scrape-side merge of one histogram across shards (`None` when
+    /// no shard ever observed it).
+    fn merged_histogram(&self, name: &str) -> Option<Histogram> {
+        let mut merged: Option<Histogram> = None;
+        for s in &self.shards {
+            let hists = s.histograms.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(h) = hists.get(name) {
+                match &mut merged {
+                    Some(m) => m.merge(h),
+                    None => merged = Some(h.clone()),
+                }
+            }
+        }
+        merged
+    }
+
     pub fn histogram_json(&self, name: &str) -> Option<Json> {
-        self.histograms.lock().unwrap().get(name).map(|h| h.to_json())
+        self.merged_histogram(name).map(|h| h.to_json())
     }
 
     /// Sample count of a histogram (0 when it was never observed).
     pub fn histogram_count(&self, name: &str) -> u64 {
-        self.histograms.lock().unwrap().get(name).map(|h| h.count()).unwrap_or(0)
+        self.merged_histogram(name).map(|h| h.count()).unwrap_or(0)
     }
 
     /// Mean of a histogram, or `None` when no histogram of that name
     /// was ever observed — distinguishable from a true zero mean (the
     /// old 0.0 sentinel was not).
     pub fn histogram_mean(&self, name: &str) -> Option<f64> {
-        self.histograms.lock().unwrap().get(name).map(|h| h.mean())
+        self.merged_histogram(name).map(|h| h.mean())
+    }
+
+    /// Exact percentile (from the merged sample reservoir) of a
+    /// histogram, or `None` when it was never observed — the SLO
+    /// accessor (p99 queue wait, max request latency) the goodput
+    /// items and the coordinator bench report.
+    pub fn histogram_percentile(&self, name: &str, p: f64) -> Option<f64> {
+        self.merged_histogram(name).map(|h| h.percentile(p))
+    }
+
+    /// Largest observed value of a histogram, or `None` when it was
+    /// never observed.
+    pub fn histogram_max(&self, name: &str) -> Option<f64> {
+        self.merged_histogram(name).map(|h| h.max())
     }
 
     pub fn snapshot_json(&self) -> Json {
         let mut o = JsonObj::new();
+        let mut merged_counters: BTreeMap<String, u64> = BTreeMap::new();
+        for s in &self.shards {
+            for (k, v) in s.counters.read().unwrap_or_else(PoisonError::into_inner).iter() {
+                *merged_counters.entry(k.clone()).or_insert(0) += v.load(Ordering::Relaxed);
+            }
+        }
         let mut counters = JsonObj::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
+        for (k, v) in &merged_counters {
             counters.insert(k.clone(), Json::Num(*v as f64));
         }
         o.insert("counters", Json::Obj(counters));
+        let mut names: BTreeSet<String> = BTreeSet::new();
+        for s in &self.shards {
+            names.extend(
+                s.histograms.lock().unwrap_or_else(PoisonError::into_inner).keys().cloned(),
+            );
+        }
         let mut hists = JsonObj::new();
-        for (k, h) in self.histograms.lock().unwrap().iter() {
-            hists.insert(k.clone(), h.to_json());
+        for k in &names {
+            if let Some(h) = self.merged_histogram(k) {
+                hists.insert(k.clone(), h.to_json());
+            }
         }
         o.insert("histograms", Json::Obj(hists));
         Json::Obj(o)
@@ -197,6 +357,47 @@ mod tests {
         assert!((h.mean() - 0.0505).abs() < 1e-6);
         assert!((h.percentile(50.0) - 0.0505).abs() < 2e-3);
         assert!(h.percentile(99.0) > 0.09);
+        assert!((h.max() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact_for_counts_sum_and_max() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=50 {
+            a.record(i as f64 * 1e-3);
+        }
+        for i in 51..=100 {
+            b.record(i as f64 * 1e-3);
+        }
+        a.merge(&b);
+        let mut whole = Histogram::new();
+        for i in 1..=100 {
+            whole.record(i as f64 * 1e-3);
+        }
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.max() - whole.max()).abs() < 1e-12);
+        assert!((a.percentile(99.0) - whole.percentile(99.0)).abs() < 1e-9);
+        // Empty-into-full and full-into-empty both behave.
+        let mut empty = Histogram::new();
+        empty.merge(&whole);
+        assert_eq!(empty.count(), 100);
+        let before = whole.count();
+        whole.merge(&Histogram::new());
+        assert_eq!(whole.count(), before);
+    }
+
+    #[test]
+    fn histogram_json_reports_tail_fields() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("count").as_f64(), Some(100.0));
+        assert!(j.get("p99_s").as_f64().unwrap() > 0.09);
+        assert!((j.get("max_s").as_f64().unwrap() - 0.1).abs() < 1e-9);
     }
 
     #[test]
@@ -239,5 +440,45 @@ mod tests {
         assert_eq!(r.histogram_mean("missing"), None);
         r.observe("zero", 0.0);
         assert_eq!(r.histogram_mean("zero"), Some(0.0));
+    }
+
+    #[test]
+    fn sharded_writes_merge_exactly_on_scrape() {
+        // More threads than shards: increments and observations land
+        // across many shards (and some shared ones) yet every scrape
+        // accessor reads the exact merged totals.
+        let r = std::sync::Arc::new(Registry::new());
+        let threads = 24usize;
+        let per = 50u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    r.inc("ops", 1);
+                    r.inc("bytes", 10);
+                    r.observe("wait", (t as f64 + 1.0) * 1e-4 + i as f64 * 1e-9);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = threads as u64 * per;
+        assert_eq!(r.counter("ops"), total);
+        assert_eq!(r.counter("bytes"), total * 10);
+        assert_eq!(r.histogram_count("wait"), total);
+        // The slowest thread's largest observation survives the merge.
+        let expect_max = threads as f64 * 1e-4 + (per - 1) as f64 * 1e-9;
+        assert!((r.histogram_max("wait").unwrap() - expect_max).abs() < 1e-12);
+        // Percentile accessor reads the merged reservoir.
+        let p99 = r.histogram_percentile("wait", 99.0).unwrap();
+        assert!(p99 > r.histogram_percentile("wait", 50.0).unwrap());
+        assert!(p99 <= expect_max + 1e-12);
+        assert_eq!(r.histogram_percentile("missing", 99.0), None);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("counters").get("ops").as_f64(), Some(total as f64));
+        assert_eq!(j.get("histograms").get("wait").get("count").as_f64(), Some(total as f64));
+        assert!(j.get("histograms").get("wait").get("max_s").as_f64().is_some());
     }
 }

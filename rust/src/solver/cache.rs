@@ -12,14 +12,26 @@
 //! cannot hold would otherwise re-run the whole feasibility walk on
 //! every arrival.
 //!
-//! The cache is shared across serving workers (`Arc<PlanCache>`); the
-//! map lock is held across a miss's solve on purpose, so concurrent
-//! workers hitting the same cold shape wait for one solve instead of
-//! duplicating it.
+//! The cache is shared across serving workers (`Arc<PlanCache>`) and
+//! built read-mostly for the event-driven coordinator:
+//!
+//! * **Hits are shared-lock pointer bumps** — the live generation's map
+//!   sits behind an `RwLock`, and entries are `Arc<Solution>`, so
+//!   concurrent lookups neither serialize nor deep-clone plan bodies.
+//! * **Misses solve once per shape** — a per-generation solve mutex
+//!   serializes cold shapes (concurrent workers hitting the same cold
+//!   shape wait for one solve instead of duplicating it), while
+//!   readers of already-memoized shapes pass through untouched.
+//! * **`clear()` swaps generations atomically** — the auto-split
+//!   re-key path replaces the whole generation in one pointer store,
+//!   so a concurrent reader either sees the complete old map or the
+//!   empty new one, never a half-cleared hybrid; a solve in flight
+//!   during the swap inserts into its own orphaned generation and can
+//!   never pollute the new keyspace with a stale-split plan.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
 
 use crate::config::Phase;
 use crate::perfmodel::profile::ProfileId;
@@ -91,12 +103,38 @@ pub fn shape_key_decode(kv_len: usize, batch: usize) -> ShapeKey {
     ShapeKey::decode(kv_len, bucket_up(batch))
 }
 
-/// Memoized `ShapeKey -> Solution` store.
+/// One cache generation: the memoized map plus the solve serializer.
+/// `clear()` retires the whole generation at once; a solve in flight
+/// keeps inserting into its retired generation, which nothing reads
+/// anymore.
 #[derive(Debug, Default)]
+struct Generation {
+    map: RwLock<BTreeMap<ShapeKey, Option<Arc<Solution>>>>,
+    /// Serializes cold-shape solves within the generation (one solve
+    /// per key, not one per concurrently-arriving worker) without
+    /// blocking hit-path readers.
+    solve: Mutex<()>,
+}
+
+/// Memoized `ShapeKey -> Arc<Solution>` store (generational).
+#[derive(Debug)]
 pub struct PlanCache {
-    map: Mutex<BTreeMap<ShapeKey, Option<Solution>>>,
+    live: RwLock<Arc<Generation>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Completed `clear()` swaps.
+    generations: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self {
+            live: RwLock::new(Arc::new(Generation::default())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            generations: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PlanCache {
@@ -104,29 +142,55 @@ impl PlanCache {
         Self::default()
     }
 
+    /// Pin the live generation (a pointer bump under a shared lock —
+    /// the swap in `clear()` is the only writer).
+    fn generation_ref(&self) -> Arc<Generation> {
+        self.live.read().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
     /// Return the memoized solution for `key`, running `solve` exactly
     /// once per key on a miss (a `None` result is memoized as
-    /// infeasible).
+    /// infeasible). A hit is a shared-lock lookup returning a cloned
+    /// `Arc` — concurrent hits never serialize and never deep-copy the
+    /// plan.
     pub fn get_or_solve(
         &self,
         key: ShapeKey,
         solve: impl FnOnce() -> Option<Solution>,
-    ) -> Option<Solution> {
-        let mut map = self.map.lock().unwrap();
-        if let Some(cached) = map.get(&key) {
+    ) -> Option<Arc<Solution>> {
+        let generation = self.generation_ref();
+        if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return cached.clone();
+        }
+        // Cold shape: serialize against other misses so the solve runs
+        // once, then re-check — a peer may have solved this exact key
+        // while we waited for the solve token.
+        let token = generation.solve.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return cached.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let solved = solve();
-        map.insert(key, solved.clone());
+        let solved = solve().map(Arc::new);
+        generation
+            .map
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(key, solved.clone());
+        drop(token);
         solved
     }
 
     /// Cached solution without solving (`None` = never solved; a cached
     /// infeasible shape reads back as `Some(None)`).
-    pub fn peek(&self, key: ShapeKey) -> Option<Option<Solution>> {
-        self.map.lock().unwrap().get(&key).cloned()
+    pub fn peek(&self, key: ShapeKey) -> Option<Option<Arc<Solution>>> {
+        self.generation_ref()
+            .map
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&key)
+            .cloned()
     }
 
     pub fn hits(&self) -> u64 {
@@ -139,16 +203,27 @@ impl PlanCache {
 
     /// Number of memoized shapes (feasible and infeasible).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.generation_ref().map.read().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Drop every memoized shape (testbed constants changed).
+    /// How many times the cache has been cleared (generation swaps).
+    pub fn generation(&self) -> u64 {
+        self.generations.load(Ordering::Relaxed)
+    }
+
+    /// Drop every memoized shape (testbed constants or planning split
+    /// changed) by swapping in a fresh generation — one atomic pointer
+    /// store, so a concurrent reader observes either the full old map
+    /// or the empty new one, and an in-flight solve completes into the
+    /// retired generation instead of leaking a stale plan forward.
     pub fn clear(&self) {
-        self.map.lock().unwrap().clear();
+        let fresh = Arc::new(Generation::default());
+        *self.live.write().unwrap_or_else(PoisonError::into_inner) = fresh;
+        self.generations.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -232,6 +307,9 @@ mod tests {
         assert_eq!(fresh.config, cached.config);
         assert_eq!(fresh.config, hit.config);
         assert_eq!(fresh.throughput_tokens, hit.throughput_tokens);
+        // A hit and its original insert share one allocation — the
+        // read-mostly contract (no deep clone under any lock).
+        assert!(Arc::ptr_eq(&cached, &hit));
     }
 
     #[test]
@@ -286,5 +364,73 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert!(cache.peek(shape_key(2048, 10_000_000)).is_none());
+    }
+
+    #[test]
+    fn clear_orphans_in_flight_solves() {
+        // The auto-split hazard: a solve starts, the split changes and
+        // clears the cache, then the stale solve completes. The insert
+        // must land in the retired generation — the re-keyed cache can
+        // never serve the stale-split plan.
+        let cache = PlanCache::new();
+        let inst = paper_instance();
+        let params = SolverParams::default();
+        let key = ShapeKey::prefill(2048, 8);
+        let sol = cache.get_or_solve(key, || {
+            cache.clear(); // the split changed mid-solve
+            solve_online(&inst, 8, &params)
+        });
+        assert!(sol.is_some(), "the in-flight caller still gets its plan");
+        assert_eq!(cache.generation(), 1);
+        assert!(cache.is_empty(), "stale solve leaked into the new generation");
+        assert_eq!(cache.peek(key), None);
+        // The next lookup re-solves under the new generation.
+        let mut resolved = false;
+        let fresh = cache.get_or_solve(key, || {
+            resolved = true;
+            solve_online(&inst, 8, &params)
+        });
+        assert!(resolved, "post-clear lookup must re-solve");
+        assert_eq!(fresh.unwrap().config, sol.unwrap().config);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn generation_swap_is_all_or_nothing_for_readers() {
+        // A reader that pinned the old generation keeps a fully
+        // consistent view while (and after) the swap happens.
+        let cache = Arc::new(PlanCache::new());
+        let inst = paper_instance();
+        let params = SolverParams::default();
+        for batch in [2usize, 4, 8] {
+            let _ = cache
+                .get_or_solve(ShapeKey::prefill(2048, batch), || solve_online(&inst, batch, &params));
+        }
+        assert_eq!(cache.len(), 3);
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        if i == 0 {
+                            cache.clear();
+                        } else {
+                            // Either the full old view or the empty new
+                            // one; never a partially-cleared hybrid.
+                            let n = cache.len();
+                            assert!(n == 0 || n == 3, "half-cleared cache observed: {n} entries");
+                            for batch in [2usize, 4, 8] {
+                                // peek never tears either.
+                                let _ = cache.peek(ShapeKey::prefill(2048, batch));
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(cache.generation() >= 1);
     }
 }

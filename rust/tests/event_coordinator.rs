@@ -1,0 +1,499 @@
+//! Event-driven coordinator tests: idle parking (near-zero wakeups),
+//! concurrent shutdown drain (no response lost or duplicated, `open`
+//! reaches zero), backpressure release, and — artifact-gated — the
+//! full `Batcher` against the serial oracle (bit-identical responses,
+//! FIFO order) plus the polling baseline's idle cost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::executor::{run_worker, EventCore};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::planner::{PlannerConfig, QueuedRequest};
+use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::coordinator::threadpool::ThreadPoolBatcher;
+use findep::metrics::Registry;
+use findep::runtime::artifacts_dir;
+
+fn cfg(max_batch: usize, linger: Duration, queue_depth: usize) -> PlannerConfig {
+    PlannerConfig { max_batch, linger, queue_depth }
+}
+
+/// Spawn `n` workers whose executor emulates the batcher's serving
+/// step without a model: requests with `output_len > 0` re-enter the
+/// decode lane (one step per output token), finished requests send
+/// their id to `done`. Open-slot accounting mirrors the real batcher.
+fn spawn_sim_workers(
+    core: &Arc<EventCore>,
+    metrics: &Arc<Registry>,
+    n: usize,
+    done: Sender<u64>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        core.register_worker();
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || {
+            let c = core.clone();
+            run_worker(&core, &metrics, move |batch| {
+                let n = batch.len();
+                for q in batch {
+                    if q.req.output_len > 0 {
+                        let mut next = q.req;
+                        next.output_len -= 1;
+                        c.add_open(1);
+                        c.reenter_decode(QueuedRequest::reentry(next, q.submitted));
+                    } else {
+                        let _ = done.send(q.req.id);
+                    }
+                }
+                c.release_open(n);
+            });
+        }));
+    }
+    handles
+}
+
+// ---- idle parking (the DECODE_POLL regression) -------------------------
+
+#[test]
+fn idle_event_core_performs_near_zero_wakeups() {
+    // The retired design woke its assembler every 200µs while idle
+    // (≈1250 wakeups over this window). The event core must park: no
+    // submit, no re-entry, no linger window ⇒ no wakeups beyond the
+    // occasional spurious condvar return.
+    let core = Arc::new(EventCore::new(cfg(8, Duration::from_millis(1), 64)));
+    let metrics = Arc::new(Registry::new());
+    let (done_tx, _done_rx) = channel();
+    let handles = spawn_sim_workers(&core, &metrics, 4, done_tx);
+    std::thread::sleep(Duration::from_millis(250));
+    let idle = core.wakeups();
+    assert!(idle <= 8, "idle workers woke {idle} times; they must park, not poll");
+    // The core still works after the idle stretch, and shuts down clean.
+    core.submit(EmbeddedRequest::synthetic(7, 2, 2)).unwrap();
+    core.close();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(core.open(), 0);
+}
+
+#[test]
+fn lingering_window_wakes_at_deadline_not_at_poll_cadence() {
+    // One request into an 8-wide window: nothing fills it, so the
+    // worker must sleep through the linger and execute at the deadline
+    // — a bounded handful of wakeups, not a 200µs cadence.
+    let linger = Duration::from_millis(50);
+    let core = Arc::new(EventCore::new(cfg(8, linger, 64)));
+    let metrics = Arc::new(Registry::new());
+    let (done_tx, done_rx) = channel();
+    let handles = spawn_sim_workers(&core, &metrics, 2, done_tx);
+    let t0 = Instant::now();
+    core.submit(EmbeddedRequest::synthetic(0, 2, 2)).unwrap();
+    let id = done_rx.recv_timeout(Duration::from_secs(10)).expect("lingering window sealed");
+    let waited = t0.elapsed();
+    assert_eq!(id, 0);
+    assert!(
+        waited >= Duration::from_millis(30),
+        "partial window sealed after {waited:?}, before the linger deadline"
+    );
+    assert!(
+        core.wakeups() <= 16,
+        "linger served by {} wakeups; the baseline cadence would need ~250",
+        core.wakeups()
+    );
+    core.close();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+// ---- concurrent shutdown drain -----------------------------------------
+
+#[test]
+fn concurrent_shutdown_drains_every_decode_loop() {
+    // Many workers, deep decode loops, queued submits from several
+    // threads, then shutdown: every admitted request must produce
+    // exactly one completion (no loss, no duplication) and `open`
+    // must reach zero before the workers exit.
+    let core = Arc::new(EventCore::new(cfg(4, Duration::from_micros(200), 8)));
+    let metrics = Arc::new(Registry::new());
+    let (done_tx, done_rx) = channel();
+    let workers = spawn_sim_workers(&core, &metrics, 8, done_tx);
+
+    let submitters: Vec<_> = (0..4u64)
+        .map(|t| {
+            let core = core.clone();
+            std::thread::spawn(move || {
+                for i in 0..16u64 {
+                    // Blocking submits against depth 8: backpressure is
+                    // exercised while workers drain concurrently.
+                    core.submit(EmbeddedRequest::synthetic_autoregressive(t * 16 + i, 2, 2, 3))
+                        .unwrap();
+                }
+            })
+        })
+        .collect();
+    for s in submitters {
+        s.join().unwrap();
+    }
+    // Close while decode loops are still in flight: the drain must
+    // finish all 64 requests' 3-step loops regardless.
+    core.close();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(core.open(), 0, "drain finished with open slots outstanding");
+    let mut got: Vec<u64> = done_rx.try_iter().collect();
+    got.sort_unstable();
+    assert_eq!(got, (0..64).collect::<Vec<_>>(), "responses lost or duplicated in the drain");
+    // Every pass (1 prefill + 3 decode steps per request) crossed the
+    // window exactly once.
+    assert_eq!(metrics.histogram_count("queue_wait"), 64 * 4);
+    // Submits after shutdown are rejected, decode lane drained clean.
+    assert!(core.submit(EmbeddedRequest::synthetic(999, 2, 2)).is_err());
+}
+
+#[test]
+fn single_worker_completion_order_matches_serial_oracle() {
+    // With one worker the event loop must preserve the serial order:
+    // equal-length decode loops submitted in order complete in order
+    // (the decode lane outranks fresh submits, so nobody leapfrogs).
+    let core = Arc::new(EventCore::new(cfg(4, Duration::from_micros(200), 64)));
+    let metrics = Arc::new(Registry::new());
+    let (done_tx, done_rx) = channel();
+    let workers = spawn_sim_workers(&core, &metrics, 1, done_tx);
+    for i in 0..12u64 {
+        core.submit(EmbeddedRequest::synthetic_autoregressive(i, 2, 2, 2)).unwrap();
+    }
+    let mut got = Vec::new();
+    for _ in 0..12 {
+        got.push(done_rx.recv_timeout(Duration::from_secs(10)).expect("request completed"));
+    }
+    assert_eq!(got, (0..12).collect::<Vec<_>>(), "single worker must complete FIFO");
+    core.close();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(core.open(), 0);
+}
+
+// ---- backpressure ------------------------------------------------------
+
+#[test]
+fn backpressure_rejects_at_depth_and_releases_on_drain() {
+    let core = Arc::new(EventCore::new(cfg(1, Duration::ZERO, 1)));
+    let metrics = Arc::new(Registry::new());
+    // One worker whose executor blocks until told to proceed.
+    let (gate_tx, gate_rx) = channel::<()>();
+    let gate_rx = Arc::new(std::sync::Mutex::new(gate_rx));
+    let (done_tx, done_rx) = channel();
+    core.register_worker();
+    let handle = {
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let gate_rx = gate_rx.clone();
+        std::thread::spawn(move || {
+            let c = core.clone();
+            run_worker(&core, &metrics, move |batch| {
+                gate_rx.lock().unwrap().recv().ok();
+                let n = batch.len();
+                for q in batch {
+                    let _ = done_tx.send(q.req.id);
+                }
+                c.release_open(n);
+            });
+        })
+    };
+    // r0 is picked up by the worker (blocked in exec); r1 occupies the
+    // single bounded slot; r2 must be rejected.
+    assert!(core.try_submit(EmbeddedRequest::synthetic(0, 2, 2)).unwrap());
+    // Wait until the worker has pulled r0 out of the queue.
+    let t0 = Instant::now();
+    loop {
+        if core.try_submit(EmbeddedRequest::synthetic(1, 2, 2)).unwrap() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never ingested r0");
+        std::thread::yield_now();
+    }
+    assert!(
+        !core.try_submit(EmbeddedRequest::synthetic(2, 2, 2)).unwrap(),
+        "queue depth 1 must reject a second queued submit"
+    );
+    // Release the worker: the queue drains and a slot frees up.
+    gate_tx.send(()).unwrap();
+    gate_tx.send(()).unwrap();
+    let t0 = Instant::now();
+    loop {
+        if core.try_submit(EmbeddedRequest::synthetic(2, 2, 2)).unwrap() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "drain never freed the bounded slot");
+        std::thread::yield_now();
+    }
+    gate_tx.send(()).unwrap();
+    core.close();
+    handle.join().unwrap();
+    let mut got: Vec<u64> = done_rx.try_iter().collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1, 2]);
+    assert_eq!(core.open(), 0);
+}
+
+#[test]
+fn blocked_submitters_unblock_on_close() {
+    // A submitter parked on a full queue must error out (not hang)
+    // when the batcher shuts down underneath it.
+    let core = Arc::new(EventCore::new(cfg(1, Duration::ZERO, 1)));
+    let metrics = Arc::new(Registry::new());
+    let (gate_tx, gate_rx) = channel::<()>();
+    let gate_rx = Arc::new(std::sync::Mutex::new(gate_rx));
+    let (done_tx, done_rx) = channel();
+    core.register_worker();
+    let worker = {
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let gate_rx = gate_rx.clone();
+        std::thread::spawn(move || {
+            let c = core.clone();
+            run_worker(&core, &metrics, move |batch| {
+                // Blocks until signalled; a dropped gate means "run free".
+                gate_rx.lock().unwrap().recv().ok();
+                let n = batch.len();
+                for q in batch {
+                    let _ = done_tx.send(q.req.id);
+                }
+                c.release_open(n);
+            });
+        })
+    };
+    // r0 is pulled into the (gated) worker; r1 then occupies the single
+    // bounded slot; the blocking submit of r9 parks on the space condvar.
+    core.submit(EmbeddedRequest::synthetic(0, 2, 2)).unwrap();
+    let t0 = Instant::now();
+    loop {
+        if core.try_submit(EmbeddedRequest::synthetic(1, 2, 2)).unwrap() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never ingested r0");
+        std::thread::yield_now();
+    }
+    let blocked = {
+        let core = core.clone();
+        std::thread::spawn(move || core.submit(EmbeddedRequest::synthetic(9, 2, 2)))
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    core.close();
+    let res = blocked.join().unwrap();
+    assert!(res.is_err(), "submitter blocked on a closed batcher must error, not hang");
+    // Release the gate: the shutdown drain finishes r0 and r1.
+    drop(gate_tx);
+    worker.join().unwrap();
+    let mut got: Vec<u64> = done_rx.try_iter().collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1], "admitted requests must survive the drain");
+    assert_eq!(core.open(), 0, "close drained with open slots outstanding");
+}
+
+// ---- worker-death robustness -------------------------------------------
+
+#[test]
+fn panicking_worker_releases_its_slots_and_submits_fail_cleanly() {
+    let core = Arc::new(EventCore::new(cfg(1, Duration::ZERO, 8)));
+    let metrics = Arc::new(Registry::new());
+    let panics = Arc::new(AtomicUsize::new(0));
+    core.register_worker();
+    let handle = {
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let panics = panics.clone();
+        std::thread::spawn(move || {
+            let c = core.clone();
+            run_worker(&core, &metrics, move |batch| {
+                // The open-slot guard lives in the batcher's executor;
+                // emulate it with a drop guard so a panic still
+                // releases the batch's slots.
+                struct Guard<'a>(&'a EventCore, usize);
+                impl Drop for Guard<'_> {
+                    fn drop(&mut self) {
+                        self.0.release_open(self.1);
+                    }
+                }
+                let _g = Guard(&c, batch.len());
+                panics.fetch_add(1, Ordering::SeqCst);
+                panic!("worker dies mid-batch");
+            });
+        })
+    };
+    core.submit(EmbeddedRequest::synthetic(0, 2, 2)).unwrap();
+    assert!(handle.join().is_err(), "worker must have panicked");
+    assert_eq!(panics.load(Ordering::SeqCst), 1);
+    assert_eq!(core.open(), 0, "panicked batch leaked open slots");
+    assert_eq!(core.live_workers(), 0);
+    // With every worker dead, submits fail instead of queueing forever.
+    assert!(core.submit(EmbeddedRequest::synthetic(1, 2, 2)).is_err());
+}
+
+// ---- artifact-gated: the real Batcher ----------------------------------
+
+fn skip() -> bool {
+    let missing = !artifacts_dir().join("manifest.json").exists();
+    if missing {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    missing
+}
+
+#[test]
+fn idle_batcher_parks_while_baseline_polls() {
+    if skip() {
+        return;
+    }
+    let model = ModelHandle::load(&artifacts_dir(), true).unwrap();
+    let idle_for = Duration::from_millis(300);
+
+    let event = Batcher::new(model.clone(), BatcherConfig::default()).unwrap();
+    std::thread::sleep(idle_for);
+    let event_wakeups = event.wakeups();
+
+    let baseline = ThreadPoolBatcher::new(model, BatcherConfig::default()).unwrap();
+    std::thread::sleep(idle_for);
+    let baseline_polls = baseline.poll_wakeups();
+
+    assert!(
+        event_wakeups <= 8,
+        "idle event batcher woke {event_wakeups} times; workers must park"
+    );
+    assert!(
+        baseline_polls > 100,
+        "baseline should be polling at the 200µs cadence, saw {baseline_polls}"
+    );
+}
+
+#[test]
+fn event_batcher_is_bit_identical_to_serial_oracle() {
+    if skip() {
+        return;
+    }
+    let model = ModelHandle::load(&artifacts_dir(), true).unwrap();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let batch: Vec<EmbeddedRequest> =
+        (0..10u64).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+
+    // Serial oracle: one request at a time, directly on a server.
+    let direct = Server::new(model.clone(), 2, None).unwrap();
+    let mut want = Vec::new();
+    for r in &batch {
+        let (mut resp, _) = direct.serve_batch(std::slice::from_ref(r), Policy::Adaptive).unwrap();
+        want.push(resp.remove(0));
+    }
+
+    // max_batch 1 + zero linger pins the batch composition to one
+    // request per window — identical float reduction order to the
+    // oracle, so responses must be bit-identical, in FIFO order.
+    let cfg = BatcherConfig {
+        workers: 1,
+        max_batch: 1,
+        linger: Duration::ZERO,
+        policy: Policy::Adaptive,
+        ..Default::default()
+    };
+    let batcher = Batcher::new(model, cfg).unwrap();
+    for r in &batch {
+        batcher.submit(r.clone()).unwrap();
+    }
+    let got = batcher.drain(10, Duration::from_secs(60));
+    assert_eq!(got.len(), 10, "batcher lost responses");
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(g.id, i as u64, "event batcher broke FIFO order");
+        assert_eq!(w.id, g.id);
+        assert_eq!(
+            w.hidden.data, g.hidden.data,
+            "response {i} is not bit-identical to the serial oracle"
+        );
+    }
+}
+
+#[test]
+fn batcher_concurrent_shutdown_completes_all_responses() {
+    if skip() {
+        return;
+    }
+    let model = ModelHandle::load(&artifacts_dir(), true).unwrap();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let cfg = BatcherConfig {
+        workers: 4,
+        max_batch: 4,
+        queue_depth: 8,
+        policy: Policy::Adaptive,
+        linger: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let batcher = Arc::new(Batcher::new(model, cfg).unwrap());
+    let n = 24u64;
+    let out_len = 2usize;
+    let submitters: Vec<_> = (0..3u64)
+        .map(|t| {
+            let batcher = batcher.clone();
+            std::thread::spawn(move || {
+                for i in 0..n / 3 {
+                    batcher
+                        .submit(EmbeddedRequest::synthetic_autoregressive(
+                            t * (n / 3) + i,
+                            s,
+                            m,
+                            out_len,
+                        ))
+                        .unwrap();
+                }
+            })
+        })
+        .collect();
+    for st in submitters {
+        st.join().unwrap();
+    }
+    let resps = batcher.drain(n as usize, Duration::from_secs(60));
+    assert_eq!(resps.len(), n as usize, "autoregressive requests lost responses");
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "responses missing or duplicated");
+    assert_eq!(batcher.metrics().counter("decode_steps"), n * out_len as u64);
+    // All final responses are out; the open counter drains to zero as
+    // the last batches' slot guards drop.
+    let t0 = Instant::now();
+    while batcher.open() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "open counter stuck at {}", batcher.open());
+        std::thread::yield_now();
+    }
+    // Drop with everything drained: must join cleanly (no hang).
+    drop(batcher);
+}
+
+#[test]
+fn dropping_batcher_with_undrained_work_does_not_hang() {
+    if skip() {
+        return;
+    }
+    let model = ModelHandle::load(&artifacts_dir(), true).unwrap();
+    let (s, m) = (model.seq_len, model.model.embed);
+    let cfg = BatcherConfig { workers: 2, max_batch: 4, ..Default::default() };
+    let batcher = Batcher::new(model, cfg).unwrap();
+    for i in 0..6u64 {
+        batcher.submit(EmbeddedRequest::synthetic_autoregressive(i, s, m, 2)).unwrap();
+    }
+    // Take only part of the output, then drop: the drain must complete
+    // the in-flight decode loops and join every worker regardless.
+    let _partial = batcher.drain(2, Duration::from_secs(60));
+    let t0 = Instant::now();
+    drop(batcher);
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "drop-with-undrained-work stalled the shutdown drain"
+    );
+}
