@@ -441,7 +441,7 @@ fn main() {
         };
         let event_b = Batcher::new(model.clone(), cfg).expect("event batcher");
         let (dt, resps) = serve_stream(
-            |r| event_b.submit(r),
+            |r| Ok(event_b.submit(r)?),
             |k| event_b.drain(k, Duration::from_secs(60)),
             n_requests,
             s,

@@ -1,0 +1,387 @@
+//! Chaos bench: serving under the resilience layer.
+//!
+//! 1. **Simulated chaos** (always runs, model-free) — the real event
+//!    core, worker loop, and `run_attempt` delivery protocol over a
+//!    fault-injecting unit-replica pool whose "serve" is a fixed sleep
+//!    plus echo. Three runs:
+//!    * *fault-free* — the inertness gate: zero resilience counters,
+//!      no failures, responses echo bit-identically;
+//!    * *reference plan* ([`FaultPlan::reference`]: 1 permanent + 1
+//!      transient + 1 slow of 4 replicas) — the delivery gates: no
+//!      request lost or duplicated, and throughput at least 0.5x the
+//!      fault-free run;
+//!    * *deadlines* — expired requests fail fast with the typed
+//!      `DeadlineExpired` error while the rest complete.
+//! 2. **Real serving** (needs `make artifacts`) — the [`Batcher`] on
+//!    the AOT testbed model, fault-free vs the reference plan, with
+//!    the same exactly-once gate, plus admission-control shedding
+//!    returning typed [`SubmitError::Shed`].
+//!
+//! Emits `BENCH_resilience.json`.
+//!
+//! Run: `cargo bench --bench resilience`
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use findep::coordinator::batcher::{
+    run_attempt, Batcher, BatcherConfig, FailedRequest, RequestError, ResilienceConfig,
+    SubmitError,
+};
+use findep::coordinator::executor::{run_worker, EventCore};
+use findep::coordinator::faults::{FaultAction, FaultPlan};
+use findep::coordinator::moe::ModelHandle;
+use findep::coordinator::planner::PlannerConfig;
+use findep::coordinator::server::{EmbeddedRequest, HealthConfig, Policy, ReplicaPool, Response};
+use findep::metrics::Registry;
+use findep::runtime::artifacts_dir;
+use findep::sched::Order;
+use findep::util::bench::Table;
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+
+const WORKERS: usize = 4;
+const MAX_BATCH: usize = 4;
+/// Simulated per-batch serve time (the sleep standing in for the DEP
+/// pipeline) — long enough that a 2x slow replica is visible, short
+/// enough that the bench stays sub-second.
+const SERVE: Duration = Duration::from_micros(300);
+
+struct SimOutcome {
+    resps: Vec<Response>,
+    fails: Vec<FailedRequest>,
+    wall_s: f64,
+    metrics: Arc<Registry>,
+}
+
+impl SimOutcome {
+    fn req_per_s(&self) -> f64 {
+        self.resps.len() as f64 / self.wall_s
+    }
+
+    fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut o = JsonObj::new();
+        o.insert("completed", Json::Num(self.resps.len() as f64));
+        o.insert("failed", Json::Num(self.fails.len() as f64));
+        o.insert("wall_s", Json::Num(self.wall_s));
+        o.insert("req_per_s", Json::Num(self.req_per_s()));
+        for c in [
+            "faults_injected",
+            "request_retries",
+            "requests_failed",
+            "requests_expired",
+            "replica_degraded",
+            "replica_quarantined",
+            "replica_readmitted",
+            "replica_recovered",
+        ] {
+            o.insert(c, Json::Num(m.counter(c) as f64));
+        }
+        Json::Obj(o)
+    }
+
+    fn row(&self, name: &str) -> Vec<String> {
+        vec![
+            name.into(),
+            format!("{:.0}", self.req_per_s()),
+            format!("{}", self.resps.len()),
+            format!("{}", self.fails.len()),
+            format!("{}", self.metrics.counter("request_retries")),
+            format!("{}", self.metrics.counter("faults_injected")),
+            format!("{}", self.metrics.counter("replica_quarantined")),
+        ]
+    }
+}
+
+fn echo(reqs: &[EmbeddedRequest]) -> Vec<Response> {
+    reqs.iter()
+        .map(|r| Response { id: r.id, hidden: r.hidden.clone(), latency_s: 0.0 })
+        .collect()
+}
+
+/// Run `n` requests (`out_len` decode steps each) through the full
+/// delivery protocol over a fault-injecting unit-replica pool. Every
+/// `expired_every`-th request (if set) carries an already-expired
+/// deadline, so its expiry is deterministic, not timing-dependent.
+fn sim_run(n: u64, out_len: usize, plan: FaultPlan, expired_every: Option<u64>) -> SimOutcome {
+    let core = Arc::new(EventCore::new(PlannerConfig {
+        max_batch: MAX_BATCH,
+        linger: Duration::from_micros(200),
+        queue_depth: 32,
+    }));
+    let metrics = Arc::new(Registry::new());
+    let pool = Arc::new(
+        ReplicaPool::new(vec![(); WORKERS])
+            .with_health(HealthConfig {
+                cooldown: Duration::from_millis(5),
+                ..HealthConfig::default()
+            })
+            .with_faults(plan)
+            .with_metrics(metrics.clone()),
+    );
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let (fail_tx, fail_rx) = channel::<FailedRequest>();
+    let mut threads = Vec::new();
+    for _ in 0..WORKERS {
+        core.register_worker();
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let pool = pool.clone();
+        let resp_tx = resp_tx.clone();
+        let fail_tx = fail_tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let c = core.clone();
+            let m = metrics.clone();
+            run_worker(&core, &metrics, move |batch| {
+                run_attempt(&c, &m, &resp_tx, &fail_tx, 8, 2, batch, |reqs| {
+                    let lease = pool.lease();
+                    match lease.fault_action() {
+                        FaultAction::Fail => {
+                            lease.report(false, 0.0);
+                            Err(anyhow::anyhow!("injected fault"))
+                        }
+                        FaultAction::Panic => {
+                            lease.report(false, 0.0);
+                            panic!("injected worker panic")
+                        }
+                        FaultAction::Slow(factor) => {
+                            std::thread::sleep(SERVE.mul_f64(factor));
+                            lease.report(true, SERVE.mul_f64(factor).as_secs_f64());
+                            Ok(echo(reqs))
+                        }
+                        FaultAction::None => {
+                            std::thread::sleep(SERVE);
+                            lease.report(true, SERVE.as_secs_f64());
+                            Ok(echo(reqs))
+                        }
+                    }
+                })
+            });
+        }));
+    }
+    let past = Instant::now() - Duration::from_millis(1);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let mut req = EmbeddedRequest::synthetic_autoregressive(i, 2, 2, out_len);
+        if expired_every.is_some_and(|k| i % k == 0) {
+            req = req.with_deadline(past);
+        }
+        core.submit(req).expect("submit");
+    }
+    let mut resps = Vec::new();
+    let mut fails = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while resps.len() + fails.len() < n as usize && Instant::now() < deadline {
+        if let Ok(r) = resp_rx.try_recv() {
+            resps.push(r);
+            continue;
+        }
+        if let Ok(f) = fail_rx.try_recv() {
+            fails.push(f);
+            continue;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        resps.len() + fails.len(),
+        n as usize,
+        "simulated stack timed out: {} responses + {} failures of {n}",
+        resps.len(),
+        fails.len(),
+    );
+    assert_eq!(core.open(), 0, "terminal outcomes must settle the open-slot accounting");
+    core.close();
+    for t in threads {
+        t.join().unwrap();
+    }
+    SimOutcome { resps, fails, wall_s, metrics }
+}
+
+/// Exactly-once: every id in 0..n appears exactly once across the
+/// response and failure channels.
+fn assert_exactly_once(label: &str, n: u64, resps: &[Response], fails: &[FailedRequest]) {
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).chain(fails.iter().map(|f| f.id)).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>(), "{label}: lost or duplicated requests");
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("resilience".into()));
+    report.insert("quick", Json::Bool(quick));
+
+    // --- 1. Simulated chaos: the delivery protocol under faults. ------
+    let (n, out_len) = if quick { (24u64, 1usize) } else { (96, 2) };
+
+    let clean = sim_run(n, out_len, FaultPlan::default(), None);
+    assert!(clean.fails.is_empty(), "fault-free run must not fail requests");
+    assert_exactly_once("fault-free", n, &clean.resps, &clean.fails);
+    for r in &clean.resps {
+        let want = EmbeddedRequest::synthetic(r.id, 2, 2);
+        assert_eq!(r.hidden.data, want.hidden.data, "fault-free echo must be bit-identical");
+    }
+    // Inertness: with no fault plan and no deadlines, the resilience
+    // layer leaves no trace — the fault-free path is byte-for-byte the
+    // pre-resilience batcher.
+    for c in [
+        "faults_injected",
+        "request_retries",
+        "requests_failed",
+        "requests_expired",
+        "replica_degraded",
+        "replica_quarantined",
+    ] {
+        assert_eq!(clean.metrics.counter(c), 0, "counter {c} moved on a fault-free run");
+    }
+
+    let faulted = sim_run(n, out_len, FaultPlan::reference(WORKERS), None);
+    assert_exactly_once("reference plan", n, &faulted.resps, &faulted.fails);
+    let ratio = faulted.req_per_s() / clean.req_per_s();
+    assert!(
+        ratio >= 0.5,
+        "reference-plan throughput ({:.0} req/s) fell below 0.5x fault-free ({:.0} req/s)",
+        faulted.req_per_s(),
+        clean.req_per_s()
+    );
+    assert!(faulted.metrics.counter("faults_injected") > 0, "the reference plan must fire");
+
+    let expired_every = 3u64;
+    let dl = sim_run(n, out_len, FaultPlan::default(), Some(expired_every));
+    assert_exactly_once("deadline run", n, &dl.resps, &dl.fails);
+    let want_expired: Vec<u64> = (0..n).filter(|i| i % expired_every == 0).collect();
+    let mut got_expired: Vec<u64> = dl.fails.iter().map(|f| f.id).collect();
+    got_expired.sort_unstable();
+    assert_eq!(got_expired, want_expired, "exactly the expired requests must fail");
+    assert!(
+        dl.fails.iter().all(|f| f.error == RequestError::DeadlineExpired),
+        "expired requests must carry the typed DeadlineExpired error"
+    );
+    assert_eq!(dl.metrics.counter("requests_expired"), want_expired.len() as u64);
+
+    let mut table = Table::new(
+        &format!(
+            "Simulated chaos ({n} reqs x {out_len} decode steps, {WORKERS} unit replicas, \
+             {:?} serve)",
+            SERVE
+        ),
+        &["run", "req/s", "completed", "failed", "retries", "faults", "quarantines"],
+    );
+    table.row(&clean.row("fault-free"));
+    table.row(&faulted.row("reference plan"));
+    table.row(&dl.row(&format!("deadlines (1/{expired_every} expired)")));
+    table.print();
+    println!("reference-plan throughput ratio vs fault-free: {ratio:.2} (gate: >= 0.50)");
+
+    let mut sim = JsonObj::new();
+    sim.insert("requests", Json::Num(n as f64));
+    sim.insert("decode_steps_per_request", Json::Num(out_len as f64));
+    sim.insert("fault_free", clean.to_json());
+    sim.insert("reference", faulted.to_json());
+    sim.insert("deadlines", dl.to_json());
+    sim.insert("throughput_ratio", Json::Num(ratio));
+    report.insert("simulated", Json::Obj(sim));
+
+    // --- 2. Real serving under the reference plan. --------------------
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let model = ModelHandle::load(&dir, true).expect("artifacts load");
+        let (s, m) = (model.seq_len, model.model.embed);
+        let total = if quick { 16usize } else { 48 };
+        let cfg = BatcherConfig {
+            workers: WORKERS,
+            max_batch: MAX_BATCH,
+            queue_depth: 64,
+            linger: Duration::from_micros(500),
+            policy: Policy::FinDep { r1: 2, r2: 2, order: Order::Asas },
+            ..Default::default()
+        };
+
+        let run = |resilience: ResilienceConfig| {
+            let b = Batcher::with_resilience(model.clone(), cfg, None, resilience)
+                .expect("batcher");
+            let t0 = Instant::now();
+            for i in 0..total {
+                b.submit(EmbeddedRequest::synthetic(i as u64, s, m)).expect("submit");
+            }
+            let (resps, fails) = b.drain_outcomes(total, Duration::from_secs(60));
+            let wall_s = t0.elapsed().as_secs_f64();
+            let metrics = b.metrics().clone();
+            (resps, fails, wall_s, metrics)
+        };
+
+        let (c_resps, c_fails, c_wall, c_metrics) = run(ResilienceConfig::default());
+        assert!(c_fails.is_empty(), "real fault-free run must not fail requests");
+        assert_exactly_once("real fault-free", total as u64, &c_resps, &c_fails);
+        for c in ["faults_injected", "request_retries", "requests_failed", "requests_shed"] {
+            assert_eq!(c_metrics.counter(c), 0, "counter {c} moved on a real fault-free run");
+        }
+
+        let (f_resps, f_fails, f_wall, f_metrics) = run(ResilienceConfig {
+            fault_plan: FaultPlan::reference(WORKERS),
+            health: HealthConfig {
+                cooldown: Duration::from_millis(20),
+                ..HealthConfig::default()
+            },
+            max_retries: 8,
+        });
+        assert_exactly_once("real reference plan", total as u64, &f_resps, &f_fails);
+        let real_ratio = (f_resps.len() as f64 / f_wall) / (c_resps.len() as f64 / c_wall);
+        println!(
+            "\nreal serving: fault-free {:.1} req/s, reference plan {:.1} req/s \
+             (ratio {real_ratio:.2}, {} retries, {} faults injected)",
+            c_resps.len() as f64 / c_wall,
+            f_resps.len() as f64 / f_wall,
+            f_metrics.counter("request_retries"),
+            f_metrics.counter("faults_injected"),
+        );
+        // Quick mode serves too few batches for a stable wall-clock
+        // ratio over the real pipeline (same policy as the
+        // event_coordinator bench); the simulated gate above holds in
+        // every mode.
+        if !quick {
+            assert!(
+                real_ratio >= 0.5,
+                "real reference-plan throughput ratio {real_ratio:.2} fell below 0.5"
+            );
+        }
+
+        // Admission-control shedding: a request whose deadline already
+        // passed is refused with the typed Shed error, never queued.
+        let b = Batcher::with_resilience(model.clone(), cfg, None, ResilienceConfig::default())
+            .expect("batcher");
+        let past = Instant::now() - Duration::from_millis(1);
+        let shed_n = 4u64;
+        for i in 0..shed_n {
+            let req = EmbeddedRequest::synthetic(i, s, m).with_deadline(past);
+            match b.submit(req) {
+                Err(SubmitError::Shed { estimated_wait_s }) => {
+                    assert!(estimated_wait_s >= 0.0);
+                }
+                other => panic!("expected Shed, got {other:?}"),
+            }
+        }
+        assert_eq!(b.metrics().counter("requests_shed"), shed_n);
+        assert_eq!(b.metrics().counter("queued"), 0, "shed requests must never enqueue");
+        println!("admission control: {shed_n} expired submissions shed with typed errors");
+
+        let mut real = JsonObj::new();
+        real.insert("requests", Json::Num(total as f64));
+        real.insert("fault_free_req_per_s", Json::Num(c_resps.len() as f64 / c_wall));
+        real.insert("reference_req_per_s", Json::Num(f_resps.len() as f64 / f_wall));
+        real.insert("throughput_ratio", Json::Num(real_ratio));
+        real.insert("reference_failed", Json::Num(f_fails.len() as f64));
+        real.insert("reference_retries", Json::Num(f_metrics.counter("request_retries") as f64));
+        real.insert("shed", Json::Num(shed_n as f64));
+        report.insert("real", Json::Obj(real));
+    } else {
+        println!("\nartifacts missing: skipping real serving (run `make artifacts`)");
+        report.insert("real", Json::Str("skipped: artifacts missing".into()));
+    }
+
+    std::fs::write("BENCH_resilience.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_resilience.json");
+    println!("\nwrote BENCH_resilience.json");
+}

@@ -51,20 +51,35 @@
 //!   Adaptive shape solved on any worker is a hit on all of them —
 //!   prefill and decode shapes memoized separately, hits returned as
 //!   `Arc<Solution>` without cloning plan bodies under a lock.
+//! * **Exactly-once delivery under faults** — every admitted request
+//!   terminates in exactly one of: a [`Response`], or a typed
+//!   [`FailedRequest`] on the failure channel (deadline expired in
+//!   queue, or retry budget exhausted). A batch whose replica fails
+//!   mid-serve re-enters through the planner's front-priority retry
+//!   lane ([`run_attempt`] — its drop guard covers worker panics too);
+//!   replica health and deterministic fault injection live in
+//!   [`super::server::ReplicaPool`] / [`super::faults`]. With no fault
+//!   plan armed and no deadlines set, none of this is observable:
+//!   fault-free serving is bit-identical to a batcher without the
+//!   resilience layer.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::Phase;
 use crate::coordinator::executor::{run_worker, EventCore};
+use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
 use crate::coordinator::planner::{PlannerConfig, QueuedRequest};
-use crate::coordinator::server::{EmbeddedRequest, Policy, ReplicaPool, Response, Server};
+pub use crate::coordinator::planner::SubmitError;
+use crate::coordinator::server::{
+    EmbeddedRequest, HealthConfig, Policy, ReplicaPool, Response, Server,
+};
 use crate::metrics::Registry;
 use crate::solver::PlanCache;
 
@@ -109,17 +124,79 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Resilience knobs, separate from [`BatcherConfig`] (which stays
+/// `Copy`): the fault plan carries a schedule vector, and all of this
+/// is optional — the defaults keep the batcher's behavior identical to
+/// a batcher without a resilience layer (no faults, no sheds, failed
+/// batches retried up to `max_retries` before a typed failure).
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Deterministic fault schedule injected at the replica-lease
+    /// boundary. Empty (the default) = fully inert.
+    pub fault_plan: FaultPlan,
+    /// Replica health state-machine thresholds.
+    pub health: HealthConfig,
+    /// Serve attempts per request beyond the first before it fails
+    /// with [`RequestError::RetriesExhausted`].
+    pub max_retries: u32,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self { fault_plan: FaultPlan::default(), health: HealthConfig::default(), max_retries: 2 }
+    }
+}
+
+/// Why a request failed instead of producing a [`Response`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestError {
+    /// The deadline passed while the request sat in the queue.
+    DeadlineExpired,
+    /// Every serve attempt hit a failing replica.
+    RetriesExhausted {
+        /// Total serve attempts consumed.
+        attempts: u32,
+    },
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::DeadlineExpired => write!(f, "deadline expired in queue"),
+            RequestError::RetriesExhausted { attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// The typed terminal failure for one admitted request — delivered on
+/// the failure channel, exactly once, in place of its [`Response`].
+#[derive(Debug, Clone)]
+pub struct FailedRequest {
+    pub id: u64,
+    pub error: RequestError,
+    /// Seconds from submission to the failure verdict.
+    pub latency_s: f64,
+}
+
 /// The continuous batcher: owns the event core and the worker pool.
 /// Dropping it drains in-flight work and joins every thread.
 pub struct Batcher {
     core: Arc<EventCore>,
     resp_rx: Receiver<Response>,
+    fail_rx: Receiver<FailedRequest>,
     metrics: Arc<Registry>,
     plan_cache: Arc<PlanCache>,
     /// Expected `S·M` element count per request — malformed requests
     /// are rejected at submit time so they can never sink a whole
     /// assembled batch inside a worker.
     req_elems: usize,
+    /// Assembly knobs the admission-control wait estimate needs.
+    max_batch: usize,
+    linger: Duration,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -131,15 +208,28 @@ impl Batcher {
     }
 
     /// [`Batcher::new`] with every replica's Adaptive planner driven by
-    /// a calibration profile's measured constants. The profile is
-    /// applied before the optional auto-split selection, so the split
-    /// itself is chosen under the calibrated view; its fingerprint
-    /// rides every plan-cache key, keeping calibrated and
-    /// hand-constant plans in disjoint keyspaces of the shared cache.
+    /// a calibration profile's measured constants.
     pub fn with_profile(
         model: ModelHandle,
         cfg: BatcherConfig,
         profile: Option<&crate::perfmodel::profile::CalibrationProfile>,
+    ) -> Result<Batcher> {
+        Self::with_resilience(model, cfg, profile, ResilienceConfig::default())
+    }
+
+    /// [`Batcher::with_profile`] plus the resilience layer: a
+    /// deterministic fault plan armed at the replica-lease boundary,
+    /// health thresholds for the pool's state machine, and the
+    /// per-request retry budget. The profile is applied before the
+    /// optional auto-split selection, so the split itself is chosen
+    /// under the calibrated view; its fingerprint rides every
+    /// plan-cache key, keeping calibrated and hand-constant plans in
+    /// disjoint keyspaces of the shared cache.
+    pub fn with_resilience(
+        model: ModelHandle,
+        cfg: BatcherConfig,
+        profile: Option<&crate::perfmodel::profile::CalibrationProfile>,
+        resilience: ResilienceConfig,
     ) -> Result<Batcher> {
         let metrics = Arc::new(Registry::new());
         let plan_cache = Arc::new(PlanCache::new());
@@ -179,9 +269,16 @@ impl Batcher {
             }
             replicas.push(server);
         }
-        let pool = Arc::new(ReplicaPool::new(replicas));
+        let pool = Arc::new(
+            ReplicaPool::new(replicas)
+                .with_health(resilience.health)
+                .with_faults(resilience.fault_plan.clone())
+                .with_metrics(metrics.clone()),
+        );
 
         let (resp_tx, resp_rx) = channel::<Response>();
+        let (fail_tx, fail_rx) = channel::<FailedRequest>();
+        let max_retries = resilience.max_retries;
         let mut threads = Vec::with_capacity(workers);
         for w in 0..workers {
             // Register before spawning: a submit racing the spawn must
@@ -191,6 +288,7 @@ impl Batcher {
             let metrics = metrics.clone();
             let pool = pool.clone();
             let resp_tx = resp_tx.clone();
+            let fail_tx = fail_tx.clone();
             let policy = cfg.policy;
             threads.push(
                 std::thread::Builder::new()
@@ -199,37 +297,87 @@ impl Batcher {
                         let c = core.clone();
                         let m = metrics.clone();
                         run_worker(&core, &metrics, move |batch| {
-                            serve_assembled(&c, &pool, &m, &resp_tx, policy, prompt_len, batch)
+                            run_attempt(
+                                &c,
+                                &m,
+                                &resp_tx,
+                                &fail_tx,
+                                max_retries,
+                                prompt_len,
+                                batch,
+                                |reqs| {
+                                    // With workers == replicas the lease
+                                    // is immediate; the pool exists so
+                                    // execution capacity is a handoff,
+                                    // not a thread's identity — and it
+                                    // is the fault/health boundary.
+                                    let mut lease = pool.lease();
+                                    lease.serve_checked(reqs, policy).map(|(r, _stats)| r)
+                                },
+                            )
                         })
                     })
                     .context("spawn serving worker")?,
             );
         }
 
-        Ok(Batcher { core, resp_rx, metrics, plan_cache, req_elems, threads })
+        Ok(Batcher {
+            core,
+            resp_rx,
+            fail_rx,
+            metrics,
+            plan_cache,
+            req_elems,
+            max_batch: cfg.max_batch.max(1),
+            linger: cfg.linger,
+            threads,
+        })
     }
 
     /// A malformed request must fail at the submission boundary — once
     /// assembled, `serve_batch` would reject the whole batch and every
     /// co-batched request would silently lose its response.
-    fn validate(&self, req: &EmbeddedRequest) -> Result<()> {
-        anyhow::ensure!(
-            req.hidden.data.len() == self.req_elems,
-            "request {} has {} elements, expected {} (S·M)",
-            req.id,
-            req.hidden.data.len(),
-            self.req_elems
-        );
+    fn validate(&self, req: &EmbeddedRequest) -> Result<(), SubmitError> {
+        if req.hidden.data.len() != self.req_elems {
+            return Err(SubmitError::Invalid {
+                id: req.id,
+                elems: req.hidden.data.len(),
+                expected: self.req_elems,
+            });
+        }
         Ok(())
     }
 
+    /// Admission-control wait estimate for a fresh submission: the
+    /// batches queued ahead of it, served at the observed mean batch
+    /// latency across the live workers, plus one linger window. Before
+    /// any batch has completed the estimate is just the linger —
+    /// admission control never sheds on a cold start.
+    fn estimated_wait(&self) -> Duration {
+        let batches_ahead = self.core.queued().div_ceil(self.max_batch);
+        let mean = self.metrics.histogram_mean("batch_latency").unwrap_or(0.0);
+        let workers = self.core.live_workers().max(1);
+        self.linger + Duration::from_secs_f64(mean * batches_ahead as f64 / workers as f64)
+    }
+
     /// Enqueue a request, parking while the queue is full
-    /// (backpressure). Errors on malformed requests or after shutdown.
-    /// A request with `output_len > 0` re-enters the stream as that
-    /// many KV-growing decode steps after its prefill completes; the
-    /// single response arrives once the last step finishes.
-    pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
+    /// (backpressure). Fails typed: [`SubmitError::Invalid`] for
+    /// malformed requests, [`SubmitError::Closed`] after shutdown,
+    /// [`SubmitError::Shed`] when the request carries a deadline the
+    /// estimated queue wait already exceeds (shedding at admission
+    /// beats serving a response nobody can use). A request with
+    /// `output_len > 0` re-enters the stream as that many KV-growing
+    /// decode steps after its prefill completes; the single response
+    /// arrives once the last step finishes.
+    pub fn submit(&self, req: EmbeddedRequest) -> Result<(), SubmitError> {
         self.validate(&req)?;
+        if let Some(deadline) = req.deadline {
+            let est = self.estimated_wait();
+            if Instant::now() + est >= deadline {
+                self.metrics.inc("requests_shed", 1);
+                return Err(SubmitError::Shed { estimated_wait_s: est.as_secs_f64() });
+            }
+        }
         self.core.submit(req)?;
         self.metrics.inc("queued", 1);
         Ok(())
@@ -237,8 +385,15 @@ impl Batcher {
 
     /// Non-blocking enqueue: `Ok(false)` when the queue is full (the
     /// request is rejected and counted).
-    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
+    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool, SubmitError> {
         self.validate(&req)?;
+        if let Some(deadline) = req.deadline {
+            let est = self.estimated_wait();
+            if Instant::now() + est >= deadline {
+                self.metrics.inc("requests_shed", 1);
+                return Err(SubmitError::Shed { estimated_wait_s: est.as_secs_f64() });
+            }
+        }
         if self.core.try_submit(req)? {
             self.metrics.inc("queued", 1);
             Ok(true)
@@ -253,6 +408,18 @@ impl Batcher {
         self.resp_rx.recv_timeout(timeout).ok()
     }
 
+    /// Next terminal request failure (deadline expiry in queue or
+    /// retries exhausted), or `None` on timeout. Nothing ever arrives
+    /// here while the fault plane is disarmed and no deadlines are set.
+    pub fn recv_failure_timeout(&self, timeout: Duration) -> Option<FailedRequest> {
+        self.fail_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Drain every failure delivered so far without blocking.
+    pub fn drain_failures(&self) -> Vec<FailedRequest> {
+        self.fail_rx.try_iter().collect()
+    }
+
     /// Collect up to `n` responses, waiting at most `timeout` for each.
     pub fn drain(&self, n: usize, timeout: Duration) -> Vec<Response> {
         let mut out = Vec::with_capacity(n);
@@ -263,6 +430,37 @@ impl Batcher {
             }
         }
         out
+    }
+
+    /// Collect `n` terminal outcomes — successful responses and request
+    /// failures combined — waiting at most `timeout` between arrivals.
+    /// Under faults or deadlines some requests end on the failure
+    /// channel; waiting on `drain` alone would stall until timeout.
+    pub fn drain_outcomes(
+        &self,
+        n: usize,
+        timeout: Duration,
+    ) -> (Vec<Response>, Vec<FailedRequest>) {
+        let mut resps = Vec::new();
+        let mut fails = Vec::new();
+        'outer: while resps.len() + fails.len() < n {
+            let deadline = Instant::now() + timeout;
+            loop {
+                if let Ok(r) = self.resp_rx.try_recv() {
+                    resps.push(r);
+                    continue 'outer;
+                }
+                if let Ok(f) = self.fail_rx.try_recv() {
+                    fails.push(f);
+                    continue 'outer;
+                }
+                if Instant::now() >= deadline {
+                    break 'outer;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        (resps, fails)
     }
 
     pub fn metrics(&self) -> &Arc<Registry> {
@@ -301,81 +499,170 @@ impl Drop for Batcher {
     }
 }
 
-/// Releases a batch's `open` slots when dropped — including during a
-/// panic unwind, so a worker dying mid-batch can never strand the
-/// shutdown drain waiting on slots nobody will release. Requests that
-/// re-enter as decode steps re-add their slot explicitly before this
-/// guard drops (transient over-count, never under-count — the drain
-/// must not observe a spurious zero).
-struct OpenSlots<'a> {
-    core: &'a EventCore,
-    n: usize,
+/// Per-request bookkeeping carried across one serve attempt.
+struct AttemptMeta {
+    submitted: Instant,
+    phase: Phase,
+    output_len: usize,
+    deadline: Option<Instant>,
+    attempts: u32,
 }
 
-impl Drop for OpenSlots<'_> {
-    fn drop(&mut self) {
-        self.core.release_open(self.n);
+/// Drop guard over one attempt's requests: until `defuse` runs, any
+/// exit path — an `Err` from the serve, or a panic unwinding through
+/// it (an injected worker panic) — routes every request to
+/// retry-or-fail. Retries keep their open slot and re-enter through
+/// the front-priority retry lane; exhausted requests release theirs
+/// and deliver a typed [`FailedRequest`]. That is the exactly-once
+/// backbone: a request leaves an attempt either defused (response or
+/// decode re-entry), retried, or failed — never silently dropped,
+/// never duplicated.
+struct Attempt<'a> {
+    core: &'a EventCore,
+    metrics: &'a Registry,
+    fail_tx: &'a Sender<FailedRequest>,
+    max_retries: u32,
+    reqs: Vec<EmbeddedRequest>,
+    meta: Vec<AttemptMeta>,
+}
+
+impl Attempt<'_> {
+    /// Route every remaining request to retry-or-fail.
+    fn fail_remaining(&mut self) {
+        for (req, m) in self.reqs.drain(..).zip(self.meta.drain(..)) {
+            if m.attempts < self.max_retries {
+                self.metrics.inc("request_retries", 1);
+                // The retry keeps holding its open slot — the shutdown
+                // drain keeps waiting for it.
+                self.core
+                    .reenter_retry(QueuedRequest::retry(req, m.submitted, m.attempts + 1));
+            } else {
+                self.metrics.inc("requests_failed", 1);
+                // Release before sending: once the receiver observes
+                // the terminal outcome, the open-slot accounting has
+                // already settled.
+                self.core.release_open(1);
+                let _ = self.fail_tx.send(FailedRequest {
+                    id: req.id,
+                    error: RequestError::RetriesExhausted { attempts: m.attempts + 1 },
+                    latency_s: m.submitted.elapsed().as_secs_f64(),
+                });
+            }
+        }
+    }
+
+    /// Take ownership of the requests for the success path.
+    fn defuse(&mut self) -> (Vec<EmbeddedRequest>, Vec<AttemptMeta>) {
+        (std::mem::take(&mut self.reqs), std::mem::take(&mut self.meta))
     }
 }
 
-/// Execute one assembled window on a leased replica, then per request
-/// either re-enter the next KV-grown decode step (output remaining) or
-/// emit the final response with its true submit→response latency.
-fn serve_assembled(
+impl Drop for Attempt<'_> {
+    fn drop(&mut self) {
+        if !self.reqs.is_empty() {
+            self.fail_remaining();
+        }
+    }
+}
+
+/// Execute one assembled window through the resilience protocol:
+/// expired requests fail fast before touching a replica, the rest are
+/// served by `serve` (the batcher passes a leased
+/// `ReplicaLease::serve_checked`; tests and the chaos bench pass
+/// simulated replicas so they exercise this exact protocol), and per
+/// request the outcome is exactly one of — the next KV-grown decode
+/// step re-entered, the final response emitted with its true
+/// submit→response latency, a front-priority retry (failed serve,
+/// budget left), or a typed failure. A panic unwinding out of `serve`
+/// takes the retry-or-fail path via the [`Attempt`] guard, so even an
+/// injected worker panic loses no request (any surviving worker picks
+/// the retries up).
+#[allow(clippy::too_many_arguments)]
+pub fn run_attempt<F>(
     core: &EventCore,
-    pool: &ReplicaPool,
     metrics: &Registry,
     resp_tx: &Sender<Response>,
-    policy: Policy,
+    fail_tx: &Sender<FailedRequest>,
+    max_retries: u32,
     prompt_len: usize,
     batch: Vec<QueuedRequest>,
-) {
+    serve: F,
+) where
+    F: FnOnce(&[EmbeddedRequest]) -> Result<Vec<Response>>,
+{
+    // Deadline-expired requests fail fast at assembly: serving them
+    // would spend replica time on responses nobody can use.
+    let now = Instant::now();
     let mut reqs = Vec::with_capacity(batch.len());
     let mut meta = Vec::with_capacity(batch.len());
     for q in batch {
-        meta.push((q.submitted, q.req.phase, q.req.output_len));
+        if q.req.expired(now) {
+            metrics.inc("requests_expired", 1);
+            core.release_open(1);
+            let _ = fail_tx.send(FailedRequest {
+                id: q.req.id,
+                error: RequestError::DeadlineExpired,
+                latency_s: q.submitted.elapsed().as_secs_f64(),
+            });
+            continue;
+        }
+        meta.push(AttemptMeta {
+            submitted: q.submitted,
+            phase: q.req.phase,
+            output_len: q.req.output_len,
+            deadline: q.req.deadline,
+            attempts: q.attempts,
+        });
         reqs.push(q.req);
     }
-    let slots = OpenSlots { core, n: reqs.len() };
-    // With workers == replicas the lease is immediate; the pool exists
-    // so execution capacity is a handoff, not a thread's identity.
-    let server = pool.lease();
-    match server.serve_batch(&reqs, policy) {
-        Ok((responses, _stats)) => {
-            for (mut resp, (submitted, phase, output_len)) in responses.into_iter().zip(meta) {
-                if output_len > 0 {
+    if reqs.is_empty() {
+        return;
+    }
+    let mut attempt = Attempt { core, metrics, fail_tx, max_retries, reqs, meta };
+    match serve(&attempt.reqs) {
+        Ok(responses) if responses.len() == attempt.reqs.len() => {
+            let (_reqs, meta) = attempt.defuse();
+            for (mut resp, m) in responses.into_iter().zip(meta) {
+                if m.output_len > 0 {
                     // Autoregressive re-entry: this pass's output is
                     // the next step's input, the KV cache grows by the
-                    // entry this pass wrote. The re-entry keeps the
-                    // request open: add its slot before the batch
-                    // guard releases this pass's.
+                    // entry this pass wrote. The re-entry inherits the
+                    // request's open slot (and deadline) directly.
                     let next = EmbeddedRequest {
                         id: resp.id,
                         hidden: resp.hidden,
-                        phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
-                        output_len: output_len - 1,
+                        phase: Phase::Decode { kv_len: m.phase.next_kv_len(prompt_len) },
+                        output_len: m.output_len - 1,
+                        deadline: m.deadline,
                     };
                     metrics.inc("decode_steps", 1);
-                    core.add_open(1);
-                    core.reenter_decode(QueuedRequest::reentry(next, submitted));
+                    core.reenter_decode(QueuedRequest::reentry(next, m.submitted));
                     continue;
                 }
-                resp.latency_s = submitted.elapsed().as_secs_f64();
+                resp.latency_s = m.submitted.elapsed().as_secs_f64();
                 metrics.observe("request_latency", resp.latency_s);
-                // A gone receiver just means the client stopped
-                // listening; the drain accounting still completes.
+                // Release before sending (the accounting must settle
+                // before the receiver can observe the outcome); a gone
+                // receiver just means the client stopped listening.
+                core.release_open(1);
                 let _ = resp_tx.send(resp);
             }
         }
+        Ok(short) => {
+            // A serve that returns the wrong cardinality is a failed
+            // attempt: pairing responses to requests would be a guess.
+            metrics.inc("serve_errors", 1);
+            eprintln!(
+                "serving worker: batch returned {} responses for {} requests",
+                short.len(),
+                attempt.reqs.len()
+            );
+            attempt.fail_remaining();
+        }
         Err(e) => {
-            // Drop the batch but keep the replica alive; callers see
-            // the gap via the serve_errors counter. Every request of
-            // the failed batch is done for (the guard releases their
-            // slots).
             metrics.inc("serve_errors", 1);
             eprintln!("serving worker: batch failed: {e:#}");
+            attempt.fail_remaining();
         }
     }
-    drop(server);
-    drop(slots);
 }

@@ -30,9 +30,9 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
-use anyhow::Result;
-
-use crate::coordinator::planner::{Planner, PlannerConfig, Poll, QueuedRequest, Step, SubmitOutcome};
+use crate::coordinator::planner::{
+    Planner, PlannerConfig, Poll, QueuedRequest, Step, SubmitError, SubmitOutcome,
+};
 use crate::coordinator::server::EmbeddedRequest;
 use crate::metrics::Registry;
 
@@ -77,8 +77,9 @@ impl EventCore {
 
     /// Recover the planner even if a worker panicked while holding the
     /// lock: planner state is a set of queues that stays structurally
-    /// valid mid-mutation, and losing one request to a panicking
-    /// worker is already accounted by its open-slot guard.
+    /// valid mid-mutation, and a batch lost to a panicking worker is
+    /// routed to retry-or-fail by its attempt's drop guard
+    /// ([`crate::coordinator::batcher::run_attempt`]).
     fn lock(&self) -> MutexGuard<'_, Planner> {
         self.planner.lock().unwrap_or_else(PoisonError::into_inner)
     }
@@ -118,14 +119,25 @@ impl EventCore {
         self.live_workers.fetch_add(1, Ordering::SeqCst);
     }
 
+    /// Fresh submissions waiting in the bounded queue right now (the
+    /// admission-control wait estimate reads this).
+    pub fn queued(&self) -> usize {
+        self.lock().queued()
+    }
+
     /// Enqueue a fresh request, parking while the bounded queue is
-    /// full (backpressure). Errors after close or when every worker
-    /// has died.
-    pub fn submit(&self, req: EmbeddedRequest) -> Result<()> {
+    /// full (backpressure). Errors after close
+    /// ([`SubmitError::Closed`]) or when every worker has died
+    /// ([`SubmitError::WorkersGone`]).
+    pub fn submit(&self, req: EmbeddedRequest) -> Result<(), SubmitError> {
         let mut p = self.lock();
         loop {
-            anyhow::ensure!(!p.is_closed(), "batcher closed");
-            anyhow::ensure!(self.live_workers() > 0, "batcher workers gone");
+            if p.is_closed() {
+                return Err(SubmitError::Closed);
+            }
+            if self.live_workers() == 0 {
+                return Err(SubmitError::WorkersGone);
+            }
             if p.has_space() {
                 break;
             }
@@ -141,10 +153,14 @@ impl EventCore {
 
     /// Non-blocking enqueue: `Ok(false)` when the bounded queue is
     /// full.
-    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool> {
+    pub fn try_submit(&self, req: EmbeddedRequest) -> Result<bool, SubmitError> {
         let mut p = self.lock();
-        anyhow::ensure!(!p.is_closed(), "batcher closed");
-        anyhow::ensure!(self.live_workers() > 0, "batcher workers gone");
+        if p.is_closed() {
+            return Err(SubmitError::Closed);
+        }
+        if self.live_workers() == 0 {
+            return Err(SubmitError::WorkersGone);
+        }
         if !p.has_space() {
             return Ok(false);
         }
@@ -163,6 +179,15 @@ impl EventCore {
     /// a full queue.
     pub fn reenter_decode(&self, q: QueuedRequest) {
         self.lock().push_decode(q);
+        self.work.notify_one();
+    }
+
+    /// Re-enqueue a request whose replica failed mid-serve into the
+    /// front-priority retry lane. The caller keeps holding the
+    /// request's open slot (the failed batch never released it), so
+    /// the shutdown drain still waits for it.
+    pub fn reenter_retry(&self, q: QueuedRequest) {
+        self.lock().push_retry(q);
         self.work.notify_one();
     }
 
@@ -326,6 +351,21 @@ mod tests {
         assert_eq!(core.live_workers(), 0);
         assert_eq!(metrics.histogram_count("queue_wait"), 20);
         assert!(core.submit(EmbeddedRequest::synthetic(99, 2, 2)).is_err());
+    }
+
+    #[test]
+    fn submit_errors_are_typed() {
+        let core = EventCore::new(cfg(4, 200, 2));
+        // No workers registered: the queue would never drain.
+        assert_eq!(
+            core.submit(EmbeddedRequest::synthetic(0, 2, 2)),
+            Err(SubmitError::WorkersGone)
+        );
+        core.register_worker();
+        core.close();
+        assert_eq!(core.submit(EmbeddedRequest::synthetic(1, 2, 2)), Err(SubmitError::Closed));
+        assert_eq!(core.try_submit(EmbeddedRequest::synthetic(2, 2, 2)), Err(SubmitError::Closed));
+        assert_eq!(core.open(), 0);
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Deterministic fault-injection plane for the serving stack.
+//!
+//! A [`FaultPlan`] is a pure schedule: given a replica id and the
+//! ordinal of the batch it is about to serve, it answers "what goes
+//! wrong here?" ([`FaultAction`]). The plan owns no clocks and no
+//! state — per-replica batch ordinals are counted by the pool that
+//! consults it — so the same plan replayed over the same request
+//! stream produces the same fault sequence, which is what lets the
+//! resilience property tests and the chaos bench assert exact
+//! delivery invariants under failure.
+//!
+//! Plans come from three places: the hand-built [`FaultPlan::reference`]
+//! instance the chaos bench gates on, seeded [`FaultPlan::random`]
+//! schedules (SplitMix64, [`crate::util::rng::Rng`]) for property
+//! tests, and [`FaultPlan::parse`] for the `serve --fault-plan` CLI
+//! spec. Injection happens at the `ReplicaLease` boundary in
+//! [`crate::coordinator::server`]; `Server` itself never sees a fault.
+
+use crate::util::rng::Rng;
+
+/// What a faulty replica does, starting at some batch ordinal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Every serve from `from_batch` on fails.
+    Permanent,
+    /// The next `count` serves from `from_batch` on fail, then the
+    /// replica recovers.
+    Transient { count: u64 },
+    /// Every serve from `from_batch` on takes `factor`× as long.
+    Slow { factor: f64 },
+    /// The worker thread panics at exactly `from_batch` (one-shot).
+    Panic,
+}
+
+/// One scheduled fault on one replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Pool replica id the fault applies to.
+    pub replica: usize,
+    /// Per-replica served-batch ordinal (0-based) at which it starts.
+    pub from_batch: u64,
+    pub kind: FaultKind,
+}
+
+/// What the lease boundary should do for one (replica, ordinal) serve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// No fault: serve normally.
+    None,
+    /// Fail the serve with an injected error (replica never runs it).
+    Fail,
+    /// Panic the worker thread mid-serve.
+    Panic,
+    /// Serve normally, then inflate the observed latency by this factor.
+    Slow(f64),
+}
+
+/// A deterministic schedule of replica faults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new(specs: Vec<FaultSpec>) -> Self {
+        Self { specs }
+    }
+
+    /// True when the plan injects nothing (the inert default).
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// The chaos-bench reference plan: out of `n_replicas`, replica 1
+    /// fails permanently, replica 2 fails transiently for 3 batches,
+    /// replica 3 runs 2× slow; replica 0 (and any beyond 3) stay
+    /// healthy. Degrades gracefully when the pool is smaller.
+    pub fn reference(n_replicas: usize) -> Self {
+        let mut specs = Vec::new();
+        if n_replicas > 1 {
+            specs.push(FaultSpec { replica: 1, from_batch: 1, kind: FaultKind::Permanent });
+        }
+        if n_replicas > 2 {
+            specs.push(FaultSpec {
+                replica: 2,
+                from_batch: 2,
+                kind: FaultKind::Transient { count: 3 },
+            });
+        }
+        if n_replicas > 3 {
+            specs.push(FaultSpec {
+                replica: 3,
+                from_batch: 0,
+                kind: FaultKind::Slow { factor: 2.0 },
+            });
+        }
+        Self { specs }
+    }
+
+    /// Seeded random schedule for property tests. Always leaves at
+    /// least one replica fault-free so forward progress is possible,
+    /// and never draws `Panic` (panic schedules are exercised by
+    /// dedicated tests, not the randomized exactly-once sweep).
+    pub fn random(seed: u64, n_replicas: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        if n_replicas < 2 {
+            return Self::default();
+        }
+        let mut ids: Vec<usize> = (0..n_replicas).collect();
+        rng.shuffle(&mut ids);
+        let n_faulty = rng.range_u64(1, (n_replicas - 1) as u64) as usize;
+        let mut specs = Vec::with_capacity(n_faulty);
+        for &replica in ids.iter().take(n_faulty) {
+            let from_batch = rng.below(6);
+            let kind = match rng.below(3) {
+                0 => FaultKind::Permanent,
+                1 => FaultKind::Transient { count: rng.range_u64(1, 4) },
+                _ => FaultKind::Slow { factor: rng.range_f64(1.5, 3.0) },
+            };
+            specs.push(FaultSpec { replica, from_batch, kind });
+        }
+        Self { specs }
+    }
+
+    /// Parse a CLI plan spec against a pool of `n_replicas`.
+    ///
+    /// Whole-plan forms: `reference`, `random:<seed>`. Otherwise a
+    /// comma-separated list of `<replica>=<kind>` entries where kind is
+    /// `perm`, `fail:<count>`, `slow:<factor>`, or `panic`, each with
+    /// an optional `@<batch>` start ordinal (default 0) — e.g.
+    /// `1=perm,2=fail:3@2,3=slow:2.0`.
+    pub fn parse(spec: &str, n_replicas: usize) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(Self::default());
+        }
+        if spec == "reference" {
+            return Ok(Self::reference(n_replicas));
+        }
+        if let Some(seed) = spec.strip_prefix("random:") {
+            let seed: u64 =
+                seed.parse().map_err(|_| format!("bad seed in fault plan `{spec}`"))?;
+            return Ok(Self::random(seed, n_replicas));
+        }
+        let mut specs = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            let (replica, kind_str) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry `{entry}` is not `<replica>=<kind>`"))?;
+            let replica: usize = replica
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad replica id in fault entry `{entry}`"))?;
+            if replica >= n_replicas {
+                return Err(format!(
+                    "fault entry `{entry}` names replica {replica} but the pool has {n_replicas}"
+                ));
+            }
+            let (kind_str, from_batch) = match kind_str.split_once('@') {
+                Some((k, at)) => (
+                    k,
+                    at.parse::<u64>()
+                        .map_err(|_| format!("bad `@<batch>` ordinal in fault entry `{entry}`"))?,
+                ),
+                None => (kind_str, 0),
+            };
+            let kind = if kind_str == "perm" {
+                FaultKind::Permanent
+            } else if kind_str == "panic" {
+                FaultKind::Panic
+            } else if let Some(count) = kind_str.strip_prefix("fail:") {
+                let count: u64 = count
+                    .parse()
+                    .map_err(|_| format!("bad count in fault entry `{entry}`"))?;
+                if count == 0 {
+                    return Err(format!("fault entry `{entry}` has zero count"));
+                }
+                FaultKind::Transient { count }
+            } else if let Some(factor) = kind_str.strip_prefix("slow:") {
+                let factor: f64 = factor
+                    .parse()
+                    .map_err(|_| format!("bad factor in fault entry `{entry}`"))?;
+                if factor < 1.0 || factor.is_nan() {
+                    return Err(format!("fault entry `{entry}` has slow factor < 1"));
+                }
+                FaultKind::Slow { factor }
+            } else {
+                return Err(format!(
+                    "unknown fault kind `{kind_str}` (want perm | fail:<n> | slow:<f> | panic)"
+                ));
+            };
+            specs.push(FaultSpec { replica, from_batch, kind });
+        }
+        Ok(Self { specs })
+    }
+
+    /// The action for `replica` serving its `ordinal`-th batch
+    /// (0-based, counted per replica by the pool). When several specs
+    /// apply, the strongest wins: Panic > Fail > Slow.
+    pub fn action(&self, replica: usize, ordinal: u64) -> FaultAction {
+        let mut action = FaultAction::None;
+        for s in &self.specs {
+            if s.replica != replica {
+                continue;
+            }
+            let hit = match s.kind {
+                FaultKind::Permanent => ordinal >= s.from_batch,
+                FaultKind::Transient { count } => {
+                    ordinal >= s.from_batch && ordinal < s.from_batch.saturating_add(count)
+                }
+                FaultKind::Slow { factor: _ } => ordinal >= s.from_batch,
+                FaultKind::Panic => ordinal == s.from_batch,
+            };
+            if !hit {
+                continue;
+            }
+            let this = match s.kind {
+                FaultKind::Panic => FaultAction::Panic,
+                FaultKind::Permanent | FaultKind::Transient { .. } => FaultAction::Fail,
+                FaultKind::Slow { factor } => FaultAction::Slow(factor),
+            };
+            action = match (action, this) {
+                (FaultAction::Panic, _) | (_, FaultAction::Panic) => FaultAction::Panic,
+                (FaultAction::Fail, _) | (_, FaultAction::Fail) => FaultAction::Fail,
+                (FaultAction::Slow(f), _) => FaultAction::Slow(f),
+                (FaultAction::None, other) => other,
+            };
+        }
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        for r in 0..4 {
+            for b in 0..10 {
+                assert_eq!(p.action(r, b), FaultAction::None);
+            }
+        }
+    }
+
+    #[test]
+    fn permanent_fails_from_start_ordinal_forever() {
+        let p = FaultPlan::new(vec![FaultSpec {
+            replica: 1,
+            from_batch: 2,
+            kind: FaultKind::Permanent,
+        }]);
+        assert_eq!(p.action(1, 0), FaultAction::None);
+        assert_eq!(p.action(1, 1), FaultAction::None);
+        assert_eq!(p.action(1, 2), FaultAction::Fail);
+        assert_eq!(p.action(1, 1000), FaultAction::Fail);
+        assert_eq!(p.action(0, 2), FaultAction::None, "other replicas untouched");
+    }
+
+    #[test]
+    fn transient_recovers_after_count() {
+        let p = FaultPlan::new(vec![FaultSpec {
+            replica: 0,
+            from_batch: 1,
+            kind: FaultKind::Transient { count: 2 },
+        }]);
+        assert_eq!(p.action(0, 0), FaultAction::None);
+        assert_eq!(p.action(0, 1), FaultAction::Fail);
+        assert_eq!(p.action(0, 2), FaultAction::Fail);
+        assert_eq!(p.action(0, 3), FaultAction::None);
+    }
+
+    #[test]
+    fn panic_is_one_shot_and_strongest() {
+        let p = FaultPlan::new(vec![
+            FaultSpec { replica: 2, from_batch: 3, kind: FaultKind::Panic },
+            FaultSpec { replica: 2, from_batch: 0, kind: FaultKind::Slow { factor: 2.0 } },
+        ]);
+        assert_eq!(p.action(2, 2), FaultAction::Slow(2.0));
+        assert_eq!(p.action(2, 3), FaultAction::Panic);
+        assert_eq!(p.action(2, 4), FaultAction::Slow(2.0));
+    }
+
+    #[test]
+    fn fail_outranks_slow() {
+        let p = FaultPlan::new(vec![
+            FaultSpec { replica: 0, from_batch: 0, kind: FaultKind::Slow { factor: 3.0 } },
+            FaultSpec { replica: 0, from_batch: 1, kind: FaultKind::Transient { count: 1 } },
+        ]);
+        assert_eq!(p.action(0, 0), FaultAction::Slow(3.0));
+        assert_eq!(p.action(0, 1), FaultAction::Fail);
+        assert_eq!(p.action(0, 2), FaultAction::Slow(3.0));
+    }
+
+    #[test]
+    fn reference_plan_shape() {
+        let p = FaultPlan::reference(4);
+        assert_eq!(p.specs().len(), 3);
+        assert_eq!(p.action(0, 100), FaultAction::None, "replica 0 stays healthy");
+        assert_eq!(p.action(1, 1), FaultAction::Fail);
+        assert_eq!(p.action(2, 2), FaultAction::Fail);
+        assert_eq!(p.action(2, 5), FaultAction::None, "transient recovers");
+        assert_eq!(p.action(3, 0), FaultAction::Slow(2.0));
+        // Smaller pools drop the specs that don't fit.
+        assert!(FaultPlan::reference(1).is_empty());
+        assert_eq!(FaultPlan::reference(2).specs().len(), 1);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_leaves_a_healthy_replica() {
+        for seed in 0..50 {
+            let a = FaultPlan::random(seed, 4);
+            let b = FaultPlan::random(seed, 4);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            assert!(!a.is_empty());
+            assert!(a.specs().len() <= 3, "seed {seed} faulted every replica");
+            let faulted: std::collections::BTreeSet<usize> =
+                a.specs().iter().map(|s| s.replica).collect();
+            assert!(faulted.len() < 4, "seed {seed} left no healthy replica");
+            assert!(
+                a.specs().iter().all(|s| s.kind != FaultKind::Panic),
+                "random plans never draw Panic"
+            );
+        }
+        assert_ne!(FaultPlan::random(1, 4), FaultPlan::random(2, 4));
+    }
+
+    #[test]
+    fn parse_entries() {
+        let p = FaultPlan::parse("1=perm,2=fail:3@2, 3=slow:2.5", 4).unwrap();
+        assert_eq!(
+            p.specs(),
+            &[
+                FaultSpec { replica: 1, from_batch: 0, kind: FaultKind::Permanent },
+                FaultSpec { replica: 2, from_batch: 2, kind: FaultKind::Transient { count: 3 } },
+                FaultSpec { replica: 3, from_batch: 0, kind: FaultKind::Slow { factor: 2.5 } },
+            ]
+        );
+        let p = FaultPlan::parse("0=panic@5", 1).unwrap();
+        assert_eq!(p.action(0, 5), FaultAction::Panic);
+    }
+
+    #[test]
+    fn parse_whole_plan_forms() {
+        assert_eq!(FaultPlan::parse("reference", 4).unwrap(), FaultPlan::reference(4));
+        assert_eq!(FaultPlan::parse("random:9", 4).unwrap(), FaultPlan::random(9, 4));
+        assert!(FaultPlan::parse("", 4).unwrap().is_empty());
+        assert!(FaultPlan::parse("none", 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("9=perm", 4).is_err(), "replica out of range");
+        assert!(FaultPlan::parse("1", 4).is_err(), "missing kind");
+        assert!(FaultPlan::parse("1=wat", 4).is_err(), "unknown kind");
+        assert!(FaultPlan::parse("1=fail:0", 4).is_err(), "zero count");
+        assert!(FaultPlan::parse("1=slow:0.5", 4).is_err(), "shrinking factor");
+        assert!(FaultPlan::parse("1=perm@x", 4).is_err(), "bad ordinal");
+        assert!(FaultPlan::parse("random:x", 4).is_err(), "bad seed");
+    }
+}

@@ -27,6 +27,7 @@
 
 pub mod batcher;
 pub mod executor;
+pub mod faults;
 pub mod links;
 pub mod moe;
 pub mod pipeline;

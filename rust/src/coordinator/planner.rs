@@ -37,20 +37,31 @@ pub struct QueuedRequest {
     pub req: EmbeddedRequest,
     pub enqueued: Instant,
     pub submitted: Instant,
+    /// Serve attempts already consumed by this entry (0 for fresh work;
+    /// bumped when a replica failure re-enqueues it through the retry
+    /// lane).
+    pub attempts: u32,
 }
 
 impl QueuedRequest {
     /// A fresh client submission: both timestamps are now.
     pub fn fresh(req: EmbeddedRequest) -> Self {
         let now = Instant::now();
-        Self { req, enqueued: now, submitted: now }
+        Self { req, enqueued: now, submitted: now, attempts: 0 }
     }
 
     /// A decode re-entry: the queue-wait clock restarts, the
     /// end-to-end latency reference is inherited from the original
-    /// submission.
+    /// submission. The retry budget resets — each decode step is a new
+    /// unit of work.
     pub fn reentry(req: EmbeddedRequest, submitted: Instant) -> Self {
-        Self { req, enqueued: Instant::now(), submitted }
+        Self { req, enqueued: Instant::now(), submitted, attempts: 0 }
+    }
+
+    /// A retry after a failed serve: latency reference inherited,
+    /// queue-wait clock restarted, attempt counter carried forward.
+    pub fn retry(req: EmbeddedRequest, submitted: Instant, attempts: u32) -> Self {
+        Self { req, enqueued: Instant::now(), submitted, attempts }
     }
 }
 
@@ -103,6 +114,12 @@ pub struct Planner {
     /// deadlock the pool); depth is bounded anyway by the requests
     /// already admitted.
     decodes: VecDeque<QueuedRequest>,
+    /// Retries of requests whose replica failed mid-serve. The highest
+    /// priority lane — these requests have already waited a full queue
+    /// pass plus a failed serve, so they go to the front of the next
+    /// window. Unbounded for the same reason as the decode lane (pushed
+    /// by workers) and similarly bounded in practice by admitted work.
+    retries: VecDeque<QueuedRequest>,
     /// The window being assembled, in arrival order.
     window: Vec<QueuedRequest>,
     /// Linger deadline of the open window (set when its first request
@@ -121,6 +138,59 @@ pub enum SubmitOutcome {
     Closed,
 }
 
+/// Typed submission failure, surfaced by `Batcher::submit` and
+/// `EventCore::submit` so callers can branch on the cause instead of
+/// string-matching an `anyhow` message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SubmitError {
+    /// `close()` was called; no new work is admitted.
+    Closed,
+    /// Bounded queue at `queue_depth` (non-blocking `try_submit` only —
+    /// blocking `submit` waits this state out).
+    QueueFull,
+    /// Every worker thread has exited (e.g. panicked) while submitters
+    /// were blocked on backpressure — the queue would never drain.
+    WorkersGone,
+    /// Admission control: the estimated queue wait already exceeds the
+    /// request's deadline, so serving it would only waste capacity.
+    Shed {
+        /// The wait estimate (seconds) that triggered the shed.
+        estimated_wait_s: f64,
+    },
+    /// Malformed request rejected at the submission boundary (wrong
+    /// hidden-state element count), before it could sink a whole
+    /// assembled batch inside a worker.
+    Invalid {
+        /// The rejected request's id.
+        id: u64,
+        /// Element count the request carried.
+        elems: usize,
+        /// Element count the model expects (`S·M`).
+        expected: usize,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "batcher closed"),
+            SubmitError::QueueFull => write!(f, "submit queue full"),
+            SubmitError::WorkersGone => write!(f, "batcher workers gone"),
+            SubmitError::Shed { estimated_wait_s } => write!(
+                f,
+                "shed at admission: estimated queue wait {:.1}ms exceeds deadline",
+                estimated_wait_s * 1e3
+            ),
+            SubmitError::Invalid { id, elems, expected } => write!(
+                f,
+                "request {id} has {elems} elements, expected {expected} (S·M)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 impl Planner {
     pub fn new(cfg: PlannerConfig) -> Self {
         Self {
@@ -131,6 +201,7 @@ impl Planner {
             },
             submits: VecDeque::new(),
             decodes: VecDeque::new(),
+            retries: VecDeque::new(),
             window: Vec::new(),
             deadline: None,
             closed: false,
@@ -170,21 +241,28 @@ impl Planner {
         self.decodes.push_back(q);
     }
 
+    /// Push a retry of a request whose replica failed mid-serve. Front
+    /// of the priority order, accepted during shutdown (the drain owes
+    /// it a response like any admitted request).
+    pub fn push_retry(&mut self, q: QueuedRequest) {
+        self.retries.push_back(q);
+    }
+
     /// Begin shutdown: no new submissions, everything already admitted
     /// still drains.
     pub fn close(&mut self) {
         self.closed = true;
     }
 
-    /// Move queued requests into the open window, decode lane first
-    /// (the continuous-batching priority), fresh submissions after,
-    /// strictly FIFO within each lane. Opens the linger window when the
-    /// first request lands. Returns how many bounded-queue slots were
-    /// freed.
+    /// Move queued requests into the open window — retries first, then
+    /// the decode lane (the continuous-batching priority), fresh
+    /// submissions last, strictly FIFO within each lane. Opens the
+    /// linger window when the first request lands. Returns how many
+    /// bounded-queue slots were freed.
     fn ingest(&mut self, now: Instant) -> usize {
         let mut freed = 0;
         while self.window.len() < self.cfg.max_batch {
-            let q = match self.decodes.pop_front() {
+            let q = match self.retries.pop_front().or_else(|| self.decodes.pop_front()) {
                 Some(q) => q,
                 None => match self.submits.pop_front() {
                     Some(q) => {
@@ -229,7 +307,7 @@ impl Planner {
             };
             return Poll { step, freed };
         }
-        // Empty window ⇒ both queues are empty (ingest drained them).
+        // Empty window ⇒ all three lanes are empty (ingest drained them).
         let step = if self.closed && open == 0 {
             Step::Exit
         } else {
@@ -326,6 +404,41 @@ mod tests {
             Step::Execute(b) => assert_eq!(ids(&b), vec![1, 2, 10, 11]),
             s => panic!("expected Execute, got {s:?}"),
         }
+    }
+
+    #[test]
+    fn retries_outrank_decodes_and_fresh_submissions() {
+        let mut p = planner(4, 1_000_000, 8);
+        p.offer_submit(req(10));
+        p.push_decode(req(5));
+        p.push_retry(QueuedRequest::retry(
+            EmbeddedRequest::synthetic(1, 2, 2),
+            Instant::now(),
+            1,
+        ));
+        p.push_retry(QueuedRequest::retry(
+            EmbeddedRequest::synthetic(2, 2, 2),
+            Instant::now(),
+            2,
+        ));
+        match p.poll(Instant::now(), 4).step {
+            Step::Execute(b) => {
+                assert_eq!(ids(&b), vec![1, 2, 5, 10]);
+                assert_eq!(b[0].attempts, 1);
+                assert_eq!(b[1].attempts, 2);
+                assert_eq!(b[2].attempts, 0);
+            }
+            s => panic!("expected Execute, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_error_displays_each_variant() {
+        assert_eq!(SubmitError::Closed.to_string(), "batcher closed");
+        assert_eq!(SubmitError::QueueFull.to_string(), "submit queue full");
+        assert_eq!(SubmitError::WorkersGone.to_string(), "batcher workers gone");
+        let s = SubmitError::Shed { estimated_wait_s: 0.25 }.to_string();
+        assert!(s.contains("250.0ms"), "{s}");
     }
 
     #[test]

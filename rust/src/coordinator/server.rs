@@ -24,11 +24,12 @@
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::{GroupSplit, Phase, Testbed};
+use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
 use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
@@ -58,6 +59,11 @@ pub struct EmbeddedRequest {
     /// Decode steps still to run after this pass (continuous-batching
     /// re-entry in the batcher); 0 = this pass is the last.
     pub output_len: usize,
+    /// Absolute response deadline. `None` (the default) = wait forever.
+    /// With a deadline set, admission control sheds the request at
+    /// submit when the estimated queue wait already exceeds it, and
+    /// assembly fails it fast once it has expired in the queue.
+    pub deadline: Option<Instant>,
 }
 
 impl EmbeddedRequest {
@@ -69,7 +75,13 @@ impl EmbeddedRequest {
                 ((x % 199) as f32 - 99.0) * 0.005
             })
             .collect();
-        Self { id, hidden: Tensor::new(vec![s, m], data), phase: Phase::Prefill, output_len: 0 }
+        Self {
+            id,
+            hidden: Tensor::new(vec![s, m], data),
+            phase: Phase::Prefill,
+            output_len: 0,
+            deadline: None,
+        }
     }
 
     /// Synthetic autoregressive request: prefill now, `output_len`
@@ -78,6 +90,17 @@ impl EmbeddedRequest {
         let mut r = Self::synthetic(id, s, m);
         r.output_len = output_len;
         r
+    }
+
+    /// Attach an absolute response deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Whether the deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -208,6 +231,11 @@ pub struct Server {
     solver_params: SolverParams,
     plan_cache: Arc<PlanCache>,
     batch_buf: Mutex<BatchBuffers>,
+    /// Online-solve latency budget. A solve that runs over it still
+    /// yields its (cached) plan but counts `solver_budget_exceeded` —
+    /// the observability hook for sizing an anytime solver. `None`
+    /// (the default) disables the accounting.
+    pub solve_budget: Option<Duration>,
 }
 
 impl Server {
@@ -246,6 +274,7 @@ impl Server {
             solver_params: SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 8 },
             plan_cache,
             batch_buf: Mutex::new(BatchBuffers::new()),
+            solve_budget: None,
         })
     }
 
@@ -472,12 +501,26 @@ impl Server {
         // The cache hands back `Arc<Solution>` (a hit is a pointer
         // bump, not a deep clone under a lock); the cache-disabled
         // baseline wraps its fresh solve the same way so both arms
-        // read identically below.
-        let sol = if self.cache_plans {
-            self.plan_cache.get_or_solve(key, || self.solve_adaptive_shape(capacity, phase))
-        } else {
-            self.solve_adaptive_shape(capacity, phase).map(Arc::new)
+        // read identically below. Solve wall time is observed through
+        // a cell because only a cache miss actually runs the closure.
+        let solve_elapsed = std::cell::Cell::new(None::<Duration>);
+        let timed_solve = || {
+            let t0 = Instant::now();
+            let sol = self.solve_adaptive_shape(capacity, phase);
+            solve_elapsed.set(Some(t0.elapsed()));
+            sol
         };
+        let sol = if self.cache_plans {
+            self.plan_cache.get_or_solve(key, timed_solve)
+        } else {
+            timed_solve().map(Arc::new)
+        };
+        if let (Some(budget), Some(elapsed)) = (self.solve_budget, solve_elapsed.get()) {
+            if elapsed > budget {
+                self.metrics.inc("solver_budget_exceeded", 1);
+                self.metrics.observe("solver_budget_overrun", (elapsed - budget).as_secs_f64());
+            }
+        }
         match sol {
             Some(s) => (
                 s.config.m_a,
@@ -489,18 +532,44 @@ impl Server {
                     fuse_shared: s.config.fuse_shared,
                 },
             ),
-            // Degenerate shape (no bucket pair at all): serve at max
-            // capacity with an unfused sequential plan.
-            None => (
-                self.max_ma(),
-                self.solver_params.r1_cap,
-                ExecConfig {
-                    r1: self.solver_params.r1_cap,
-                    r2: 1,
-                    order: Order::Asas,
-                    fuse_shared: false,
-                },
-            ),
+            // Degraded mode: this shape has no plan of its own (the
+            // online solver and the brute-force fallback both called
+            // it infeasible). Stand in the nearest cached neighbor —
+            // same profile, same phase kind, capacity at least ours —
+            // before resorting to the static max-capacity fallback, and
+            // count the batch as degraded either way instead of
+            // erroring it.
+            None => {
+                self.metrics.inc("plans_degraded", 1);
+                if let Some(s) = self.cache_plans.then(|| self.plan_cache.nearest(key)).flatten()
+                {
+                    self.metrics.inc("plans_degraded_nearest", 1);
+                    (
+                        s.config.m_a,
+                        s.config.r1,
+                        ExecConfig {
+                            r1: s.config.r1,
+                            r2: s.config.r2,
+                            order: s.config.order,
+                            fuse_shared: s.config.fuse_shared,
+                        },
+                    )
+                } else {
+                    // Precomputed static fallback: serve at max
+                    // capacity with an unfused sequential plan.
+                    self.metrics.inc("plans_degraded_static", 1);
+                    (
+                        self.max_ma(),
+                        self.solver_params.r1_cap,
+                        ExecConfig {
+                            r1: self.solver_params.r1_cap,
+                            r2: 1,
+                            order: Order::Asas,
+                            fuse_shared: false,
+                        },
+                    )
+                }
+            }
         }
     }
 
@@ -655,7 +724,10 @@ impl Server {
             reqs.len()
         );
         let (out, stats) = {
-            let mut buf = self.batch_buf.lock().unwrap();
+            // Poison-recover: `assemble` rewrites the arena from
+            // scratch each batch, so a panic mid-assembly leaves no
+            // state the next batch could observe.
+            let mut buf = self.batch_buf.lock().unwrap_or_else(PoisonError::into_inner);
             let batch = buf.assemble(reqs, b_total, s, m);
             self.pipeline.forward(batch, cfg)?
         };
@@ -692,78 +764,452 @@ impl Server {
     }
 }
 
+/// Thresholds of the replica health state machine.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Consecutive serve errors before Healthy → Degraded.
+    pub degrade_after: u32,
+    /// Consecutive serve errors before → Quarantined.
+    pub quarantine_after: u32,
+    /// A serve slower than `outlier_factor ×` the pool-wide latency
+    /// EWMA counts as a latency outlier. Pool-wide on purpose: a
+    /// per-replica average would adapt to a consistently slow replica
+    /// and stop flagging it.
+    pub outlier_factor: f64,
+    /// Consecutive latency outliers before Healthy → Degraded.
+    pub outlier_after: u32,
+    /// How long a quarantined replica sits out before probation.
+    pub cooldown: Duration,
+    /// Clean serves on probation before Degraded → Healthy.
+    pub probation_successes: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            degrade_after: 1,
+            quarantine_after: 3,
+            outlier_factor: 4.0,
+            outlier_after: 8,
+            cooldown: Duration::from_millis(250),
+            probation_successes: 3,
+        }
+    }
+}
+
+/// Health state of one pooled replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Suspicious (recent errors or latency outliers, or on probation
+    /// after quarantine) but still serving.
+    Degraded,
+    /// Sitting out a cooldown; not leased until re-admission.
+    Quarantined,
+}
+
+/// Per-replica health ledger (indexed by replica id in the pool).
+#[derive(Debug, Clone, Copy)]
+struct Health {
+    state: HealthState,
+    consecutive_errors: u32,
+    consecutive_outliers: u32,
+    /// Re-admitted from quarantine and not yet proven healthy.
+    probation: bool,
+    probation_successes: u32,
+    /// When the replica entered quarantine (for the quarantine_s
+    /// histogram at re-admission).
+    quarantined_at: Option<Instant>,
+    /// Batches this replica has started serving — the fault plan's
+    /// per-replica ordinal clock.
+    serve_ordinal: u64,
+}
+
+impl Health {
+    fn new() -> Self {
+        Self {
+            state: HealthState::Healthy,
+            consecutive_errors: 0,
+            consecutive_outliers: 0,
+            probation: false,
+            probation_successes: 0,
+            quarantined_at: None,
+            serve_ordinal: 0,
+        }
+    }
+}
+
+/// One pooled replica with its stable pool id (health and fault
+/// schedules are keyed by id, not by pool position).
+struct Replica<R> {
+    id: usize,
+    inner: R,
+}
+
+/// Mutable pool state behind the one pool mutex.
+struct PoolState<R> {
+    /// Replicas free to lease; `pop` takes from the end, and probation
+    /// re-admissions insert at the front, so proven-healthy replicas
+    /// are preferred while suspects only serve when demand needs them.
+    free: Vec<Replica<R>>,
+    /// Quarantined replicas with their release times.
+    quarantined: Vec<(Instant, Replica<R>)>,
+    health: Vec<Health>,
+    /// Pool-wide serve-latency EWMA (the outlier reference) and how
+    /// many samples shaped it (outlier detection waits out a warmup).
+    ewma_latency: f64,
+    ewma_n: u64,
+}
+
 /// A pool of serving replicas leased by the event-driven batcher's
 /// workers: execution capacity is a handoff, not a thread's identity —
 /// any parked worker can pick up any ready batch and lease whichever
 /// replica is free (the retired thread-pool design bound one replica
 /// to one thread for life through a channel fan-out, so a stalled
 /// thread idled its replica even while batches queued).
-pub struct ReplicaPool {
-    replicas: Mutex<Vec<Server>>,
+///
+/// The pool is also the resilience boundary: batch outcomes reported
+/// through [`ReplicaLease::report`] drive a per-replica
+/// Healthy → Degraded → Quarantined state machine, a quarantined
+/// replica sits out [`HealthConfig::cooldown`] and re-enters on
+/// probation, and a [`FaultPlan`] injects deterministic failures at
+/// the lease boundary — [`Server`] itself never sees a fault. Leasing
+/// is capacity-aware: while any replica is quarantined, waiters park
+/// with a timeout bounded by the earliest release, so a pool running
+/// at reduced capacity keeps serving instead of blocking on a dead
+/// replica.
+pub struct ReplicaPool<R = Server> {
+    state: Mutex<PoolState<R>>,
     freed: Condvar,
+    cfg: HealthConfig,
+    faults: FaultPlan,
+    metrics: Option<Arc<Registry>>,
 }
 
-impl ReplicaPool {
-    pub fn new(replicas: Vec<Server>) -> Self {
-        Self { replicas: Mutex::new(replicas), freed: Condvar::new() }
+impl<R> ReplicaPool<R> {
+    pub fn new(replicas: Vec<R>) -> Self {
+        let health = vec![Health::new(); replicas.len()];
+        let free = replicas
+            .into_iter()
+            .enumerate()
+            .map(|(id, inner)| Replica { id, inner })
+            .collect();
+        Self {
+            state: Mutex::new(PoolState {
+                free,
+                quarantined: Vec::new(),
+                health,
+                ewma_latency: 0.0,
+                ewma_n: 0,
+            }),
+            freed: Condvar::new(),
+            cfg: HealthConfig::default(),
+            faults: FaultPlan::default(),
+            metrics: None,
+        }
     }
 
-    /// Recover the pool even if a holder panicked mid-push: the vec of
-    /// parked replicas is structurally valid at every point.
-    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Server>> {
-        self.replicas.lock().unwrap_or_else(PoisonError::into_inner)
+    /// Override the health thresholds (builder-style).
+    pub fn with_health(mut self, cfg: HealthConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Arm a deterministic fault plan (builder-style). An empty plan
+    /// (the default) keeps the pool fully inert.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Report health/fault events to a metrics registry
+    /// (builder-style).
+    pub fn with_metrics(mut self, metrics: Arc<Registry>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    fn inc(&self, name: &str) {
+        if let Some(m) = &self.metrics {
+            m.inc(name, 1);
+        }
+    }
+
+    /// Recover the pool even if a holder panicked mid-update: every
+    /// mutation below leaves the state structurally valid.
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolState<R>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Move quarantined replicas whose cooldown has elapsed back into
+    /// the free list, on probation. They enter at the *front* so
+    /// proven-healthy replicas (popped from the back) stay preferred.
+    fn readmit_due(&self, st: &mut PoolState<R>, now: Instant) {
+        let mut i = 0;
+        while i < st.quarantined.len() {
+            if st.quarantined[i].0 <= now {
+                let (_, rep) = st.quarantined.swap_remove(i);
+                let h = &mut st.health[rep.id];
+                h.state = HealthState::Degraded;
+                h.probation = true;
+                h.probation_successes = 0;
+                h.consecutive_errors = 0;
+                h.consecutive_outliers = 0;
+                if let (Some(m), Some(t)) = (&self.metrics, h.quarantined_at.take()) {
+                    m.observe("quarantine_s", t.elapsed().as_secs_f64());
+                }
+                self.inc("replica_readmitted");
+                st.free.insert(0, rep);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Replicas currently parked (free) in the pool.
     pub fn available(&self) -> usize {
-        self.lock().len()
+        self.lock().free.len()
     }
 
-    /// Lease a replica, parking until one is returned.
-    pub fn lease(&self) -> ReplicaLease<'_> {
-        let mut replicas = self.lock();
+    /// Replicas currently sitting out a quarantine cooldown.
+    pub fn quarantined(&self) -> usize {
+        self.lock().quarantined.len()
+    }
+
+    /// Health state of replica `id` (tests and observability).
+    pub fn health_state(&self, id: usize) -> HealthState {
+        self.lock().health[id].state
+    }
+
+    /// Lease a replica, parking until one is free. While replicas are
+    /// quarantined the park is bounded by the earliest cooldown
+    /// release, so a fully-quarantined pool self-recovers instead of
+    /// deadlocking.
+    pub fn lease(&self) -> ReplicaLease<'_, R> {
+        let mut st = self.lock();
         loop {
-            if let Some(server) = replicas.pop() {
-                return ReplicaLease { pool: self, server: Some(server) };
+            let now = Instant::now();
+            self.readmit_due(&mut st, now);
+            if let Some(rep) = st.free.pop() {
+                return ReplicaLease { pool: self, replica: Some(rep) };
             }
-            replicas = self.freed.wait(replicas).unwrap_or_else(PoisonError::into_inner);
+            st = match st.quarantined.iter().map(|(t, _)| *t).min() {
+                Some(release) => {
+                    let timeout = release.saturating_duration_since(now);
+                    self.freed
+                        .wait_timeout(st, timeout)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0
+                }
+                None => self.freed.wait(st).unwrap_or_else(PoisonError::into_inner),
+            };
         }
     }
 
-    /// Lease a replica only if one is free right now.
-    pub fn try_lease(&self) -> Option<ReplicaLease<'_>> {
-        self.lock().pop().map(|server| ReplicaLease { pool: self, server: Some(server) })
+    /// Lease a replica only if one is free right now (due quarantine
+    /// re-admissions count as free).
+    pub fn try_lease(&self) -> Option<ReplicaLease<'_, R>> {
+        let mut st = self.lock();
+        self.readmit_due(&mut st, Instant::now());
+        st.free.pop().map(|rep| ReplicaLease { pool: self, replica: Some(rep) })
+    }
+
+    /// Health update from one batch outcome on replica `id`.
+    fn report_outcome(&self, id: usize, ok: bool, latency_s: f64) {
+        let mut st = self.lock();
+        // Latency-outlier detection against the pool-wide EWMA. Only
+        // successful, non-outlier serves shape the reference, so a
+        // persistently slow replica cannot drag the baseline up to
+        // meet itself.
+        let outlier = ok
+            && st.ewma_n >= 8
+            && st.ewma_latency > 0.0
+            && latency_s > self.cfg.outlier_factor * st.ewma_latency;
+        if ok && !outlier {
+            st.ewma_n += 1;
+            if st.ewma_n == 1 {
+                st.ewma_latency = latency_s;
+            } else {
+                st.ewma_latency = 0.9 * st.ewma_latency + 0.1 * latency_s;
+            }
+        }
+        let cfg = self.cfg;
+        let h = &mut st.health[id];
+        if ok {
+            h.consecutive_errors = 0;
+            if outlier {
+                h.consecutive_outliers += 1;
+                if h.state == HealthState::Healthy && h.consecutive_outliers >= cfg.outlier_after
+                {
+                    h.state = HealthState::Degraded;
+                    drop(st);
+                    self.inc("replica_degraded");
+                    return;
+                }
+            } else {
+                h.consecutive_outliers = 0;
+                if h.probation {
+                    h.probation_successes += 1;
+                    if h.probation_successes >= cfg.probation_successes {
+                        h.probation = false;
+                        h.state = HealthState::Healthy;
+                        drop(st);
+                        self.inc("replica_recovered");
+                        return;
+                    }
+                } else if h.state == HealthState::Degraded {
+                    // Degraded by errors/outliers (not probation): one
+                    // clean serve clears it.
+                    h.state = HealthState::Healthy;
+                    drop(st);
+                    self.inc("replica_recovered");
+                    return;
+                }
+            }
+        } else {
+            h.consecutive_errors += 1;
+            h.consecutive_outliers = 0;
+            // An error during probation re-quarantines immediately —
+            // the replica already used up its benefit of the doubt.
+            if h.probation || h.consecutive_errors >= cfg.quarantine_after {
+                h.probation = false;
+                h.state = HealthState::Quarantined;
+                h.quarantined_at = Some(Instant::now());
+                drop(st);
+                self.inc("replica_quarantined");
+                return;
+            }
+            if h.state == HealthState::Healthy && h.consecutive_errors >= cfg.degrade_after {
+                h.state = HealthState::Degraded;
+                drop(st);
+                self.inc("replica_degraded");
+                return;
+            }
+        }
     }
 }
 
-/// RAII lease on one pooled replica: dereferences to [`Server`], and
-/// returns the replica (waking one parked leaser) on drop — including
-/// during a panic unwind, so a worker dying mid-batch never leaks its
-/// replica out of the pool.
-pub struct ReplicaLease<'a> {
-    pool: &'a ReplicaPool,
-    server: Option<Server>,
+/// RAII lease on one pooled replica: dereferences to the replica, and
+/// returns it on drop (waking a parked leaser) — including during a
+/// panic unwind, so a worker dying mid-batch never leaks its replica
+/// out of the pool. A replica whose health reached Quarantined goes to
+/// the quarantine bench instead, with its cooldown clock started at
+/// drop.
+pub struct ReplicaLease<'a, R = Server> {
+    pool: &'a ReplicaPool<R>,
+    replica: Option<Replica<R>>,
 }
 
-impl Deref for ReplicaLease<'_> {
-    type Target = Server;
+impl<R> ReplicaLease<'_, R> {
+    fn rep(&self) -> &Replica<R> {
+        self.replica.as_ref().expect("lease holds a replica until drop")
+    }
 
-    fn deref(&self) -> &Server {
-        self.server.as_ref().expect("lease holds a replica until drop")
+    /// Stable pool id of the leased replica.
+    pub fn replica_id(&self) -> usize {
+        self.rep().id
+    }
+
+    /// Consult the fault plan for this replica's next serve and
+    /// advance its per-replica batch ordinal. Inert (always
+    /// [`FaultAction::None`], no counters) when no plan is armed.
+    pub fn fault_action(&self) -> FaultAction {
+        if self.pool.faults.is_empty() {
+            return FaultAction::None;
+        }
+        let id = self.rep().id;
+        let ordinal = {
+            let mut st = self.pool.lock();
+            let h = &mut st.health[id];
+            let o = h.serve_ordinal;
+            h.serve_ordinal += 1;
+            o
+        };
+        let action = self.pool.faults.action(id, ordinal);
+        if action != FaultAction::None {
+            self.pool.inc("faults_injected");
+        }
+        action
+    }
+
+    /// Report this lease's batch outcome into the health state
+    /// machine.
+    pub fn report(&self, ok: bool, latency_s: f64) {
+        let id = self.rep().id;
+        self.pool.report_outcome(id, ok, latency_s);
     }
 }
 
-impl DerefMut for ReplicaLease<'_> {
-    fn deref_mut(&mut self) -> &mut Server {
-        self.server.as_mut().expect("lease holds a replica until drop")
+impl ReplicaLease<'_, Server> {
+    /// Serve a batch through the resilience boundary: consult the
+    /// fault plan (fail / panic / inflate latency per schedule), run
+    /// the real serve for non-failing actions, and feed the outcome
+    /// into the health state machine. With no fault plan armed this
+    /// is exactly `serve_batch` plus a health report.
+    pub fn serve_checked(
+        &mut self,
+        reqs: &[EmbeddedRequest],
+        policy: Policy,
+    ) -> Result<(Vec<Response>, ForwardStats)> {
+        let action = self.fault_action();
+        let t0 = Instant::now();
+        match action {
+            FaultAction::Fail => {
+                self.report(false, 0.0);
+                anyhow::bail!("injected fault: replica {} failed this serve", self.replica_id())
+            }
+            FaultAction::Panic => {
+                self.report(false, 0.0);
+                panic!("injected fault: replica {} worker panic", self.replica_id())
+            }
+            FaultAction::Slow(factor) => {
+                let r = self.serve_batch(reqs, policy);
+                let dt = t0.elapsed();
+                std::thread::sleep(dt.mul_f64((factor - 1.0).max(0.0)));
+                self.report(r.is_ok(), t0.elapsed().as_secs_f64());
+                r
+            }
+            FaultAction::None => {
+                let r = self.serve_batch(reqs, policy);
+                self.report(r.is_ok(), t0.elapsed().as_secs_f64());
+                r
+            }
+        }
     }
 }
 
-impl Drop for ReplicaLease<'_> {
+impl<R> Deref for ReplicaLease<'_, R> {
+    type Target = R;
+
+    fn deref(&self) -> &R {
+        &self.rep().inner
+    }
+}
+
+impl<R> DerefMut for ReplicaLease<'_, R> {
+    fn deref_mut(&mut self) -> &mut R {
+        &mut self.replica.as_mut().expect("lease holds a replica until drop").inner
+    }
+}
+
+impl<R> Drop for ReplicaLease<'_, R> {
     fn drop(&mut self) {
-        if let Some(server) = self.server.take() {
-            self.pool.lock().push(server);
-            self.pool.freed.notify_one();
+        if let Some(rep) = self.replica.take() {
+            let pool = self.pool;
+            let mut st = pool.lock();
+            if st.health[rep.id].state == HealthState::Quarantined {
+                st.quarantined.push((Instant::now() + pool.cfg.cooldown, rep));
+                drop(st);
+                // Wake every waiter: whoever parked without a timeout
+                // (nothing was quarantined then) must re-park with the
+                // cooldown-bounded timeout, or the last free replica
+                // entering quarantine would strand them forever.
+                pool.freed.notify_all();
+            } else {
+                st.free.push(rep);
+                drop(st);
+                pool.freed.notify_one();
+            }
         }
     }
 }

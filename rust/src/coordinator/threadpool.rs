@@ -375,6 +375,7 @@ fn worker_loop(
                             hidden: resp.hidden,
                             phase: Phase::Decode { kv_len: phase.next_kv_len(prompt_len) },
                             output_len: output_len - 1,
+                            deadline: None,
                         };
                         server.metrics.inc("decode_steps", 1);
                         open.fetch_add(1, Ordering::SeqCst);

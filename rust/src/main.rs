@@ -15,7 +15,8 @@
 
 use findep::baselines;
 use findep::config::{GroupSplit, ModelConfig, Testbed};
-use findep::coordinator::batcher::{Batcher, BatcherConfig};
+use findep::coordinator::batcher::{Batcher, BatcherConfig, ResilienceConfig};
+use findep::coordinator::faults::FaultPlan;
 use findep::coordinator::links::LinkDelay;
 use findep::coordinator::moe::ModelHandle;
 use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
@@ -338,6 +339,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
         .opt("decode-steps", "0", "decode steps per request after prefill (KV-growing)")
         .opt("profile", "", "calibration profile JSON driving the adaptive planner")
+        .opt("fault-plan", "", "faults: reference | random:<seed> | <replica>=<kind>[@<n>],...")
+        .opt("deadline-ms", "0", "per-request deadline in ms (0 = none; queue mode)")
+        .opt("max-retries", "2", "serve attempts per request after a replica failure (queue mode)")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
@@ -345,6 +349,49 @@ fn cmd_serve(args: &[String]) -> i32 {
         Ok(p) => p,
         Err(e) => return usage(e),
     };
+
+    // Validate the argument combination up front, before touching
+    // artifacts: a bad invocation should fail in microseconds with a
+    // message naming the offending flag.
+    let queue_depth = p.get_usize("queue-depth");
+    if p.was_set("queue-depth") && queue_depth == 0 {
+        return usage("--queue-depth must be > 0 (omit it for the direct batch loop)".into());
+    }
+    let deadline_ms = p.get_u64("deadline-ms");
+    let fault_spec = p.get("fault-plan").to_string();
+    if queue_depth == 0 {
+        if !fault_spec.is_empty()
+            || deadline_ms > 0
+            || p.was_set("max-retries")
+            || p.was_set("workers")
+            || p.was_set("max-batch")
+        {
+            return usage(
+                "--fault-plan/--deadline-ms/--max-retries/--workers/--max-batch \
+                 require queue mode (--queue-depth > 0)"
+                    .into(),
+            );
+        }
+    } else {
+        if p.get_usize("workers") == 0 {
+            return usage("--workers must be > 0 in queue mode".into());
+        }
+        if p.get_usize("max-batch") == 0 {
+            return usage("--max-batch must be > 0 in queue mode".into());
+        }
+        if deadline_ms > 0 && deadline_ms.saturating_mul(1000) <= p.get_u64("linger-us") {
+            return usage(format!(
+                "--deadline-ms {deadline_ms} is shorter than the batch-fill window \
+                 (--linger-us {}): every request would expire in the queue",
+                p.get_u64("linger-us")
+            ));
+        }
+    }
+    let fault_plan = match FaultPlan::parse(&fault_spec, p.get_usize("workers")) {
+        Ok(plan) => plan,
+        Err(e) => return usage(format!("--fault-plan: {e}")),
+    };
+
     let prof = match profile_for(&p, "adaptive planning") {
         Ok(prof) => prof,
         Err(code) => return code,
@@ -386,7 +433,6 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     // Queue mode: the continuous batcher pipelines in-flight batches
     // through a pool of serving replicas.
-    let queue_depth = p.get_usize("queue-depth");
     if queue_depth > 0 {
         let cfg = BatcherConfig {
             eg: p.get_usize("eg"),
@@ -399,27 +445,50 @@ fn cmd_serve(args: &[String]) -> i32 {
             cache_plans: !p.has_flag("no-plan-cache"),
             auto_split: p.has_flag("auto-split"),
         };
+        let resilience = ResilienceConfig {
+            fault_plan,
+            max_retries: p.get_u64("max-retries") as u32,
+            ..Default::default()
+        };
         let total = match p.get_usize("requests") {
             0 => n_batches * batch_size,
             r => r,
         };
-        let batcher = match Batcher::with_profile(model, cfg, prof.as_ref()) {
+        let batcher = match Batcher::with_resilience(model, cfg, prof.as_ref(), resilience) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("failed to start batcher: {e:#}");
                 return 1;
             }
         };
+        let deadline = (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
         let t0 = std::time::Instant::now();
+        let mut shed = 0usize;
         for i in 0..total {
-            let req = EmbeddedRequest::synthetic_autoregressive(i as u64, s, m, decode_steps);
-            if let Err(e) = batcher.submit(req) {
-                eprintln!("submit failed: {e:#}");
-                return 1;
+            let mut req = EmbeddedRequest::synthetic_autoregressive(i as u64, s, m, decode_steps);
+            if let Some(d) = deadline {
+                req = req.with_deadline(std::time::Instant::now() + d);
+            }
+            match batcher.submit(req) {
+                Ok(()) => {}
+                Err(e @ findep::coordinator::batcher::SubmitError::Shed { .. }) => {
+                    eprintln!("request {i} {e}");
+                    shed += 1;
+                }
+                Err(e) => {
+                    eprintln!("submit failed ({e:?}): {e}");
+                    return 1;
+                }
             }
         }
-        let resps = batcher.drain(total, std::time::Duration::from_secs(60));
+        let accepted = total - shed;
+        let (resps, failures) =
+            batcher.drain_outcomes(accepted, std::time::Duration::from_secs(60));
         let dt = t0.elapsed().as_secs_f64();
+        for f in &failures {
+            eprintln!("request {} failed after {:.1} ms: {}", f.id, f.latency_s * 1e3, f.error);
+        }
+        let total = accepted - failures.len();
         if resps.len() != total {
             eprintln!("timed out: {} of {total} responses", resps.len());
             return 1;
@@ -487,6 +556,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                             hidden: h,
                             phase: findep::config::Phase::Decode { kv_len: s + step },
                             output_len: 0,
+                            deadline: None,
                         })
                         .collect();
                     match srv.serve_batch(&dreqs, policy) {

@@ -182,6 +182,50 @@ impl PlanCache {
         solved
     }
 
+    /// Degraded-mode lookup: the nearest feasible cached plan that can
+    /// stand in for `key` when its own solve failed or ran over budget.
+    ///
+    /// A candidate must be solved against the same profile, the same
+    /// phase kind (equal sequence bucket for prefill; any KV bucket for
+    /// decode — decode plans differ only in how KV-read-bound they
+    /// are), and a batch capacity **at least** the requested one — a
+    /// smaller-batch plan could not physically hold the requests.
+    /// Among candidates the nearest in (KV bucket, batch bucket) log2
+    /// distance wins, KV distance weighted heaviest. Returns `None`
+    /// when nothing in the live generation qualifies (callers then take
+    /// their static fallback).
+    pub fn nearest(&self, key: ShapeKey) -> Option<Arc<Solution>> {
+        fn log2(x: usize) -> i64 {
+            (usize::BITS - x.max(1).leading_zeros()) as i64
+        }
+        let generation = self.generation_ref();
+        let map = generation.map.read().unwrap_or_else(PoisonError::into_inner);
+        let mut best: Option<(i64, Arc<Solution>)> = None;
+        for (k, v) in map.iter() {
+            if *k == key || k.profile != key.profile || k.batch < key.batch {
+                continue;
+            }
+            let Some(sol) = v else { continue };
+            let kv_dist = match (k.phase, key.phase) {
+                (Phase::Prefill, Phase::Prefill) => {
+                    if k.seq != key.seq {
+                        continue;
+                    }
+                    0
+                }
+                (Phase::Decode { kv_len: a }, Phase::Decode { kv_len: b }) => {
+                    (log2(a) - log2(b)).abs()
+                }
+                _ => continue,
+            };
+            let score = kv_dist * 16 + (log2(k.batch) - log2(key.batch)).abs();
+            if best.as_ref().map_or(true, |(s, _)| score < *s) {
+                best = Some((score, sol.clone()));
+            }
+        }
+        best.map(|(_, sol)| sol)
+    }
+
     /// Cached solution without solving (`None` = never solved; a cached
     /// infeasible shape reads back as `Some(None)`).
     pub fn peek(&self, key: ShapeKey) -> Option<Option<Arc<Solution>>> {
@@ -344,6 +388,37 @@ mod tests {
         // Decode KV buckets key separate plans too.
         let far_key = ShapeKey::decode(100_000, 8);
         assert_ne!(far_key, dec_key);
+    }
+
+    #[test]
+    fn nearest_prefers_close_kv_buckets_and_never_shrinks_batch() {
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let dec_inst = Instance::decode(
+            ModelConfig::deepseek_v2(8),
+            Testbed::a(),
+            GroupSplit::new(3, 5),
+            2048,
+        );
+        // Memoize decode plans at two KV buckets and one bigger batch.
+        let near = cache
+            .get_or_solve(ShapeKey::decode(2048, 8), || solve_online(&dec_inst, 8, &params))
+            .unwrap();
+        let far = cache
+            .get_or_solve(ShapeKey::decode(64, 16), || solve_online(&dec_inst, 16, &params))
+            .unwrap();
+        // Same-KV-bucket neighbor wins over the far bucket.
+        let got = cache.nearest(ShapeKey::decode(4096, 8)).expect("neighbor exists");
+        assert!(Arc::ptr_eq(&got, &near));
+        // A candidate with a smaller batch capacity never qualifies:
+        // only the batch-16 entry can hold 12 requests.
+        let got = cache.nearest(ShapeKey::decode(64, 12)).expect("bigger batch exists");
+        assert!(Arc::ptr_eq(&got, &far));
+        assert!(cache.nearest(ShapeKey::decode(64, 32)).is_none(), "nothing can hold batch 32");
+        // Phase kinds never cross: no prefill entry stands in for
+        // decode (and vice versa), and profiles stay isolated.
+        assert!(cache.nearest(ShapeKey::prefill(2048, 8)).is_none());
+        assert!(cache.nearest(ShapeKey::decode(2048, 8).with_profile(ProfileId(7))).is_none());
     }
 
     #[test]

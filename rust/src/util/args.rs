@@ -3,7 +3,7 @@
 //! Supports `--flag`, `--key value`, `--key=value`, positional args, and
 //! subcommands, with auto-generated `--help`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One declared option.
 #[derive(Debug, Clone)]
@@ -61,6 +61,7 @@ impl Spec {
     /// Parse a raw arg list (without argv[0]).
     pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
         let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut set_keys: BTreeSet<String> = BTreeSet::new();
         let mut flags: Vec<String> = Vec::new();
         let mut positional: Vec<String> = Vec::new();
         for o in &self.opts {
@@ -94,6 +95,7 @@ impl Spec {
                                 .ok_or_else(|| format!("--{key} requires a value"))?
                         }
                     };
+                    set_keys.insert(key.clone());
                     values.insert(key, v);
                 } else {
                     if inline.is_some() {
@@ -112,7 +114,7 @@ impl Spec {
                 return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
             }
         }
-        Ok(Parsed { values, flags, positional })
+        Ok(Parsed { values, set_keys, flags, positional })
     }
 }
 
@@ -120,6 +122,7 @@ impl Spec {
 #[derive(Debug, Default)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
+    set_keys: BTreeSet<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -143,6 +146,12 @@ impl Parsed {
 
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
+    }
+
+    /// True when the user wrote `--key ...` explicitly (as opposed to
+    /// the value coming from the declared default).
+    pub fn was_set(&self, key: &str) -> bool {
+        self.set_keys.contains(key)
     }
 }
 
@@ -169,6 +178,8 @@ mod tests {
         assert_eq!(p.get_usize("steps"), 25);
         assert_eq!(p.get("out"), "x.json");
         assert!(!p.has_flag("verbose"));
+        assert!(p.was_set("steps"));
+        assert!(!p.was_set("model"), "default value must not count as user-set");
     }
 
     #[test]

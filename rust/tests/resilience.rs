@@ -1,0 +1,419 @@
+//! Resilience tier: the replica health state machine, the fault plane,
+//! and the exactly-once delivery protocol under seeded random fault
+//! schedules.
+//!
+//! Nothing here touches the AOT artifacts — the pool is exercised with
+//! unit replicas and the delivery protocol with simulated serves — so
+//! this tier runs everywhere the library builds, single- or
+//! multi-threaded (`RUST_TEST_THREADS=1` and `=8` in CI). Every random
+//! schedule is seeded, so a failure reproduces from its printed seed.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use findep::coordinator::batcher::{run_attempt, FailedRequest, RequestError};
+use findep::coordinator::executor::{run_worker, EventCore};
+use findep::coordinator::faults::{FaultAction, FaultPlan};
+use findep::coordinator::planner::PlannerConfig;
+use findep::coordinator::server::{
+    EmbeddedRequest, HealthConfig, HealthState, ReplicaPool, Response,
+};
+use findep::metrics::Registry;
+use findep::util::rng::Rng;
+
+// ---- health state machine (unit replicas, no serving) ------------------
+
+fn health_cfg(cooldown_ms: u64) -> HealthConfig {
+    HealthConfig {
+        degrade_after: 1,
+        quarantine_after: 3,
+        outlier_factor: 4.0,
+        outlier_after: 2,
+        cooldown: Duration::from_millis(cooldown_ms),
+        probation_successes: 2,
+    }
+}
+
+/// Report one outcome through a fresh lease on the pool's only replica.
+fn report_once(pool: &ReplicaPool<()>, ok: bool, latency_s: f64) {
+    let lease = pool.try_lease().expect("sole replica must be leasable");
+    lease.report(ok, latency_s);
+}
+
+#[test]
+fn errors_degrade_then_quarantine_then_probation_recovers() {
+    let pool = ReplicaPool::new(vec![()]).with_health(health_cfg(20));
+    assert_eq!(pool.health_state(0), HealthState::Healthy);
+
+    // One error: Healthy -> Degraded, but the replica keeps serving.
+    report_once(&pool, false, 0.0);
+    assert_eq!(pool.health_state(0), HealthState::Degraded);
+    assert_eq!(pool.available(), 1, "degraded replicas still serve");
+
+    // One clean serve clears an error-degraded replica.
+    report_once(&pool, true, 0.001);
+    assert_eq!(pool.health_state(0), HealthState::Healthy);
+
+    // Three consecutive errors: -> Quarantined, off the free list.
+    for _ in 0..3 {
+        report_once(&pool, false, 0.0);
+    }
+    assert_eq!(pool.health_state(0), HealthState::Quarantined);
+    assert_eq!(pool.available(), 0);
+    assert_eq!(pool.quarantined(), 1);
+    assert!(pool.try_lease().is_none(), "quarantined replicas must not lease");
+
+    // After the cooldown it re-admits on probation (Degraded), and
+    // `probation_successes` clean serves restore Healthy.
+    std::thread::sleep(Duration::from_millis(40));
+    {
+        let lease = pool.try_lease().expect("cooldown elapsed: replica re-admitted");
+        assert_eq!(pool.health_state(0), HealthState::Degraded);
+        lease.report(true, 0.001);
+    }
+    assert_eq!(pool.health_state(0), HealthState::Degraded, "probation needs 2 successes");
+    report_once(&pool, true, 0.001);
+    assert_eq!(pool.health_state(0), HealthState::Healthy);
+}
+
+#[test]
+fn probation_error_requarantines_immediately() {
+    let pool = ReplicaPool::new(vec![()]).with_health(health_cfg(10));
+    for _ in 0..3 {
+        report_once(&pool, false, 0.0);
+    }
+    assert_eq!(pool.health_state(0), HealthState::Quarantined);
+    std::thread::sleep(Duration::from_millis(25));
+    // First error while on probation: no second benefit of the doubt.
+    report_once(&pool, false, 0.0);
+    assert_eq!(pool.health_state(0), HealthState::Quarantined);
+    assert_eq!(pool.quarantined(), 1);
+}
+
+#[test]
+fn latency_outliers_degrade_against_the_pool_ewma() {
+    let pool = ReplicaPool::new(vec![()]).with_health(HealthConfig {
+        // Outlier-only path: errors alone never degrade here.
+        degrade_after: 100,
+        quarantine_after: 100,
+        ..health_cfg(10)
+    });
+    // Warm the pool-wide EWMA past its 8-sample outlier warmup.
+    for _ in 0..8 {
+        report_once(&pool, true, 0.010);
+    }
+    assert_eq!(pool.health_state(0), HealthState::Healthy);
+    // Two consecutive 10x serves (outlier_factor is 4x): -> Degraded.
+    report_once(&pool, true, 0.100);
+    report_once(&pool, true, 0.100);
+    assert_eq!(pool.health_state(0), HealthState::Degraded);
+    // A normal-latency serve clears it.
+    report_once(&pool, true, 0.010);
+    assert_eq!(pool.health_state(0), HealthState::Healthy);
+}
+
+#[test]
+fn blocking_lease_survives_a_fully_quarantined_pool() {
+    // The sole replica quarantines; a blocking lease() must park with a
+    // cooldown-bounded timeout and self-recover, not deadlock.
+    let pool = ReplicaPool::new(vec![()]).with_health(health_cfg(50));
+    for _ in 0..3 {
+        report_once(&pool, false, 0.0);
+    }
+    assert_eq!(pool.available(), 0);
+    let t0 = Instant::now();
+    let lease = pool.lease();
+    let waited = t0.elapsed();
+    assert_eq!(lease.replica_id(), 0);
+    assert!(waited >= Duration::from_millis(40), "lease returned before cooldown: {waited:?}");
+    assert!(waited < Duration::from_secs(10), "lease took implausibly long: {waited:?}");
+    assert_eq!(pool.health_state(0), HealthState::Degraded, "re-admitted on probation");
+}
+
+#[test]
+fn fault_plan_fires_at_the_lease_boundary_per_replica_ordinal() {
+    let metrics = Arc::new(Registry::new());
+    let plan = FaultPlan::parse("0=fail:2", 2).unwrap();
+    let pool = ReplicaPool::new(vec![(), ()]).with_faults(plan).with_metrics(metrics.clone());
+    // Pop order is back-first: hold replica 1 so the next lease is 0.
+    let healthy = pool.try_lease().unwrap();
+    assert_eq!(healthy.replica_id(), 1);
+    let faulty = pool.try_lease().unwrap();
+    assert_eq!(faulty.replica_id(), 0);
+    assert_eq!(faulty.fault_action(), FaultAction::Fail);
+    assert_eq!(faulty.fault_action(), FaultAction::Fail);
+    assert_eq!(faulty.fault_action(), FaultAction::None, "transient recovers after 2");
+    assert_eq!(healthy.fault_action(), FaultAction::None, "other replica untouched");
+    assert_eq!(metrics.counter("faults_injected"), 2);
+}
+
+#[test]
+fn disarmed_fault_plane_touches_no_counters() {
+    let metrics = Arc::new(Registry::new());
+    let pool = ReplicaPool::new(vec![()]).with_metrics(metrics.clone());
+    let lease = pool.try_lease().unwrap();
+    for _ in 0..10 {
+        assert_eq!(lease.fault_action(), FaultAction::None);
+    }
+    assert_eq!(metrics.counter("faults_injected"), 0);
+}
+
+// ---- exactly-once delivery under faults (simulated serves) -------------
+
+/// A full simulated serving stack: the real event core, worker loop,
+/// and `run_attempt` protocol, with `Server::serve_batch` replaced by
+/// an echo over a fault-injecting unit-replica pool.
+struct SimStack {
+    core: Arc<EventCore>,
+    metrics: Arc<Registry>,
+    resp_rx: std::sync::mpsc::Receiver<Response>,
+    fail_rx: std::sync::mpsc::Receiver<FailedRequest>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn sim_stack(workers: usize, max_batch: usize, max_retries: u32, plan: FaultPlan) -> SimStack {
+    let core = Arc::new(EventCore::new(PlannerConfig {
+        max_batch,
+        linger: Duration::from_micros(200),
+        queue_depth: 16,
+    }));
+    let metrics = Arc::new(Registry::new());
+    let pool = Arc::new(
+        ReplicaPool::new(vec![(); workers])
+            .with_health(health_cfg(2))
+            .with_faults(plan)
+            .with_metrics(metrics.clone()),
+    );
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let (fail_tx, fail_rx) = channel::<FailedRequest>();
+    let mut threads = Vec::new();
+    for _ in 0..workers {
+        core.register_worker();
+        let core = core.clone();
+        let metrics = metrics.clone();
+        let pool = pool.clone();
+        let resp_tx = resp_tx.clone();
+        let fail_tx = fail_tx.clone();
+        threads.push(std::thread::spawn(move || {
+            let c = core.clone();
+            let m = metrics.clone();
+            run_worker(&core, &metrics, move |batch| {
+                run_attempt(&c, &m, &resp_tx, &fail_tx, max_retries, 2, batch, |reqs| {
+                    let lease = pool.lease();
+                    match lease.fault_action() {
+                        FaultAction::Fail => {
+                            lease.report(false, 0.0);
+                            Err(anyhow::anyhow!("injected fault"))
+                        }
+                        FaultAction::Panic => {
+                            lease.report(false, 0.0);
+                            panic!("injected worker panic")
+                        }
+                        FaultAction::Slow(factor) => {
+                            std::thread::sleep(Duration::from_micros((40.0 * factor) as u64));
+                            lease.report(true, 0.001);
+                            Ok(echo(reqs))
+                        }
+                        FaultAction::None => {
+                            lease.report(true, 0.001);
+                            Ok(echo(reqs))
+                        }
+                    }
+                })
+            });
+        }));
+    }
+    SimStack { core, metrics, resp_rx, fail_rx, threads }
+}
+
+fn echo(reqs: &[EmbeddedRequest]) -> Vec<Response> {
+    reqs.iter()
+        .map(|r| Response { id: r.id, hidden: r.hidden.clone(), latency_s: 0.0 })
+        .collect()
+}
+
+impl SimStack {
+    /// Collect `n` terminal outcomes, then close and join.
+    fn finish(self, n: usize) -> (Vec<Response>, Vec<FailedRequest>) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut resps = Vec::new();
+        let mut fails = Vec::new();
+        while resps.len() + fails.len() < n && Instant::now() < deadline {
+            if let Ok(r) = self.resp_rx.try_recv() {
+                resps.push(r);
+                continue;
+            }
+            if let Ok(f) = self.fail_rx.try_recv() {
+                fails.push(f);
+                continue;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        assert_eq!(
+            resps.len() + fails.len(),
+            n,
+            "stack timed out with {} responses + {} failures of {n}",
+            resps.len(),
+            fails.len(),
+        );
+        assert_eq!(self.core.open(), 0, "terminal outcomes must release every open slot");
+        self.core.close();
+        for t in self.threads {
+            t.join().unwrap();
+        }
+        (resps, fails)
+    }
+}
+
+#[test]
+fn every_request_terminates_exactly_once_under_random_fault_schedules() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1));
+        let workers = 2 + rng.usize_below(3); // 2..=4 replicas
+        let max_batch = 1 + rng.usize_below(4);
+        let max_retries = 1 + rng.below(3) as u32;
+        let n = 24u64;
+        let plan = FaultPlan::random(seed, workers);
+        let stack = sim_stack(workers, max_batch, max_retries, plan);
+        for i in 0..n {
+            let out_len = rng.usize_below(3); // mix prefill-only and decode
+            stack.core.submit(EmbeddedRequest::synthetic_autoregressive(i, 2, 2, out_len)).unwrap();
+        }
+        let (resps, fails) = stack.finish(n as usize);
+
+        // Exactly once: every submitted id appears exactly once across
+        // the response and failure channels — none lost, none repeated.
+        let mut ids: Vec<u64> =
+            resps.iter().map(|r| r.id).chain(fails.iter().map(|f| f.id)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "seed {seed}: lost or duplicated ids");
+        for f in &fails {
+            assert!(
+                matches!(f.error, RequestError::RetriesExhausted { attempts } if attempts > 0),
+                "seed {seed}: unexpected failure kind {:?}",
+                f.error
+            );
+        }
+    }
+}
+
+#[test]
+fn fault_free_single_worker_stack_is_fifo_and_inert() {
+    let stack = sim_stack(1, 4, 2, FaultPlan::default());
+    for i in 0..12u64 {
+        stack.core.submit(EmbeddedRequest::synthetic(i, 2, 2)).unwrap();
+    }
+    let (resps, fails) = stack.finish(12);
+    assert!(fails.is_empty());
+    let ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..12).collect::<Vec<_>>(), "single worker must drain FIFO");
+    // The fault plane and retry machinery leave no trace on a clean run.
+    let m = &stack.metrics;
+    for c in [
+        "faults_injected",
+        "request_retries",
+        "requests_failed",
+        "requests_expired",
+        "serve_errors",
+    ] {
+        assert_eq!(m.counter(c), 0, "counter {c} moved on a fault-free run");
+    }
+}
+
+#[test]
+fn expired_requests_fail_fast_without_touching_a_replica() {
+    // Serve closure panics if ever invoked: an expired request must be
+    // failed at assembly, before any replica lease.
+    let core = Arc::new(EventCore::new(PlannerConfig {
+        max_batch: 4,
+        linger: Duration::from_micros(100),
+        queue_depth: 16,
+    }));
+    let metrics = Arc::new(Registry::new());
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let (fail_tx, fail_rx) = channel::<FailedRequest>();
+    core.register_worker();
+    let t = {
+        let core2 = core.clone();
+        let metrics2 = metrics.clone();
+        std::thread::spawn(move || {
+            let c = core2.clone();
+            let m = metrics2.clone();
+            run_worker(&core2, &metrics2, move |batch| {
+                run_attempt(&c, &m, &resp_tx, &fail_tx, 2, 2, batch, |_reqs| {
+                    panic!("expired batch reached the serve path")
+                })
+            });
+        })
+    };
+    let past = Instant::now() - Duration::from_millis(5);
+    for i in 0..4u64 {
+        core.submit(EmbeddedRequest::synthetic(i, 2, 2).with_deadline(past)).unwrap();
+    }
+    let mut fails = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while fails.len() < 4 && Instant::now() < deadline {
+        if let Ok(f) = fail_rx.try_recv() {
+            fails.push(f);
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    assert_eq!(fails.len(), 4, "every expired request must fail fast");
+    assert!(fails.iter().all(|f| f.error == RequestError::DeadlineExpired));
+    assert!(resp_rx.try_recv().is_err(), "no responses for expired requests");
+    assert_eq!(core.open(), 0);
+    assert_eq!(metrics.counter("requests_expired"), 4);
+    core.close();
+    t.join().unwrap();
+}
+
+#[test]
+fn permanent_fault_on_the_sole_replica_exhausts_the_retry_budget() {
+    let stack = sim_stack(1, 4, 2, FaultPlan::parse("0=perm", 1).unwrap());
+    stack.core.submit(EmbeddedRequest::synthetic(7, 2, 2)).unwrap();
+    let (resps, fails) = stack.finish(1);
+    assert!(resps.is_empty());
+    assert_eq!(fails.len(), 1);
+    assert_eq!(fails[0].id, 7);
+    assert_eq!(fails[0].error, RequestError::RetriesExhausted { attempts: 3 });
+    assert_eq!(stack.metrics.counter("request_retries"), 2);
+    assert_eq!(stack.metrics.counter("requests_failed"), 1);
+}
+
+#[test]
+fn injected_worker_panic_retries_the_batch_on_a_survivor() {
+    // Replica 1 — the one the pool leases first (pop from the back) —
+    // panics its worker on its first serve; the drop guard must route
+    // the batch to the retry lane and the surviving worker completes
+    // it. (The panicking thread dies — join reports Err — but no
+    // request is lost.)
+    let stack = sim_stack(2, 4, 2, FaultPlan::parse("1=panic@0", 2).unwrap());
+    for i in 0..8u64 {
+        stack.core.submit(EmbeddedRequest::synthetic(i, 2, 2)).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut resps = Vec::new();
+    while resps.len() < 8 && Instant::now() < deadline {
+        if let Ok(r) = stack.resp_rx.try_recv() {
+            resps.push(r);
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let mut ids: Vec<u64> = resps.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..8).collect::<Vec<_>>(), "panic lost or duplicated requests");
+    assert!(stack.fail_rx.try_recv().is_err(), "retry must absorb the panic, not fail");
+    assert_eq!(stack.core.open(), 0);
+    stack.core.close();
+    let mut panicked = 0;
+    for t in stack.threads {
+        if t.join().is_err() {
+            panicked += 1;
+        }
+    }
+    assert_eq!(panicked, 1, "exactly the injected panic");
+    assert!(stack.metrics.counter("request_retries") >= 1);
+}

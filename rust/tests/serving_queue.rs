@@ -175,8 +175,12 @@ fn batcher_drains_fifo_with_one_worker() {
         hidden: Tensor::zeros(vec![1]),
         phase: findep::config::Phase::Prefill,
         output_len: 0,
+        deadline: None,
     };
-    assert!(batcher.submit(bad).is_err());
+    assert!(matches!(
+        batcher.submit(bad),
+        Err(findep::coordinator::batcher::SubmitError::Invalid { id: 99, .. })
+    ));
     assert_eq!(batcher.metrics().counter("queued"), 12, "rejected request was queued");
 }
 
