@@ -11,9 +11,39 @@
 //!
 //! Run: `cargo bench --bench solver_speed`
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use findep::config::{GroupSplit, ModelConfig, Testbed};
-use findep::solver::{solve, solve_mode, solve_online, EvalMode, Instance, SolverParams};
+use findep::solver::{
+    solve, solve_mode, solve_online, solve_online_with, EvalMode, Instance, SolverParams,
+};
 use findep::util::bench::{fmt_duration, Bencher, Table};
+
+/// Counting wrapper over the system allocator: the shared-evaluator
+/// claim below is about allocator traffic, so measure it directly
+/// instead of inferring it from wall time.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn paper_instances() -> Vec<(String, Instance)> {
     let mut out = Vec::new();
@@ -145,11 +175,44 @@ fn main() {
     println!("online re-solve: {}", r.report());
     assert!(r.mean_s() < 1.0);
 
+    // --- Shared-evaluator online re-solves (the serving loop's
+    //     steady state): a re-solve on a caller-held evaluator must
+    //     not rebuild the probe arenas + topology cache, so its
+    //     allocation count must drop strictly below a fresh-evaluator
+    //     solve's — and the answer must not move. ---------------------
+    let mut ev = inst.evaluator();
+    let first = solve_online_with(&inst, 4, &params, EvalMode::Buffered, &[], None, &mut ev)
+        .expect("online shape feasible");
+    let a0 = allocs();
+    let shared = solve_online_with(&inst, 4, &params, EvalMode::Buffered, &[], None, &mut ev)
+        .expect("online shape feasible");
+    let shared_allocs = allocs() - a0;
+    let a1 = allocs();
+    let fresh = solve_online(&inst, 4, &params).expect("online shape feasible");
+    let fresh_allocs = allocs() - a1;
+    assert_eq!(shared.config, first.config);
+    assert_eq!(shared.config, fresh.config);
+    assert_eq!(
+        shared.throughput_tokens.to_bits(),
+        fresh.throughput_tokens.to_bits(),
+        "shared-evaluator re-solve changed the answer"
+    );
+    assert!(
+        shared_allocs < fresh_allocs,
+        "shared-evaluator re-solve must allocate less than a fresh solve \
+         ({shared_allocs} vs {fresh_allocs} allocations)"
+    );
+    println!(
+        "online re-solve allocations: fresh evaluator {fresh_allocs} -> shared evaluator \
+         {shared_allocs} ({:.1}x fewer)",
+        fresh_allocs as f64 / shared_allocs.max(1) as f64
+    );
+
     // Cap scaling: the Pareto-frontier walk keeps growth benign.
     let mut table =
         Table::new("solve time vs search caps", &["ma_cap", "r1_cap", "r2_cap", "mean"]);
     for (ma, r1, r2) in [(4usize, 4usize, 16usize), (8, 8, 32), (16, 8, 64), (32, 8, 128)] {
-        let p = SolverParams { ma_cap: ma, r1_cap: r1, r2_cap: r2 };
+        let p = SolverParams { ma_cap: ma, r1_cap: r1, r2_cap: r2, ..Default::default() };
         let r = bencher.run(&format!("caps {ma}/{r1}/{r2}"), || {
             let _ = solve(&inst, &p);
         });

@@ -1,0 +1,257 @@
+//! Warm-start / anytime solver gates (§4 + §5.5 re-solve path):
+//!
+//! 1. **Warm re-solves** — seeding Algorithm 1 with a previously
+//!    solved plan returns the bit-identical winner with strictly fewer
+//!    candidate evaluations on every paper instance, and strictly
+//!    lower wall time (full mode; quick mode runs too few reps to gate
+//!    on timing).
+//! 2. **Bound pruning** — `prune: true` matches the `prune: false`
+//!    oracle bit for bit everywhere, never costs an extra evaluation,
+//!    saves evaluations in aggregate, and fires the §4.2 row bound at
+//!    least once across the suite.
+//! 3. **Anytime + refinement** — a zero-budget solve still returns a
+//!    usable incumbent (flagged non-exhaustive), and the refinement
+//!    path (full re-solve warm from the incumbent, published through
+//!    the [`PlanCache`] generation token) converges to the unbudgeted
+//!    plan bit for bit.
+//!
+//! Caps run at (m_a ≤ 8, r1 ≤ 8, r2 ≤ 64): the paper-default caps
+//! leave several instances with a single Pareto row, where the row
+//! bound has nothing to prune.
+//!
+//! Emits `BENCH_warmsolve.json`. Run: `cargo bench --bench warm_solver`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::solver::{
+    solve, solve_warm, EvalMode, Instance, PlanCache, ShapeKey, SolverParams, WarmStart,
+};
+use findep::util::bench::Table;
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+
+fn paper_instances() -> Vec<(String, Instance)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for (deepseek, name) in [(true, "deepseek"), (false, "qwen")] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            let split = GroupSplit::paper_default(&tb, deepseek);
+            out.push((
+                format!("{name}/{}", tb.name),
+                Instance::new(model, tb.clone(), split, 4096),
+            ));
+        }
+    }
+    out
+}
+
+/// Minimum wall time of `f` over `reps` runs (min, not mean: the
+/// comparison is between deterministic workloads, and min is the
+/// noise-robust statistic for "this code path does less work").
+fn min_wall(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let reps = if quick { 3 } else { 25 };
+    let params = SolverParams { ma_cap: 8, r1_cap: 8, r2_cap: 64, ..Default::default() };
+    let mut report = JsonObj::new();
+
+    // --- Gate 1: warm re-solve = cold answer, strictly cheaper. -----
+    let mut table = Table::new(
+        "warm re-solve vs cold solve (bit-identical winner required)",
+        &["instance", "cold evals", "warm evals", "cold wall", "warm wall", "speedup"],
+    );
+    let mut g1 = Vec::new();
+    for (label, inst) in paper_instances() {
+        let Some(cold) = solve(&inst, &params) else { continue };
+        let seed = WarmStart::from_solution(&cold);
+        let warm = solve_warm(&inst, &params, EvalMode::Buffered, &mut inst.evaluator(), Some(&seed))
+            .expect("warm re-solve of a feasible instance");
+        assert_eq!(warm.config, cold.config, "warm winner drifted on {label}");
+        assert_eq!(
+            warm.throughput_tokens.to_bits(),
+            cold.throughput_tokens.to_bits(),
+            "warm throughput drifted on {label}"
+        );
+        assert_eq!(
+            warm.makespan.to_bits(),
+            cold.makespan.to_bits(),
+            "warm makespan drifted on {label}"
+        );
+        assert!(warm.warm_seeded && warm.exhaustive);
+        assert!(
+            warm.evals < cold.evals,
+            "warm re-solve must evaluate strictly fewer candidates on {label} \
+             (warm {} vs cold {})",
+            warm.evals,
+            cold.evals
+        );
+        let t_cold = min_wall(reps, || {
+            let _ = solve(&inst, &params);
+        });
+        let t_warm = min_wall(reps, || {
+            let _ =
+                solve_warm(&inst, &params, EvalMode::Buffered, &mut inst.evaluator(), Some(&seed));
+        });
+        if !quick {
+            assert!(
+                t_warm < t_cold,
+                "warm re-solve wall time must beat cold on {label} \
+                 ({t_warm:.6}s vs {t_cold:.6}s)"
+            );
+        }
+        table.row(&[
+            label.clone(),
+            cold.evals.to_string(),
+            warm.evals.to_string(),
+            format!("{:.1} us", t_cold * 1e6),
+            format!("{:.1} us", t_warm * 1e6),
+            format!("{:.2}x", t_cold / t_warm),
+        ]);
+        let mut j = JsonObj::new();
+        j.insert("instance", Json::Str(label));
+        j.insert("cold_evals", Json::Num(cold.evals as f64));
+        j.insert("warm_evals", Json::Num(warm.evals as f64));
+        j.insert("cold_wall_s", Json::Num(t_cold));
+        j.insert("warm_wall_s", Json::Num(t_warm));
+        j.insert("bit_identical", Json::Bool(true));
+        g1.push(Json::Obj(j));
+    }
+    table.print();
+    report.insert("warm_vs_cold", Json::Arr(g1));
+
+    // --- Gate 2: pruning = oracle answer, fewer evals, bound fires. -
+    let oracle_params = SolverParams { prune: false, ..params };
+    let mut table = Table::new(
+        "bound pruning vs prune-off oracle (bit-identical winner required)",
+        &["instance", "oracle evals", "pruned evals", "rows bound-pruned"],
+    );
+    let (mut sum_oracle, mut sum_pruned, mut total_rows_pruned) = (0usize, 0usize, 0usize);
+    let mut g2 = Vec::new();
+    for (label, inst) in paper_instances() {
+        let Some(o) = solve(&inst, &oracle_params) else { continue };
+        let p = solve(&inst, &params).expect("prune on/off agree on feasibility");
+        assert_eq!(p.config, o.config, "pruned winner drifted on {label}");
+        assert_eq!(
+            p.throughput_tokens.to_bits(),
+            o.throughput_tokens.to_bits(),
+            "pruned throughput drifted on {label}"
+        );
+        assert_eq!(o.pruned_rows, 0, "oracle must not prune on {label}");
+        assert!(
+            p.evals <= o.evals,
+            "pruning may never cost evaluations on {label} (pruned {} vs oracle {})",
+            p.evals,
+            o.evals
+        );
+        sum_oracle += o.evals;
+        sum_pruned += p.evals;
+        total_rows_pruned += p.pruned_rows;
+        table.row(&[
+            label.clone(),
+            o.evals.to_string(),
+            p.evals.to_string(),
+            p.pruned_rows.to_string(),
+        ]);
+        let mut j = JsonObj::new();
+        j.insert("instance", Json::Str(label));
+        j.insert("oracle_evals", Json::Num(o.evals as f64));
+        j.insert("pruned_evals", Json::Num(p.evals as f64));
+        j.insert("rows_pruned", Json::Num(p.pruned_rows as f64));
+        g2.push(Json::Obj(j));
+    }
+    table.print();
+    assert!(
+        sum_pruned < sum_oracle,
+        "pruning must save evaluations in aggregate ({sum_pruned} vs {sum_oracle})"
+    );
+    assert!(
+        total_rows_pruned >= 1,
+        "the §4.2 row bound must fire at least once across the paper suite"
+    );
+    println!(
+        "pruning: {sum_oracle} -> {sum_pruned} evaluations across the suite, \
+         {total_rows_pruned} rows skipped whole by the bound"
+    );
+    report.insert("pruning", {
+        let mut j = JsonObj::new();
+        j.insert("oracle_evals", Json::Num(sum_oracle as f64));
+        j.insert("pruned_evals", Json::Num(sum_pruned as f64));
+        j.insert("rows_pruned", Json::Num(total_rows_pruned as f64));
+        j.insert("per_instance", Json::Arr(g2));
+        Json::Obj(j)
+    });
+
+    // --- Gate 3: anytime truncation + refinement convergence. -------
+    let (label, inst) = paper_instances()
+        .into_iter()
+        .find(|(l, _)| l.starts_with("qwen/C"))
+        .expect("qwen/C paper instance exists");
+    let budgeted = SolverParams { budget: Some(Duration::ZERO), ..params };
+    let cache = PlanCache::new();
+    let key = ShapeKey::prefill(4096, 64);
+    let (sol, token) = cache.get_or_solve_refinable(key, || solve(&inst, &budgeted));
+    let truncated = sol.expect("a zero-budget solve still returns an incumbent");
+    assert!(
+        !truncated.exhaustive,
+        "zero budget must truncate the multi-row sweep on {label}"
+    );
+    let full = solve(&inst, &params).expect("feasible");
+    assert!(full.exhaustive);
+    assert!(
+        truncated.throughput_tokens <= full.throughput_tokens,
+        "the incumbent can never beat the exhaustive plan"
+    );
+    // The refinement pass: full re-solve warm from the incumbent.
+    let refined = solve_warm(
+        &inst,
+        &params,
+        EvalMode::Buffered,
+        &mut inst.evaluator(),
+        Some(&WarmStart::from_solution(&truncated)),
+    )
+    .expect("refinement solve");
+    assert!(refined.exhaustive);
+    assert_eq!(refined.config, full.config, "refinement must converge to the exhaustive plan");
+    assert_eq!(refined.throughput_tokens.to_bits(), full.throughput_tokens.to_bits());
+    assert!(
+        cache.publish_refined(&token, key, Arc::new(refined.clone())),
+        "publish into the untouched generation must be live"
+    );
+    let live = cache.peek(key).expect("entry present").expect("entry solved");
+    assert!(live.exhaustive, "the cache must now serve the refined plan");
+    assert_eq!(live.config, full.config);
+    println!(
+        "anytime on {label}: truncated incumbent {:.0} tok/s ({} evals) -> refined {:.0} tok/s \
+         ({} evals), published live",
+        truncated.throughput_tokens, truncated.evals, full.throughput_tokens, refined.evals
+    );
+    report.insert("anytime", {
+        let mut j = JsonObj::new();
+        j.insert("instance", Json::Str(label));
+        j.insert("truncated_tput", Json::Num(truncated.throughput_tokens));
+        j.insert("truncated_evals", Json::Num(truncated.evals as f64));
+        j.insert("refined_tput", Json::Num(refined.throughput_tokens));
+        j.insert("refined_evals", Json::Num(refined.evals as f64));
+        j.insert("converged", Json::Bool(true));
+        Json::Obj(j)
+    });
+
+    std::fs::write("BENCH_warmsolve.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_warmsolve.json");
+    println!("\nwrote BENCH_warmsolve.json");
+}

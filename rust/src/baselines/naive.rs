@@ -27,6 +27,9 @@ pub fn best_naive(inst: &Instance, ma_cap: usize) -> Option<Solution> {
                 throughput_tokens: tput,
                 solve_seconds: 0.0,
                 evals: m_a,
+                pruned_rows: 0,
+                warm_seeded: false,
+                exhaustive: true,
             });
         }
     }

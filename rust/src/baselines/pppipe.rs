@@ -51,6 +51,9 @@ fn best_pppipe_capped(inst: &Instance, params: &SolverParams, r1_cap: usize) -> 
                     throughput_tokens: tput,
                     solve_seconds: 0.0,
                     evals: 0,
+                    pruned_rows: 0,
+                    warm_seeded: false,
+                    exhaustive: true,
                 });
             }
         }
@@ -67,7 +70,16 @@ pub fn pppipe_fixed(inst: &Instance, m_a: usize, r1: usize) -> Solution {
     let sm = inst.stage_models();
     let cfg = PlanConfig::pppipe(m_a, r1, sm.m_e(m_a as f64, 1));
     let (makespan, tput) = inst.evaluate(cfg);
-    Solution { config: cfg, makespan, throughput_tokens: tput, solve_seconds: 0.0, evals: 1 }
+    Solution {
+        config: cfg,
+        makespan,
+        throughput_tokens: tput,
+        solve_seconds: 0.0,
+        evals: 1,
+        pruned_rows: 0,
+        warm_seeded: false,
+        exhaustive: true,
+    }
 }
 
 #[cfg(test)]

@@ -106,6 +106,15 @@ pub struct BatcherConfig {
     /// Pick each replica's Adaptive planning split with the split-search
     /// solver layer at startup instead of the fixed `(1, eg)` view.
     pub auto_split: bool,
+    /// Anytime latency budget for each replica's Adaptive solves: a
+    /// solve that runs over it serves its best incumbent immediately
+    /// instead of finishing the sweep. `None` (the default) never
+    /// truncates.
+    pub solve_budget: Option<Duration>,
+    /// Finish budget-truncated cached plans in the background and
+    /// publish the exhaustive plan into the shared cache (only
+    /// observable with `solve_budget` set).
+    pub refine_plans: bool,
 }
 
 impl Default for BatcherConfig {
@@ -120,6 +129,8 @@ impl Default for BatcherConfig {
             linger: Duration::from_millis(1),
             cache_plans: true,
             auto_split: false,
+            solve_budget: None,
+            refine_plans: true,
         }
     }
 }
@@ -258,6 +269,8 @@ impl Batcher {
                 plan_cache.clone(),
             )?;
             server.cache_plans = cfg.cache_plans;
+            server.solve_budget = cfg.solve_budget;
+            server.refine_plans = cfg.refine_plans;
             if let Some(p) = profile {
                 server.set_calibration_profile(p);
             }

@@ -37,7 +37,10 @@ use crate::metrics::Registry;
 use crate::perfmodel::profile::{CalibrationProfile, ProfileId};
 use crate::runtime::tensor::Tensor;
 use crate::sched::Order;
-use crate::solver::{self, bucket_up, Instance, PlanCache, ShapeKey, Solution, SolverParams};
+use crate::solver::{
+    self, bucket_up, EvalMode, Evaluator, Instance, PlanCache, RefineToken, ShapeKey, Solution,
+    SolverParams, WarmStart,
+};
 
 /// One embedded request: hidden states for a fixed-S prompt (embedding
 /// lookup is out of scope for the tiny model; requests arrive as
@@ -231,11 +234,27 @@ pub struct Server {
     solver_params: SolverParams,
     plan_cache: Arc<PlanCache>,
     batch_buf: Mutex<BatchBuffers>,
-    /// Online-solve latency budget. A solve that runs over it still
-    /// yields its (cached) plan but counts `solver_budget_exceeded` —
-    /// the observability hook for sizing an anytime solver. `None`
-    /// (the default) disables the accounting.
+    /// Reusable per-replica candidate evaluator: every Adaptive solve
+    /// on this server shares one probe arena + engine topology cache
+    /// instead of rebuilding them per shape
+    /// (`benches/solver_speed.rs` pins the allocation drop). Lazily
+    /// built on the first solve, re-targeted per instance.
+    solve_evaluator: Mutex<Option<Evaluator>>,
+    /// Online-solve latency budget, passed to the solver as its
+    /// anytime budget: a solve that runs over it returns its best
+    /// incumbent (flagged non-exhaustive) instead of finishing the
+    /// sweep, counts `solver_budget_exceeded`, and — with
+    /// [`Server::refine_plans`] — hands the rest of the sweep to a
+    /// background refinement pass. `None` (the default) never
+    /// truncates.
     pub solve_budget: Option<Duration>,
+    /// Finish budget-truncated cached plans off the hot path: a
+    /// non-exhaustive solve spawns a background full re-solve (warm
+    /// from the incumbent) that atomically publishes the exhaustive
+    /// plan into the same cache generation it was solved for
+    /// (`plans_refined`); a generation cleared in between discards the
+    /// publish. On by default; only observable with a budget set.
+    pub refine_plans: bool,
 }
 
 impl Server {
@@ -271,10 +290,12 @@ impl Server {
             cache_plans: true,
             strict: false,
             plan_profile: ProfileId::HAND,
-            solver_params: SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 8 },
+            solver_params: SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 8, ..Default::default() },
             plan_cache,
             batch_buf: Mutex::new(BatchBuffers::new()),
+            solve_evaluator: Mutex::new(None),
             solve_budget: None,
+            refine_plans: true,
         })
     }
 
@@ -407,26 +428,27 @@ impl Server {
     /// online mode restricted to the compiled attention buckets, with
     /// the exhaustive fixed-`(m_a, r1)` scan as the fallback when the
     /// online solver calls the shape infeasible (e.g. an emulated
-    /// testbed whose memory model rejects it).
-    fn solve_adaptive_shape(&self, capacity: usize, phase: Phase) -> Option<Solution> {
-        self.solve_shape_for_split(self.plan_split, capacity, phase)
+    /// testbed whose memory model rejects it). A cached neighbor (same
+    /// profile/phase, capacity at least ours) warm-seeds the sweep,
+    /// and the server's anytime budget bounds it — neither changes
+    /// which plan an unbudgeted solve picks.
+    fn solve_adaptive_shape(&self, capacity: usize, phase: Phase, key: ShapeKey) -> Option<Solution> {
+        let warm = self
+            .cache_plans
+            .then(|| self.plan_cache.nearest(key))
+            .flatten()
+            .map(|s| WarmStart::from_solution(&s));
+        self.solve_shape_warm(self.plan_split, capacity, phase, warm.as_ref(), self.solve_budget)
     }
 
-    /// The serving solve for one padded shape against an explicit
-    /// split — the scoring primitive [`Server::select_plan_split`]
-    /// ranks candidate splits with, so selection and serving share one
-    /// objective. Decode shapes solve a decode-phase instance whose KV
-    /// length is normalized to its cache bucket's ceiling, so the plan
-    /// is conservative for (and shared by) every KV in the bucket and
+    /// The planning instance for `phase` against an explicit split.
+    /// Decode shapes solve a decode-phase instance whose KV length is
+    /// normalized to its cache bucket's ceiling, so the plan is
+    /// conservative for (and shared by) every KV in the bucket and
     /// cache-on/off runs stay byte-identical.
-    fn solve_shape_for_split(
-        &self,
-        split: GroupSplit,
-        capacity: usize,
-        phase: Phase,
-    ) -> Option<Solution> {
+    fn phase_instance(&self, split: GroupSplit, phase: Phase) -> Instance {
         let model = self.pipeline.model().model.clone();
-        let inst = match phase {
+        match phase {
             Phase::Prefill => Instance::new(
                 model,
                 self.plan_testbed.clone(),
@@ -436,9 +458,39 @@ impl Server {
             Phase::Decode { kv_len } => {
                 Instance::decode(model, self.plan_testbed.clone(), split, bucket_up(kv_len))
             }
-        };
+        }
+    }
+
+    /// The serving solve for one padded shape against an explicit
+    /// split — the scoring primitive [`Server::select_plan_split`]
+    /// ranks candidate splits with, so selection and serving share one
+    /// objective (split scoring passes no warm seed and no budget:
+    /// selection stays exhaustive and deterministic).
+    fn solve_shape_for_split(
+        &self,
+        split: GroupSplit,
+        capacity: usize,
+        phase: Phase,
+    ) -> Option<Solution> {
+        self.solve_shape_warm(split, capacity, phase, None, None)
+    }
+
+    /// Shared serving-solve core: Algorithm 1's online mode on this
+    /// server's reusable evaluator, then the brute-force fallback.
+    fn solve_shape_warm(
+        &self,
+        split: GroupSplit,
+        capacity: usize,
+        phase: Phase,
+        warm: Option<&WarmStart>,
+        budget: Option<Duration>,
+    ) -> Option<Solution> {
+        let inst = self.phase_instance(split, phase);
         let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;
-        solver::solve_online_bucketed(&inst, capacity, &self.solver_params, buckets)
+        let params = SolverParams { budget, ..self.solver_params };
+        let mut guard = self.solve_evaluator.lock().unwrap_or_else(PoisonError::into_inner);
+        let ev = guard.get_or_insert_with(|| inst.evaluator());
+        solver::solve_online_with(&inst, capacity, &params, EvalMode::Buffered, buckets, warm, ev)
             .or_else(|| self.bruteforce_shape(&inst, capacity, buckets))
     }
 
@@ -471,6 +523,9 @@ impl Server {
                     throughput_tokens: tput,
                     solve_seconds: 0.0,
                     evals: 0,
+                    pruned_rows: 0,
+                    warm_seeded: false,
+                    exhaustive: true,
                 });
             }
         }
@@ -490,7 +545,9 @@ impl Server {
     /// grows token by token, and neither prefill/decode plans nor
     /// plans solved under different calibration profiles can alias. A
     /// cache-disabled server runs the identical solve per batch, so the
-    /// two modes produce byte-identical configurations.
+    /// two modes produce byte-identical configurations — cache misses
+    /// warm-seed from the nearest cached neighbor, which steers the
+    /// sweep without changing its answer.
     pub fn plan_adaptive_phase(&self, n: usize, phase: Phase) -> (usize, usize, ExecConfig) {
         let capacity = self.padded_capacity(n);
         let key = match phase {
@@ -506,19 +563,42 @@ impl Server {
         let solve_elapsed = std::cell::Cell::new(None::<Duration>);
         let timed_solve = || {
             let t0 = Instant::now();
-            let sol = self.solve_adaptive_shape(capacity, phase);
+            let sol = self.solve_adaptive_shape(capacity, phase, key);
             solve_elapsed.set(Some(t0.elapsed()));
+            if let Some(s) = &sol {
+                if s.warm_seeded {
+                    self.metrics.inc("plans_warm", 1);
+                }
+                if s.pruned_rows > 0 {
+                    self.metrics.inc("solver_rows_pruned", s.pruned_rows as u64);
+                }
+                if !s.exhaustive {
+                    self.metrics.inc("plans_truncated", 1);
+                }
+            }
             sol
         };
-        let sol = if self.cache_plans {
-            self.plan_cache.get_or_solve(key, timed_solve)
+        let (sol, refine) = if self.cache_plans {
+            let (sol, token) = self.plan_cache.get_or_solve_refinable(key, timed_solve);
+            (sol, Some(token))
         } else {
-            timed_solve().map(Arc::new)
+            (timed_solve().map(Arc::new), None)
         };
         if let (Some(budget), Some(elapsed)) = (self.solve_budget, solve_elapsed.get()) {
             if elapsed > budget {
                 self.metrics.inc("solver_budget_exceeded", 1);
                 self.metrics.observe("solver_budget_overrun", (elapsed - budget).as_secs_f64());
+            }
+        }
+        // A budget-truncated plan this call solved (not a cached hit —
+        // its miss already spawned one) is served as-is, and the rest
+        // of its sweep moves off the hot path: a detached refinement
+        // worker re-solves warm from the incumbent with no budget and
+        // publishes the exhaustive plan into the generation this solve
+        // was cached in.
+        if let (Some(s), Some(token)) = (&sol, refine) {
+            if !s.exhaustive && self.refine_plans && solve_elapsed.get().is_some() {
+                self.spawn_refinement(token, key, capacity, phase, Arc::clone(s));
             }
         }
         match sol {
@@ -544,14 +624,44 @@ impl Server {
                 if let Some(s) = self.cache_plans.then(|| self.plan_cache.nearest(key)).flatten()
                 {
                     self.metrics.inc("plans_degraded_nearest", 1);
+                    // The neighbor's plan was solved for a different
+                    // shape (a larger batch bucket, or another seq/KV
+                    // bucket): re-solve THIS phase's instance at the
+                    // neighbor's capacity, warm-seeded by the neighbor
+                    // — the seed row goes first and its r2 pivot is
+                    // certified, so the re-solve is cheap — and serve
+                    // the neighbor's config verbatim only when that
+                    // shape is infeasible here too. Skipped when the
+                    // neighbor shares our capacity: that exact solve
+                    // just returned `None`.
+                    let cap_n = s.config.m_a * s.config.r1;
+                    let warm = WarmStart::from_solution(&s);
+                    let re = (cap_n != capacity)
+                        .then(|| {
+                            self.solve_shape_warm(
+                                self.plan_split,
+                                cap_n,
+                                phase,
+                                Some(&warm),
+                                self.solve_budget,
+                            )
+                        })
+                        .flatten();
+                    let c = match &re {
+                        Some(r) => {
+                            self.metrics.inc("plans_degraded_resolved", 1);
+                            r.config
+                        }
+                        None => s.config,
+                    };
                     (
-                        s.config.m_a,
-                        s.config.r1,
+                        c.m_a,
+                        c.r1,
                         ExecConfig {
-                            r1: s.config.r1,
-                            r2: s.config.r2,
-                            order: s.config.order,
-                            fuse_shared: s.config.fuse_shared,
+                            r1: c.r1,
+                            r2: c.r2,
+                            order: c.order,
+                            fuse_shared: c.fuse_shared,
                         },
                     )
                 } else {
@@ -571,6 +681,49 @@ impl Server {
                 }
             }
         }
+    }
+
+    /// Finish a budget-truncated solve off the hot path: a detached
+    /// worker re-runs the full sweep (no budget, warm from the
+    /// truncated incumbent — warm seeding never changes the answer, so
+    /// the published plan is bit-identical to an unbudgeted cold
+    /// solve) and publishes it through the [`RefineToken`] captured at
+    /// the miss. The token pins the cache generation: if the cache was
+    /// cleared in between, the publish lands in the orphaned
+    /// generation and is invisible — all-or-nothing, never a torn mix
+    /// of old- and new-generation plans. `plans_refined` counts live
+    /// publishes only.
+    fn spawn_refinement(
+        &self,
+        token: RefineToken,
+        key: ShapeKey,
+        capacity: usize,
+        phase: Phase,
+        seed: Arc<Solution>,
+    ) {
+        let inst = self.phase_instance(self.plan_split, phase);
+        let buckets = self.pipeline.model().artifacts.manifest.ma_buckets.clone();
+        let params = SolverParams { budget: None, ..self.solver_params };
+        let cache = Arc::clone(&self.plan_cache);
+        let metrics = Arc::clone(&self.metrics);
+        std::thread::spawn(move || {
+            let warm = WarmStart::from_solution(&seed);
+            let mut ev = inst.evaluator();
+            let full = solver::solve_online_with(
+                &inst,
+                capacity,
+                &params,
+                EvalMode::Buffered,
+                &buckets,
+                Some(&warm),
+                &mut ev,
+            );
+            if let Some(full) = full {
+                if cache.publish_refined(&token, key, Arc::new(full)) {
+                    metrics.inc("plans_refined", 1);
+                }
+            }
+        });
     }
 
     /// Smallest m_a bucket such that `r1·m_a` covers the request count
@@ -1256,6 +1409,37 @@ mod tests {
             }
         }
         assert_eq!(srv.metrics.counter("requests"), 16);
+    }
+
+    #[test]
+    fn budgeted_adaptive_serving_refines_to_the_exhaustive_plan() {
+        let Some(mut srv) = server() else { return };
+        srv.solve_budget = Some(Duration::ZERO);
+        let s = srv.pipeline.model().seq_len;
+        let m = srv.pipeline.model().model.embed;
+        let reqs: Vec<EmbeddedRequest> =
+            (0..4).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+        let (resp, _) = srv.serve_batch(&reqs, Policy::Adaptive).unwrap();
+        assert_eq!(resp.len(), 4);
+        // The shape is planned and cached either way; if the zero
+        // budget truncated the sweep, a refinement worker finishes it
+        // and publishes into the same generation.
+        let key = ShapeKey::prefill(s, srv.padded_capacity(4)).with_profile(srv.plan_profile());
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let refined = loop {
+            match srv.plan_cache().peek(key) {
+                Some(Some(sol)) if sol.exhaustive => break sol,
+                _ => {}
+            }
+            assert!(Instant::now() < deadline, "refinement never published");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // The published plan is bit-identical to an unbudgeted solve.
+        let full = srv
+            .solve_shape_for_split(srv.plan_split, srv.padded_capacity(4), Phase::Prefill)
+            .expect("shape solvable");
+        assert_eq!(refined.config, full.config);
+        assert_eq!(refined.throughput_tokens.to_bits(), full.throughput_tokens.to_bits());
     }
 
     #[test]

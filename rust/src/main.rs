@@ -102,6 +102,7 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("seq", "2048", "sequence length S")
         .opt("phase", "prefill", "serving phase: prefill|decode")
         .opt("kv", "0", "decode KV length per sample (0 = --seq)")
+        .opt("budget-us", "0", "anytime solve budget in µs (0 = exhaustive)")
         .opt("profile", "", "calibration profile JSON (from `calibrate --out`)");
     let p = match spec.parse(args) {
         Ok(p) => p,
@@ -149,7 +150,12 @@ fn cmd_solve(args: &[String]) -> i32 {
         }
         Ok(None) => {}
     }
-    match solver::solve(&inst, &SolverParams::default()) {
+    let budget = match p.get_u64("budget-us") {
+        0 => None,
+        us => Some(std::time::Duration::from_micros(us)),
+    };
+    let params = SolverParams { budget, ..SolverParams::default() };
+    match solver::solve(&inst, &params) {
         Some(sol) => {
             let phase_note = match inst.phase {
                 findep::config::Phase::Prefill => format!("S={}", inst.seq_len),
@@ -160,7 +166,14 @@ fn cmd_solve(args: &[String]) -> i32 {
             println!("makespan: {:.3} ms", sol.makespan * 1e3);
             let unit = if inst.phase.is_decode() { "decoded tokens/s" } else { "tokens/s" };
             println!("throughput: {:.2} {unit}", sol.throughput_tokens);
-            println!("solver: {:.1} ms, {} evaluations", sol.solve_seconds * 1e3, sol.evals);
+            println!(
+                "solver: {:.1} ms, {} evaluations, {} rows bound-pruned{}{}",
+                sol.solve_seconds * 1e3,
+                sol.evals,
+                sol.pruned_rows,
+                if sol.warm_seeded { ", warm-seeded" } else { "" },
+                if sol.exhaustive { "" } else { " — budget expired, plan is the best incumbent" },
+            );
             0
         }
         None => {
@@ -342,6 +355,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("fault-plan", "", "faults: reference | random:<seed> | <replica>=<kind>[@<n>],...")
         .opt("deadline-ms", "0", "per-request deadline in ms (0 = none; queue mode)")
         .opt("max-retries", "2", "serve attempts per request after a replica failure (queue mode)")
+        .opt("solve-budget-us", "0", "anytime budget per adaptive solve in µs (0 = exhaustive)")
+        .flag("no-refine", "do not refine budget-truncated plans in the background")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
         .flag("noshared", "serve the tiny-noshared (Qwen-style) variant");
@@ -430,6 +445,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let n_batches = p.get_usize("batches");
     let batch_size = p.get_usize("batch-size");
     let decode_steps = p.get_usize("decode-steps");
+    let solve_budget = match p.get_u64("solve-budget-us") {
+        0 => None,
+        us => Some(std::time::Duration::from_micros(us)),
+    };
 
     // Queue mode: the continuous batcher pipelines in-flight batches
     // through a pool of serving replicas.
@@ -444,6 +463,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             linger: std::time::Duration::from_micros(p.get_u64("linger-us")),
             cache_plans: !p.has_flag("no-plan-cache"),
             auto_split: p.has_flag("auto-split"),
+            solve_budget,
+            refine_plans: !p.has_flag("no-refine"),
         };
         let resilience = ResilienceConfig {
             fault_plan,
@@ -520,6 +541,8 @@ fn cmd_serve(args: &[String]) -> i32 {
 
     let mut srv = Server::new(model, p.get_usize("eg"), delay).expect("server");
     srv.cache_plans = !p.has_flag("no-plan-cache");
+    srv.solve_budget = solve_budget;
+    srv.refine_plans = !p.has_flag("no-refine");
     if let Some(pr) = &prof {
         srv.set_calibration_profile(pr);
     }

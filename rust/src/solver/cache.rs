@@ -116,6 +116,18 @@ struct Generation {
     solve: Mutex<()>,
 }
 
+/// A pin on the generation a [`PlanCache::get_or_solve_refinable`]
+/// miss solved into. Background refinement publishes through the
+/// token, so a refined plan can only ever land in the generation its
+/// budget-truncated ancestor came from: if [`PlanCache::clear`]
+/// swapped generations in between, the publish lands in the orphaned
+/// map nothing reads anymore — a stale-split refinement can never
+/// pollute the re-keyed cache.
+#[derive(Debug, Clone)]
+pub struct RefineToken {
+    generation: Arc<Generation>,
+}
+
 /// Memoized `ShapeKey -> Arc<Solution>` store (generational).
 #[derive(Debug)]
 pub struct PlanCache {
@@ -158,10 +170,23 @@ impl PlanCache {
         key: ShapeKey,
         solve: impl FnOnce() -> Option<Solution>,
     ) -> Option<Arc<Solution>> {
+        self.get_or_solve_refinable(key, solve).0
+    }
+
+    /// [`PlanCache::get_or_solve`] plus a [`RefineToken`] pinning the
+    /// generation the result lives in — the handle a background
+    /// refinement worker needs to later [`PlanCache::publish_refined`]
+    /// the exhaustive plan a budget-truncated solve did not finish.
+    pub fn get_or_solve_refinable(
+        &self,
+        key: ShapeKey,
+        solve: impl FnOnce() -> Option<Solution>,
+    ) -> (Option<Arc<Solution>>, RefineToken) {
         let generation = self.generation_ref();
+        let refine = RefineToken { generation: generation.clone() };
         if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return cached.clone();
+            return (cached.clone(), refine);
         }
         // Cold shape: serialize against other misses so the solve runs
         // once, then re-check — a peer may have solved this exact key
@@ -169,7 +194,7 @@ impl PlanCache {
         let token = generation.solve.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return cached.clone();
+            return (cached.clone(), refine);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let solved = solve().map(Arc::new);
@@ -179,21 +204,42 @@ impl PlanCache {
             .unwrap_or_else(PoisonError::into_inner)
             .insert(key, solved.clone());
         drop(token);
-        solved
+        (solved, refine)
+    }
+
+    /// Atomically publish a refined solution for `key` into the
+    /// generation `token` pinned, overwriting the truncated entry the
+    /// hot path is serving. Returns whether the publish is visible to
+    /// readers — a publish racing a completed [`PlanCache::clear`]
+    /// lands in the orphaned generation that nothing reads anymore
+    /// (the exact rule in-flight solves already follow) and reports
+    /// `false`. Readers never lock against this: a concurrent
+    /// `get_or_solve` sees either the truncated entry or the refined
+    /// one, both complete plans.
+    pub fn publish_refined(&self, token: &RefineToken, key: ShapeKey, sol: Arc<Solution>) -> bool {
+        token
+            .generation
+            .map
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(key, Some(sol));
+        Arc::ptr_eq(&token.generation, &self.generation_ref())
     }
 
     /// Degraded-mode lookup: the nearest feasible cached plan that can
     /// stand in for `key` when its own solve failed or ran over budget.
     ///
     /// A candidate must be solved against the same profile, the same
-    /// phase kind (equal sequence bucket for prefill; any KV bucket for
-    /// decode — decode plans differ only in how KV-read-bound they
-    /// are), and a batch capacity **at least** the requested one — a
-    /// smaller-batch plan could not physically hold the requests.
-    /// Among candidates the nearest in (KV bucket, batch bucket) log2
-    /// distance wins, KV distance weighted heaviest. Returns `None`
-    /// when nothing in the live generation qualifies (callers then take
-    /// their static fallback).
+    /// phase kind (nearest sequence bucket for prefill, any KV bucket
+    /// for decode — either way the neighbor differs only in how
+    /// attention-heavy its stages are), and a batch capacity **at
+    /// least** the requested one — a smaller-batch plan could not
+    /// physically hold the requests. Among candidates the nearest in
+    /// (sequence/KV bucket, batch bucket) log2 distance wins, the
+    /// sequence/KV distance weighted heaviest (×16: a one-bucket shape
+    /// step changes the stage models more than any batch headroom
+    /// does). Returns `None` when nothing in the live generation
+    /// qualifies (callers then take their static fallback).
     pub fn nearest(&self, key: ShapeKey) -> Option<Arc<Solution>> {
         fn log2(x: usize) -> i64 {
             (usize::BITS - x.max(1).leading_zeros()) as i64
@@ -207,12 +253,7 @@ impl PlanCache {
             }
             let Some(sol) = v else { continue };
             let kv_dist = match (k.phase, key.phase) {
-                (Phase::Prefill, Phase::Prefill) => {
-                    if k.seq != key.seq {
-                        continue;
-                    }
-                    0
-                }
+                (Phase::Prefill, Phase::Prefill) => (log2(k.seq) - log2(key.seq)).abs(),
                 (Phase::Decode { kv_len: a }, Phase::Decode { kv_len: b }) => {
                     (log2(a) - log2(b)).abs()
                 }
@@ -419,6 +460,59 @@ mod tests {
         // decode (and vice versa), and profiles stay isolated.
         assert!(cache.nearest(ShapeKey::prefill(2048, 8)).is_none());
         assert!(cache.nearest(ShapeKey::decode(2048, 8).with_profile(ProfileId(7))).is_none());
+    }
+
+    #[test]
+    fn prefill_nearest_allows_seq_neighbors_with_log2_scoring() {
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let inst = paper_instance();
+        let near = cache
+            .get_or_solve(ShapeKey::prefill(4096, 8), || solve_online(&inst, 8, &params))
+            .unwrap();
+        let _far = cache
+            .get_or_solve(ShapeKey::prefill(256, 8), || solve_online(&inst, 8, &params))
+            .unwrap();
+        // Query at seq 2048: one seq bucket away beats three away.
+        let got = cache.nearest(ShapeKey::prefill(2048, 8)).expect("prefill neighbor");
+        assert!(Arc::ptr_eq(&got, &near));
+        // Seq distance is weighted like KV distance (x16): a same-seq
+        // entry four batch buckets away (score 4) still beats the
+        // one-seq-bucket neighbor (score 16).
+        let same_seq = cache
+            .get_or_solve(ShapeKey::prefill(2048, 128), || solve_online(&inst, 128, &params))
+            .unwrap();
+        let got = cache.nearest(ShapeKey::prefill(2048, 8)).unwrap();
+        assert!(Arc::ptr_eq(&got, &same_seq));
+        // Batch capacity still never shrinks across seq buckets.
+        assert!(cache.nearest(ShapeKey::prefill(4096, 256)).is_none());
+    }
+
+    #[test]
+    fn refinement_publish_respects_generation_swaps() {
+        let cache = PlanCache::new();
+        let inst = paper_instance();
+        let params = SolverParams::default();
+        let key = ShapeKey::prefill(2048, 8);
+        // A (nominally truncated) solve hands back the generation pin.
+        let (first, token) =
+            cache.get_or_solve_refinable(key, || solve_online(&inst, 8, &params));
+        let first = first.unwrap();
+        // Refinement lands in the pinned generation and is visible.
+        let refined = Arc::new(Solution { exhaustive: true, ..(*first).clone() });
+        assert!(cache.publish_refined(&token, key, refined.clone()));
+        let hit = cache.get_or_solve(key, || panic!("refined entry must hit")).unwrap();
+        assert!(Arc::ptr_eq(&hit, &refined), "readers must see the refined plan");
+        // After clear() the pinned generation is orphaned: the publish
+        // completes into the retired map and reports invisibility —
+        // the re-keyed cache never serves the stale refinement.
+        let (_, token2) = cache.get_or_solve_refinable(key, || solve_online(&inst, 8, &params));
+        cache.clear();
+        assert!(!cache.publish_refined(&token2, key, refined.clone()));
+        assert!(
+            cache.peek(key).is_none(),
+            "orphaned refinement leaked into the live generation"
+        );
     }
 
     #[test]

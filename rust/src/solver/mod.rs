@@ -20,7 +20,12 @@
 //! disaggregation split itself — plus multi-replica tilings of the
 //! cluster — with analytic branch-and-bound pruning, parallel workers,
 //! and cross-split topology reuse, bit-identical to the serial
-//! exhaustive sweep.
+//! exhaustive sweep. Re-solves are warm, pruned, and anytime
+//! ([`algorithm1::WarmStart`], [`SolverParams`]'s `prune`/`budget`):
+//! seeds from [`PlanCache::nearest`] steer the sweep without changing
+//! the answer, the §4.2 bound prunes rows inside Algorithm 1 itself,
+//! and budget-truncated incumbents are refined off the hot path via
+//! [`PlanCache::publish_refined`].
 
 pub mod algorithm1;
 pub mod bruteforce;
@@ -29,10 +34,11 @@ pub mod memory;
 pub mod splitsearch;
 
 pub use algorithm1::{
-    solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode, solve_with,
-    EvalMode, Evaluator, Instance, Solution, SolverParams,
+    row_bound, solve, solve_mode, solve_online, solve_online_bucketed, solve_online_mode,
+    solve_online_with, solve_warm, solve_with, EvalMode, Evaluator, Instance, Solution,
+    SolverParams, WarmStart,
 };
-pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, ShapeKey};
+pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, RefineToken, ShapeKey};
 pub use crate::perfmodel::profile::ProfileId;
 pub use memory::MemoryModel;
 pub use splitsearch::{

@@ -29,7 +29,7 @@
 //!    candidate is strictly below some evaluated throughput, hence
 //!    strictly below the winner.
 //! 3. **Topology reuse.** Each worker carries one [`Evaluator`] across
-//!    candidates ([`solve_with`]): candidate plans of different splits
+//!    candidates ([`solve_warm`]): candidate plans of different splits
 //!    share task-DAG topologies and differ only in durations, so the
 //!    engine serves them from its per-shape CSR cache
 //!    (`sched::TopologyKey`) through the duration-only fast path.
@@ -44,9 +44,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{GroupSplit, ModelConfig, Testbed};
-use crate::sched::analytic::Analytic;
 use crate::solver::algorithm1::{
-    self, solve_with, EvalMode, Evaluator, Instance, Solution, SolverParams,
+    self, solve_warm, EvalMode, Evaluator, Instance, Solution, SolverParams, WarmStart,
 };
 use crate::solver::memory::MemoryModel;
 
@@ -109,6 +108,10 @@ pub struct SearchStats {
     pub solved: usize,
     /// Total Algorithm-1 probe evaluations across solved candidates.
     pub evals: usize,
+    /// (m_a, r1) rows pruned *inside* Algorithm 1 across solved
+    /// candidates (the incumbent-seeded inner bound, not the
+    /// candidate-level bound counted in `pruned`).
+    pub row_pruned: usize,
     /// Worker threads used.
     pub threads: usize,
     /// Wall time of the whole search.
@@ -181,19 +184,18 @@ pub fn throughput_bound(
         return 0.0;
     }
     let sm = crate::perfmodel::StageModels::new(model, tb, split, seq_len);
-    // F = max(X, r2·Y) at r2 = 1 — the per-layer pipeline period floor.
-    let floor = Analytic::new(&sm, ma_max as f64, 1, 1).f;
-    if floor <= 0.0 {
-        // Degenerate all-zero models: nothing to bound.
-        return f64::INFINITY;
-    }
-    // In the AG-bound regime the bound is *tight* (an ASAS schedule
+    // The shared §4.2 row bound ([`algorithm1::row_bound`]) evaluated
+    // at the largest memory-feasible m_a: F = max(X, r2·Y) at r2 = 1 is
+    // the per-layer pipeline period floor, and Theorem 1 makes
+    // m_a / F(m_a, 1) non-decreasing, so this dominates every row. In
+    // the AG-bound regime the bound is *tight* (an ASAS schedule
     // achieves makespan = T·r1·X exactly), and the engine computes that
     // makespan in a different summation order than the closed form —
-    // within ~1e-14 relative (pinned by simulator_vs_analytic). Inflate
-    // by 1e-9 relative so admissibility survives floating point;
-    // candidates differ by far more than this, so no pruning is lost.
-    (ma_max * split.ag * seq_len) as f64 / (model.n_layers as f64 * floor) * (1.0 + 1e-9)
+    // within ~1e-14 relative (pinned by simulator_vs_analytic); the
+    // bound's 1e-9 relative inflation keeps admissibility through
+    // floating point, and candidates differ by far more, so no pruning
+    // is lost.
+    algorithm1::row_bound(&sm, ma_max, split.ag, seq_len, model.n_layers)
 }
 
 /// The serial reference sweep: cold Algorithm-1 solve per candidate,
@@ -259,6 +261,7 @@ pub fn search(
     let pruned = AtomicUsize::new(0);
     let infeasible = AtomicUsize::new(0);
     let evals = AtomicUsize::new(0);
+    let row_pruned = AtomicUsize::new(0);
     let results: Mutex<Vec<(usize, SplitSolution)>> = Mutex::new(Vec::new());
 
     std::thread::scope(|s| {
@@ -287,12 +290,38 @@ pub fn search(
                     let tb = instance_testbed(testbed, candidate.replicas);
                     let inst = Instance::new(model.clone(), tb, candidate.split, seq_len);
                     let ev = ev.get_or_insert_with(|| Evaluator::new(&inst));
-                    match solve_with(&inst, &params.solver, EvalMode::Buffered, ev) {
+                    // Reuse the incumbent *inside* Algorithm 1: a hard
+                    // per-instance floor of incumbent/replicas lets the
+                    // inner sweep bound-prune rows and screen final
+                    // engine evaluations that cannot affect the global
+                    // argmax. Losing candidates may come back degraded
+                    // or `None`; the winner cannot (its best row sits
+                    // at or above every floor any worker installs), so
+                    // the deterministic reduction is unchanged.
+                    let warm = if params.prune {
+                        let inc = f64::from_bits(incumbent.load(Ordering::Acquire));
+                        if inc > 0.0 {
+                            Some(WarmStart::incumbent(inc / candidate.replicas as f64))
+                        } else {
+                            None
+                        }
+                    } else {
+                        None
+                    };
+                    match solve_warm(&inst, &params.solver, EvalMode::Buffered, ev, warm.as_ref())
+                    {
                         None => {
-                            infeasible.fetch_add(1, Ordering::Relaxed);
+                            if warm.is_some() {
+                                // Every row fell to the incumbent floor:
+                                // skipped work, not infeasibility.
+                                pruned.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                infeasible.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                         Some(sol) => {
                             evals.fetch_add(sol.evals, Ordering::Relaxed);
+                            row_pruned.fetch_add(sol.pruned_rows, Ordering::Relaxed);
                             let total = candidate.replicas as f64 * sol.throughput_tokens;
                             incumbent.fetch_max(total.to_bits(), Ordering::AcqRel);
                             results.lock().unwrap().push((
@@ -326,6 +355,7 @@ pub fn search(
         infeasible: infeasible.into_inner(),
         solved: solved.len(),
         evals: evals.into_inner(),
+        row_pruned: row_pruned.into_inner(),
         threads,
         solve_seconds: t0.elapsed().as_secs_f64(),
     };

@@ -1,0 +1,138 @@
+//! Anytime-solver semantics (PR 8 tentpole, integration level):
+//!
+//! 1. An infinite budget is a no-op: bit-identical plan AND identical
+//!    evaluation count versus the unbudgeted solve.
+//! 2. A zero budget with an exact warm seed returns the seed's plan
+//!    unchanged, flagged non-exhaustive — the serving loop's "use what
+//!    the cache already knows, refine later" contract.
+//! 3. A background refinement publish never races a concurrent
+//!    `PlanCache::clear()`: whatever the interleaving, a cleared cache
+//!    never serves the stale refined plan (the token pins the old
+//!    generation), and an uncleared cache always does.
+//!
+//! Run under both `RUST_TEST_THREADS=1` and `=8` in CI: the race test
+//! in (3) must hold regardless of scheduler pressure.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::solver::{
+    solve, solve_warm, EvalMode, Instance, PlanCache, ShapeKey, SolverParams, WarmStart,
+};
+
+fn instances() -> Vec<(&'static str, Instance)> {
+    vec![
+        (
+            "deepseek/A",
+            Instance::new(ModelConfig::deepseek_v2(8), Testbed::a(), GroupSplit::new(3, 5), 2048),
+        ),
+        (
+            "qwen/C",
+            Instance::new(
+                ModelConfig::qwen3_moe(48),
+                Testbed::c(),
+                GroupSplit::new(4, 4),
+                2048,
+            ),
+        ),
+    ]
+}
+
+/// Caps wide enough that every instance has a multi-row sweep, so the
+/// budget actually has something to cut.
+fn params() -> SolverParams {
+    SolverParams { ma_cap: 8, r1_cap: 8, r2_cap: 64, ..Default::default() }
+}
+
+#[test]
+fn infinite_budget_is_bit_identical_to_unbudgeted() {
+    for (label, inst) in instances() {
+        let base = params();
+        let plain = solve(&inst, &base).expect("feasible");
+        let budgeted_params = SolverParams { budget: Some(Duration::MAX), ..base };
+        let budgeted = solve(&inst, &budgeted_params).expect("feasible");
+        assert_eq!(budgeted.config, plain.config, "plan drifted under Duration::MAX on {label}");
+        assert_eq!(
+            budgeted.throughput_tokens.to_bits(),
+            plain.throughput_tokens.to_bits(),
+            "throughput drifted under Duration::MAX on {label}"
+        );
+        assert_eq!(
+            budgeted.evals, plain.evals,
+            "an unreachable deadline must not change the sweep on {label}"
+        );
+        assert!(budgeted.exhaustive, "an unreachable deadline never truncates ({label})");
+    }
+}
+
+#[test]
+fn zero_budget_returns_the_warm_seed_unchanged() {
+    for (label, inst) in instances() {
+        let base = params();
+        let cold = solve(&inst, &base).expect("feasible");
+        let seed = WarmStart::from_solution(&cold);
+        let zero = SolverParams { budget: Some(Duration::ZERO), ..base };
+        let out =
+            solve_warm(&inst, &zero, EvalMode::Buffered, &mut inst.evaluator(), Some(&seed))
+                .expect("the seed itself keeps a zero-budget solve feasible");
+        assert_eq!(out.config, cold.config, "zero budget must hand back the seed plan ({label})");
+        assert_eq!(
+            out.throughput_tokens.to_bits(),
+            cold.throughput_tokens.to_bits(),
+            "seed throughput must survive re-evaluation bit for bit ({label})"
+        );
+        assert!(out.warm_seeded, "{label}");
+        assert!(!out.exhaustive, "a zero-budget sweep cannot claim exhaustiveness ({label})");
+    }
+}
+
+#[test]
+fn refinement_publish_never_races_clear() {
+    let (_, inst) = instances().pop().expect("instances");
+    let base = params();
+    let truncated = solve(&inst, &SolverParams { budget: Some(Duration::ZERO), ..base })
+        .expect("feasible");
+    assert!(!truncated.exhaustive, "zero budget must truncate this multi-row instance");
+    let full = solve(&inst, &base).expect("feasible");
+    assert!(full.exhaustive);
+
+    let cache = Arc::new(PlanCache::new());
+    let key = ShapeKey::prefill(2048, 32);
+    for i in 0..200 {
+        let (seeded, token) =
+            cache.get_or_solve_refinable(key, || Some(truncated.clone()));
+        assert!(
+            !seeded.expect("closure returned Some").exhaustive,
+            "the cache must initially hold the truncated incumbent"
+        );
+
+        let do_clear = i % 2 == 1;
+        let publisher = {
+            let cache = Arc::clone(&cache);
+            let refined = Arc::new(full.clone());
+            std::thread::spawn(move || cache.publish_refined(&token, key, refined))
+        };
+        if do_clear {
+            cache.clear();
+        }
+        let published_live = publisher.join().expect("publisher thread");
+
+        if do_clear {
+            // Whether the publish landed before or after the swap, the
+            // fresh generation must never show the old entry: a
+            // cleared cache serving a stale refined plan would pin a
+            // dead topology.
+            assert!(
+                cache.peek(key).is_none(),
+                "refined plan leaked across a clear (iteration {i})"
+            );
+        } else {
+            assert!(published_live, "publish into the live generation must succeed");
+            let live = cache.peek(key).expect("present").expect("solved");
+            assert!(live.exhaustive, "the cache must serve the refined plan");
+            assert_eq!(live.config, full.config);
+            cache.clear();
+        }
+    }
+}

@@ -29,7 +29,7 @@ fn instances() -> Vec<Instance> {
 
 #[test]
 fn algorithm1_matches_bruteforce_optimum() {
-    let params = SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 16 };
+    let params = SolverParams { ma_cap: 4, r1_cap: 4, r2_cap: 16, ..Default::default() };
     for inst in instances() {
         let brute = bruteforce::exhaustive(&inst, params.ma_cap, params.r1_cap, params.r2_cap);
         let solved = algorithm1::solve(&inst, &params);
@@ -79,7 +79,7 @@ fn solver_is_subsecond_everywhere() {
 
 #[test]
 fn online_solver_matches_online_bruteforce() {
-    let params = SolverParams { ma_cap: 8, r1_cap: 4, r2_cap: 16 };
+    let params = SolverParams { ma_cap: 8, r1_cap: 4, r2_cap: 16, ..Default::default() };
     for inst in instances().into_iter().take(6) {
         let batch = 8usize;
         let Some(sol) = algorithm1::solve_online(&inst, batch, &params) else {
