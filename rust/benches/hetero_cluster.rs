@@ -1,0 +1,275 @@
+//! Heterogeneous-cluster placement and SLO-goodput gates for the
+//! Testbed → [`findep::config::Cluster`] refactor.
+//!
+//! Two acceptance gates, asserted before any timing:
+//!
+//! 1. **Heterogeneity pays.** On the two-pool reference cluster
+//!    (compute-rich attention pool + bandwidth-rich expert pool),
+//!    [`search_cluster`] must strictly beat the best plan a
+//!    homogeneous-assumption search can produce. The baseline pretends
+//!    the whole cluster is uniform — once per pool spec — runs the
+//!    legacy testbed [`search_splits`], then maps its winning placement
+//!    onto the real inventory (clamping each role to its pool,
+//!    discarding placements the pools cannot tile) and re-solves that
+//!    shape on the real cluster. Mapped plans live inside the cluster
+//!    search's own candidate space, so the hetero winner can never lose;
+//!    the gate asserts it strictly *wins* — the enlarged, pool-aware
+//!    space finds a placement no uniform pretense reaches.
+//! 2. **Goodput ≠ throughput under an SLO.** With a per-batch latency
+//!    cap between the fastest evaluated plan and the throughput winner
+//!    (a tight TTFT target), the goodput-optimal plan must differ from
+//!    the throughput-optimal one, meet the cap, and give up peak
+//!    tokens/s. The cap is derived from the uncapped report itself, so
+//!    the gate is self-tuning across model shapes.
+//!
+//! Emits a `BENCH_hetero.json` trajectory file.
+//!
+//! Run: `cargo bench --bench hetero_cluster`
+
+use findep::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use findep::solver::{
+    search_cluster, search_splits, Instance, SearchParams, SearchReport, SolverParams,
+    SplitCandidate,
+};
+use findep::util::bench::{fmt_duration, Bencher, Table};
+use findep::util::json::{to_string_pretty, Json, JsonObj};
+
+/// The uniform-hardware fiction a homogeneous-assumption planner
+/// operates under: every GPU in the cluster is `pool_idx`'s spec, and
+/// every link runs at the real cross-pool M2N constants (the fairest
+/// uniform reading of the wiring — the transfer model is the one thing
+/// the pretense keeps honest).
+fn pretend_uniform(cl: &Cluster, pool_idx: usize) -> Testbed {
+    let p = &cl.pools[pool_idx];
+    let m2n = cl.m2n();
+    Testbed {
+        name: format!("pretend-uniform {}", p.gpu.name),
+        n_gpus: cl.n_gpus(),
+        mem_bytes: p.gpu.mem_bytes,
+        gemm_flops: p.gpu.gemm_flops,
+        attn_flops: p.gpu.attn_flops,
+        alpha_comp_s: p.gpu.alpha_comp_s,
+        alpha_attn_s: p.gpu.alpha_attn_s,
+        link_bw: m2n.bw,
+        alpha_comm_s: m2n.alpha_s,
+        hbm_bw: p.gpu.hbm_bw,
+        nvlink: cl.nvlink,
+        multi_node: cl.multi_node,
+    }
+}
+
+/// Deploy a homogeneous-assumption winner on the real cluster: clamp
+/// each role to its pool's per-replica share (a 16-uniform-GPU plan may
+/// ask for more attention GPUs than the attention pool owns), drop
+/// placements whose replica count cannot tile both pools, and re-solve
+/// the surviving shape on the real per-pool models. Returns the
+/// cluster-wide tokens/s the mapped plan actually achieves (0.0 when
+/// the placement cannot deploy at all).
+fn map_onto_cluster(
+    model: &ModelConfig,
+    cl: &Cluster,
+    winner: &SplitCandidate,
+    seq_len: usize,
+) -> (f64, Option<SplitCandidate>) {
+    let (na, ne) = (cl.attn().n_gpus, cl.expert().n_gpus);
+    let r = winner.replicas;
+    if na % r != 0 || ne % r != 0 {
+        return (0.0, None);
+    }
+    let ag = winner.split.ag.min(na / r);
+    let eg = winner.split.eg.min(ne / r);
+    if ag < 1 || eg < 1 {
+        return (0.0, None);
+    }
+    let mapped = SplitCandidate { replicas: r, split: GroupSplit::new(ag, eg) };
+    let inst = Instance::on_cluster(model.clone(), cl.clone(), mapped.split, seq_len);
+    match findep::solver::solve(&inst, &SolverParams::default()) {
+        Some(sol) => (r as f64 * sol.throughput_tokens, Some(mapped)),
+        None => (0.0, Some(mapped)),
+    }
+}
+
+/// Strict-improvement margin gate 1 must clear: far above the ~1e-9
+/// engine/closed-form agreement, far below the ≥ 0.4% margins the
+/// analytic model predicts for the reference cluster.
+const MARGIN: f64 = 1e-5;
+
+fn main() {
+    let quick = std::env::var("FINDEP_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let params = SearchParams::default();
+    let cl = Cluster::reference_hetero();
+    let seq = 2048usize;
+
+    let mut report = JsonObj::new();
+    report.insert("bench", Json::Str("hetero_cluster".into()));
+    report.insert("quick", Json::Bool(quick));
+    report.insert("cluster", cl.to_json());
+    report.insert("seq_len", Json::Num(seq as f64));
+
+    let mut table = Table::new(
+        "Heterogeneous placement + SLO goodput (two-pool reference cluster)",
+        &["model", "hetero winner", "tok/s", "homog. baseline", "gain", "SLO cap", "goodput plan"],
+    );
+    let mut entries: Vec<Json> = Vec::new();
+
+    for model in [ModelConfig::deepseek_v2(8), ModelConfig::qwen3_moe(12)] {
+        // ---- Gate 1: heterogeneity-aware search beats every uniform
+        // pretense, strictly. ----
+        let het: SearchReport = search_cluster(&model, &cl, seq, Phase::Prefill, &params)
+            .unwrap_or_else(|| panic!("{}: hetero search found no feasible plan", model.name));
+        let mut baseline = 0.0f64;
+        let mut baseline_specs: Vec<Json> = Vec::new();
+        for pool_idx in 0..cl.pools.len() {
+            let tb = pretend_uniform(&cl, pool_idx);
+            let mut spec = JsonObj::new();
+            spec.insert("pretend_spec", Json::Str(tb.name.clone()));
+            match search_splits(&model, &tb, seq, &params) {
+                None => {
+                    spec.insert("feasible", Json::Bool(false));
+                }
+                Some(rep) => {
+                    let (mapped_tput, mapped) =
+                        map_onto_cluster(&model, &cl, &rep.best.candidate, seq);
+                    spec.insert("feasible", Json::Bool(true));
+                    spec.insert("winner", Json::Str(rep.best.candidate.describe()));
+                    spec.insert("pretend_total_tokens_per_s", Json::Num(rep.best.total_throughput));
+                    spec.insert(
+                        "mapped",
+                        mapped.map_or(Json::Null, |m| Json::Str(m.describe())),
+                    );
+                    spec.insert("mapped_total_tokens_per_s", Json::Num(mapped_tput));
+                    baseline = baseline.max(mapped_tput);
+                }
+            }
+            baseline_specs.push(Json::Obj(spec));
+        }
+        assert!(baseline > 0.0, "{}: no uniform pretense deployed at all", model.name);
+        assert!(
+            het.best.total_throughput > baseline * (1.0 + MARGIN),
+            "{}: hetero-aware search ({:.1} tok/s) must strictly beat the best \
+             homogeneous-assumption plan mapped onto the cluster ({:.1} tok/s)",
+            model.name,
+            het.best.total_throughput,
+            baseline
+        );
+        let gain = het.best.total_throughput / baseline;
+
+        // ---- Gate 2: a tight TTFT cap moves the optimum. ----
+        // Cap halfway between the fastest evaluated plan's batch
+        // makespan and the throughput winner's: tight enough to exclude
+        // the winner, loose enough that something qualifies.
+        let uncapped_ms = het.best.per_instance.makespan;
+        let min_ms = het
+            .evaluated
+            .iter()
+            .map(|s| s.per_instance.makespan)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            min_ms < uncapped_ms,
+            "{}: no evaluated plan is faster than the throughput winner \
+             (min {min_ms} vs winner {uncapped_ms}) — cannot derive a discriminating cap",
+            model.name
+        );
+        let cap = 0.5 * (min_ms + uncapped_ms);
+        let capped_params = SearchParams {
+            solver: SolverParams { max_makespan: Some(cap), ..SolverParams::default() },
+            ..params
+        };
+        let capped: SearchReport = search_cluster(&model, &cl, seq, Phase::Prefill, &capped_params)
+            .unwrap_or_else(|| {
+                panic!("{}: no plan meets the {:.2} ms cap", model.name, cap * 1e3)
+            });
+        // The throughput winner exceeds the cap by construction, so the
+        // goodput optimum must be a different (placement, config) plan
+        // that meets the cap and concedes peak tokens/s.
+        assert!(
+            capped.best.candidate != het.best.candidate
+                || capped.best.per_instance.config != het.best.per_instance.config,
+            "{}: goodput-optimal plan must differ from the throughput-optimal one",
+            model.name
+        );
+        assert!(
+            capped.best.per_instance.makespan <= cap,
+            "{}: goodput winner violates its own cap ({} > {cap})",
+            model.name,
+            capped.best.per_instance.makespan
+        );
+        assert!(
+            uncapped_ms > cap,
+            "{}: throughput winner unexpectedly fits the cap",
+            model.name
+        );
+        assert!(
+            capped.best.total_throughput <= het.best.total_throughput,
+            "{}: goodput under a cap cannot exceed unconstrained throughput",
+            model.name
+        );
+
+        // ---- Timing (the gates above ran cold, untimed). ----
+        let r_het = bencher.run(&format!("{}/search_cluster", model.name), || {
+            let _ = search_cluster(&model, &cl, seq, Phase::Prefill, &params);
+        });
+        let r_cap = bencher.run(&format!("{}/search_cluster_slo", model.name), || {
+            let _ = search_cluster(&model, &cl, seq, Phase::Prefill, &capped_params);
+        });
+
+        table.row(&[
+            model.name.clone(),
+            format!(
+                "{} {}",
+                het.best.candidate.describe(),
+                het.best.per_instance.config.describe()
+            ),
+            format!("{:.0}", het.best.total_throughput),
+            format!("{baseline:.0}"),
+            format!("{:.2}%", (gain - 1.0) * 100.0),
+            format!("{:.1} ms", cap * 1e3),
+            format!(
+                "{} {} ({:.0} tok/s, {:.1} ms)",
+                capped.best.candidate.describe(),
+                capped.best.per_instance.config.describe(),
+                capped.best.total_throughput,
+                capped.best.per_instance.makespan * 1e3
+            ),
+        ]);
+
+        let mut e = JsonObj::new();
+        e.insert("model", Json::Str(model.name.clone()));
+        e.insert("hetero_winner", Json::Str(het.best.candidate.describe()));
+        e.insert("hetero_config", Json::Str(het.best.per_instance.config.describe()));
+        e.insert("hetero_total_tokens_per_s", Json::Num(het.best.total_throughput));
+        e.insert("hetero_makespan_s", Json::Num(uncapped_ms));
+        e.insert("candidates", Json::Num(het.stats.candidates as f64));
+        e.insert("solved", Json::Num(het.stats.solved as f64));
+        e.insert("pruned", Json::Num(het.stats.pruned as f64));
+        e.insert("baselines", Json::Arr(baseline_specs));
+        e.insert("homogeneous_baseline_tokens_per_s", Json::Num(baseline));
+        e.insert("hetero_gain", Json::Num(gain));
+        e.insert("slo_cap_s", Json::Num(cap));
+        e.insert("goodput_winner", Json::Str(capped.best.candidate.describe()));
+        e.insert("goodput_config", Json::Str(capped.best.per_instance.config.describe()));
+        e.insert("goodput_total_tokens_per_s", Json::Num(capped.best.total_throughput));
+        e.insert("goodput_makespan_s", Json::Num(capped.best.per_instance.makespan));
+        e.insert(
+            "throughput_given_up",
+            Json::Num(1.0 - capped.best.total_throughput / het.best.total_throughput),
+        );
+        e.insert("search_mean_s", Json::Num(r_het.mean_s()));
+        e.insert("search_slo_mean_s", Json::Num(r_cap.mean_s()));
+        entries.push(Json::Obj(e));
+
+        println!(
+            "{}: hetero search {} / SLO search {}",
+            model.name,
+            fmt_duration(r_het.mean_s()),
+            fmt_duration(r_cap.mean_s())
+        );
+    }
+
+    table.print();
+    report.insert("instances", Json::Arr(entries));
+    std::fs::write("BENCH_hetero.json", to_string_pretty(&Json::Obj(report)))
+        .expect("write BENCH_hetero.json");
+    println!("wrote BENCH_hetero.json");
+}

@@ -120,7 +120,7 @@ mod tests {
                 "FinDEP {} < PPPipe {} on {}",
                 fd.throughput_tokens,
                 pp.throughput_tokens,
-                inst.testbed.name
+                inst.cluster.name
             );
         }
     }

@@ -177,6 +177,312 @@ impl Testbed {
 
 const GB: usize = 1 << 30;
 
+/// One GPU type's per-device constants — the Table-2 columns minus the
+/// count. A [`GpuPool`] is `n` devices of one spec behind one NIC
+/// class; a [`Cluster`] wires pools into the DEP roles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Device memory per GPU, bytes.
+    pub mem_bytes: usize,
+    /// Achieved dense-GEMM throughput, FLOP/s (β_gm = 1/this).
+    pub gemm_flops: f64,
+    /// Achieved attention throughput, FLOP/s.
+    pub attn_flops: f64,
+    /// Kernel-launch / dispatch fixed overhead, seconds (α_gm).
+    pub alpha_comp_s: f64,
+    /// Attention-kernel fixed overhead, seconds (α_attn).
+    pub alpha_attn_s: f64,
+    /// Achieved device-memory streaming bandwidth, bytes/s (the
+    /// decode-attention KV-read bound).
+    pub hbm_bw: f64,
+}
+
+impl GpuSpec {
+    /// The per-device slice of a Table-2 testbed.
+    pub fn from_testbed(tb: &Testbed) -> Self {
+        Self {
+            name: tb.name.clone(),
+            mem_bytes: tb.mem_bytes,
+            gemm_flops: tb.gemm_flops,
+            attn_flops: tb.attn_flops,
+            alpha_comp_s: tb.alpha_comp_s,
+            alpha_attn_s: tb.alpha_attn_s,
+            hbm_bw: tb.hbm_bw,
+        }
+    }
+}
+
+/// A typed pool: `n_gpus` devices of one [`GpuSpec`] behind one
+/// NIC/link class toward the other pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuPool {
+    pub name: String,
+    pub n_gpus: usize,
+    pub gpu: GpuSpec,
+    /// Per-GPU link/NIC bandwidth toward the peer pool, bytes/s.
+    pub link_bw: f64,
+    /// Transfer startup latency this pool's side contributes, seconds.
+    pub alpha_comm_s: f64,
+}
+
+/// The cross-pool M2N transfer model: `ag` attention senders fan out
+/// to `eg` expert receivers across a bisection of width `min(ag, eg)`
+/// links, each running at the *narrower* side's per-link bandwidth
+/// (per-link rates match through the switch — a side with fatter NICs
+/// cannot push a single link faster than its peer drains it), with a
+/// startup latency of the slower side. This generalizes the Testbed's
+/// scalar `link_bw`/`alpha_comm_s`: on a single-pool cluster both
+/// sides are the same pool and the model collapses to exactly those
+/// scalars — `max(α, α) = α`, `min(bw, bw) = bw` — which is what keeps
+/// the compat path bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct M2nModel {
+    /// Transfer startup latency, seconds (α_c).
+    pub alpha_s: f64,
+    /// Effective per-link bandwidth across the bisection, bytes/s.
+    pub bw: f64,
+}
+
+/// Identity of a cluster's pool constants: FNV-1a over every pool's
+/// per-device and link constants plus the role wiring, mirroring
+/// [`crate::perfmodel::profile::ProfileId`]. Part of every plan-cache
+/// key so plans solved under different cluster shapes can never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ClusterId(pub u64);
+
+impl ClusterId {
+    /// Reserved identity for the legacy single-pool Testbed keyspace
+    /// (every key constructor defaults here; [`Cluster::fingerprint`]
+    /// never returns it) — the cluster-typed sibling of
+    /// [`crate::perfmodel::profile::ProfileId::HAND`].
+    pub const SINGLE: ClusterId = ClusterId(0);
+}
+
+/// A heterogeneous cluster: typed [`GpuPool`]s wired into the two DEP
+/// roles. `attn_pool`/`expert_pool` index into `pools`; a single-pool
+/// cluster points both roles at the same pool (shared inventory, the
+/// Table-2 compat path), a two-pool cluster sizes each role from its
+/// own inventory (MegaScale-Infer-style disaggregation onto different
+/// hardware).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    pub name: String,
+    pub pools: Vec<GpuPool>,
+    /// Index of the pool serving the attention groups (and the shared
+    /// experts replicated on them).
+    pub attn_pool: usize,
+    /// Index of the pool serving the expert groups.
+    pub expert_pool: usize,
+    pub nvlink: bool,
+    pub multi_node: bool,
+}
+
+impl Cluster {
+    /// The compat constructor: a Table-2 testbed as a one-pool cluster,
+    /// both DEP roles on the same pool. Everything derived from this
+    /// cluster — stage models, memory model, plans, throughput — is
+    /// bit-identical to the retired direct-Testbed path (pinned by
+    /// `tests/cluster_equivalence.rs`).
+    pub fn single_pool(tb: &Testbed) -> Self {
+        Self {
+            name: tb.name.clone(),
+            pools: vec![GpuPool {
+                name: tb.name.clone(),
+                n_gpus: tb.n_gpus,
+                gpu: GpuSpec::from_testbed(tb),
+                link_bw: tb.link_bw,
+                alpha_comm_s: tb.alpha_comm_s,
+            }],
+            attn_pool: 0,
+            expert_pool: 0,
+            nvlink: tb.nvlink,
+            multi_node: tb.multi_node,
+        }
+    }
+
+    /// The reference two-pool heterogeneous cluster the
+    /// `hetero_cluster` bench gates on: a compute-rich attention pool
+    /// (H20-class FLOPs and HBM for the quadratic prefill attention
+    /// and the KV-read-bound decode) feeding a bandwidth-rich expert
+    /// pool (cheaper GEMM silicon behind fat NICs — expert FFN is a
+    /// thin 3-GEMM stack whose tokens must cross the network twice per
+    /// layer, so its pool buys links, not FLOPs).
+    pub fn reference_hetero() -> Self {
+        Self {
+            name: "hetero (4 attn H20-class + 12 expert A6000-class)".into(),
+            pools: vec![
+                GpuPool {
+                    name: "attn (compute-rich)".into(),
+                    n_gpus: 4,
+                    gpu: GpuSpec {
+                        name: "H20-class".into(),
+                        mem_bytes: 96 * GB,
+                        gemm_flops: 130e12,
+                        attn_flops: 100e12,
+                        alpha_comp_s: 12e-6,
+                        alpha_attn_s: 18e-6,
+                        hbm_bw: 4000e9,
+                    },
+                    link_bw: 50e9,
+                    alpha_comm_s: 25e-6,
+                },
+                GpuPool {
+                    name: "expert (bandwidth-rich)".into(),
+                    n_gpus: 12,
+                    gpu: GpuSpec {
+                        name: "A6000-class".into(),
+                        mem_bytes: 48 * GB,
+                        gemm_flops: 110e12,
+                        attn_flops: 80e12,
+                        alpha_comp_s: 18e-6,
+                        alpha_attn_s: 25e-6,
+                        hbm_bw: 768e9,
+                    },
+                    link_bw: 50e9,
+                    alpha_comm_s: 25e-6,
+                },
+            ],
+            attn_pool: 0,
+            expert_pool: 1,
+            nvlink: true,
+            multi_node: true,
+        }
+    }
+
+    /// Cluster lookup: the Table-2 letters as single-pool clusters,
+    /// plus the two-pool reference.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_lowercase().as_str() {
+            "hetero" => Some(Self::reference_hetero()),
+            _ => Testbed::by_name(name).map(|tb| Self::single_pool(&tb)),
+        }
+    }
+
+    pub fn attn(&self) -> &GpuPool {
+        &self.pools[self.attn_pool]
+    }
+
+    pub fn expert(&self) -> &GpuPool {
+        &self.pools[self.expert_pool]
+    }
+
+    /// Both roles draw from one shared GPU inventory.
+    pub fn is_single_pool(&self) -> bool {
+        self.attn_pool == self.expert_pool
+    }
+
+    /// Total GPUs across all pools.
+    pub fn n_gpus(&self) -> usize {
+        self.pools.iter().map(|p| p.n_gpus).sum()
+    }
+
+    /// The cross-pool transfer model (see [`M2nModel`]).
+    pub fn m2n(&self) -> M2nModel {
+        let a = self.attn();
+        let e = self.expert();
+        M2nModel {
+            alpha_s: a.alpha_comm_s.max(e.alpha_comm_s),
+            bw: a.link_bw.min(e.link_bw),
+        }
+    }
+
+    /// The cluster one instance of a `replicas`-way tiling sees: same
+    /// per-GPU and link constants, each pool's inventory divided.
+    pub fn tile(&self, replicas: usize) -> Self {
+        let mut c = self.clone();
+        for p in &mut c.pools {
+            p.n_gpus /= replicas;
+        }
+        c
+    }
+
+    /// Replace every pool's measured component constants with a
+    /// calibration profile's fitted values, keeping the cluster
+    /// topology — the cluster-typed counterpart of
+    /// [`Testbed::from_profile`], and bit-identical to it through the
+    /// single-pool compat path.
+    pub fn from_profile(
+        base: &Cluster,
+        profile: &crate::perfmodel::profile::CalibrationProfile,
+    ) -> Self {
+        let mut c = base.clone();
+        c.name = format!("{} [calibrated: {}]", base.name, profile.host);
+        for p in &mut c.pools {
+            p.gpu.gemm_flops = profile.gemm.unit_per_s;
+            p.gpu.alpha_comp_s = profile.gemm.alpha_s;
+            p.gpu.attn_flops = profile.attn.unit_per_s;
+            p.gpu.alpha_attn_s = profile.attn.alpha_s;
+            p.gpu.hbm_bw = profile.hbm.unit_per_s;
+            p.link_bw = profile.comm.unit_per_s;
+            p.alpha_comm_s = profile.comm.alpha_s;
+        }
+        c
+    }
+
+    /// FNV-1a fingerprint over every pool's constants and the role
+    /// wiring (the same construction as
+    /// [`crate::perfmodel::profile::CalibrationProfile::fingerprint`]):
+    /// two clusters differing in any pool count, device constant, link
+    /// constant, or role assignment get different identities, so their
+    /// plans can never alias in the cache. Never returns
+    /// [`ClusterId::SINGLE`].
+    pub fn fingerprint(&self) -> ClusterId {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |bits: u64| {
+            for b in bits.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        mix(self.pools.len() as u64);
+        mix(self.attn_pool as u64);
+        mix(self.expert_pool as u64);
+        for p in &self.pools {
+            mix(p.n_gpus as u64);
+            mix(p.gpu.mem_bytes as u64);
+            mix(p.gpu.gemm_flops.to_bits());
+            mix(p.gpu.attn_flops.to_bits());
+            mix(p.gpu.alpha_comp_s.to_bits());
+            mix(p.gpu.alpha_attn_s.to_bits());
+            mix(p.gpu.hbm_bw.to_bits());
+            mix(p.link_bw.to_bits());
+            mix(p.alpha_comm_s.to_bits());
+        }
+        ClusterId(if h == 0 { 1 } else { h })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("name", Json::Str(self.name.clone()));
+        o.insert("attn_pool", Json::Num(self.attn_pool as f64));
+        o.insert("expert_pool", Json::Num(self.expert_pool as f64));
+        o.insert("nvlink", Json::Bool(self.nvlink));
+        o.insert("multi_node", Json::Bool(self.multi_node));
+        let pools = self
+            .pools
+            .iter()
+            .map(|p| {
+                let mut po = JsonObj::new();
+                po.insert("name", Json::Str(p.name.clone()));
+                po.insert("n_gpus", Json::Num(p.n_gpus as f64));
+                po.insert("gpu", Json::Str(p.gpu.name.clone()));
+                po.insert("mem_bytes", Json::Num(p.gpu.mem_bytes as f64));
+                po.insert("gemm_flops", Json::Num(p.gpu.gemm_flops));
+                po.insert("attn_flops", Json::Num(p.gpu.attn_flops));
+                po.insert("alpha_comp_s", Json::Num(p.gpu.alpha_comp_s));
+                po.insert("alpha_attn_s", Json::Num(p.gpu.alpha_attn_s));
+                po.insert("hbm_bw", Json::Num(p.gpu.hbm_bw));
+                po.insert("link_bw", Json::Num(p.link_bw));
+                po.insert("alpha_comm_s", Json::Num(p.alpha_comm_s));
+                Json::Obj(po)
+            })
+            .collect();
+        o.insert("pools", Json::Arr(pools));
+        Json::Obj(o)
+    }
+}
+
 /// A DEP partition of a testbed into attention group + expert group
 /// (`ag + eg <= n_gpus`, both non-empty).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -289,5 +595,102 @@ mod tests {
     #[should_panic]
     fn empty_group_rejected() {
         GroupSplit::new(0, 8);
+    }
+
+    #[test]
+    fn single_pool_cluster_mirrors_testbed_bitwise() {
+        for tb in Testbed::all() {
+            let cl = Cluster::single_pool(&tb);
+            assert!(cl.is_single_pool());
+            assert_eq!(cl.n_gpus(), tb.n_gpus);
+            assert_eq!(cl.attn().gpu.mem_bytes, tb.mem_bytes);
+            assert_eq!(cl.expert().gpu.mem_bytes, tb.mem_bytes);
+            for (a, b) in [
+                (cl.attn().gpu.gemm_flops, tb.gemm_flops),
+                (cl.attn().gpu.attn_flops, tb.attn_flops),
+                (cl.attn().gpu.alpha_comp_s, tb.alpha_comp_s),
+                (cl.attn().gpu.alpha_attn_s, tb.alpha_attn_s),
+                (cl.attn().gpu.hbm_bw, tb.hbm_bw),
+                (cl.expert().gpu.gemm_flops, tb.gemm_flops),
+                // The degenerate M2N collapses to the scalar model.
+                (cl.m2n().alpha_s, tb.alpha_comm_s),
+                (cl.m2n().bw, tb.link_bw),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", tb.name);
+            }
+        }
+    }
+
+    #[test]
+    fn m2n_takes_slower_alpha_and_narrower_link() {
+        let mut cl = Cluster::reference_hetero();
+        cl.pools[0].link_bw = 80e9;
+        cl.pools[0].alpha_comm_s = 10e-6;
+        cl.pools[1].link_bw = 50e9;
+        cl.pools[1].alpha_comm_s = 30e-6;
+        let m2n = cl.m2n();
+        assert_eq!(m2n.bw, 50e9);
+        assert_eq!(m2n.alpha_s, 30e-6);
+    }
+
+    #[test]
+    fn cluster_fingerprints_distinguish_shapes() {
+        let mut seen = std::collections::BTreeSet::new();
+        for tb in Testbed::all() {
+            assert!(seen.insert(Cluster::single_pool(&tb).fingerprint()));
+        }
+        let hetero = Cluster::reference_hetero();
+        assert!(seen.insert(hetero.fingerprint()));
+        // Any perturbed constant, count, or role wiring re-keys.
+        let mut p = hetero.clone();
+        p.pools[1].link_bw *= 2.0;
+        assert!(seen.insert(p.fingerprint()));
+        let mut p = hetero.clone();
+        p.pools[0].n_gpus += 1;
+        assert!(seen.insert(p.fingerprint()));
+        let mut p = hetero.clone();
+        (p.attn_pool, p.expert_pool) = (1, 0);
+        assert!(seen.insert(p.fingerprint()));
+        // The name is cosmetic and never part of the identity.
+        let mut p = hetero.clone();
+        p.name = "renamed".into();
+        assert_eq!(p.fingerprint(), hetero.fingerprint());
+        assert!(!seen.contains(&ClusterId::SINGLE));
+    }
+
+    #[test]
+    fn cluster_by_name_covers_testbeds_and_hetero() {
+        assert!(Cluster::by_name("a").unwrap().is_single_pool());
+        assert_eq!(Cluster::by_name("D").unwrap().n_gpus(), 32);
+        let h = Cluster::by_name("hetero").unwrap();
+        assert!(!h.is_single_pool());
+        assert_eq!(h.pools.len(), 2);
+        assert!(Cluster::by_name("x").is_none());
+    }
+
+    #[test]
+    fn tile_divides_every_pool() {
+        let h = Cluster::reference_hetero();
+        let t = h.tile(2);
+        assert_eq!(t.attn().n_gpus, h.attn().n_gpus / 2);
+        assert_eq!(t.expert().n_gpus, h.expert().n_gpus / 2);
+        let s = Cluster::single_pool(&Testbed::d()).tile(4);
+        assert_eq!(s.n_gpus(), 8);
+    }
+
+    #[test]
+    fn cluster_from_profile_matches_testbed_from_profile() {
+        use crate::perfmodel::profile::CalibrationProfile;
+        let base = Testbed::b();
+        let mut p = CalibrationProfile::from_testbed(&base);
+        p.gemm.unit_per_s = 42e12;
+        p.comm.alpha_s = 55e-6;
+        let tb_cal = Testbed::from_profile(&base, &p);
+        let cl_cal = Cluster::from_profile(&Cluster::single_pool(&base), &p);
+        assert_eq!(cl_cal.name, tb_cal.name);
+        assert_eq!(
+            cl_cal.fingerprint(),
+            Cluster::single_pool(&tb_cal).fingerprint()
+        );
     }
 }

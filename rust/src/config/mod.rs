@@ -3,5 +3,5 @@
 pub mod cluster;
 pub mod model;
 
-pub use cluster::{GroupSplit, Testbed};
+pub use cluster::{Cluster, ClusterId, GpuPool, GpuSpec, GroupSplit, M2nModel, Testbed};
 pub use model::{AttentionKind, ModelConfig, Phase};

@@ -70,7 +70,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::Phase;
+use crate::config::{Cluster, Phase};
 use crate::coordinator::executor::{run_worker, EventCore};
 use crate::coordinator::faults::FaultPlan;
 use crate::coordinator::links::LinkDelay;
@@ -80,6 +80,7 @@ pub use crate::coordinator::planner::SubmitError;
 use crate::coordinator::server::{
     EmbeddedRequest, HealthConfig, Policy, ReplicaPool, Response, Server,
 };
+use crate::coordinator::slo::SloPolicy;
 use crate::metrics::Registry;
 use crate::solver::PlanCache;
 
@@ -115,6 +116,12 @@ pub struct BatcherConfig {
     /// publish the exhaustive plan into the shared cache (only
     /// observable with `solve_budget` set).
     pub refine_plans: bool,
+    /// Optional latency SLO applied to every replica's planner:
+    /// prefill plans are capped at the TTFT target and decode plans at
+    /// the TPOT target, so the batcher optimizes goodput-under-SLO
+    /// instead of raw throughput. `None` (the default) plans for
+    /// throughput, bit-identically to a batcher without the SLO layer.
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for BatcherConfig {
@@ -131,6 +138,7 @@ impl Default for BatcherConfig {
             auto_split: false,
             solve_budget: None,
             refine_plans: true,
+            slo: None,
         }
     }
 }
@@ -242,6 +250,23 @@ impl Batcher {
         profile: Option<&crate::perfmodel::profile::CalibrationProfile>,
         resilience: ResilienceConfig,
     ) -> Result<Batcher> {
+        Self::with_planner(model, cfg, profile, resilience, None)
+    }
+
+    /// [`Batcher::with_resilience`] plus an explicit planning cluster:
+    /// every replica plans against `cluster`'s heterogeneous pools
+    /// instead of the single-pool view of its hand-written testbed.
+    /// `None` keeps the legacy single-pool planner. Applied before the
+    /// profile (which re-derives constants per pool) and before the
+    /// optional auto-split selection, so the split is chosen under the
+    /// cluster's calibrated view.
+    pub fn with_planner(
+        model: ModelHandle,
+        cfg: BatcherConfig,
+        profile: Option<&crate::perfmodel::profile::CalibrationProfile>,
+        resilience: ResilienceConfig,
+        cluster: Option<&Cluster>,
+    ) -> Result<Batcher> {
         let metrics = Arc::new(Registry::new());
         let plan_cache = Arc::new(PlanCache::new());
         let workers = cfg.workers.max(1);
@@ -271,9 +296,13 @@ impl Batcher {
             server.cache_plans = cfg.cache_plans;
             server.solve_budget = cfg.solve_budget;
             server.refine_plans = cfg.refine_plans;
+            if let Some(cl) = cluster {
+                server.set_cluster(cl.clone());
+            }
             if let Some(p) = profile {
                 server.set_calibration_profile(p);
             }
+            server.set_slo(cfg.slo);
             if cfg.auto_split {
                 match chosen_split {
                     None => chosen_split = Some(server.select_plan_split()),
@@ -632,10 +661,25 @@ pub fn run_attempt<F>(
         return;
     }
     let mut attempt = Attempt { core, metrics, fail_tx, max_retries, reqs, meta };
+    let pass_started = Instant::now();
     match serve(&attempt.reqs) {
         Ok(responses) if responses.len() == attempt.reqs.len() => {
+            // One serve pass emits one token per request: the pass
+            // wall time is each decode request's time-per-output-token
+            // for this step.
+            let pass_s = pass_started.elapsed().as_secs_f64();
             let (_reqs, meta) = attempt.defuse();
             for (mut resp, m) in responses.into_iter().zip(meta) {
+                // SLO latency accounting: a completed prefill pass is
+                // the request's first token (TTFT = submit -> now,
+                // queueing included); every completed decode pass is
+                // one output token (TPOT = the pass it rode in).
+                match m.phase {
+                    Phase::Prefill => {
+                        metrics.observe("ttft", m.submitted.elapsed().as_secs_f64())
+                    }
+                    Phase::Decode { .. } => metrics.observe("tpot", pass_s),
+                }
                 if m.output_len > 0 {
                     // Autoregressive re-entry: this pass's output is
                     // the next step's input, the KV cache grows by the

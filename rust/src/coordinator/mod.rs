@@ -34,4 +34,5 @@ pub mod pipeline;
 pub mod planner;
 pub mod router;
 pub mod server;
+pub mod slo;
 pub mod threadpool;

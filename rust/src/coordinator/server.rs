@@ -28,10 +28,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{GroupSplit, Phase, Testbed};
+use crate::config::{Cluster, ClusterId, GroupSplit, Phase, Testbed};
 use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
+use crate::coordinator::slo::SloPolicy;
 use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
 use crate::metrics::Registry;
 use crate::perfmodel::profile::{CalibrationProfile, ProfileId};
@@ -219,6 +220,24 @@ pub struct Server {
     /// [`Server::set_calibration_profile`], otherwise a swapped testbed
     /// would keep hitting plans cached under the old constants.
     plan_testbed: Testbed,
+    /// The cluster the Adaptive planner actually solves against — by
+    /// default the single-pool wrapping of `plan_testbed` (bit-identical
+    /// to the legacy Testbed path), swapped to a heterogeneous pool
+    /// layout via [`Server::set_cluster`]. Private for the same reason
+    /// as `plan_testbed`: it must move together with
+    /// `plan_cluster_id`, the cache-key identity of its constants.
+    plan_cluster: Cluster,
+    /// Cache-key identity of `plan_cluster` ([`ClusterId::SINGLE`] for
+    /// the default single-pool layout, the cluster fingerprint
+    /// otherwise) — plans solved under different pool shapes can never
+    /// alias.
+    plan_cluster_id: ClusterId,
+    /// Optional TTFT/TPOT targets: when set, prefill/decode plan
+    /// solves carry the matching target as Algorithm 1's
+    /// `max_makespan` cap, so the planner optimizes goodput-under-SLO
+    /// instead of raw throughput. Set via [`Server::set_slo`] (which
+    /// clears the plan cache — cached plans were solved uncapped).
+    slo: Option<SloPolicy>,
     pub plan_split: GroupSplit,
     /// Memoize Adaptive plans per shape (disable to re-solve every
     /// batch — the cold-solve baseline of `benches/serving_speed.rs`).
@@ -280,12 +299,16 @@ impl Server {
         plan_cache: Arc<PlanCache>,
     ) -> Result<Server> {
         let plan_testbed = Testbed::a();
+        let plan_cluster = Cluster::single_pool(&plan_testbed);
         let plan_split = GroupSplit::new(1, eg);
         let pipeline = Pipeline::new(model, eg, link_delay)?;
         Ok(Server {
             pipeline,
             metrics,
             plan_testbed,
+            plan_cluster,
+            plan_cluster_id: ClusterId::SINGLE,
+            slo: None,
             plan_split,
             cache_plans: true,
             strict: false,
@@ -311,6 +334,7 @@ impl Server {
     /// so switching profiles can never alias plans.
     pub fn set_calibration_profile(&mut self, profile: &CalibrationProfile) {
         self.plan_testbed = Testbed::from_profile(&self.plan_testbed, profile);
+        self.plan_cluster = Cluster::from_profile(&self.plan_cluster, profile);
         self.plan_profile = profile.fingerprint();
     }
 
@@ -323,6 +347,58 @@ impl Server {
     /// (read-only — see [`Server::set_calibration_profile`]).
     pub fn plan_testbed(&self) -> &Testbed {
         &self.plan_testbed
+    }
+
+    /// Plan against an explicit cluster layout (heterogeneous pools,
+    /// per-pool constants, cross-pool M2N). Every subsequent plan-cache
+    /// key carries the cluster's fingerprint, and the cache is cleared:
+    /// cached plans were solved against the old layout. The legacy
+    /// single-pool default keeps keying under [`ClusterId::SINGLE`]
+    /// (this setter is the only way off it).
+    pub fn set_cluster(&mut self, cluster: Cluster) {
+        self.plan_cluster_id = cluster.fingerprint();
+        self.plan_cluster = cluster;
+        self.plan_cache.clear();
+    }
+
+    /// The cluster the Adaptive planner currently solves against
+    /// (read-only — see [`Server::set_cluster`]).
+    pub fn plan_cluster(&self) -> &Cluster {
+        &self.plan_cluster
+    }
+
+    /// The cluster-identity the planner keys its cache entries with.
+    pub fn plan_cluster_id(&self) -> ClusterId {
+        self.plan_cluster_id
+    }
+
+    /// Install TTFT/TPOT targets: subsequent prefill solves are capped
+    /// at the TTFT target, decode solves at the TPOT target
+    /// (goodput-under-SLO planning). Clears the plan cache — cached
+    /// plans were solved under the previous (or no) cap, and the cap
+    /// is not part of the shape key. `None` removes the targets.
+    pub fn set_slo(&mut self, slo: Option<SloPolicy>) {
+        if self.slo != slo {
+            self.slo = slo;
+            self.plan_cache.clear();
+        }
+    }
+
+    /// The SLO policy in effect (read-only — see [`Server::set_slo`]).
+    pub fn slo(&self) -> Option<SloPolicy> {
+        self.slo
+    }
+
+    /// The solver parameters for one phase's plan solve: the shared
+    /// caps plus, with an SLO installed, the phase's latency target as
+    /// the makespan cap. With no SLO this is exactly
+    /// `self.solver_params` — the capped path costs nothing when off.
+    fn phase_params(&self, phase: Phase) -> SolverParams {
+        let max_makespan = self.slo.and_then(|s| match phase {
+            Phase::Prefill => s.ttft_s,
+            Phase::Decode { .. } => s.tpot_s,
+        });
+        SolverParams { max_makespan, ..self.solver_params }
     }
 
     /// Re-pick the Adaptive policy's emulated (ag, eg) planning split:
@@ -352,9 +428,7 @@ impl Server {
         let seq = self.pipeline.model().seq_len;
         let capacity = self.solver_params.r1_cap * self.max_ma();
         let mut best: Option<(f64, GroupSplit)> = None;
-        for cand in
-            solver::splitsearch::enumerate_candidates(self.plan_testbed.n_gpus, false)
-        {
+        for cand in solver::enumerate_cluster_candidates(&self.plan_cluster, false) {
             if let Some(sol) = self.solve_shape_for_split(cand.split, capacity, Phase::Prefill) {
                 if best.as_ref().map_or(true, |(t, _)| sol.throughput_tokens > *t) {
                     best = Some((sol.throughput_tokens, cand.split));
@@ -364,14 +438,16 @@ impl Server {
         let split = match best {
             Some((_, s)) => Some(s),
             // No split serves the max shape: fall back to the offline
-            // split search (pruned; only the winner is needed).
+            // split search (pruned; only the winner is needed). The
+            // cluster-aware search delegates to the exact legacy sweep
+            // on the single-pool default.
             None => {
                 let params = solver::SearchParams {
                     solver: self.solver_params,
                     multi_replica: false,
                     ..Default::default()
                 };
-                solver::search_splits(&model, &self.plan_testbed, seq, &params)
+                solver::search_cluster(&model, &self.plan_cluster, seq, Phase::Prefill, &params)
                     .map(|r| r.best.candidate.split)
             }
         };
@@ -432,7 +508,12 @@ impl Server {
     /// profile/phase, capacity at least ours) warm-seeds the sweep,
     /// and the server's anytime budget bounds it — neither changes
     /// which plan an unbudgeted solve picks.
-    fn solve_adaptive_shape(&self, capacity: usize, phase: Phase, key: ShapeKey) -> Option<Solution> {
+    fn solve_adaptive_shape(
+        &self,
+        capacity: usize,
+        phase: Phase,
+        key: ShapeKey,
+    ) -> Option<Solution> {
         let warm = self
             .cache_plans
             .then(|| self.plan_cache.nearest(key))
@@ -449,15 +530,18 @@ impl Server {
     fn phase_instance(&self, split: GroupSplit, phase: Phase) -> Instance {
         let model = self.pipeline.model().model.clone();
         match phase {
-            Phase::Prefill => Instance::new(
+            Phase::Prefill => Instance::on_cluster(
                 model,
-                self.plan_testbed.clone(),
+                self.plan_cluster.clone(),
                 split,
                 self.pipeline.model().seq_len,
             ),
-            Phase::Decode { kv_len } => {
-                Instance::decode(model, self.plan_testbed.clone(), split, bucket_up(kv_len))
-            }
+            Phase::Decode { kv_len } => Instance::decode_on_cluster(
+                model,
+                self.plan_cluster.clone(),
+                split,
+                bucket_up(kv_len),
+            ),
         }
     }
 
@@ -487,19 +571,22 @@ impl Server {
     ) -> Option<Solution> {
         let inst = self.phase_instance(split, phase);
         let buckets = &self.pipeline.model().artifacts.manifest.ma_buckets;
-        let params = SolverParams { budget, ..self.solver_params };
+        let params = SolverParams { budget, ..self.phase_params(phase) };
         let mut guard = self.solve_evaluator.lock().unwrap_or_else(PoisonError::into_inner);
         let ev = guard.get_or_insert_with(|| inst.evaluator());
         solver::solve_online_with(&inst, capacity, &params, EvalMode::Buffered, buckets, warm, ev)
-            .or_else(|| self.bruteforce_shape(&inst, capacity, buckets))
+            .or_else(|| self.bruteforce_shape(&inst, capacity, buckets, params.max_makespan))
     }
 
     /// Exhaustive reference path over the capacity-exact bucket pairs.
+    /// An SLO cap filters here too: the fallback must not serve a plan
+    /// the capped online solver correctly rejected.
     fn bruteforce_shape(
         &self,
         inst: &Instance,
         capacity: usize,
         buckets: &[usize],
+        max_makespan: Option<f64>,
     ) -> Option<Solution> {
         let mut best: Option<Solution> = None;
         for &m_a in buckets {
@@ -516,6 +603,9 @@ impl Server {
                 r1,
                 self.solver_params.r2_cap,
             );
+            if max_makespan.is_some_and(|cap| makespan > cap) {
+                continue;
+            }
             if best.as_ref().map_or(true, |b| tput > b.throughput_tokens) {
                 best = Some(Solution {
                     config: cfg,
@@ -540,7 +630,8 @@ impl Server {
 
     /// Choose (m_a, r1, ExecConfig) for an Adaptive batch of `n`
     /// requests in `phase`. Cached per `(phase, seq len, padded
-    /// capacity, constants identity)` shape — decode KV lengths bucket
+    /// capacity, constants identity, cluster identity)` shape — decode
+    /// KV lengths bucket
     /// into power-of-two windows so plans are reused while the cache
     /// grows token by token, and neither prefill/decode plans nor
     /// plans solved under different calibration profiles can alias. A
@@ -554,7 +645,8 @@ impl Server {
             Phase::Prefill => ShapeKey::prefill(self.pipeline.model().seq_len, capacity),
             Phase::Decode { kv_len } => ShapeKey::decode(kv_len, capacity),
         }
-        .with_profile(self.plan_profile);
+        .with_profile(self.plan_profile)
+        .with_cluster(self.plan_cluster_id);
         // The cache hands back `Arc<Solution>` (a hit is a pointer
         // bump, not a deep clone under a lock); the cache-disabled
         // baseline wraps its fresh solve the same way so both arms
@@ -703,7 +795,10 @@ impl Server {
     ) {
         let inst = self.phase_instance(self.plan_split, phase);
         let buckets = self.pipeline.model().artifacts.manifest.ma_buckets.clone();
-        let params = SolverParams { budget: None, ..self.solver_params };
+        // The refinement re-solve carries the same per-phase SLO cap
+        // the truncated solve ran under — publishing an uncapped plan
+        // over a capped entry would break the goodput contract.
+        let params = SolverParams { budget: None, ..self.phase_params(phase) };
         let cache = Arc::clone(&self.plan_cache);
         let metrics = Arc::clone(&self.metrics);
         std::thread::spawn(move || {

@@ -1,0 +1,181 @@
+//! SLO targets and goodput accounting for the serving coordinator.
+//!
+//! A [`SloPolicy`] carries TTFT/TPOT percentile targets. It acts in two
+//! places:
+//!
+//! * **Planning** — the server turns the per-phase latency target into
+//!   Algorithm 1's `max_makespan` cap
+//!   ([`crate::solver::SolverParams::max_makespan`]): prefill plans are
+//!   capped by the TTFT target (a prefill batch's modeled makespan is
+//!   the time to its first tokens), decode plans by the TPOT target (a
+//!   decode pass emits one token per in-flight request). The solver
+//!   then maximizes throughput *subject to* the cap — goodput-optimal
+//!   rather than throughput-optimal planning.
+//! * **Reporting** — [`SloPolicy::evaluate`] reads the observed
+//!   `ttft` / `tpot` histograms off a [`Registry`] via
+//!   [`Registry::histogram_percentile`] and grades each target,
+//!   yielding an [`SloReport`] with attainment flags and the measured
+//!   percentiles; `goodput` then discounts raw throughput by the
+//!   fraction of requests meeting their targets.
+
+use crate::metrics::Registry;
+use crate::util::json::{Json, JsonObj};
+
+/// TTFT/TPOT percentile targets (seconds; `None` leaves that phase
+/// uncapped and ungraded).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloPolicy {
+    /// Time-to-first-token target: caps prefill-plan makespans and
+    /// grades the observed `ttft` histogram.
+    pub ttft_s: Option<f64>,
+    /// Time-per-output-token target: caps decode-plan makespans and
+    /// grades the observed `tpot` histogram.
+    pub tpot_s: Option<f64>,
+    /// Attainment percentile in (0, 100] — the percentile of the
+    /// observed distribution that must sit at or under the target
+    /// (paper-style "p99 TTFT under X ms").
+    pub percentile: f64,
+}
+
+impl SloPolicy {
+    pub fn new(ttft_s: Option<f64>, tpot_s: Option<f64>, percentile: f64) -> Self {
+        Self { ttft_s, tpot_s, percentile }
+    }
+
+    /// Does this policy constrain anything at all?
+    pub fn is_active(&self) -> bool {
+        self.ttft_s.is_some() || self.tpot_s.is_some()
+    }
+
+    /// Grade the observed latency distributions against the targets.
+    pub fn evaluate(&self, metrics: &Registry) -> SloReport {
+        let grade = |target: Option<f64>, name: &str| -> (Option<f64>, Option<bool>) {
+            let observed = metrics.histogram_percentile(name, self.percentile);
+            let met = match (target, observed) {
+                (Some(t), Some(o)) => Some(o <= t),
+                // A target with no observations is vacuously met (no
+                // request missed it); no target means nothing to grade.
+                (Some(_), None) => Some(true),
+                (None, _) => None,
+            };
+            (observed, met)
+        };
+        let (ttft_observed, ttft_met) = grade(self.ttft_s, "ttft");
+        let (tpot_observed, tpot_met) = grade(self.tpot_s, "tpot");
+        SloReport { policy: *self, ttft_observed, ttft_met, tpot_observed, tpot_met }
+    }
+}
+
+/// The outcome of grading one [`SloPolicy`] against observed serving
+/// latencies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloReport {
+    pub policy: SloPolicy,
+    /// Observed TTFT at the policy percentile (`None`: no prefill
+    /// completions recorded).
+    pub ttft_observed: Option<f64>,
+    /// Whether the TTFT target held (`None`: no target set).
+    pub ttft_met: Option<bool>,
+    /// Observed TPOT at the policy percentile (`None`: no decode
+    /// passes recorded).
+    pub tpot_observed: Option<f64>,
+    /// Whether the TPOT target held (`None`: no target set).
+    pub tpot_met: Option<bool>,
+}
+
+impl SloReport {
+    /// Every configured target held (vacuously true with no targets).
+    pub fn met(&self) -> bool {
+        self.ttft_met.unwrap_or(true) && self.tpot_met.unwrap_or(true)
+    }
+
+    /// Throughput discounted by SLO attainment: the fraction of
+    /// requests whose latency met every configured target, times raw
+    /// throughput. With no targets this is raw throughput (factor 1).
+    pub fn goodput(&self, throughput: f64, metrics: &Registry) -> f64 {
+        throughput * self.attainment(metrics)
+    }
+
+    /// Fraction in [0, 1] of recorded samples meeting their targets
+    /// (the min across configured dimensions — a request must meet
+    /// both to count as good).
+    pub fn attainment(&self, metrics: &Registry) -> f64 {
+        let frac = |target: Option<f64>, name: &str| -> Option<f64> {
+            let t = target?;
+            Some(metrics.histogram_fraction_le(name, t).unwrap_or(1.0))
+        };
+        let ttft = frac(self.policy.ttft_s, "ttft");
+        let tpot = frac(self.policy.tpot_s, "tpot");
+        match (ttft, tpot) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) | (None, Some(a)) => a,
+            (None, None) => 1.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        let optb = |v: Option<bool>| v.map(Json::Bool).unwrap_or(Json::Null);
+        let mut o = JsonObj::new();
+        o.insert("percentile", Json::Num(self.policy.percentile));
+        o.insert("ttft_target_s", opt(self.policy.ttft_s));
+        o.insert("ttft_observed_s", opt(self.ttft_observed));
+        o.insert("ttft_met", optb(self.ttft_met));
+        o.insert("tpot_target_s", opt(self.policy.tpot_s));
+        o.insert("tpot_observed_s", opt(self.tpot_observed));
+        o.insert("tpot_met", optb(self.tpot_met));
+        o.insert("met", Json::Bool(self.met()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grades_targets_against_observed_percentiles() {
+        let m = Registry::new();
+        for i in 0..100 {
+            m.observe("ttft", 0.010 + i as f64 * 0.001); // 10ms..109ms
+            m.observe("tpot", 0.002);
+        }
+        // p50 TTFT is ~60ms: a 200ms target holds, a 20ms one fails.
+        let loose = SloPolicy::new(Some(0.200), Some(0.005), 50.0).evaluate(&m);
+        assert_eq!(loose.ttft_met, Some(true));
+        assert_eq!(loose.tpot_met, Some(true));
+        assert!(loose.met());
+        let tight = SloPolicy::new(Some(0.020), None, 50.0).evaluate(&m);
+        assert_eq!(tight.ttft_met, Some(false));
+        assert_eq!(tight.tpot_met, None, "no TPOT target, nothing to grade");
+        assert!(!tight.met());
+        // Attainment discounts throughput by the failing fraction:
+        // ~11 of 100 TTFT samples sit at or under 20ms.
+        let att = tight.attainment(&m);
+        assert!(att > 0.05 && att < 0.20, "attainment {att}");
+        assert!(tight.goodput(1000.0, &m) < 200.0);
+        assert_eq!(loose.attainment(&m), 1.0);
+        assert_eq!(loose.goodput(1000.0, &m), 1000.0);
+    }
+
+    #[test]
+    fn empty_registry_is_vacuously_met() {
+        let m = Registry::new();
+        let r = SloPolicy::new(Some(0.1), Some(0.01), 99.0).evaluate(&m);
+        assert_eq!(r.ttft_observed, None);
+        assert_eq!(r.ttft_met, Some(true), "no request missed the target");
+        assert!(r.met());
+        assert_eq!(r.attainment(&m), 1.0);
+    }
+
+    #[test]
+    fn inactive_policy_constrains_nothing() {
+        let p = SloPolicy::new(None, None, 99.0);
+        assert!(!p.is_active());
+        let m = Registry::new();
+        m.observe("ttft", 100.0);
+        let r = p.evaluate(&m);
+        assert!(r.met());
+        assert_eq!(r.goodput(42.0, &m), 42.0);
+    }
+}

@@ -6,20 +6,26 @@
 //! * `search-splits` — search the (ag, eg) split itself (plus
 //!   multi-replica tilings) with the pruned parallel split-search
 //!   solver layer; print the per-candidate table and the winner.
+//!   `--cluster` searches a heterogeneous pool layout, `--ttft-ms`
+//!   optimizes goodput under a makespan cap, and `--carve` partitions
+//!   a cluster into prefill and decode sub-clusters for a traffic mix.
 //! * `compare`  — naive vs PPPipe vs FinDEP on the simulator, with an
 //!   ASCII Gantt of each schedule.
 //! * `serve`    — real execution: load AOT artifacts, serve synthetic
 //!   batches through the DEP pipeline, report tokens/s and latency.
+//!   `--ttft-ms`/`--tpot-ms` arm an SLO: plans are capped at the
+//!   targets and the run is graded on percentile attainment + goodput.
 //! * `calibrate`— Fig.-7-style micro-benchmarks on this host (PJRT GEMM
 //!   / attention probes + link probe), printing fitted α-β models + R².
 
 use findep::baselines;
-use findep::config::{GroupSplit, ModelConfig, Testbed};
+use findep::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
 use findep::coordinator::batcher::{Batcher, BatcherConfig, ResilienceConfig};
 use findep::coordinator::faults::FaultPlan;
 use findep::coordinator::links::LinkDelay;
 use findep::coordinator::moe::ModelHandle;
 use findep::coordinator::server::{EmbeddedRequest, Policy, Server};
+use findep::coordinator::slo::SloPolicy;
 use findep::perfmodel::{calibrate, profile, CalibrationProfile, ComponentFit, ProfileThresholds};
 use findep::runtime::{artifacts_dir, probe};
 use findep::sched::{Order, Plan};
@@ -99,29 +105,39 @@ fn cmd_solve(args: &[String]) -> i32 {
     let spec = Spec::new("findep solve", "run Algorithm 1 and print the best configuration")
         .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
         .opt("testbed", "A", "testbed A|B|C|D")
-        .opt("seq", "2048", "sequence length S")
+        .opt_uint("seq", "2048", "sequence length S")
         .opt("phase", "prefill", "serving phase: prefill|decode")
-        .opt("kv", "0", "decode KV length per sample (0 = --seq)")
-        .opt("budget-us", "0", "anytime solve budget in µs (0 = exhaustive)")
+        .opt_uint("kv", "0", "decode KV length per sample (0 = --seq)")
+        .opt_uint("budget-us", "0", "anytime solve budget in µs (0 = exhaustive)")
         .opt("profile", "", "calibration profile JSON (from `calibrate --out`)");
     let p = match spec.parse(args) {
         Ok(p) => p,
         Err(e) => return usage(e),
     };
-    let Some(mut inst) = instance_from(&p) else {
-        eprintln!("unknown model or testbed");
+    let Some(testbed) = Testbed::by_name(p.get("testbed")) else {
+        eprintln!("unknown testbed");
         return 2;
     };
-    if p.get("phase") == "decode" {
-        let kv = match p.get_usize("kv") {
-            0 => p.get_usize("seq"),
-            kv => kv,
-        };
-        inst = solver::Instance::decode(inst.model.clone(), inst.testbed.clone(), inst.split, kv);
-    } else if p.get("phase") != "prefill" {
-        eprintln!("unknown phase '{}' (prefill|decode)", p.get("phase"));
+    let Some(model) = ModelConfig::paper_preset(p.get("model"), p.get("testbed")) else {
+        eprintln!("unknown model");
         return 2;
-    }
+    };
+    let split = GroupSplit::paper_default(&testbed, model.has_shared_expert());
+    let seq = p.get_usize("seq");
+    let mut inst = match p.get("phase") {
+        "prefill" => Instance::new(model, testbed.clone(), split, seq),
+        "decode" => {
+            let kv = match p.get_usize("kv") {
+                0 => seq,
+                kv => kv,
+            };
+            Instance::decode(model, testbed.clone(), split, kv)
+        }
+        other => {
+            eprintln!("unknown phase '{other}' (prefill|decode)");
+            return 2;
+        }
+    };
     match profile_for(&p, "solving") {
         Err(code) => return code,
         Ok(Some(prof)) => {
@@ -131,7 +147,7 @@ fn cmd_solve(args: &[String]) -> i32 {
             );
             let deltas = profile::stage_deltas(
                 &inst.model,
-                &inst.testbed,
+                &testbed,
                 &prof,
                 inst.split,
                 inst.seq_len,
@@ -146,7 +162,7 @@ fn cmd_solve(args: &[String]) -> i32 {
                 ]);
             }
             t.print();
-            inst.testbed = Testbed::from_profile(&inst.testbed, &prof);
+            inst.cluster = Cluster::from_profile(&inst.cluster, &prof);
         }
         Ok(None) => {}
     }
@@ -158,10 +174,10 @@ fn cmd_solve(args: &[String]) -> i32 {
     match solver::solve(&inst, &params) {
         Some(sol) => {
             let phase_note = match inst.phase {
-                findep::config::Phase::Prefill => format!("S={}", inst.seq_len),
-                findep::config::Phase::Decode { kv_len } => format!("decode kv={kv_len}"),
+                Phase::Prefill => format!("S={}", inst.seq_len),
+                Phase::Decode { kv_len } => format!("decode kv={kv_len}"),
             };
-            println!("instance: {} on {} {}", inst.model.name, inst.testbed.name, phase_note);
+            println!("instance: {} on {} {}", inst.model.name, inst.cluster.name, phase_note);
             println!("best config: {}", sol.config.describe());
             println!("makespan: {:.3} ms", sol.makespan * 1e3);
             let unit = if inst.phase.is_decode() { "decoded tokens/s" } else { "tokens/s" };
@@ -183,51 +199,11 @@ fn cmd_solve(args: &[String]) -> i32 {
     }
 }
 
-fn cmd_search_splits(args: &[String]) -> i32 {
-    let spec = Spec::new(
-        "findep search-splits",
-        "search (ag, eg) splits and replica tilings on top of Algorithm 1",
-    )
-    .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
-    .opt("testbed", "A", "testbed A|B|C|D")
-    .opt("seq", "2048", "sequence length S")
-    .opt("threads", "0", "worker threads (0 = all cores)")
-    .opt("profile", "", "calibration profile JSON (from `calibrate --out`)")
-    .flag("no-prune", "disable the analytic branch-and-bound pruning")
-    .flag("no-replicas", "single-instance splits only (no cluster tilings)")
-    .flag("serial", "also run the serial cold sweep and report its wall time");
-    let p = match spec.parse(args) {
-        Ok(p) => p,
-        Err(e) => return usage(e),
-    };
-    let Some(testbed) = Testbed::by_name(p.get("testbed")) else {
-        eprintln!("unknown testbed");
-        return 2;
-    };
-    let Some(model) = ModelConfig::paper_preset(p.get("model"), p.get("testbed")) else {
-        eprintln!("unknown model");
-        return 2;
-    };
-    let testbed = match profile_for(&p, "searching") {
-        Err(code) => return code,
-        Ok(Some(prof)) => Testbed::from_profile(&testbed, &prof),
-        Ok(None) => testbed,
-    };
-    let seq = p.get_usize("seq");
-    let params = solver::SearchParams {
-        solver: SolverParams::default(),
-        threads: p.get_usize("threads"),
-        prune: !p.has_flag("no-prune"),
-        multi_replica: !p.has_flag("no-replicas"),
-    };
-    let Some(report) = solver::search_splits(&model, &testbed, seq, &params) else {
-        eprintln!("no feasible (ag, eg) split on this testbed");
-        return 1;
-    };
-    let mut table = Table::new(
-        &format!("split search: {} on {} S={seq}", model.name, testbed.name),
-        &["placement", "per-instance config", "total tokens/s", "note"],
-    );
+/// Shared per-candidate table + stats footer for both the legacy
+/// single-testbed search and the cluster-aware search.
+fn print_search_report(title: &str, report: &solver::SearchReport, params: &solver::SearchParams) {
+    let mut table =
+        Table::new(title, &["placement", "per-instance config", "total tokens/s", "note"]);
     let mut rows: Vec<&solver::SplitSolution> = report.evaluated.iter().collect();
     rows.sort_by(|a, b| b.total_throughput.total_cmp(&a.total_throughput));
     for s in rows {
@@ -258,6 +234,153 @@ fn cmd_search_splits(args: &[String]) -> i32 {
              --no-prune for the full (and stable) per-split table."
         );
     }
+}
+
+fn cmd_search_splits(args: &[String]) -> i32 {
+    let spec = Spec::new(
+        "findep search-splits",
+        "search (ag, eg) splits and replica tilings on top of Algorithm 1",
+    )
+    .opt("model", "deepseek-v2", "model preset (deepseek-v2|qwen3-moe|tiny)")
+    .opt("testbed", "A", "testbed A|B|C|D (single-pool cluster)")
+    .opt("cluster", "", "heterogeneous cluster: hetero | A|B|C|D (overrides --testbed)")
+    .opt_uint("seq", "2048", "sequence length S")
+    .opt_uint("threads", "0", "worker threads (0 = all cores)")
+    .opt_float("ttft-ms", "0", "cap per-batch makespan at this TTFT SLO in ms (0 = none)")
+    .opt("profile", "", "calibration profile JSON (from `calibrate --out`)")
+    .flag("no-prune", "disable the analytic branch-and-bound pruning")
+    .flag("no-replicas", "single-instance splits only (no cluster tilings)")
+    .flag("serial", "also run the serial cold sweep and report its wall time")
+    .flag("carve", "partition the cluster into prefill + decode sub-clusters for a traffic mix")
+    .opt_float("prefill-frac", "0.5", "carve: fraction of token demand that is prefill")
+    .opt_uint("decode-kv", "0", "carve: decode KV length (0 = --seq)");
+    let p = match spec.parse(args) {
+        Ok(p) => p,
+        Err(e) => return usage(e),
+    };
+    let Some(testbed) = Testbed::by_name(p.get("testbed")) else {
+        eprintln!("unknown testbed");
+        return 2;
+    };
+    let Some(model) = ModelConfig::paper_preset(p.get("model"), p.get("testbed")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let seq = p.get_usize("seq");
+    let ttft_ms = p.get_f64("ttft-ms");
+    if ttft_ms < 0.0 {
+        return usage("--ttft-ms must be ≥ 0".into());
+    }
+    let max_makespan = (ttft_ms > 0.0).then(|| ttft_ms * 1e-3);
+    let params = solver::SearchParams {
+        solver: SolverParams { max_makespan, ..SolverParams::default() },
+        threads: p.get_usize("threads"),
+        prune: !p.has_flag("no-prune"),
+        multi_replica: !p.has_flag("no-replicas"),
+    };
+
+    // Cluster route: an explicit pool layout, a makespan cap (goodput
+    // mode), or a carve request all go through the cluster-aware
+    // search. The bare-testbed route below stays bit-identical to the
+    // pre-cluster CLI.
+    let cluster_arg = p.get("cluster").to_string();
+    if !cluster_arg.is_empty() || max_makespan.is_some() || p.has_flag("carve") {
+        let base = if cluster_arg.is_empty() {
+            Cluster::single_pool(&testbed)
+        } else {
+            match Cluster::by_name(&cluster_arg) {
+                Some(c) => c,
+                None => {
+                    eprintln!("unknown cluster '{cluster_arg}' (hetero | A|B|C|D)");
+                    return 2;
+                }
+            }
+        };
+        let cluster = match profile_for(&p, "searching") {
+            Err(code) => return code,
+            Ok(Some(prof)) => Cluster::from_profile(&base, &prof),
+            Ok(None) => base,
+        };
+        if p.has_flag("carve") {
+            let frac = p.get_f64("prefill-frac");
+            if !(0.0..=1.0).contains(&frac) {
+                return usage("--prefill-frac must be in [0, 1]".into());
+            }
+            let mix = solver::TrafficMix {
+                prefill_seq: seq,
+                decode_kv: match p.get_usize("decode-kv") {
+                    0 => seq,
+                    kv => kv,
+                },
+                prefill_frac: frac,
+            };
+            let Some(plan) = solver::carve(&model, &cluster, &mix, &params) else {
+                eprintln!("no feasible carve: neither side of any partition fits the model");
+                return 1;
+            };
+            println!(
+                "carve: {} on {} (prefill S={}, decode kv={}, prefill frac {:.2})",
+                model.name, cluster.name, mix.prefill_seq, mix.decode_kv, mix.prefill_frac
+            );
+            println!(
+                "  prefill GPUs per pool {:?}: {} — {} at {:.0} tokens/s",
+                plan.prefill_gpus,
+                plan.prefill.candidate.describe(),
+                plan.prefill.per_instance.config.describe(),
+                plan.prefill.total_throughput,
+            );
+            println!(
+                "  decode  GPUs per pool {:?}: {} — {} at {:.0} tokens/s",
+                plan.decode_gpus,
+                plan.decode.candidate.describe(),
+                plan.decode.per_instance.config.describe(),
+                plan.decode.total_throughput,
+            );
+            println!(
+                "  sustainable goodput at the mix: {:.0} tokens/s ({} partitions searched)",
+                plan.goodput, plan.partitions
+            );
+            return 0;
+        }
+        let Some(report) = solver::search_cluster(&model, &cluster, seq, Phase::Prefill, &params)
+        else {
+            eprintln!(
+                "no feasible (ag, eg) split on this cluster{}",
+                if max_makespan.is_some() { " under the --ttft-ms cap" } else { "" }
+            );
+            return 1;
+        };
+        let objective = if max_makespan.is_some() { "goodput" } else { "throughput" };
+        print_search_report(
+            &format!("split search ({objective}): {} on {} S={seq}", model.name, cluster.name),
+            &report,
+            &params,
+        );
+        if let Some(cap) = max_makespan {
+            println!(
+                "SLO cap: every listed plan fits a {:.2} ms per-batch makespan (winner: {:.2} ms)",
+                cap * 1e3,
+                report.best.per_instance.makespan * 1e3,
+            );
+        }
+        return 0;
+    }
+
+    let testbed = match profile_for(&p, "searching") {
+        Err(code) => return code,
+        Ok(Some(prof)) => Testbed::from_profile(&testbed, &prof),
+        Ok(None) => testbed,
+    };
+    let Some(report) = solver::search_splits(&model, &testbed, seq, &params) else {
+        eprintln!("no feasible (ag, eg) split on this testbed");
+        return 1;
+    };
+    print_search_report(
+        &format!("split search: {} on {} S={seq}", model.name, testbed.name),
+        &report,
+        &params,
+    );
+    let st = &report.stats;
     if p.has_flag("serial") {
         let t0 = std::time::Instant::now();
         let serial = solver::search_splits_serial(&model, &testbed, seq, &params);
@@ -280,7 +403,7 @@ fn cmd_compare(args: &[String]) -> i32 {
     let spec = Spec::new("findep compare", "naive vs PPPipe vs FinDEP on the simulator")
         .opt("model", "deepseek-v2", "model preset")
         .opt("testbed", "A", "testbed A|B|C|D")
-        .opt("seq", "2048", "sequence length S")
+        .opt_uint("seq", "2048", "sequence length S")
         .opt("profile", "", "calibration profile JSON (from `calibrate --out`)")
         .flag("gantt", "print ASCII Gantt charts");
     let p = match spec.parse(args) {
@@ -293,7 +416,7 @@ fn cmd_compare(args: &[String]) -> i32 {
     };
     match profile_for(&p, "comparing") {
         Err(code) => return code,
-        Ok(Some(prof)) => inst.testbed = Testbed::from_profile(&inst.testbed, &prof),
+        Ok(Some(prof)) => inst.cluster = Cluster::from_profile(&inst.cluster, &prof),
         Ok(None) => {}
     }
     let params = SolverParams::default();
@@ -301,7 +424,7 @@ fn cmd_compare(args: &[String]) -> i32 {
     let pp = baselines::best_pppipe(&inst, &params);
     let fd = solver::solve(&inst, &params);
     let mut table = Table::new(
-        &format!("{} on {} (S={})", inst.model.name, inst.testbed.name, inst.seq_len),
+        &format!("{} on {} (S={})", inst.model.name, inst.cluster.name, inst.seq_len),
         &["scheduler", "config", "tokens/s", "speedup vs naive"],
     );
     let base = naive.as_ref().map(|s| s.throughput_tokens).unwrap_or(0.0);
@@ -339,23 +462,27 @@ fn cmd_compare(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let spec = Spec::new("findep serve", "real-execution serving on the PJRT CPU runtime")
-        .opt("eg", "2", "number of EG workers")
-        .opt("batches", "8", "number of batches to serve")
-        .opt("batch-size", "4", "requests per batch")
+        .opt_uint("eg", "2", "number of EG workers")
+        .opt_uint("batches", "8", "number of batches to serve")
+        .opt_uint("batch-size", "4", "requests per batch")
         .opt("policy", "findep", "naive|pppipe|findep|adaptive")
-        .opt("link-alpha-us", "0", "injected link startup latency (µs)")
-        .opt("link-gbps", "0", "injected link bandwidth (GB/s, 0 = none)")
-        .opt("queue-depth", "0", "bounded request queue depth (0 = direct batch loop)")
-        .opt("workers", "2", "serving replicas / in-flight batches (queue mode)")
-        .opt("max-batch", "8", "max requests per assembled batch (queue mode)")
-        .opt("linger-us", "500", "batch-fill window in µs (queue mode)")
-        .opt("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
-        .opt("decode-steps", "0", "decode steps per request after prefill (KV-growing)")
+        .opt_float("link-alpha-us", "0", "injected link startup latency (µs)")
+        .opt_float("link-gbps", "0", "injected link bandwidth (GB/s, 0 = none)")
+        .opt_uint("queue-depth", "0", "bounded request queue depth (0 = direct batch loop)")
+        .opt_uint("workers", "2", "serving replicas / in-flight batches (queue mode)")
+        .opt_uint("max-batch", "8", "max requests per assembled batch (queue mode)")
+        .opt_uint("linger-us", "500", "batch-fill window in µs (queue mode)")
+        .opt_uint("requests", "0", "total requests in queue mode (0 = batches × batch-size)")
+        .opt_uint("decode-steps", "0", "decode steps per request after prefill (KV-growing)")
         .opt("profile", "", "calibration profile JSON driving the adaptive planner")
+        .opt("cluster", "", "planner cluster: hetero | A|B|C|D (default: artifact testbed)")
+        .opt_float("ttft-ms", "0", "TTFT SLO target in ms (0 = none): caps prefill plans")
+        .opt_float("tpot-ms", "0", "TPOT SLO target in ms (0 = none): caps decode plans")
+        .opt_float("slo-pct", "99", "percentile the SLO targets are graded at")
         .opt("fault-plan", "", "faults: reference | random:<seed> | <replica>=<kind>[@<n>],...")
-        .opt("deadline-ms", "0", "per-request deadline in ms (0 = none; queue mode)")
-        .opt("max-retries", "2", "serve attempts per request after a replica failure (queue mode)")
-        .opt("solve-budget-us", "0", "anytime budget per adaptive solve in µs (0 = exhaustive)")
+        .opt_uint("deadline-ms", "0", "per-request deadline in ms (0 = none; queue mode)")
+        .opt_uint("max-retries", "2", "serve attempts per request after a replica failure")
+        .opt_uint("solve-budget-us", "0", "anytime budget per solve in µs (0 = exhaustive)")
         .flag("no-refine", "do not refine budget-truncated plans in the background")
         .flag("no-plan-cache", "re-solve the adaptive plan on every batch")
         .flag("auto-split", "pick the adaptive planning (ag, eg) split via split search")
@@ -405,6 +532,30 @@ fn cmd_serve(args: &[String]) -> i32 {
     let fault_plan = match FaultPlan::parse(&fault_spec, p.get_usize("workers")) {
         Ok(plan) => plan,
         Err(e) => return usage(format!("--fault-plan: {e}")),
+    };
+    let slo = {
+        let ttft_ms = p.get_f64("ttft-ms");
+        let tpot_ms = p.get_f64("tpot-ms");
+        let pct = p.get_f64("slo-pct");
+        if ttft_ms < 0.0 || tpot_ms < 0.0 {
+            return usage("--ttft-ms and --tpot-ms must be ≥ 0".into());
+        }
+        if !(pct > 0.0 && pct <= 100.0) {
+            return usage("--slo-pct must be in (0, 100]".into());
+        }
+        let ttft = (ttft_ms > 0.0).then(|| ttft_ms * 1e-3);
+        let tpot = (tpot_ms > 0.0).then(|| tpot_ms * 1e-3);
+        (ttft.is_some() || tpot.is_some()).then(|| SloPolicy::new(ttft, tpot, pct))
+    };
+    let plan_cluster = match p.get("cluster") {
+        "" => None,
+        name => match Cluster::by_name(name) {
+            Some(c) => Some(c),
+            None => {
+                eprintln!("unknown cluster '{name}' (hetero | A|B|C|D)");
+                return 2;
+            }
+        },
     };
 
     let prof = match profile_for(&p, "adaptive planning") {
@@ -465,6 +616,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             auto_split: p.has_flag("auto-split"),
             solve_budget,
             refine_plans: !p.has_flag("no-refine"),
+            slo,
         };
         let resilience = ResilienceConfig {
             fault_plan,
@@ -475,7 +627,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             0 => n_batches * batch_size,
             r => r,
         };
-        let batcher = match Batcher::with_resilience(model, cfg, prof.as_ref(), resilience) {
+        let batcher = match Batcher::with_planner(
+            model,
+            cfg,
+            prof.as_ref(),
+            resilience,
+            plan_cluster.as_ref(),
+        ) {
             Ok(b) => b,
             Err(e) => {
                 eprintln!("failed to start batcher: {e:#}");
@@ -535,6 +693,35 @@ fn cmd_serve(args: &[String]) -> i32 {
             batcher.metrics().histogram_mean("queue_wait").unwrap_or(0.0) * 1e3,
             batcher.metrics().histogram_count("queue_wait"),
         );
+        if let Some(slo) = slo {
+            let report = slo.evaluate(batcher.metrics());
+            let dim = |name: &str, target: Option<f64>, observed: Option<f64>, met: Option<bool>| {
+                let Some(t) = target else { return };
+                match (observed, met) {
+                    (Some(o), Some(ok)) => println!(
+                        "  {name} p{:.0}: {:.2} ms observed vs {:.2} ms target — {}",
+                        slo.percentile,
+                        o * 1e3,
+                        t * 1e3,
+                        if ok { "met" } else { "MISSED" },
+                    ),
+                    _ => println!(
+                        "  {name} p{:.0}: no samples recorded vs {:.2} ms target",
+                        slo.percentile,
+                        t * 1e3,
+                    ),
+                }
+            };
+            println!("SLO report:");
+            dim("TTFT", slo.ttft_s, report.ttft_observed, report.ttft_met);
+            dim("TPOT", slo.tpot_s, report.tpot_observed, report.tpot_met);
+            println!(
+                "  attainment {:.1}% -> goodput {:.1} tokens/s (raw {:.1})",
+                report.attainment(batcher.metrics()) * 100.0,
+                report.goodput(tokens as f64 / dt, batcher.metrics()),
+                tokens as f64 / dt,
+            );
+        }
         println!("{}", findep::util::json::to_string_pretty(&batcher.metrics().snapshot_json()));
         return 0;
     }
@@ -543,8 +730,23 @@ fn cmd_serve(args: &[String]) -> i32 {
     srv.cache_plans = !p.has_flag("no-plan-cache");
     srv.solve_budget = solve_budget;
     srv.refine_plans = !p.has_flag("no-refine");
+    if let Some(cl) = plan_cluster {
+        println!("adaptive planner targets cluster: {}", cl.name);
+        srv.set_cluster(cl);
+    }
     if let Some(pr) = &prof {
         srv.set_calibration_profile(pr);
+    }
+    if let Some(slo) = slo {
+        // Direct mode records no per-request latency histograms, so
+        // the SLO shapes planning (makespan-capped plans) but the run
+        // is not graded — use queue mode for the attainment report.
+        println!(
+            "SLO-capped planning: prefill ≤ {}, decode ≤ {} per batch",
+            slo.ttft_s.map(|t| format!("{:.2} ms", t * 1e3)).unwrap_or_else(|| "∞".into()),
+            slo.tpot_s.map(|t| format!("{:.2} ms", t * 1e3)).unwrap_or_else(|| "∞".into()),
+        );
+        srv.set_slo(Some(slo));
     }
     if p.has_flag("auto-split") {
         let split = srv.select_plan_split();
@@ -560,7 +762,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             Ok((resp, stats)) => {
                 tokens += resp.len() * s;
                 println!(
-                    "batch {b}: {} reqs in {:.2} ms (attn {:.2} gate {:.2} shared {:.2} wait {:.2})",
+                    "batch {b}: {} reqs in {:.2} ms (attn {:.2} gate {:.2} shared {:.2} \
+                     wait {:.2})",
                     resp.len(),
                     stats.total * 1e3,
                     stats.attention * 1e3,
@@ -616,8 +819,8 @@ fn cmd_calibrate(args: &[String]) -> i32 {
         "findep calibrate",
         "fit α-β models on this host (Fig. 7) and optionally persist them as a profile",
     )
-    .opt("trials", "9", "timed trials per point")
-    .opt("warmup", "3", "warmup runs per point")
+    .opt_uint("trials", "9", "timed trials per point")
+    .opt_uint("warmup", "3", "warmup runs per point")
     .opt("out", "", "write the fitted calibration profile JSON here")
     .opt("host", "", "host tag recorded in the profile (default $HOSTNAME)")
     .flag("quick", "CI smoke mode: fewer probe points, caps trials at 3 and warmup at 1");

@@ -108,6 +108,16 @@ impl Histogram {
         stats::percentile(&self.samples, p)
     }
 
+    /// Fraction of reservoir samples at or under `x` (SLO attainment:
+    /// the share of requests meeting a latency target). 1.0 when empty
+    /// — no sample exceeded the bound.
+    pub fn fraction_le(&self, x: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().filter(|&&s| s <= x).count() as f64 / self.samples.len() as f64
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("count", Json::Num(self.total as f64));
@@ -305,6 +315,13 @@ impl Registry {
     /// items and the coordinator bench report.
     pub fn histogram_percentile(&self, name: &str, p: f64) -> Option<f64> {
         self.merged_histogram(name).map(|h| h.percentile(p))
+    }
+
+    /// Fraction of a histogram's samples at or under `x`, or `None`
+    /// when it was never observed — the SLO-attainment accessor
+    /// (share of requests whose TTFT/TPOT met its target).
+    pub fn histogram_fraction_le(&self, name: &str, x: f64) -> Option<f64> {
+        self.merged_histogram(name).map(|h| h.fraction_le(x))
     }
 
     /// Largest observed value of a histogram, or `None` when it was

@@ -18,7 +18,7 @@
 //! * `t_a2e(m_e) = α_c + β_c·(E/eg)·m_e·M·bytes`, and t_e2a = t_a2e
 //!   (full-duplex symmetric links, §3.1).
 
-use crate::config::{GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
 use crate::perfmodel::linear::LinearModel;
 
 /// The three hardware component models fitted by micro-benchmarks
@@ -62,6 +62,48 @@ impl CompModels {
         split: GroupSplit,
     ) -> Self {
         Self::from_testbed(&Testbed::from_profile(base, profile), split)
+    }
+}
+
+/// Cluster-aware component models: the heterogeneous generalization of
+/// [`CompModels`]. The attention pool contributes the projection-GEMM
+/// and attention-kernel models (shared experts also run on AG devices,
+/// so `gemm_a` covers them too — see `solver::memory`, which charges
+/// their weights against AG capacity), the expert pool contributes the
+/// FFN GEMM model, and the cross-pool [`crate::config::M2nModel`]
+/// contributes the transfer model with the Fig.-7b fan-out folded in.
+/// On a single-pool cluster `gemm_a == gemm_e` and the M2N collapses to
+/// the pool's own link scalars, making every derived coefficient
+/// bit-identical to [`CompModels::from_testbed`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterComps {
+    /// Attention-pool GEMM (Q/K/V/O projections + shared experts).
+    pub gemm_a: LinearModel,
+    /// Attention-pool attention kernel.
+    pub attn: LinearModel,
+    /// Expert-pool GEMM (expert FFN stack).
+    pub gemm_e: LinearModel,
+    /// Cross-pool M2N transfer, per byte per machine.
+    pub comm: LinearModel,
+}
+
+impl ClusterComps {
+    pub fn from_cluster(cl: &Cluster, split: GroupSplit) -> Self {
+        let fanout = split.ag as f64 / (split.ag.min(split.eg) as f64);
+        let a = &cl.attn().gpu;
+        let e = &cl.expert().gpu;
+        let m2n = cl.m2n();
+        Self {
+            gemm_a: LinearModel::new(a.alpha_comp_s, 1.0 / a.gemm_flops),
+            attn: LinearModel::new(a.alpha_attn_s, 1.0 / a.attn_flops),
+            gemm_e: LinearModel::new(e.alpha_comp_s, 1.0 / e.gemm_flops),
+            comm: LinearModel::new(m2n.alpha_s, fanout / m2n.bw),
+        }
+    }
+
+    /// The homogeneous special case: one GEMM model serves both roles.
+    pub fn from_comp_models(comp: &CompModels) -> Self {
+        Self { gemm_a: comp.gemm, attn: comp.attn, gemm_e: comp.gemm, comm: comp.comm }
     }
 }
 
@@ -133,6 +175,34 @@ impl StageModels {
         }
     }
 
+    /// Cluster-aware constructor: the heterogeneous generalization of
+    /// [`Self::for_phase`]. Attention-group coefficients (projection
+    /// GEMMs, attention kernel, shared experts, decode KV streaming)
+    /// come from the attention pool, expert-FFN coefficients from the
+    /// expert pool, and the transfer model from the cross-pool M2N.
+    /// For a [`Cluster::single_pool`] this performs literally the same
+    /// arithmetic as `for_phase` on the underlying testbed — the
+    /// refactor's bit-identity oracle (`tests/cluster_equivalence.rs`).
+    pub fn for_cluster(
+        model: &ModelConfig,
+        cl: &Cluster,
+        split: GroupSplit,
+        seq_len: usize,
+        phase: Phase,
+    ) -> Self {
+        let comp = ClusterComps::from_cluster(cl, split);
+        match phase {
+            Phase::Prefill => Self::from_cluster_comps(model, &comp, split, seq_len),
+            Phase::Decode { kv_len } => Self::decode_from_cluster_comps(
+                model,
+                &comp,
+                split,
+                kv_len,
+                LinearModel::new(0.0, 1.0 / cl.attn().gpu.hbm_bw),
+            ),
+        }
+    }
+
     /// Decode-phase stage models: one generated token per sample per
     /// forward pass. Relative to the prefill derivation (Eqs. 10-11 at
     /// `S = 1`), the only structural change is the attention term —
@@ -154,18 +224,37 @@ impl StageModels {
         kv_len: usize,
         kv_read: LinearModel,
     ) -> Self {
+        Self::decode_from_cluster_comps(
+            model,
+            &ClusterComps::from_comp_models(comp),
+            split,
+            kv_len,
+            kv_read,
+        )
+    }
+
+    /// Cluster-aware decode derivation (see [`Self::decode_from_components`]
+    /// for the regime discussion — this is the same formula with the
+    /// projection GEMMs priced on the attention pool).
+    pub fn decode_from_cluster_comps(
+        model: &ModelConfig,
+        comp: &ClusterComps,
+        split: GroupSplit,
+        kv_len: usize,
+        kv_read: LinearModel,
+    ) -> Self {
         // Everything except attention — shared-expert, expert, and
         // transfer α/β plus token conservation — *is* the prefill
         // derivation at S = 1 (one token per sample), so derive it
         // there and keep one source for those formulas.
-        let mut sm = Self::from_components(model, comp, split, 1);
+        let mut sm = Self::from_cluster_comps(model, comp, split, 1);
 
         let m = model.embed as f64;
         let nh = model.n_heads as f64;
         let dk = model.d_k as f64;
         let dv = model.d_v as f64;
         // Q/K/V/O projections for one token per sample (same term
-        // `from_components` derives at S = 1; recomputed rather than
+        // `from_cluster_comps` derives at S = 1; recomputed rather than
         // subtracted back out of `sm.t_a.beta` so no floating-point
         // residue of the S² score term leaks in), plus the KV regime
         // replacing that score term: workload y = n_h·1·kv·(d_k+d_v)
@@ -173,7 +262,7 @@ impl StageModels {
         // bounds the kernel.
         let kv_total = kv_len as f64 + 1.0;
         let beta_gemm =
-            comp.gemm.beta * proj_factor(model) * (2.0 * m * nh * dk + 2.0 * m * nh * dv);
+            comp.gemm_a.beta * proj_factor(model) * (2.0 * m * nh * dk + 2.0 * m * nh * dv);
         let y_decode = kv_total * nh * (dk + dv);
         let kv_bytes_layer = kv_total * model.kv_bytes_per_token_layer() as f64;
         let beta_attn = (comp.attn.beta * y_decode).max(kv_read.eval(kv_bytes_layer));
@@ -186,6 +275,20 @@ impl StageModels {
     pub fn from_components(
         model: &ModelConfig,
         comp: &CompModels,
+        split: GroupSplit,
+        seq_len: usize,
+    ) -> Self {
+        Self::from_cluster_comps(model, &ClusterComps::from_comp_models(comp), split, seq_len)
+    }
+
+    /// The Eqs. 10-11 derivation priced per pool: attention-side terms
+    /// (projections, score kernel, shared experts) on `gemm_a`/`attn`,
+    /// the expert FFN on `gemm_e`, and the transfer on the M2N `comm`
+    /// model. With `gemm_a == gemm_e` (the [`ClusterComps::from_comp_models`]
+    /// embedding) every expression below is the homogeneous one.
+    pub fn from_cluster_comps(
+        model: &ModelConfig,
+        comp: &ClusterComps,
         split: GroupSplit,
         seq_len: usize,
     ) -> Self {
@@ -203,22 +306,24 @@ impl StageModels {
         // Eq. 1 -> Eqs. 10-11; the S² attention term keeps the paper's
         // n_h·(d_k+d_v) form ("MLA can also be modeled using similar
         // formulations", §3.1).
-        let alpha_a = 4.0 * comp.gemm.alpha + comp.attn.alpha;
-        let beta_a = comp.gemm.beta
+        let alpha_a = 4.0 * comp.gemm_a.alpha + comp.attn.alpha;
+        let beta_a = comp.gemm_a.beta
             * proj_factor(model)
             * (2.0 * s * m * nh * dk + 2.0 * s * m * nh * dv)
             + comp.attn.beta * s * s * nh * (dk + dv);
 
-        // Eq. 2: t_s = 3·N_shared·t_gm(m_a·S·M·H).
+        // Eq. 2: t_s = 3·N_shared·t_gm(m_a·S·M·H). Shared experts are
+        // replicated on the attention-group devices (§3.1), so they run
+        // on the attention pool's GEMM model.
         let (alpha_s, beta_s) = if model.n_shared > 0 {
-            (3.0 * nsh * comp.gemm.alpha, 3.0 * nsh * comp.gemm.beta * s * m * h)
+            (3.0 * nsh * comp.gemm_a.alpha, 3.0 * nsh * comp.gemm_a.beta * s * m * h)
         } else {
             (0.0, 0.0)
         };
 
-        // Eq. 3: t_e = 3·(E/eg)·t_gm(m_e·M·H).
-        let alpha_e = 3.0 * (e / eg) * comp.gemm.alpha;
-        let beta_e = 3.0 * (e / eg) * comp.gemm.beta * m * h;
+        // Eq. 3: t_e = 3·(E/eg)·t_gm(m_e·M·H) on the expert pool.
+        let alpha_e = 3.0 * (e / eg) * comp.gemm_e.alpha;
+        let beta_e = 3.0 * (e / eg) * comp.gemm_e.beta * m * h;
 
         // Eq. 4: z = (E/eg)·m_e·M elements -> bytes.
         let alpha_a2e = comp.comm.alpha;
@@ -416,6 +521,66 @@ mod tests {
         // Shared-expert β shrinks by exactly the S factor.
         assert!((pre.t_s.beta / dec.t_s.beta - 2048.0).abs() < 1e-9 * 2048.0);
         assert_eq!(pre.t_s.alpha, dec.t_s.alpha);
+    }
+
+    #[test]
+    fn for_cluster_single_pool_matches_for_phase_bitwise() {
+        use crate::config::Cluster;
+        for tb in Testbed::all() {
+            let cl = Cluster::single_pool(&tb);
+            for model in [ModelConfig::deepseek_v2(8), ModelConfig::qwen3_moe(12)] {
+                let split = GroupSplit::paper_default(&tb, model.n_shared > 0);
+                for phase in [Phase::Prefill, Phase::Decode { kv_len: 2048 }] {
+                    let a = StageModels::for_phase(&model, &tb, split, 2048, phase);
+                    let b = StageModels::for_cluster(&model, &cl, split, 2048, phase);
+                    assert_eq!(a, b, "{} {phase:?}", tb.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_cluster_routes_coefficients_per_pool() {
+        use crate::config::Cluster;
+        let model = ModelConfig::deepseek_v2(8);
+        let split = GroupSplit::new(3, 5);
+        let cl = Cluster::reference_hetero();
+        let comp = ClusterComps::from_cluster(&cl, split);
+        // Distinct pool silicon => distinct GEMM models.
+        assert_ne!(comp.gemm_a, comp.gemm_e);
+        let sm = StageModels::for_cluster(&model, &cl, split, 2048, Phase::Prefill);
+        // t_a and t_s price on the attention pool, t_e on the expert
+        // pool: verify against single-pool derivations of each spec.
+        let mut attn_only = cl.clone();
+        attn_only.pools[1].gpu = attn_only.pools[0].gpu.clone();
+        let on_attn = StageModels::for_cluster(&model, &attn_only, split, 2048, Phase::Prefill);
+        assert_eq!(sm.t_a, on_attn.t_a);
+        assert_eq!(sm.t_s, on_attn.t_s);
+        assert_ne!(sm.t_e, on_attn.t_e, "expert FFN must price on the expert pool");
+        let mut expert_only = cl.clone();
+        expert_only.pools[0].gpu = expert_only.pools[1].gpu.clone();
+        let on_expert = StageModels::for_cluster(&model, &expert_only, split, 2048, Phase::Prefill);
+        assert_eq!(sm.t_e, on_expert.t_e);
+        assert_ne!(sm.t_a, on_expert.t_a, "attention must price on the attention pool");
+        // Decode KV streaming binds at the attention pool's HBM.
+        let dec =
+            StageModels::for_cluster(&model, &cl, split, 2048, Phase::Decode { kv_len: 4096 });
+        let dec_slow_hbm = {
+            let mut c = cl.clone();
+            c.pools[0].gpu.hbm_bw /= 8.0;
+            StageModels::for_cluster(&model, &c, split, 2048, Phase::Decode { kv_len: 4096 })
+        };
+        assert!(dec_slow_hbm.t_a.beta > dec.t_a.beta);
+        let dec_slow_expert_hbm = {
+            let mut c = cl.clone();
+            c.pools[1].gpu.hbm_bw /= 8.0;
+            StageModels::for_cluster(&model, &c, split, 2048, Phase::Decode { kv_len: 4096 })
+        };
+        assert_eq!(
+            dec_slow_expert_hbm.t_a,
+            dec.t_a,
+            "expert-pool HBM must not touch decode attention"
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 
-use crate::config::Phase;
+use crate::config::{ClusterId, Phase};
 use crate::perfmodel::profile::ProfileId;
 use crate::solver::Solution;
 
@@ -54,7 +54,10 @@ pub fn bucket_up(x: usize) -> usize {
 /// solved against a calibration profile's measured constants must
 /// never be returned for the hand-constant keyspace (or another
 /// profile's), no matter how the shapes coincide — switching profiles
-/// can never alias plans.
+/// can never alias plans. The cluster fingerprint joins the identity
+/// for the same reason again: plans solved under different cluster
+/// shapes (pool counts, device constants, link constants, role wiring)
+/// can never alias, even at identical shapes and profiles.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeKey {
     pub phase: Phase,
@@ -63,15 +66,25 @@ pub struct ShapeKey {
     /// [`ProfileId::HAND`] for the hand-written Table-2 constants,
     /// otherwise the calibration profile's fingerprint.
     pub profile: ProfileId,
+    /// [`ClusterId::SINGLE`] for the legacy single-pool Testbed
+    /// keyspace, otherwise [`crate::config::Cluster::fingerprint`].
+    pub cluster: ClusterId,
 }
 
 impl ShapeKey {
     /// Exact-valued prefill key (serving paths with exact padded
     /// capacities — the coordinator pads to `r1 · m_a` — key on those
     /// directly). Keys the hand-constant keyspace; chain
-    /// [`ShapeKey::with_profile`] for a calibrated one.
+    /// [`ShapeKey::with_profile`] / [`ShapeKey::with_cluster`] for a
+    /// calibrated or cluster-shaped one.
     pub fn prefill(seq: usize, batch: usize) -> Self {
-        Self { phase: Phase::Prefill, seq, batch, profile: ProfileId::HAND }
+        Self {
+            phase: Phase::Prefill,
+            seq,
+            batch,
+            profile: ProfileId::HAND,
+            cluster: ClusterId::SINGLE,
+        }
     }
 
     /// Decode key with the KV length bucketed: the cache stays small
@@ -83,12 +96,19 @@ impl ShapeKey {
             seq: 1,
             batch,
             profile: ProfileId::HAND,
+            cluster: ClusterId::SINGLE,
         }
     }
 
     /// Re-key onto a calibration profile's keyspace.
     pub fn with_profile(mut self, profile: ProfileId) -> Self {
         self.profile = profile;
+        self
+    }
+
+    /// Re-key onto a cluster shape's keyspace.
+    pub fn with_cluster(mut self, cluster: ClusterId) -> Self {
+        self.cluster = cluster;
         self
     }
 }
@@ -184,7 +204,9 @@ impl PlanCache {
     ) -> (Option<Arc<Solution>>, RefineToken) {
         let generation = self.generation_ref();
         let refine = RefineToken { generation: generation.clone() };
-        if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
+        if let Some(cached) =
+            generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key)
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return (cached.clone(), refine);
         }
@@ -192,7 +214,9 @@ impl PlanCache {
         // once, then re-check — a peer may have solved this exact key
         // while we waited for the solve token.
         let token = generation.solve.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(cached) = generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key) {
+        if let Some(cached) =
+            generation.map.read().unwrap_or_else(PoisonError::into_inner).get(&key)
+        {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return (cached.clone(), refine);
         }
@@ -230,7 +254,7 @@ impl PlanCache {
     /// stand in for `key` when its own solve failed or ran over budget.
     ///
     /// A candidate must be solved against the same profile, the same
-    /// phase kind (nearest sequence bucket for prefill, any KV bucket
+    /// cluster shape, the same phase kind (nearest sequence bucket for prefill, any KV bucket
     /// for decode — either way the neighbor differs only in how
     /// attention-heavy its stages are), and a batch capacity **at
     /// least** the requested one — a smaller-batch plan could not
@@ -248,7 +272,11 @@ impl PlanCache {
         let map = generation.map.read().unwrap_or_else(PoisonError::into_inner);
         let mut best: Option<(i64, Arc<Solution>)> = None;
         for (k, v) in map.iter() {
-            if *k == key || k.profile != key.profile || k.batch < key.batch {
+            if *k == key
+                || k.profile != key.profile
+                || k.cluster != key.cluster
+                || k.batch < key.batch
+            {
                 continue;
             }
             let Some(sol) = v else { continue };
@@ -336,6 +364,7 @@ mod tests {
                 seq: 1,
                 batch: 8,
                 profile: ProfileId::HAND,
+                cluster: ClusterId::SINGLE,
             }
         );
     }
@@ -358,6 +387,33 @@ mod tests {
         let _ = cache.get_or_solve(hand_key, || panic!("hand key must hit"));
         let _ = cache.get_or_solve(cal_key, || panic!("calibrated key must hit"));
         assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn clusters_key_separate_plans() {
+        // The cluster fingerprint is part of the key identity exactly
+        // like the profile fingerprint: the same shape solved under
+        // different cluster shapes must be distinct cache entries, so a
+        // plan solved for one pool layout can never serve another.
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let single_key = ShapeKey::prefill(2048, 8);
+        let hetero_key = single_key.with_cluster(ClusterId(0xc1));
+        assert_eq!(single_key.cluster, ClusterId::SINGLE);
+        assert_ne!(single_key, hetero_key);
+        let _ = cache.get_or_solve(single_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 1);
+        let _ = cache.get_or_solve(hetero_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 2, "hetero shape must not hit the single-pool entry");
+        assert_eq!(cache.len(), 2);
+        let _ = cache.get_or_solve(single_key, || panic!("single-pool key must hit"));
+        let _ = cache.get_or_solve(hetero_key, || panic!("hetero key must hit"));
+        assert_eq!(cache.hits(), 2);
+        // Cluster and profile identities compose without aliasing.
+        let both = hetero_key.with_profile(ProfileId(0x5eed));
+        let _ = cache.get_or_solve(both, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
     }
 
     #[test]
@@ -460,6 +516,8 @@ mod tests {
         // decode (and vice versa), and profiles stay isolated.
         assert!(cache.nearest(ShapeKey::prefill(2048, 8)).is_none());
         assert!(cache.nearest(ShapeKey::decode(2048, 8).with_profile(ProfileId(7))).is_none());
+        // ... and cluster shapes stay isolated the same way.
+        assert!(cache.nearest(ShapeKey::decode(2048, 8).with_cluster(ClusterId(7))).is_none());
     }
 
     #[test]
@@ -572,8 +630,8 @@ mod tests {
         let inst = paper_instance();
         let params = SolverParams::default();
         for batch in [2usize, 4, 8] {
-            let _ = cache
-                .get_or_solve(ShapeKey::prefill(2048, batch), || solve_online(&inst, batch, &params));
+            let key = ShapeKey::prefill(2048, batch);
+            let _ = cache.get_or_solve(key, || solve_online(&inst, batch, &params));
         }
         assert_eq!(cache.len(), 3);
         let threads: Vec<_> = (0..4)

@@ -9,14 +9,20 @@
 //! (weights either fit or the split is invalid); the AG check bounds
 //! `r1·m_a`.
 
-use crate::config::{GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
 
-/// Memory occupancy calculator for one (model, testbed, split, S,
-/// phase).
+/// Memory occupancy calculator for one (model, cluster, split, S,
+/// phase). Capacity is accounted per pool: AG devices check against
+/// the attention pool's memory, EG devices against the expert pool's —
+/// on a single-pool cluster both are the same device size and the
+/// model reduces to the original homogeneous accounting bit for bit.
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
     pub model: ModelConfig,
-    pub mem_bytes: usize,
+    /// Device memory per attention-pool GPU.
+    pub ag_mem_bytes: usize,
+    /// Device memory per expert-pool GPU.
+    pub eg_mem_bytes: usize,
     pub split: GroupSplit,
     pub seq_len: usize,
     /// Serving phase: prefill holds `seq_len` KV entries plus the
@@ -40,9 +46,20 @@ impl MemoryModel {
         seq_len: usize,
         phase: Phase,
     ) -> Self {
+        Self::for_cluster(model, &Cluster::single_pool(tb), split, seq_len, phase)
+    }
+
+    pub fn for_cluster(
+        model: &ModelConfig,
+        cl: &Cluster,
+        split: GroupSplit,
+        seq_len: usize,
+        phase: Phase,
+    ) -> Self {
         Self {
             model: model.clone(),
-            mem_bytes: tb.mem_bytes,
+            ag_mem_bytes: cl.attn().gpu.mem_bytes,
+            eg_mem_bytes: cl.expert().gpu.mem_bytes,
             split,
             seq_len,
             phase,
@@ -50,8 +67,12 @@ impl MemoryModel {
         }
     }
 
-    fn usable(&self) -> f64 {
-        self.mem_bytes as f64 * self.usable_frac
+    fn usable_ag(&self) -> f64 {
+        self.ag_mem_bytes as f64 * self.usable_frac
+    }
+
+    fn usable_eg(&self) -> f64 {
+        self.eg_mem_bytes as f64 * self.usable_frac
     }
 
     /// Static weight bytes on each AG device: attention stack + shared
@@ -81,14 +102,16 @@ impl MemoryModel {
         kv + act
     }
 
-    /// Does the EG side fit at all with this split?
+    /// Does the EG side fit at all with this split (checked against the
+    /// expert pool's device memory)?
     pub fn eg_feasible(&self) -> bool {
-        (self.eg_weight_bytes() as f64) < self.usable()
+        (self.eg_weight_bytes() as f64) < self.usable_eg()
     }
 
-    /// Maximum total in-flight samples per AG GPU (`r1·m_a` bound).
+    /// Maximum total in-flight samples per AG GPU (`r1·m_a` bound,
+    /// checked against the attention pool's device memory).
     pub fn max_samples_per_ag_gpu(&self) -> usize {
-        let left = self.usable() - self.ag_weight_bytes() as f64;
+        let left = self.usable_ag() - self.ag_weight_bytes() as f64;
         if left <= 0.0 {
             return 0;
         }
@@ -117,8 +140,42 @@ mod tests {
     fn weights_fit_on_paper_testbeds() {
         let m = mm(2048);
         assert!(m.eg_feasible());
-        assert!((m.ag_weight_bytes() as f64) < m.usable());
+        assert!((m.ag_weight_bytes() as f64) < m.usable_ag());
         assert!(m.max_samples_per_ag_gpu() > 0);
+    }
+
+    #[test]
+    fn per_pool_capacity_is_accounted_per_role() {
+        use crate::config::Cluster;
+        let model = ModelConfig::deepseek_v2(8);
+        // Single-pool reduction is the Testbed path bit for bit.
+        let tb = Testbed::a();
+        let hom = MemoryModel::new(&model, &tb, GroupSplit::new(3, 5), 2048);
+        let cl = MemoryModel::for_cluster(
+            &model,
+            &Cluster::single_pool(&tb),
+            GroupSplit::new(3, 5),
+            2048,
+            Phase::Prefill,
+        );
+        assert_eq!(hom.ag_mem_bytes, cl.ag_mem_bytes);
+        assert_eq!(hom.eg_mem_bytes, cl.eg_mem_bytes);
+        assert_eq!(hom.max_samples_per_ag_gpu(), cl.max_samples_per_ag_gpu());
+        // A big attention pool + tiny expert pool: EG gates on the
+        // expert pool's 24 GB, AG batches on the attention pool's 96 GB.
+        let mut hetero = Cluster::reference_hetero();
+        hetero.pools[1].gpu.mem_bytes = 24 << 30;
+        let m =
+            MemoryModel::for_cluster(&model, &hetero, GroupSplit::new(7, 1), 2048, Phase::Prefill);
+        assert!(!m.eg_feasible(), "160 experts on one 24 GB device must not fit");
+        let m =
+            MemoryModel::for_cluster(&model, &hetero, GroupSplit::new(3, 5), 2048, Phase::Prefill);
+        assert!(m.eg_feasible());
+        let small_ag = MemoryModel::new(&model, &Testbed::b(), GroupSplit::new(3, 5), 2048);
+        assert!(
+            m.max_samples_per_ag_gpu() > small_ag.max_samples_per_ag_gpu(),
+            "96 GB attention pool must batch more than a 24 GB one"
+        );
     }
 
     #[test]

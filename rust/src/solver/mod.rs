@@ -42,6 +42,7 @@ pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, RefineToken, 
 pub use crate::perfmodel::profile::ProfileId;
 pub use memory::MemoryModel;
 pub use splitsearch::{
-    search as search_splits, search_serial as search_splits_serial, SearchParams, SearchReport,
-    SearchStats, SplitCandidate, SplitSolution,
+    carve, enumerate_cluster_candidates, search as search_splits, search_cluster,
+    search_serial as search_splits_serial, throughput_bound_cluster, CarvePlan, SearchParams,
+    SearchReport, SearchStats, SplitCandidate, SplitSolution, TrafficMix,
 };

@@ -43,7 +43,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{GroupSplit, ModelConfig, Testbed};
+use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
 use crate::solver::algorithm1::{
     self, solve_warm, EvalMode, Evaluator, Instance, Solution, SolverParams, WarmStart,
 };
@@ -366,6 +366,313 @@ pub fn search(
     })
 }
 
+/// All placement candidates of a (possibly heterogeneous) cluster in
+/// canonical order. A single-pool cluster delegates to
+/// [`enumerate_candidates`] exactly — same space, same order — so the
+/// compat path stays bit-identical to the testbed search. A multi-pool
+/// cluster sizes each role from its own inventory: `replicas` must
+/// divide both pools (replicas are identical), and within a replica's
+/// share `ag ≤ attn_share`, `eg ≤ expert_share` are *independently*
+/// sized — unlike the homogeneous space, partial use is enumerated,
+/// because shrinking `ag` below the share cuts the M2N fan-out
+/// (`ag / min(ag, eg)`) and can win in comm-bound regimes.
+pub fn enumerate_cluster_candidates(cl: &Cluster, multi_replica: bool) -> Vec<SplitCandidate> {
+    if cl.is_single_pool() {
+        return enumerate_candidates(cl.n_gpus(), multi_replica);
+    }
+    let na = cl.attn().n_gpus;
+    let ne = cl.expert().n_gpus;
+    let mut out = Vec::new();
+    let max_r = if multi_replica { na.min(ne) } else { 1 };
+    for replicas in 1..=max_r.max(1) {
+        if replicas == 0 || na % replicas != 0 || ne % replicas != 0 {
+            continue;
+        }
+        let (pa, pe) = (na / replicas, ne / replicas);
+        if pa < 1 || pe < 1 {
+            continue;
+        }
+        for ag in 1..=pa {
+            for eg in 1..=pe {
+                out.push(SplitCandidate { replicas, split: GroupSplit::new(ag, eg) });
+            }
+        }
+    }
+    out
+}
+
+/// Build the phase-appropriate solver instance for one candidate on a
+/// cluster. (The stage/memory models never read pool *counts*, only
+/// per-device and link constants, so the un-tiled cluster evaluates
+/// identically to `cl.tile(replicas)` — mirroring how
+/// [`instance_testbed`] only adjusts `n_gpus` for bookkeeping.)
+fn cluster_instance(
+    model: &ModelConfig,
+    cl: &Cluster,
+    split: GroupSplit,
+    seq_len: usize,
+    phase: Phase,
+) -> Instance {
+    match phase {
+        Phase::Prefill => Instance::on_cluster(model.clone(), cl.clone(), split, seq_len),
+        Phase::Decode { kv_len } => {
+            Instance::decode_on_cluster(model.clone(), cl.clone(), split, kv_len)
+        }
+    }
+}
+
+/// [`throughput_bound`] generalized to clusters and phases: per-pool
+/// memory feasibility, cluster-derived stage models, and the shared
+/// §4.2 row bound at the largest memory-feasible `m_a`. Admissible for
+/// the capped (goodput) objective too — a latency cap only removes
+/// candidates, never raises a row's throughput.
+pub fn throughput_bound_cluster(
+    model: &ModelConfig,
+    cl: &Cluster,
+    split: GroupSplit,
+    seq_len: usize,
+    phase: Phase,
+    params: &SolverParams,
+) -> f64 {
+    let s = match phase {
+        Phase::Prefill => seq_len,
+        Phase::Decode { .. } => 1,
+    };
+    let mem = MemoryModel::for_cluster(model, cl, split, s, phase);
+    if !mem.eg_feasible() {
+        return 0.0;
+    }
+    let ma_max = mem.max_samples_per_ag_gpu().min(params.ma_cap);
+    if ma_max == 0 {
+        return 0.0;
+    }
+    let sm = crate::perfmodel::StageModels::for_cluster(model, cl, split, s, phase);
+    algorithm1::row_bound(&sm, ma_max, split.ag, s, model.n_layers)
+}
+
+/// Heterogeneity-aware placement search: enumerate
+/// [`enumerate_cluster_candidates`], bound-prune against a running
+/// incumbent, solve survivors through Algorithm 1 (which carries any
+/// [`SolverParams::max_makespan`] latency cap — set it to search for
+/// goodput-under-SLO instead of peak tokens/s), and reduce in canonical
+/// candidate order with strict improvement. On a single-pool cluster
+/// the space, the models, and therefore the winner are exactly the
+/// testbed search's ([`search_serial`] / [`search`]); pinned by
+/// `tests/cluster_equivalence.rs`.
+pub fn search_cluster(
+    model: &ModelConfig,
+    cl: &Cluster,
+    seq_len: usize,
+    phase: Phase,
+    params: &SearchParams,
+) -> Option<SearchReport> {
+    let t0 = Instant::now();
+    let candidates = enumerate_cluster_candidates(cl, params.multi_replica);
+    let bounds: Vec<f64> = candidates
+        .iter()
+        .map(|c| {
+            c.replicas as f64
+                * throughput_bound_cluster(model, cl, c.split, seq_len, phase, &params.solver)
+        })
+        .collect();
+    // Best-bound-first visit order tightens the incumbent early; the
+    // canonical-order reduction below keeps the winner order-free.
+    let mut visit: Vec<usize> = (0..candidates.len()).collect();
+    visit.sort_by(|&a, &b| bounds[b].total_cmp(&bounds[a]).then(a.cmp(&b)));
+
+    let mut pruned = 0usize;
+    let mut infeasible = 0usize;
+    let mut evals = 0usize;
+    let mut row_pruned = 0usize;
+    let mut inc = 0.0f64;
+    let mut ev: Option<Evaluator> = None;
+    let mut solved: Vec<(usize, SplitSolution)> = Vec::new();
+    for &idx in &visit {
+        let candidate = candidates[idx];
+        if bounds[idx] <= 0.0 {
+            infeasible += 1;
+            continue;
+        }
+        if params.prune && bounds[idx] < inc {
+            pruned += 1;
+            continue;
+        }
+        let inst = cluster_instance(model, cl, candidate.split, seq_len, phase);
+        let ev = ev.get_or_insert_with(|| Evaluator::new(&inst));
+        let warm = if params.prune && inc > 0.0 {
+            Some(WarmStart::incumbent(inc / candidate.replicas as f64))
+        } else {
+            None
+        };
+        match solve_warm(&inst, &params.solver, EvalMode::Buffered, ev, warm.as_ref()) {
+            None => {
+                if warm.is_some() {
+                    pruned += 1;
+                } else {
+                    infeasible += 1;
+                }
+            }
+            Some(sol) => {
+                evals += sol.evals;
+                row_pruned += sol.pruned_rows;
+                let total = candidate.replicas as f64 * sol.throughput_tokens;
+                if total > inc {
+                    inc = total;
+                }
+                solved.push((
+                    idx,
+                    SplitSolution { candidate, per_instance: sol, total_throughput: total },
+                ));
+            }
+        }
+    }
+
+    solved.sort_by_key(|(idx, _)| *idx);
+    let mut best: Option<SplitSolution> = None;
+    for (_, s) in &solved {
+        if best.as_ref().map_or(true, |b| s.total_throughput > b.total_throughput) {
+            best = Some(s.clone());
+        }
+    }
+    let stats = SearchStats {
+        candidates: candidates.len(),
+        pruned,
+        infeasible,
+        solved: solved.len(),
+        evals,
+        row_pruned,
+        threads: 1,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+    };
+    best.map(|best| SearchReport {
+        best,
+        evaluated: solved.into_iter().map(|(_, s)| s).collect(),
+        stats,
+    })
+}
+
+/// Traffic mix the carve search balances against: what fraction of the
+/// token demand is prompt (prefill) work, and at what shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficMix {
+    /// Prompt length of prefill batches.
+    pub prefill_seq: usize,
+    /// KV length decode batches run against.
+    pub decode_kv: usize,
+    /// Fraction of total token demand that is prefill (prompt) tokens,
+    /// in [0, 1]. The remainder is decode (generated) tokens.
+    pub prefill_frac: f64,
+}
+
+/// One cluster carve: a disjoint partition of every pool's GPUs into a
+/// prefill-serving partition and a decode-serving partition, each with
+/// its own placement solution.
+#[derive(Debug, Clone)]
+pub struct CarvePlan {
+    /// GPUs of each pool (cluster pool order) assigned to prefill.
+    pub prefill_gpus: Vec<usize>,
+    /// GPUs of each pool assigned to decode (the complement).
+    pub decode_gpus: Vec<usize>,
+    pub prefill: SplitSolution,
+    pub decode: SplitSolution,
+    /// Sustainable total tokens/s at the traffic mix: the largest rate
+    /// `T` with `T·prefill_frac ≤ prefill capacity` and
+    /// `T·(1 − prefill_frac) ≤ decode capacity`.
+    pub goodput: f64,
+    /// Partitions enumerated (diagnostic).
+    pub partitions: usize,
+}
+
+/// A pool-count sub-cluster: same specs and wiring, `counts[i]` GPUs in
+/// pool `i`.
+fn sub_cluster(cl: &Cluster, counts: &[usize]) -> Cluster {
+    let mut c = cl.clone();
+    for (p, &n) in c.pools.iter_mut().zip(counts) {
+        p.n_gpus = n;
+    }
+    c
+}
+
+/// "Given N mixed GPUs and this traffic, carve the cluster": SplitWise-
+/// style phase disaggregation *across* replicas. Enumerates every
+/// disjoint partition of each pool's GPUs into a prefill-heavy and a
+/// decode-heavy side, runs [`search_cluster`] per side at the mix's
+/// shapes, and maximizes the balanced goodput — the token rate at which
+/// neither side falls behind the traffic mix. Strict improvement in
+/// canonical (odometer) partition order keeps the result deterministic.
+pub fn carve(
+    model: &ModelConfig,
+    cl: &Cluster,
+    mix: &TrafficMix,
+    params: &SearchParams,
+) -> Option<CarvePlan> {
+    let caps: Vec<usize> = cl.pools.iter().map(|p| p.n_gpus).collect();
+    // The rate one side supports given its share of the traffic: a
+    // side with no demand never constrains the carve.
+    let rate = |capacity: f64, frac: f64| {
+        if frac <= 0.0 {
+            f64::INFINITY
+        } else {
+            capacity / frac
+        }
+    };
+    let mut best: Option<CarvePlan> = None;
+    let mut partitions = 0usize;
+    let mut alloc = vec![0usize; caps.len()];
+    loop {
+        partitions += 1;
+        let rest: Vec<usize> = caps.iter().zip(&alloc).map(|(c, a)| c - a).collect();
+        let pre_cl = sub_cluster(cl, &alloc);
+        let dec_cl = sub_cluster(cl, &rest);
+        // Both sides need a non-empty attention and expert share to
+        // serve at all; skip the search when one side is bare.
+        let viable = |c: &Cluster| c.attn().n_gpus >= 1 && c.expert().n_gpus >= 1;
+        if viable(&pre_cl) && viable(&dec_cl) {
+            let pre = search_cluster(model, &pre_cl, mix.prefill_seq, Phase::Prefill, params);
+            let dec = search_cluster(
+                model,
+                &dec_cl,
+                1,
+                Phase::Decode { kv_len: mix.decode_kv },
+                params,
+            );
+            if let (Some(pre), Some(dec)) = (pre, dec) {
+                let goodput = rate(pre.best.total_throughput, mix.prefill_frac)
+                    .min(rate(dec.best.total_throughput, 1.0 - mix.prefill_frac));
+                if goodput.is_finite()
+                    && goodput > 0.0
+                    && best.as_ref().map_or(true, |b| goodput > b.goodput)
+                {
+                    best = Some(CarvePlan {
+                        prefill_gpus: alloc.clone(),
+                        decode_gpus: rest,
+                        prefill: pre.best,
+                        decode: dec.best,
+                        goodput,
+                        partitions: 0,
+                    });
+                }
+            }
+        }
+        // Odometer over per-pool allocations.
+        let mut i = 0;
+        loop {
+            if i == alloc.len() {
+                if let Some(b) = &mut best {
+                    b.partitions = partitions;
+                }
+                return best;
+            }
+            if alloc[i] < caps[i] {
+                alloc[i] += 1;
+                break;
+            }
+            alloc[i] = 0;
+            i += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,5 +743,102 @@ mod tests {
         let tb = Testbed::b();
         assert!(search(&model, &tb, 2048, &SearchParams::default()).is_none());
         assert!(search_serial(&model, &tb, 2048, &SearchParams::default()).is_none());
+    }
+
+    #[test]
+    fn cluster_enumeration_delegates_for_single_pool() {
+        let cl = Cluster::single_pool(&Testbed::a());
+        assert_eq!(enumerate_cluster_candidates(&cl, true), enumerate_candidates(8, true));
+        assert_eq!(enumerate_cluster_candidates(&cl, false), enumerate_candidates(8, false));
+    }
+
+    #[test]
+    fn cluster_enumeration_sizes_roles_independently() {
+        let cl = Cluster::reference_hetero(); // 4 attn + 12 expert
+        let c = enumerate_cluster_candidates(&cl, true);
+        // r=1: 4·12, r=2: 2·6, r=4: 1·3 (r=3 does not divide 4).
+        assert_eq!(c.len(), 48 + 12 + 3);
+        // Canonical: replicas ascending, then ag, then eg.
+        assert_eq!(c[0], SplitCandidate { replicas: 1, split: GroupSplit::new(1, 1) });
+        assert_eq!(c[47], SplitCandidate { replicas: 1, split: GroupSplit::new(4, 12) });
+        assert_eq!(c[48], SplitCandidate { replicas: 2, split: GroupSplit::new(1, 1) });
+        for cand in &c {
+            assert!(cand.replicas * cand.split.ag <= 4);
+            assert!(cand.replicas * cand.split.eg <= 12);
+        }
+        assert_eq!(enumerate_cluster_candidates(&cl, false).len(), 48);
+    }
+
+    #[test]
+    fn single_pool_cluster_search_matches_testbed_search_bitwise() {
+        let (model, tb) = case();
+        let params = SearchParams::default();
+        let serial = search_serial(&model, &tb, 2048, &params).unwrap();
+        let report =
+            search_cluster(&model, &Cluster::single_pool(&tb), 2048, Phase::Prefill, &params)
+                .unwrap();
+        assert_eq!(report.best.candidate, serial.candidate);
+        assert_eq!(report.best.per_instance.config, serial.per_instance.config);
+        assert_eq!(
+            report.best.total_throughput.to_bits(),
+            serial.total_throughput.to_bits(),
+            "single-pool cluster search must be the testbed search bit for bit"
+        );
+    }
+
+    #[test]
+    fn hetero_cluster_search_finds_feasible_winner() {
+        let model = ModelConfig::deepseek_v2(4);
+        let cl = Cluster::reference_hetero();
+        let report = search_cluster(&model, &cl, 2048, Phase::Prefill, &SearchParams::default())
+            .expect("feasible");
+        let c = report.best.candidate;
+        assert!(report.best.total_throughput > 0.0);
+        assert!(c.replicas * c.split.ag <= cl.attn().n_gpus);
+        assert!(c.replicas * c.split.eg <= cl.expert().n_gpus);
+        // Bounds dominate on the cluster space too.
+        for s in &report.evaluated {
+            let b = s.candidate.replicas as f64
+                * throughput_bound_cluster(
+                    &model,
+                    &cl,
+                    s.candidate.split,
+                    2048,
+                    Phase::Prefill,
+                    &SearchParams::default().solver,
+                );
+            assert!(b >= s.total_throughput, "bound < achieved on {}", s.candidate.describe());
+        }
+        // Decode-phase search works on the same space.
+        let dec =
+            search_cluster(&model, &cl, 1, Phase::Decode { kv_len: 2048 }, &SearchParams::default())
+                .expect("decode feasible");
+        assert!(dec.best.total_throughput > 0.0);
+    }
+
+    #[test]
+    fn carve_partitions_sum_to_inventory_and_balance_the_mix() {
+        let model = ModelConfig::deepseek_v2(4);
+        let cl = Cluster::single_pool(&Testbed::a());
+        let mix = TrafficMix { prefill_seq: 2048, decode_kv: 2048, prefill_frac: 0.5 };
+        let plan = carve(&model, &cl, &mix, &SearchParams::default()).expect("carvable");
+        assert_eq!(plan.prefill_gpus.len(), 1);
+        assert_eq!(plan.prefill_gpus[0] + plan.decode_gpus[0], 8);
+        assert!(plan.prefill_gpus[0] >= 2 && plan.decode_gpus[0] >= 2);
+        assert!(plan.goodput > 0.0);
+        assert!(plan.partitions > 0);
+        // The balanced goodput is exactly the binding side's rate.
+        let pre_rate = plan.prefill.total_throughput / 0.5;
+        let dec_rate = plan.decode.total_throughput / 0.5;
+        assert_eq!(plan.goodput, pre_rate.min(dec_rate));
+        // A different mix re-balances: the carve stays a full disjoint
+        // partition and its goodput is still the binding side's rate.
+        let heavy = TrafficMix { prefill_frac: 0.9, ..mix };
+        let hp = carve(&model, &cl, &heavy, &SearchParams::default()).unwrap();
+        assert_eq!(hp.prefill_gpus[0] + hp.decode_gpus[0], 8);
+        let pre_rate = hp.prefill.total_throughput / 0.9;
+        // (1.0 - 0.9) rather than 0.1: mirror carve's arithmetic exactly.
+        let dec_rate = hp.decode.total_throughput / (1.0 - 0.9);
+        assert_eq!(hp.goodput, pre_rate.min(dec_rate));
     }
 }

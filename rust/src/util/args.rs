@@ -2,8 +2,26 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional args, and
 //! subcommands, with auto-generated `--help`.
+//!
+//! Options declare a value type ([`Spec::opt`] for strings,
+//! [`Spec::opt_uint`] / [`Spec::opt_float`] for numbers) and every
+//! value — defaults included — is validated once, up front, in
+//! [`Spec::parse`]: a malformed `--seq abc` fails the invocation with
+//! an error naming the flag and carrying the usage text, instead of
+//! panicking later inside a typed getter mid-command. The typed
+//! getters on [`Parsed`] read the already-validated values; the only
+//! way they can panic is reading a key the spec never declared with
+//! that type — a programmer error, not user input.
 
 use std::collections::{BTreeMap, BTreeSet};
+
+/// Value type a declared option must parse as (checked at parse time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArgKind {
+    Str,
+    UInt,
+    Float,
+}
 
 /// One declared option.
 #[derive(Debug, Clone)]
@@ -12,6 +30,7 @@ struct Opt {
     help: &'static str,
     takes_value: bool,
     default: Option<String>,
+    kind: ArgKind,
 }
 
 /// Declarative argument specification for one (sub)command.
@@ -29,19 +48,53 @@ impl Spec {
 
     /// Declare a boolean `--flag`.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self.opts.push(Opt { name, help, takes_value: false, default: None, kind: ArgKind::Str });
         self
     }
 
-    /// Declare a `--key <value>` option with a default.
+    /// Declare a `--key <value>` string option with a default.
     pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, takes_value: true, default: Some(default.into()) });
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.into()),
+            kind: ArgKind::Str,
+        });
+        self
+    }
+
+    /// Declare a `--key <n>` non-negative-integer option with a
+    /// default; its value is validated at parse time and read with
+    /// [`Parsed::get_usize`] / [`Parsed::get_u64`].
+    pub fn opt_uint(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.into()),
+            kind: ArgKind::UInt,
+        });
+        self
+    }
+
+    /// Declare a `--key <x>` finite-number option with a default; its
+    /// value is validated at parse time and read with
+    /// [`Parsed::get_f64`].
+    pub fn opt_float(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.into()),
+            kind: ArgKind::Float,
+        });
         self
     }
 
     /// Declare a required `--key <value>` option.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(Opt { name, help, takes_value: true, default: None });
+        self.opts.push(Opt { name, help, takes_value: true, default: None, kind: ArgKind::Str });
         self
     }
 
@@ -114,7 +167,42 @@ impl Spec {
                 return Err(format!("missing required --{}\n\n{}", o.name, self.usage()));
             }
         }
-        Ok(Parsed { values, set_keys, flags, positional })
+        // Up-front type validation: every numeric option's value —
+        // user-supplied or default — must parse, so the typed getters
+        // below never see a malformed string.
+        let mut uints: BTreeMap<String, u64> = BTreeMap::new();
+        let mut floats: BTreeMap<String, f64> = BTreeMap::new();
+        for o in &self.opts {
+            let Some(v) = values.get(o.name) else { continue };
+            match o.kind {
+                ArgKind::Str => {}
+                ArgKind::UInt => {
+                    let n = v.parse::<u64>().map_err(|_| {
+                        format!(
+                            "--{} must be a non-negative integer, got '{v}'\n\n{}",
+                            o.name,
+                            self.usage()
+                        )
+                    })?;
+                    uints.insert(o.name.to_string(), n);
+                }
+                ArgKind::Float => {
+                    let x = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|x| x.is_finite())
+                        .ok_or_else(|| {
+                            format!(
+                                "--{} must be a finite number, got '{v}'\n\n{}",
+                                o.name,
+                                self.usage()
+                            )
+                        })?;
+                    floats.insert(o.name.to_string(), x);
+                }
+            }
+        }
+        Ok(Parsed { values, uints, floats, set_keys, flags, positional })
     }
 }
 
@@ -122,6 +210,10 @@ impl Spec {
 #[derive(Debug, Default)]
 pub struct Parsed {
     values: BTreeMap<String, String>,
+    /// Parse-time-validated values of `opt_uint` options.
+    uints: BTreeMap<String, u64>,
+    /// Parse-time-validated values of `opt_float` options.
+    floats: BTreeMap<String, f64>,
     set_keys: BTreeSet<String>,
     flags: Vec<String>,
     pub positional: Vec<String>,
@@ -132,16 +224,30 @@ impl Parsed {
         self.values.get(key).map(|s| s.as_str()).unwrap_or("")
     }
 
+    /// Validated integer value of an [`Spec::opt_uint`] option. Panics
+    /// only when `key` was never declared as an integer option — a
+    /// spec bug, unreachable from user input (malformed values already
+    /// failed [`Spec::parse`]).
     pub fn get_usize(&self, key: &str) -> usize {
-        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+        self.get_u64(key) as usize
     }
 
+    /// See [`Parsed::get_usize`].
     pub fn get_u64(&self, key: &str) -> u64 {
-        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+        *self
+            .uints
+            .get(key)
+            .unwrap_or_else(|| panic!("--{key} was not declared with opt_uint (spec bug)"))
     }
 
+    /// Validated float value of an [`Spec::opt_float`] option. Panics
+    /// only when `key` was never declared as a float option — a spec
+    /// bug, unreachable from user input.
     pub fn get_f64(&self, key: &str) -> f64 {
-        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+        *self
+            .floats
+            .get(key)
+            .unwrap_or_else(|| panic!("--{key} was not declared with opt_float (spec bug)"))
     }
 
     pub fn has_flag(&self, key: &str) -> bool {
@@ -162,7 +268,8 @@ mod tests {
     fn spec() -> Spec {
         Spec::new("test", "a test command")
             .opt("model", "tiny", "model preset")
-            .opt("steps", "10", "number of steps")
+            .opt_uint("steps", "10", "number of steps")
+            .opt_float("rate", "1.5", "a rate")
             .flag("verbose", "chatty output")
             .req("out", "output path")
     }
@@ -176,6 +283,8 @@ mod tests {
         let p = spec().parse(&sv(&["--out", "x.json", "--steps", "25"])).unwrap();
         assert_eq!(p.get("model"), "tiny");
         assert_eq!(p.get_usize("steps"), 25);
+        assert_eq!(p.get_u64("steps"), 25);
+        assert_eq!(p.get_f64("rate"), 1.5, "float default validated and readable");
         assert_eq!(p.get("out"), "x.json");
         assert!(!p.has_flag("verbose"));
         assert!(p.was_set("steps"));
@@ -209,5 +318,37 @@ mod tests {
     #[test]
     fn flag_with_value_errors() {
         assert!(spec().parse(&sv(&["--out", "x", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn malformed_numbers_fail_at_parse_with_usage() {
+        // A bad integer fails the whole invocation, names the flag,
+        // and carries the usage text — no panic, no getter involved.
+        let err = spec().parse(&sv(&["--out", "x", "--steps", "abc"])).unwrap_err();
+        assert!(err.contains("--steps"), "error must name the flag: {err}");
+        assert!(err.contains("non-negative integer"));
+        assert!(err.contains("model preset"), "error must carry the usage text");
+        // Negative integers are rejected for uint options.
+        assert!(spec().parse(&sv(&["--out", "x", "--steps", "-3"])).is_err());
+        // Bad and non-finite floats are rejected too.
+        let err = spec().parse(&sv(&["--out", "x", "--rate", "fast"])).unwrap_err();
+        assert!(err.contains("--rate") && err.contains("finite number"));
+        assert!(spec().parse(&sv(&["--out", "x", "--rate", "NaN"])).is_err());
+        assert!(spec().parse(&sv(&["--out", "x", "--rate=inf"])).is_err());
+        // Equals syntax validates identically.
+        assert!(spec().parse(&sv(&["--out", "x", "--steps=1.5"])).is_err());
+        // And a well-formed value still parses.
+        let p = spec().parse(&sv(&["--out", "x", "--steps=42", "--rate=-0.25"])).unwrap();
+        assert_eq!(p.get_usize("steps"), 42);
+        assert_eq!(p.get_f64("rate"), -0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "spec bug")]
+    fn numeric_getter_on_string_option_is_a_spec_bug() {
+        // `model` is declared as a string: reading it numerically is a
+        // programmer error and panics regardless of the value.
+        let p = spec().parse(&sv(&["--out", "x"])).unwrap();
+        let _ = p.get_usize("model");
     }
 }

@@ -1,0 +1,194 @@
+//! The Testbed → Cluster refactor's correctness oracle: every Table-2
+//! testbed, expressed as a one-pool [`Cluster`], must be bit-identical
+//! to the legacy homogeneous path across every paper instance and both
+//! serving phases — stage-model coefficients, Algorithm-1 solutions,
+//! and split-search winners. The cluster code performs literally the
+//! same f64 arithmetic when both DEP roles share one pool; these tests
+//! pin that, so the heterogeneous generalization can never drift the
+//! Table-2 reproductions.
+
+use findep::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use findep::perfmodel::StageModels;
+use findep::solver::{
+    self, enumerate_cluster_candidates, search_cluster, search_splits_serial, Instance,
+    SearchParams, SolverParams, SplitSolution,
+};
+
+/// The 8 paper instances: every Table-2 testbed × both model families,
+/// at the §5.4 layer counts the testbed's memory admits.
+fn paper_instances() -> Vec<(ModelConfig, Testbed)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for deepseek in [true, false] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            out.push((model, tb.clone()));
+        }
+    }
+    out
+}
+
+fn phases() -> [Phase; 2] {
+    [Phase::Prefill, Phase::Decode { kv_len: 2048 }]
+}
+
+#[test]
+fn stage_models_bit_identical_on_every_paper_instance() {
+    // The Testbed-typed derivation (CompModels::from_testbed) against
+    // the per-pool derivation (ClusterComps::from_cluster) on the
+    // single-pool embedding: every α/β coefficient, k_tokens included,
+    // must be equal — the solver stack consumes nothing else.
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        for phase in phases() {
+            let hand = StageModels::for_phase(&model, &tb, split, 2048, phase);
+            let pool = StageModels::for_cluster(&model, &cl, split, 2048, phase);
+            assert_eq!(hand, pool, "{} on {} {phase:?}", model.name, tb.name);
+        }
+    }
+}
+
+#[test]
+fn solves_bit_identical_on_every_paper_instance_and_phase() {
+    // End to end through Algorithm 1: the compat constructors
+    // (Instance::new / Instance::decode) against explicit single-pool
+    // cluster instances. Same winning config, same throughput and
+    // makespan to the last bit, same feasibility verdicts.
+    let params = SolverParams::default();
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        for phase in phases() {
+            let (legacy, cluster) = match phase {
+                Phase::Prefill => (
+                    Instance::new(model.clone(), tb.clone(), split, 2048),
+                    Instance::on_cluster(model.clone(), cl.clone(), split, 2048),
+                ),
+                Phase::Decode { kv_len } => (
+                    Instance::decode(model.clone(), tb.clone(), split, kv_len),
+                    Instance::decode_on_cluster(model.clone(), cl.clone(), split, kv_len),
+                ),
+            };
+            match (solver::solve(&legacy, &params), solver::solve(&cluster, &params)) {
+                (Some(a), Some(b)) => {
+                    let tag = format!("{} on {} {phase:?}", model.name, tb.name);
+                    assert_eq!(a.config, b.config, "{tag}");
+                    assert_eq!(
+                        a.throughput_tokens.to_bits(),
+                        b.throughput_tokens.to_bits(),
+                        "{tag}"
+                    );
+                    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}");
+                }
+                (None, None) => {}
+                (a, b) => panic!(
+                    "feasibility drift on {} / {} {phase:?}: legacy={} cluster={}",
+                    model.name,
+                    tb.name,
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_search_winner_identical_to_testbed_search() {
+    // The cluster placement search on a one-pool cluster must be the
+    // testbed split search, winner for winner: same candidate space,
+    // same canonical order, same strict-improvement reduction — via two
+    // different code routes (serial cold sweep vs pruned incremental).
+    let params = SearchParams::default();
+    for (model, tb) in paper_instances() {
+        let serial = search_splits_serial(&model, &tb, 2048, &params);
+        let report = search_cluster(
+            &model,
+            &Cluster::single_pool(&tb),
+            2048,
+            Phase::Prefill,
+            &params,
+        );
+        match (serial, report) {
+            (Some(s), Some(r)) => {
+                let tag = format!("{} on {}", model.name, tb.name);
+                assert_eq!(s.candidate, r.best.candidate, "{tag}");
+                assert_eq!(s.per_instance.config, r.best.per_instance.config, "{tag}");
+                assert_eq!(
+                    s.total_throughput.to_bits(),
+                    r.best.total_throughput.to_bits(),
+                    "{tag}"
+                );
+            }
+            (None, None) => {}
+            (s, r) => panic!(
+                "search feasibility drift on {} / {}: serial={} cluster={}",
+                model.name,
+                tb.name,
+                s.is_some(),
+                r.is_some()
+            ),
+        }
+    }
+}
+
+#[test]
+fn decode_search_matches_exhaustive_reference_sweep() {
+    // The legacy search layer never had a decode entry; oracle the
+    // cluster search's decode phase against a hand-rolled exhaustive
+    // sweep of the same candidate space with cold per-candidate solves.
+    let params = SearchParams::default();
+    let kv = 2048usize;
+    for (model, tb) in [
+        (ModelConfig::deepseek_v2(8), Testbed::a()),
+        (ModelConfig::qwen3_moe(12), Testbed::c()),
+    ] {
+        let cl = Cluster::single_pool(&tb);
+        let mut reference: Option<SplitSolution> = None;
+        for candidate in enumerate_cluster_candidates(&cl, params.multi_replica) {
+            let inst =
+                Instance::decode_on_cluster(model.clone(), cl.clone(), candidate.split, kv);
+            let Some(sol) = solver::solve(&inst, &params.solver) else { continue };
+            let total = candidate.replicas as f64 * sol.throughput_tokens;
+            if reference.as_ref().map_or(true, |b| total > b.total_throughput) {
+                reference =
+                    Some(SplitSolution { candidate, per_instance: sol, total_throughput: total });
+            }
+        }
+        let reference = reference.expect("decode reference sweep must be feasible");
+        let report = search_cluster(&model, &cl, 1, Phase::Decode { kv_len: kv }, &params)
+            .expect("decode search must be feasible");
+        let tag = format!("{} on {}", model.name, tb.name);
+        assert_eq!(reference.candidate, report.best.candidate, "{tag}");
+        assert_eq!(
+            reference.per_instance.config, report.best.per_instance.config,
+            "{tag}"
+        );
+        assert_eq!(
+            reference.total_throughput.to_bits(),
+            report.best.total_throughput.to_bits(),
+            "{tag}"
+        );
+    }
+}
+
+#[test]
+fn cluster_registry_reaches_every_table2_testbed() {
+    // `Cluster::by_name` must expose each Table-2 letter as the same
+    // single-pool cluster `Cluster::single_pool` constructs, identity
+    // (fingerprint) included — the CLI's `--cluster A` and the legacy
+    // `--testbed A` must be the same hardware.
+    for tb in Testbed::all() {
+        let letter = &tb.name[..1];
+        let named = Cluster::by_name(letter).expect("registry must know every Table-2 letter");
+        let direct = Cluster::single_pool(&tb);
+        assert!(named.is_single_pool());
+        assert_eq!(named.fingerprint(), direct.fingerprint(), "{}", tb.name);
+        assert_eq!(named.n_gpus(), tb.n_gpus);
+    }
+}

@@ -322,6 +322,33 @@ fn fault_free_single_worker_stack_is_fifo_and_inert() {
 }
 
 #[test]
+fn serving_records_ttft_and_tpot_for_slo_grading() {
+    use findep::coordinator::slo::SloPolicy;
+    let stack = sim_stack(1, 4, 2, FaultPlan::default());
+    // Six autoregressive requests, two output tokens each: one prefill
+    // pass (the first token — TTFT) plus two decode passes (one TPOT
+    // sample per generated token).
+    for i in 0..6u64 {
+        stack.core.submit(EmbeddedRequest::synthetic_autoregressive(i, 2, 2, 2)).unwrap();
+    }
+    let (resps, fails) = stack.finish(6);
+    assert!(fails.is_empty());
+    assert_eq!(resps.len(), 6);
+    let m = &stack.metrics;
+    assert_eq!(m.histogram_count("ttft"), 6, "one TTFT sample per request");
+    assert_eq!(m.histogram_count("tpot"), 12, "one TPOT sample per decode pass");
+    // The recorded distributions are exactly what an SLO policy grades.
+    let loose = SloPolicy::new(Some(3600.0), Some(3600.0), 99.0).evaluate(m);
+    assert_eq!(loose.ttft_met, Some(true));
+    assert_eq!(loose.tpot_met, Some(true));
+    assert!(loose.met());
+    assert_eq!(loose.attainment(m), 1.0, "every sample under an hour-long target");
+    let tight = SloPolicy::new(Some(0.0), None, 50.0).evaluate(m);
+    assert_eq!(tight.ttft_met, Some(false), "a zero-latency target cannot hold");
+    assert!(!tight.met());
+}
+
+#[test]
 fn expired_requests_fail_fast_without_touching_a_replica() {
     // Serve closure panics if ever invoked: an expired request must be
     // failed at assembly, before any replica lease.

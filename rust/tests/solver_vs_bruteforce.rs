@@ -42,7 +42,7 @@ fn algorithm1_matches_bruteforce_optimum() {
                     sol.throughput_tokens,
                     btput,
                     inst.model.name,
-                    inst.testbed.name,
+                    inst.cluster.name,
                     inst.seq_len,
                     sol.config,
                     bcfg
@@ -52,7 +52,7 @@ fn algorithm1_matches_bruteforce_optimum() {
             (b, s) => panic!(
                 "feasibility disagreement on {} {}: brute={} alg1={}",
                 inst.model.name,
-                inst.testbed.name,
+                inst.cluster.name,
                 b.is_some(),
                 s.is_some()
             ),
@@ -71,7 +71,7 @@ fn solver_is_subsecond_everywhere() {
                 "solver took {:.3}s on {} {}",
                 sol.solve_seconds,
                 inst.model.name,
-                inst.testbed.name
+                inst.cluster.name
             );
         }
     }
@@ -101,7 +101,7 @@ fn online_solver_matches_online_bruteforce() {
             sol.throughput_tokens,
             best,
             inst.model.name,
-            inst.testbed.name
+            inst.cluster.name
         );
         assert_eq!(sol.config.m_a * sol.config.r1, batch);
     }
