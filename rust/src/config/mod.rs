@@ -2,6 +2,8 @@
 
 pub mod cluster;
 pub mod model;
+pub mod placement;
 
 pub use cluster::{Cluster, ClusterId, GpuPool, GpuSpec, GroupSplit, M2nModel, Testbed};
 pub use model::{AttentionKind, ModelConfig, Phase};
+pub use placement::{ExpertLoad, ExpertLoadSampler, ExpertPlacement, LoadProfile, PlacementId};

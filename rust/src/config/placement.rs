@@ -1,0 +1,603 @@
+//! First-class expert placement and per-expert load.
+//!
+//! The paper's cost model assumes near-uniform gating: every expert
+//! shard serves `E/eg` experts and receives `(E/eg)·m_e` tokens per
+//! fine-grained part (Eqs. 3-4). Production MoE traffic is Zipf-skewed,
+//! so the max-loaded shard — not the average one — sets the expert-stage
+//! duration. This module makes both halves of that assumption explicit:
+//!
+//! * [`ExpertLoad`] — per-expert token shares, stored *relative to
+//!   uniform* (`rel_e = p_e·E`, mean exactly 1). Uniform traffic is the
+//!   all-ones vector, so per-shard sums of uniform load are exact small
+//!   integers in f64 and the legacy closed forms are reproduced bit for
+//!   bit (the foundation of `tests/placement_equivalence.rs` and the
+//!   exact-tie gate in `benches/expert_skew.rs`).
+//! * [`ExpertPlacement`] — which experts live on which expert-pool
+//!   shard, with a per-expert replication factor `c_e ≥ 1`. The
+//!   [`ExpertPlacement::uniform`] kind *is* the legacy idealized
+//!   assumption (fractional `E/eg` balance, one replica each); explicit
+//!   placements price the real max-loaded shard.
+//!
+//! The stage models consume two scalars from a placement:
+//! `alpha_shard_experts()` (kernel launches per part — how many expert
+//! FFNs the busiest shard runs) and `beta_shard_load(load)` (the
+//! max-shard work factor `F = max_d Σ_{e∈d} rel_e/c_e`, replacing the
+//! uniform `E/eg`). Replicating a hot expert divides its load across
+//! its `c_e` hosts, which is exactly the lever "Fast MoE Inference via
+//! Predictive Prefetching and Expert Replication" pulls; the solver
+//! trades the extra HBM (accounted by `MemoryModel`) for a smaller `F`.
+
+use crate::util::rng::Rng;
+
+/// Structural fingerprint of an [`ExpertPlacement`] — the plan-cache
+/// discriminator, exactly parallel to `ProfileId`/`ClusterId`. The
+/// canonical uniform placement is the reserved [`PlacementId::UNIFORM`];
+/// every explicit placement hashes its shard lists (FNV-1a), with 0
+/// remapped so no explicit placement can alias the uniform slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PlacementId(pub u64);
+
+impl PlacementId {
+    /// The idealized uniform placement every legacy code path assumes.
+    pub const UNIFORM: PlacementId = PlacementId(0);
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(h: &mut u64, word: u64) {
+    for b in word.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// Per-expert token shares, relative to uniform: `rel_e = p_e·E` where
+/// `p_e` is the probability a routed assignment lands on expert `e`.
+/// The vector always sums to `E` (mean 1); uniform traffic is exactly
+/// `[1.0; E]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertLoad {
+    rel: Vec<f64>,
+}
+
+impl ExpertLoad {
+    /// Uniform gating: every expert receives the mean share, exactly.
+    pub fn uniform(n_experts: usize) -> Self {
+        assert!(n_experts > 0, "ExpertLoad over zero experts");
+        Self { rel: vec![1.0; n_experts] }
+    }
+
+    /// Zipf-skewed gating: expert `e` (hottest first) receives share
+    /// `∝ 1/(e+1)^s`. `s = 0` reduces to [`ExpertLoad::uniform`]
+    /// exactly. A temperature-flattened Zipf `(1/(e+1)^s)^{1/τ}` is the
+    /// same family at effective exponent `s/τ` — see
+    /// [`LoadProfile::Zipf`].
+    pub fn zipf(n_experts: usize, s: f64) -> Self {
+        let weights: Vec<f64> = (0..n_experts).map(|e| ((e + 1) as f64).powf(-s)).collect();
+        Self::from_weights(&weights)
+    }
+
+    /// Normalize arbitrary non-negative weights (e.g. a router's EWMA
+    /// popularity histogram) into relative loads. An all-zero histogram
+    /// (nothing observed yet) is uniform.
+    pub fn from_weights(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "ExpertLoad over zero experts");
+        let n = weights.len();
+        let sum: f64 = weights.iter().sum();
+        if sum <= 0.0 {
+            return Self::uniform(n);
+        }
+        Self { rel: weights.iter().map(|&w| w * n as f64 / sum).collect() }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.rel.len()
+    }
+
+    /// Relative load of expert `e` (1 = the uniform mean).
+    pub fn rel(&self, e: usize) -> f64 {
+        self.rel[e]
+    }
+
+    pub fn rels(&self) -> &[f64] {
+        &self.rel
+    }
+
+    /// Probability share of expert `e` (`rel_e / E`).
+    pub fn share(&self, e: usize) -> f64 {
+        self.rel[e] / self.rel.len() as f64
+    }
+
+    /// Exactly the all-ones vector — the pinned special case that keeps
+    /// legacy arithmetic bit-identical.
+    pub fn is_uniform(&self) -> bool {
+        self.rel.iter().all(|&r| r == 1.0)
+    }
+
+    /// Hottest expert's relative load — 1.0 for uniform traffic, the
+    /// headline skew statistic otherwise.
+    pub fn max_rel(&self) -> f64 {
+        self.rel.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// L∞ distance between two load vectors in relative-load units
+    /// (so a threshold of e.g. 0.5 means "some expert's share drifted
+    /// by half the uniform mean"). The server's re-solve trigger.
+    pub fn linf_drift(&self, other: &ExpertLoad) -> f64 {
+        assert_eq!(self.rel.len(), other.rel.len(), "load drift across expert counts");
+        self.rel
+            .iter()
+            .zip(&other.rel)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Precompute a categorical sampler over experts (CDF + binary
+    /// search; allocation-free per draw after this setup).
+    pub fn sampler(&self) -> ExpertLoadSampler {
+        let mut cdf = Vec::with_capacity(self.rel.len());
+        let mut acc = 0.0;
+        for &r in &self.rel {
+            acc += r;
+            cdf.push(acc);
+        }
+        ExpertLoadSampler { cdf }
+    }
+
+    /// Monte-Carlo per-part load factors for the simulator: route
+    /// `tokens_per_part` assignments per fine-grained part through this
+    /// load, and return each part's realized max-shard work divided by
+    /// the placement's *expected* max-shard work (mean ≈ 1, so a factor
+    /// multiplies the analytic `m_e` without re-deriving coefficients).
+    /// Seeded and deterministic; one counts buffer reused across parts.
+    pub fn sample_part_factors(
+        &self,
+        placement: &ExpertPlacement,
+        tokens_per_part: usize,
+        n_parts: usize,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        assert_eq!(placement.n_experts(), self.rel.len());
+        assert!(tokens_per_part > 0, "empty fine-grained part");
+        let sampler = self.sampler();
+        let expected =
+            tokens_per_part as f64 * placement.beta_shard_load(self) / self.rel.len() as f64;
+        let mut counts = vec![0.0f64; self.rel.len()];
+        let mut out = Vec::with_capacity(n_parts);
+        for _ in 0..n_parts {
+            counts.iter_mut().for_each(|c| *c = 0.0);
+            for _ in 0..tokens_per_part {
+                counts[sampler.sample(rng)] += 1.0;
+            }
+            out.push(placement.shard_work(&counts) / expected);
+        }
+        out
+    }
+}
+
+/// Reusable categorical sampler built by [`ExpertLoad::sampler`].
+#[derive(Debug, Clone)]
+pub struct ExpertLoadSampler {
+    cdf: Vec<f64>,
+}
+
+impl ExpertLoadSampler {
+    /// Draw one expert index (binary search on the CDF; no allocation).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let total = *self.cdf.last().expect("empty sampler");
+        let u = rng.f64() * total;
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).expect("NaN in load CDF")) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Declarative gating-skew family carried by configs and workloads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadProfile {
+    /// The paper's near-uniform gating assumption.
+    Uniform,
+    /// Zipf exponent `s` flattened by temperature `temp`: share of the
+    /// rank-`e` expert `∝ (1/(e+1)^s)^{1/temp}`, i.e. effective
+    /// exponent `s/temp`. `temp = 1` is plain Zipf; `temp → ∞` is
+    /// uniform.
+    Zipf { s: f64, temp: f64 },
+}
+
+impl LoadProfile {
+    pub fn zipf(s: f64) -> Self {
+        LoadProfile::Zipf { s, temp: 1.0 }
+    }
+
+    /// Materialize the per-expert load vector.
+    pub fn load(&self, n_experts: usize) -> ExpertLoad {
+        match *self {
+            LoadProfile::Uniform => ExpertLoad::uniform(n_experts),
+            LoadProfile::Zipf { s, temp } => ExpertLoad::zipf(n_experts, s / temp),
+        }
+    }
+}
+
+/// Expert → expert-GPU assignment with per-expert replication.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertPlacement {
+    n_experts: usize,
+    n_shards: usize,
+    kind: PlacementKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum PlacementKind {
+    /// The legacy idealized assumption: experts spread perfectly evenly
+    /// (fractionally — `E/eg` per shard even when `eg ∤ E`), one
+    /// replica each, uniform token balance. Not a concrete assignment;
+    /// its model factors are the literal `E/eg` expressions of Eqs. 3-4
+    /// so every legacy coefficient reproduces bit for bit.
+    Uniform,
+    /// A concrete assignment: `shards[d]` lists the experts hosted on
+    /// shard `d` (each appearing once per shard, ids ascending);
+    /// `replicas[e]` counts the shards hosting expert `e` (≥ 1).
+    Explicit { shards: Vec<Vec<u32>>, replicas: Vec<u32> },
+}
+
+impl ExpertPlacement {
+    /// The idealized uniform placement (see [`PlacementKind::Uniform`]).
+    pub fn uniform(n_experts: usize, n_shards: usize) -> Self {
+        assert!(n_experts > 0 && n_shards > 0, "degenerate placement");
+        Self { n_experts, n_shards, kind: PlacementKind::Uniform }
+    }
+
+    /// A concrete unreplicated placement: contiguous blocks of
+    /// `⌈E/eg⌉` experts per shard — the honest "what uniform sharding
+    /// actually does" baseline that skewed traffic is priced against.
+    pub fn blocked(n_experts: usize, n_shards: usize) -> Self {
+        assert!(n_experts > 0 && n_shards > 0, "degenerate placement");
+        let per = n_experts.div_ceil(n_shards);
+        let shards: Vec<Vec<u32>> = (0..n_shards)
+            .map(|d| {
+                let lo = (d * per).min(n_experts);
+                let hi = ((d + 1) * per).min(n_experts);
+                (lo..hi).map(|e| e as u32).collect()
+            })
+            .collect();
+        Self::from_shards(n_experts, shards)
+    }
+
+    /// Greedy skew-aware placement: hand `extra_slots` replica slots to
+    /// the experts with the highest per-replica load (capped at one
+    /// replica per shard), then assign all replica instances to shards
+    /// LPT-style (heaviest first onto the least-loaded shard not
+    /// already hosting that expert). Deterministic; ties break to the
+    /// lowest expert / shard id.
+    pub fn replicate_hot(load: &ExpertLoad, n_shards: usize, extra_slots: usize) -> Self {
+        let n_experts = load.n_experts();
+        assert!(n_shards > 0, "degenerate placement");
+        let mut c = vec![1u32; n_experts];
+        for _ in 0..extra_slots {
+            let mut best: Option<usize> = None;
+            for e in 0..n_experts {
+                if (c[e] as usize) >= n_shards {
+                    continue;
+                }
+                let gain = load.rel(e) / c[e] as f64;
+                if best.map_or(true, |b| gain > load.rel(b) / c[b] as f64) {
+                    best = Some(e);
+                }
+            }
+            match best {
+                Some(e) => c[e] += 1,
+                None => break, // every expert already everywhere
+            }
+        }
+        // LPT over replica instances.
+        let mut items: Vec<(usize, f64)> = (0..n_experts)
+            .flat_map(|e| {
+                let w = load.rel(e) / c[e] as f64;
+                std::iter::repeat((e, w)).take(c[e] as usize)
+            })
+            .collect();
+        items.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut shards: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+        let mut shard_load = vec![0.0f64; n_shards];
+        for (e, w) in items {
+            let mut dst: Option<usize> = None;
+            for d in 0..n_shards {
+                if shards[d].contains(&(e as u32)) {
+                    continue;
+                }
+                if dst.map_or(true, |b| shard_load[d] < shard_load[b]) {
+                    dst = Some(d);
+                }
+            }
+            let d = dst.expect("c_e capped at n_shards, a free shard must exist");
+            shards[d].push(e as u32);
+            shard_load[d] += w;
+        }
+        for s in &mut shards {
+            s.sort_unstable();
+        }
+        Self::from_shards(n_experts, shards)
+    }
+
+    /// Build an explicit placement from per-shard expert lists.
+    pub fn from_shards(n_experts: usize, mut shards: Vec<Vec<u32>>) -> Self {
+        assert!(n_experts > 0 && !shards.is_empty(), "degenerate placement");
+        let n_shards = shards.len();
+        let mut replicas = vec![0u32; n_experts];
+        for s in &mut shards {
+            s.sort_unstable();
+            for w in s.windows(2) {
+                assert!(w[0] != w[1], "expert {} twice on one shard", w[0]);
+            }
+            for &e in s.iter() {
+                assert!((e as usize) < n_experts, "expert id {e} out of range");
+                replicas[e as usize] += 1;
+            }
+        }
+        for (e, &r) in replicas.iter().enumerate() {
+            assert!(r >= 1, "expert {e} hosted nowhere");
+        }
+        Self { n_experts, n_shards, kind: PlacementKind::Explicit { shards, replicas } }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Is this the idealized uniform placement (the legacy model)?
+    pub fn is_uniform(&self) -> bool {
+        matches!(self.kind, PlacementKind::Uniform)
+    }
+
+    /// Replica count of expert `e` (1 under the uniform assumption).
+    pub fn replica_count(&self, e: usize) -> usize {
+        assert!(e < self.n_experts);
+        match &self.kind {
+            PlacementKind::Uniform => 1,
+            PlacementKind::Explicit { replicas, .. } => replicas[e] as usize,
+        }
+    }
+
+    /// Total expert slots across all shards (`E` plus replication).
+    pub fn total_slots(&self) -> usize {
+        match &self.kind {
+            PlacementKind::Uniform => self.n_experts,
+            PlacementKind::Explicit { shards, .. } => shards.iter().map(Vec::len).sum(),
+        }
+    }
+
+    /// Expert slots on the fullest shard — what `MemoryModel` charges
+    /// weight bytes for. Uniform: `⌈E/eg⌉`, the legacy accounting.
+    pub fn max_shard_slots(&self) -> usize {
+        match &self.kind {
+            PlacementKind::Uniform => self.n_experts.div_ceil(self.n_shards),
+            PlacementKind::Explicit { shards, .. } => {
+                shards.iter().map(Vec::len).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Expert kernels the busiest shard launches per fine-grained part
+    /// — the α multiplier of Eq. 3. The uniform kind keeps the paper's
+    /// fractional `E/eg` so legacy coefficients reproduce bit for bit.
+    pub fn alpha_shard_experts(&self) -> f64 {
+        match &self.kind {
+            PlacementKind::Uniform => self.n_experts as f64 / self.n_shards as f64,
+            PlacementKind::Explicit { .. } => self.max_shard_slots() as f64,
+        }
+    }
+
+    /// Max-shard work factor `F = max_d Σ_{e∈d} rel_e/c_e` — the β
+    /// multiplier of Eqs. 3-4, replacing the uniform `E/eg`. Always
+    /// `≥ E/eg` (the mean shard), with equality at perfect balance; a
+    /// replicated hot expert contributes `rel_e/c_e` per host. The
+    /// uniform kind returns the literal `E/eg` regardless of `load` —
+    /// it *is* the legacy idealized assumption.
+    pub fn beta_shard_load(&self, load: &ExpertLoad) -> f64 {
+        assert_eq!(load.n_experts(), self.n_experts, "load/placement expert count mismatch");
+        match &self.kind {
+            PlacementKind::Uniform => self.n_experts as f64 / self.n_shards as f64,
+            PlacementKind::Explicit { shards, replicas } => shards
+                .iter()
+                .map(|s| {
+                    s.iter().map(|&e| load.rel(e as usize) / replicas[e as usize] as f64).sum()
+                })
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Max-shard work for a *realized* per-expert count vector (the
+    /// simulator's per-part draw): `max_d Σ_{e∈d} counts_e/c_e`. The
+    /// uniform kind prices its implied contiguous-block layout.
+    pub fn shard_work(&self, counts: &[f64]) -> f64 {
+        assert_eq!(counts.len(), self.n_experts);
+        match &self.kind {
+            PlacementKind::Uniform => {
+                let per = self.n_experts.div_ceil(self.n_shards);
+                counts
+                    .chunks(per)
+                    .map(|c| c.iter().sum())
+                    .fold(0.0, f64::max)
+            }
+            PlacementKind::Explicit { shards, replicas } => shards
+                .iter()
+                .map(|s| {
+                    s.iter().map(|&e| counts[e as usize] / replicas[e as usize] as f64).sum()
+                })
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Plan-cache fingerprint (see [`PlacementId`]).
+    pub fn fingerprint(&self) -> PlacementId {
+        match &self.kind {
+            PlacementKind::Uniform => PlacementId::UNIFORM,
+            PlacementKind::Explicit { shards, .. } => {
+                let mut h = FNV_OFFSET;
+                fnv1a(&mut h, self.n_experts as u64);
+                fnv1a(&mut h, self.n_shards as u64);
+                for s in shards {
+                    fnv1a(&mut h, 0xffff_ffff_ffff_ffff); // shard delimiter
+                    for &e in s {
+                        fnv1a(&mut h, e as u64);
+                    }
+                }
+                PlacementId(if h == 0 { 1 } else { h })
+            }
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match &self.kind {
+            PlacementKind::Uniform => {
+                format!("uniform {}x{} (E/eg={:.2})", self.n_experts, self.n_shards,
+                    self.alpha_shard_experts())
+            }
+            PlacementKind::Explicit { shards, replicas } => {
+                let extra: usize = replicas.iter().map(|&c| c as usize - 1).sum();
+                format!(
+                    "explicit {}x{} (+{} replicas, max {} slots/shard, {} shards)",
+                    self.n_experts,
+                    self.n_shards,
+                    extra,
+                    shards.iter().map(Vec::len).max().unwrap_or(0),
+                    shards.len()
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_factors_are_the_legacy_closed_form() {
+        let p = ExpertPlacement::uniform(160, 5);
+        assert!(p.is_uniform());
+        assert_eq!(p.alpha_shard_experts().to_bits(), (160.0f64 / 5.0).to_bits());
+        let load = ExpertLoad::uniform(160);
+        assert_eq!(p.beta_shard_load(&load).to_bits(), (160.0f64 / 5.0).to_bits());
+        // Even under skew the uniform kind keeps the idealized factor:
+        // it *is* the legacy assumption, not an honest evaluation.
+        let skew = ExpertLoad::zipf(160, 1.5);
+        assert_eq!(p.beta_shard_load(&skew).to_bits(), (160.0f64 / 5.0).to_bits());
+        assert_eq!(p.max_shard_slots(), 32);
+        assert_eq!(p.fingerprint(), PlacementId::UNIFORM);
+    }
+
+    #[test]
+    fn blocked_under_uniform_load_matches_uniform_exactly() {
+        // 32 relative loads of exactly 1.0 sum to the exact integer
+        // 32.0 == 160/5 — the bit-identity that powers the bench's
+        // exact-tie gate on paper splits where eg | E.
+        let p = ExpertPlacement::blocked(160, 5);
+        let load = ExpertLoad::uniform(160);
+        assert_eq!(p.beta_shard_load(&load).to_bits(), (160.0f64 / 5.0).to_bits());
+        assert_eq!(p.max_shard_slots(), 32);
+        assert_eq!(p.total_slots(), 160);
+        assert_ne!(p.fingerprint(), PlacementId::UNIFORM);
+    }
+
+    #[test]
+    fn zipf_load_shape() {
+        let l = ExpertLoad::zipf(64, 1.2);
+        // Rank-frequency monotone, mean 1, hottest well above the mean.
+        for e in 1..64 {
+            assert!(l.rel(e) <= l.rel(e - 1));
+        }
+        let sum: f64 = (0..64).map(|e| l.rel(e)).sum();
+        assert!((sum - 64.0).abs() < 1e-9);
+        assert!(l.max_rel() > 4.0);
+        assert!(!l.is_uniform());
+        // s = 0 is uniform, bit for bit.
+        assert_eq!(ExpertLoad::zipf(64, 0.0), ExpertLoad::uniform(64));
+        assert!(ExpertLoad::zipf(64, 0.0).is_uniform());
+        // Temperature flattens toward uniform.
+        let flat = LoadProfile::Zipf { s: 1.2, temp: 4.0 }.load(64);
+        assert!(flat.max_rel() < l.max_rel());
+    }
+
+    #[test]
+    fn replication_strictly_reduces_max_shard_load_under_skew() {
+        let load = ExpertLoad::zipf(160, 1.5);
+        let flat = ExpertPlacement::replicate_hot(&load, 5, 0);
+        let repl = ExpertPlacement::replicate_hot(&load, 5, 8);
+        let floor = 160.0 / 5.0;
+        let f0 = flat.beta_shard_load(&load);
+        let f8 = repl.beta_shard_load(&load);
+        // The hottest expert alone (rel ≈ 64) exceeds the mean shard,
+        // so no unreplicated placement can reach the floor — and
+        // replication must strictly improve on it.
+        assert!(f0 > floor + 1.0, "unreplicated max shard {f0} vs floor {floor}");
+        assert!(f8 < f0, "replication must reduce the max shard: {f8} vs {f0}");
+        assert!(f8 >= floor - 1e-9, "below the perfect-balance floor");
+        assert_eq!(repl.total_slots(), 168);
+        assert!(repl.replica_count(0) > 1, "hottest expert must be replicated");
+    }
+
+    #[test]
+    fn replicate_hot_is_deterministic_and_valid() {
+        let load = ExpertLoad::zipf(96, 1.1);
+        let a = ExpertPlacement::replicate_hot(&load, 4, 6);
+        let b = ExpertPlacement::replicate_hot(&load, 4, 6);
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Every expert hosted, replica counts consistent with shards.
+        let hosted: usize = (0..96).map(|e| a.replica_count(e)).sum();
+        assert_eq!(hosted, a.total_slots());
+        assert_eq!(a.total_slots(), 96 + 6);
+        // Replication cannot exceed one copy per shard.
+        let every = ExpertPlacement::replicate_hot(&load, 2, 10_000);
+        assert_eq!(every.total_slots(), 96 * 2);
+    }
+
+    #[test]
+    fn fingerprints_do_not_alias() {
+        let load = ExpertLoad::zipf(160, 1.5);
+        let a = ExpertPlacement::blocked(160, 5);
+        let b = ExpertPlacement::replicate_hot(&load, 5, 4);
+        let c = ExpertPlacement::replicate_hot(&load, 5, 5);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(b.fingerprint(), c.fingerprint());
+        for p in [&a, &b, &c] {
+            assert_ne!(p.fingerprint(), PlacementId::UNIFORM);
+        }
+    }
+
+    #[test]
+    fn part_factor_sampling_is_seeded_and_centered() {
+        let load = ExpertLoad::zipf(64, 1.0);
+        let p = ExpertPlacement::replicate_hot(&load, 4, 4);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = load.sample_part_factors(&p, 512, 32, &mut r1);
+        let b = load.sample_part_factors(&p, 512, 32, &mut r2);
+        assert_eq!(a, b, "same seed, same factors");
+        let mean: f64 = a.iter().sum::<f64>() / a.len() as f64;
+        assert!((mean - 1.0).abs() < 0.25, "factors center near 1, got {mean}");
+        assert!(a.iter().all(|&f| f > 0.0 && f.is_finite()));
+    }
+
+    #[test]
+    fn shard_work_prices_realized_counts() {
+        let p = ExpertPlacement::blocked(8, 2);
+        // Shard 0 hosts 0..4, shard 1 hosts 4..8.
+        let mut counts = vec![0.0; 8];
+        counts[0] = 10.0;
+        counts[7] = 4.0;
+        assert_eq!(p.shard_work(&counts), 10.0);
+        // A replica of expert 0 on both shards halves its contribution.
+        let two = ExpertPlacement::from_shards(
+            8,
+            vec![vec![0, 1, 2, 3], vec![0, 4, 5, 6, 7]],
+        );
+        assert_eq!(two.shard_work(&counts), 9.0); // 5 + 4 on shard 1
+    }
+}

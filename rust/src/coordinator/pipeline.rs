@@ -22,6 +22,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -29,7 +30,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::links::{Link, LinkDelay, Payload};
 use crate::coordinator::moe::ModelHandle;
-use crate::coordinator::router::{self, ExpertGroup, Routing};
+use crate::coordinator::router::{self, ExpertGroup, ExpertStats, Routing};
 use crate::runtime::tensor::Tensor;
 use crate::sched::Order;
 
@@ -132,6 +133,11 @@ pub struct Pipeline {
     done_rx: Receiver<(usize, Tensor)>, // (chunk, combined hidden)
     workers: Vec<JoinHandle<()>>,
     collector: Option<JoinHandle<()>>,
+    /// EWMA of observed per-expert routing shares, fed by every routed
+    /// layer-chunk of [`Pipeline::forward`]. Shared (`Arc`) so the
+    /// coordinator's drift-driven placement re-solve reads the same
+    /// histogram the data plane writes.
+    expert_stats: Arc<Mutex<ExpertStats>>,
 }
 
 impl Pipeline {
@@ -193,11 +199,26 @@ impl Pipeline {
             );
         }
 
-        Ok(Pipeline { model, eg, a2e, collect_tx, done_rx, workers, collector: Some(collector) })
+        let expert_stats = Arc::new(Mutex::new(ExpertStats::new(model.model.n_experts, 0.1)));
+        Ok(Pipeline {
+            model,
+            eg,
+            a2e,
+            collect_tx,
+            done_rx,
+            workers,
+            collector: Some(collector),
+            expert_stats,
+        })
     }
 
     pub fn model(&self) -> &ModelHandle {
         &self.model
+    }
+
+    /// The shared observed expert-popularity histogram (see the field).
+    pub fn expert_stats(&self) -> &Arc<Mutex<ExpertStats>> {
+        &self.expert_stats
     }
 
     /// Run one forward pass over `batch` `[B, S, M]` with B = r1·m_a.
@@ -257,7 +278,11 @@ impl Pipeline {
                 let (probs, idx) = self.model.gate(layer, &x)?;
                 stats.gate += t0.elapsed().as_secs_f64();
 
-                let routing = router::route(&probs, &idx, self.model.model.n_experts);
+                let routing = router::route(&probs, &idx, self.model.model.n_experts)?;
+                self.expert_stats
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .observe(&routing);
                 let parts = routing.split_parts(cfg.r2);
 
                 self.collect_tx

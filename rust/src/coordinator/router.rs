@@ -3,10 +3,11 @@
 //! half of the MoE layer that the paper's EG confinement property
 //! (§2.2) relies on.
 
+use crate::config::ExpertLoad;
 use crate::runtime::tensor::{Tensor, TensorI32};
 
 /// Tokens routed to one expert.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExpertGroup {
     pub expert: usize,
     /// Row indices into the flattened token tensor.
@@ -16,16 +17,48 @@ pub struct ExpertGroup {
 }
 
 /// Routing decision for a token block: per-expert groups.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Routing {
     pub groups: Vec<ExpertGroup>,
     pub n_tokens: usize,
     pub top_k: usize,
 }
 
+/// A gate emitted an expert index outside `[0, n_experts)` — a
+/// corrupted or mis-configured gate output. Promoted from a
+/// `debug_assert!` so release serving surfaces the fault as a typed
+/// pipeline error instead of an out-of-bounds panic (or, worse,
+/// silently mis-bucketed tokens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpertIndexError {
+    /// Token row in the flattened gate output.
+    pub token: usize,
+    /// Top-k slot within the token's row.
+    pub slot: usize,
+    /// The offending raw index (may be negative).
+    pub expert: i64,
+    pub n_experts: usize,
+}
+
+impl std::fmt::Display for ExpertIndexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "gate routed token {} (slot {}) to expert {} but the model has {} experts",
+            self.token, self.slot, self.expert, self.n_experts
+        )
+    }
+}
+
+impl std::error::Error for ExpertIndexError {}
+
 /// Build per-expert token groups from gate outputs.
 /// `probs`, `idx`: [N, top_k].
-pub fn route(probs: &Tensor, idx: &TensorI32, n_experts: usize) -> Routing {
+pub fn route(
+    probs: &Tensor,
+    idx: &TensorI32,
+    n_experts: usize,
+) -> Result<Routing, ExpertIndexError> {
     let n = probs.shape[0];
     let k = probs.shape[1];
     let mut groups: Vec<ExpertGroup> = (0..n_experts)
@@ -33,14 +66,22 @@ pub fn route(probs: &Tensor, idx: &TensorI32, n_experts: usize) -> Routing {
         .collect();
     for t in 0..n {
         for j in 0..k {
-            let e = idx.data[t * k + j] as usize;
-            debug_assert!(e < n_experts, "expert index out of range");
+            let raw = idx.data[t * k + j];
+            if raw < 0 || raw as usize >= n_experts {
+                return Err(ExpertIndexError {
+                    token: t,
+                    slot: j,
+                    expert: raw as i64,
+                    n_experts,
+                });
+            }
+            let e = raw as usize;
             groups[e].token_ids.push(t as u32);
             groups[e].weights.push(probs.data[t * k + j]);
         }
     }
     groups.retain(|g| !g.token_ids.is_empty());
-    Routing { groups, n_tokens: n, top_k: k }
+    Ok(Routing { groups, n_tokens: n, top_k: k })
 }
 
 impl Routing {
@@ -56,37 +97,117 @@ impl Routing {
     /// each part keeps only the group slices whose tokens fall in its
     /// range, so parts are disjoint and their union is the original
     /// routing.
+    /// Single pass over the assignments: each token lands in part
+    /// `t / per` directly (`O(assignments + parts)` instead of the old
+    /// per-part rescan of every group, `O(parts · assignments)`).
+    /// Output is identical to the rescan — groups appear in original
+    /// group order (first-occurrence order under an outer group loop),
+    /// tokens keep their within-group order, empty groups are dropped,
+    /// and tokens `>= n_tokens` fall in no part (the legacy ranges were
+    /// all capped at `n_tokens`). Pinned by
+    /// `split_parts_matches_quadratic_reference`.
     pub fn split_parts(&self, parts: usize) -> Vec<Routing> {
         let parts = parts.clamp(1, self.n_tokens.max(1));
         let per = self.n_tokens.div_ceil(parts);
-        (0..parts)
-            .map(|p| {
-                let lo = (p * per) as u32;
-                let hi = (((p + 1) * per).min(self.n_tokens)) as u32;
-                let groups: Vec<ExpertGroup> = self
-                    .groups
-                    .iter()
-                    .filter_map(|g| {
-                        let sel: Vec<usize> = g
-                            .token_ids
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, &t)| t >= lo && t < hi)
-                            .map(|(i, _)| i)
-                            .collect();
-                        if sel.is_empty() {
-                            return None;
-                        }
-                        Some(ExpertGroup {
-                            expert: g.expert,
-                            token_ids: sel.iter().map(|&i| g.token_ids[i]).collect(),
-                            weights: sel.iter().map(|&i| g.weights[i]).collect(),
-                        })
-                    })
-                    .collect();
-                Routing { groups, n_tokens: self.n_tokens, top_k: self.top_k }
-            })
-            .collect()
+        let mut out: Vec<Routing> = (0..parts)
+            .map(|_| Routing { groups: Vec::new(), n_tokens: self.n_tokens, top_k: self.top_k })
+            .collect();
+        // Generation-stamped slot map: gen[p] names the last source
+        // group that opened a destination group in part p, slot[p] its
+        // position there — no per-group reset of either array.
+        let mut gen: Vec<u32> = vec![u32::MAX; parts];
+        let mut slot: Vec<u32> = vec![0; parts];
+        for (gi, g) in self.groups.iter().enumerate() {
+            for (i, &t) in g.token_ids.iter().enumerate() {
+                let t_us = t as usize;
+                if t_us >= self.n_tokens {
+                    continue;
+                }
+                let p = t_us / per;
+                if gen[p] != gi as u32 {
+                    gen[p] = gi as u32;
+                    out[p].groups.push(ExpertGroup {
+                        expert: g.expert,
+                        token_ids: Vec::new(),
+                        weights: Vec::new(),
+                    });
+                    slot[p] = (out[p].groups.len() - 1) as u32;
+                }
+                let dst = &mut out[p].groups[slot[p] as usize];
+                dst.token_ids.push(t);
+                dst.weights.push(g.weights[i]);
+            }
+        }
+        out
+    }
+}
+
+/// Online EWMA of the per-expert share of routed assignments — the
+/// observed counterpart of a workload's [`ExpertLoad`]. The serving
+/// loop feeds every routed batch in; the coordinator compares the
+/// observed load against the profile its current placement was solved
+/// for and re-solves when the drift crosses a threshold.
+#[derive(Debug, Clone)]
+pub struct ExpertStats {
+    /// EWMA of each expert's share of assignments (sums to ~1).
+    ewma: Vec<f64>,
+    /// Scratch counts, reused across batches (allocation-free observe).
+    counts: Vec<f64>,
+    alpha: f64,
+    batches: u64,
+}
+
+impl ExpertStats {
+    /// `alpha` is the EWMA weight of the newest batch (0 < alpha <= 1).
+    pub fn new(n_experts: usize, alpha: f64) -> Self {
+        assert!(n_experts > 0, "ExpertStats over zero experts");
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha out of (0, 1]");
+        Self { ewma: vec![0.0; n_experts], counts: vec![0.0; n_experts], alpha, batches: 0 }
+    }
+
+    /// Fold one routed batch into the histogram. The first batch seeds
+    /// the EWMA directly; empty routings are ignored.
+    pub fn observe(&mut self, routing: &Routing) {
+        let total = routing.total_assignments();
+        if total == 0 {
+            return;
+        }
+        self.counts.iter_mut().for_each(|c| *c = 0.0);
+        for g in &routing.groups {
+            self.counts[g.expert] += g.token_ids.len() as f64;
+        }
+        let inv = 1.0 / total as f64;
+        if self.batches == 0 {
+            for (w, &c) in self.ewma.iter_mut().zip(&self.counts) {
+                *w = c * inv;
+            }
+        } else {
+            let a = self.alpha;
+            for (w, &c) in self.ewma.iter_mut().zip(&self.counts) {
+                *w = (1.0 - a) * *w + a * (c * inv);
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Batches folded in so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Observed relative load (mean 1.0); uniform until the first
+    /// batch has been observed.
+    pub fn observed_load(&self) -> ExpertLoad {
+        if self.batches == 0 {
+            ExpertLoad::uniform(self.ewma.len())
+        } else {
+            ExpertLoad::from_weights(&self.ewma)
+        }
+    }
+
+    /// Hottest expert's relative load — exactly 1.0 when balanced.
+    pub fn skew(&self) -> f64 {
+        self.observed_load().max_rel()
     }
 }
 
@@ -136,11 +257,46 @@ mod tests {
         )
     }
 
+    /// The pre-optimization quadratic `split_parts` (verbatim), kept as
+    /// the regression oracle for the single-pass rewrite.
+    fn split_parts_reference(r: &Routing, parts: usize) -> Vec<Routing> {
+        let parts = parts.clamp(1, r.n_tokens.max(1));
+        let per = r.n_tokens.div_ceil(parts);
+        (0..parts)
+            .map(|p| {
+                let lo = (p * per) as u32;
+                let hi = (((p + 1) * per).min(r.n_tokens)) as u32;
+                let groups: Vec<ExpertGroup> = r
+                    .groups
+                    .iter()
+                    .filter_map(|g| {
+                        let sel: Vec<usize> = g
+                            .token_ids
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &t)| t >= lo && t < hi)
+                            .map(|(i, _)| i)
+                            .collect();
+                        if sel.is_empty() {
+                            return None;
+                        }
+                        Some(ExpertGroup {
+                            expert: g.expert,
+                            token_ids: sel.iter().map(|&i| g.token_ids[i]).collect(),
+                            weights: sel.iter().map(|&i| g.weights[i]).collect(),
+                        })
+                    })
+                    .collect();
+                Routing { groups, n_tokens: r.n_tokens, top_k: r.top_k }
+            })
+            .collect()
+    }
+
     #[test]
     fn routing_conserves_assignments() {
         let mut rng = Rng::new(3);
         let (p, i) = mk_gate(&mut rng, 32, 8, 2);
-        let r = route(&p, &i, 8);
+        let r = route(&p, &i, 8).expect("valid gate");
         assert_eq!(r.total_assignments(), 32 * 2);
         for g in &r.groups {
             assert!(!g.token_ids.is_empty());
@@ -152,7 +308,7 @@ mod tests {
     fn split_parts_partition_tokens() {
         let mut rng = Rng::new(5);
         let (p, i) = mk_gate(&mut rng, 33, 8, 2);
-        let r = route(&p, &i, 8);
+        let r = route(&p, &i, 8).expect("valid gate");
         for parts in [1usize, 2, 3, 5] {
             let split = r.split_parts(parts);
             let total: usize = split.iter().map(|s| s.total_assignments()).sum();
@@ -182,7 +338,7 @@ mod tests {
                 vec![n, m],
                 (0..n * m).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect(),
             );
-            let r = route(&p, &i, e);
+            let r = route(&p, &i, e).expect("valid gate");
             let mut acc = Tensor::zeros(vec![n, m]);
             for g in &r.groups {
                 let xg = pack(&x, g);
@@ -199,9 +355,107 @@ mod tests {
     fn split_respects_part_count_bounds() {
         let mut rng = Rng::new(9);
         let (p, i) = mk_gate(&mut rng, 4, 4, 1);
-        let r = route(&p, &i, 4);
+        let r = route(&p, &i, 4).expect("valid gate");
         // More parts than tokens clamps to token count.
         let split = r.split_parts(100);
         assert!(split.len() <= 4);
+    }
+
+    #[test]
+    fn split_parts_matches_quadratic_reference() {
+        // Random routings from the real gate path.
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let n = 1 + rng.usize_below(64);
+            let e = 2 + rng.usize_below(10);
+            let k = 1 + rng.usize_below(2.min(e));
+            let (p, i) = mk_gate(&mut rng, n, e, k);
+            let r = route(&p, &i, e).expect("valid gate");
+            for parts in [1usize, 2, 3, 7, n, n + 5] {
+                assert_eq!(
+                    r.split_parts(parts),
+                    split_parts_reference(&r, parts),
+                    "n={n} e={e} k={k} parts={parts}"
+                );
+            }
+        }
+        // Hand-built adversarial routing: non-ascending token ids,
+        // duplicate tokens across groups, and a token >= n_tokens
+        // (which the legacy capped ranges silently drop).
+        let r = Routing {
+            groups: vec![
+                ExpertGroup {
+                    expert: 3,
+                    token_ids: vec![5, 1, 9, 1],
+                    weights: vec![0.1, 0.2, 0.3, 0.4],
+                },
+                ExpertGroup { expert: 0, token_ids: vec![2, 8], weights: vec![0.5, 0.6] },
+                ExpertGroup { expert: 7, token_ids: vec![12, 0], weights: vec![0.7, 0.8] },
+            ],
+            n_tokens: 10,
+            top_k: 1,
+        };
+        for parts in [1usize, 2, 3, 4, 10] {
+            assert_eq!(r.split_parts(parts), split_parts_reference(&r, parts), "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn route_rejects_out_of_range_expert() {
+        let probs = Tensor::new(vec![2, 2], vec![0.5, 0.5, 0.5, 0.5]);
+        let idx = TensorI32 { shape: vec![2, 2], data: vec![0, 1, 3, 2] };
+        // Index 3 with only 3 experts is fine; with 3 experts, 3 is out.
+        let err = route(&probs, &idx, 3).expect_err("index 3 of 3 experts");
+        assert_eq!(err, ExpertIndexError { token: 1, slot: 0, expert: 3, n_experts: 3 });
+        assert!(err.to_string().contains("expert 3"));
+        // Negative indices are rejected, not wrapped.
+        let neg = TensorI32 { shape: vec![2, 2], data: vec![0, 1, -1, 2] };
+        let err = route(&probs, &neg, 4).expect_err("negative index");
+        assert_eq!(err.expert, -1);
+        // A valid gate still routes.
+        assert!(route(&probs, &idx, 4).is_ok());
+    }
+
+    #[test]
+    fn expert_stats_track_observed_skew() {
+        let mut stats = ExpertStats::new(4, 0.2);
+        // Before any batch: uniform, skew exactly 1.
+        assert!(stats.observed_load().is_uniform());
+        assert_eq!(stats.skew(), 1.0);
+        // A skewed routing: expert 0 takes 3 of 4 assignments.
+        let hot = Routing {
+            groups: vec![
+                ExpertGroup {
+                    expert: 0,
+                    token_ids: vec![0, 1, 2],
+                    weights: vec![1.0, 1.0, 1.0],
+                },
+                ExpertGroup { expert: 2, token_ids: vec![3], weights: vec![1.0] },
+            ],
+            n_tokens: 4,
+            top_k: 1,
+        };
+        stats.observe(&hot);
+        assert_eq!(stats.batches(), 1);
+        // First batch seeds the EWMA directly: rel_0 = 0.75·4 = 3.
+        let load = stats.observed_load();
+        assert!((load.rel(0) - 3.0).abs() < 1e-12);
+        assert!((stats.skew() - 3.0).abs() < 1e-12);
+        // A balanced routing pulls the EWMA back toward uniform.
+        let flat = Routing {
+            groups: (0..4)
+                .map(|e| ExpertGroup { expert: e, token_ids: vec![e as u32], weights: vec![1.0] })
+                .collect(),
+            n_tokens: 4,
+            top_k: 1,
+        };
+        let before = stats.skew();
+        for _ in 0..50 {
+            stats.observe(&flat);
+        }
+        assert!(stats.skew() < before);
+        assert!((stats.skew() - 1.0).abs() < 0.01, "skew {}", stats.skew());
+        // Drift against the seeded load is measurable.
+        assert!(ExpertLoad::uniform(4).linf_drift(&stats.observed_load()) < 0.05);
     }
 }

@@ -28,10 +28,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{Cluster, ClusterId, GroupSplit, Phase, Testbed};
+use crate::config::{
+    Cluster, ClusterId, ExpertLoad, ExpertPlacement, GroupSplit, Phase, PlacementId, Testbed,
+};
 use crate::coordinator::faults::{FaultAction, FaultPlan};
 use crate::coordinator::links::LinkDelay;
 use crate::coordinator::moe::ModelHandle;
+use crate::coordinator::router::{ExpertStats, Routing};
 use crate::coordinator::slo::SloPolicy;
 use crate::coordinator::pipeline::{ExecConfig, ForwardStats, Pipeline};
 use crate::metrics::Registry;
@@ -232,6 +235,27 @@ pub struct Server {
     /// otherwise) — plans solved under different pool shapes can never
     /// alias.
     plan_cluster_id: ClusterId,
+    /// The expert→EG-shard placement the Adaptive planner prices expert
+    /// stages and expert-pool memory under. Defaults to the uniform
+    /// placement (bit-identical to the legacy uniform-expert pricing);
+    /// swapped via [`Server::set_expert_placement`] or the drift-driven
+    /// [`Server::resolve_placement_if_drifted`]. Private: it must move
+    /// together with `plan_load` and `plan_placement_id`.
+    plan_placement: ExpertPlacement,
+    /// The per-expert relative load `plan_placement` was solved for —
+    /// the baseline that routed-traffic drift is measured against.
+    plan_load: ExpertLoad,
+    /// Cache-key identity of `plan_placement`
+    /// ([`PlacementId::UNIFORM`] for the default) — plans priced under
+    /// different placements can never alias.
+    plan_placement_id: PlacementId,
+    /// EWMA histogram of observed per-expert routing shares — shared
+    /// with the pipeline, whose forward pass feeds every routed
+    /// layer-chunk in; [`Server::observe_routing`] folds in external
+    /// routings (e.g. the simulator's), and
+    /// [`Server::resolve_placement_if_drifted`] compares the histogram
+    /// to `plan_load`.
+    expert_stats: Arc<Mutex<ExpertStats>>,
     /// Optional TTFT/TPOT targets: when set, prefill/decode plan
     /// solves carry the matching target as Algorithm 1's
     /// `max_makespan` cap, so the planner optimizes goodput-under-SLO
@@ -302,12 +326,18 @@ impl Server {
         let plan_cluster = Cluster::single_pool(&plan_testbed);
         let plan_split = GroupSplit::new(1, eg);
         let pipeline = Pipeline::new(model, eg, link_delay)?;
+        let n_experts = pipeline.model().model.n_experts;
+        let expert_stats = Arc::clone(pipeline.expert_stats());
         Ok(Server {
             pipeline,
             metrics,
             plan_testbed,
             plan_cluster,
             plan_cluster_id: ClusterId::SINGLE,
+            plan_placement: ExpertPlacement::uniform(n_experts, eg),
+            plan_load: ExpertLoad::uniform(n_experts),
+            plan_placement_id: PlacementId::UNIFORM,
+            expert_stats,
             slo: None,
             plan_split,
             cache_plans: true,
@@ -370,6 +400,92 @@ impl Server {
     /// The cluster-identity the planner keys its cache entries with.
     pub fn plan_cluster_id(&self) -> ClusterId {
         self.plan_cluster_id
+    }
+
+    /// Plan against an explicit expert placement and the per-expert
+    /// load it was solved for. Every subsequent plan-cache key carries
+    /// the placement's fingerprint, and the cache is cleared: cached
+    /// plans priced expert stages and expert-pool memory under the old
+    /// placement. The uniform default keeps keying under
+    /// [`PlacementId::UNIFORM`] (bit-identical to the legacy pricing).
+    pub fn set_expert_placement(&mut self, placement: ExpertPlacement, load: ExpertLoad) {
+        let n_experts = self.pipeline.model().model.n_experts;
+        assert_eq!(placement.n_experts(), n_experts, "placement/model expert count mismatch");
+        assert_eq!(placement.n_shards(), self.plan_split.eg, "placement/split shard mismatch");
+        assert_eq!(load.n_experts(), n_experts, "load/model expert count mismatch");
+        self.plan_placement_id = placement.fingerprint();
+        self.plan_placement = placement;
+        self.plan_load = load;
+        self.plan_cache.clear();
+    }
+
+    /// The expert placement the planner currently prices under
+    /// (read-only — see [`Server::set_expert_placement`]).
+    pub fn plan_placement(&self) -> &ExpertPlacement {
+        &self.plan_placement
+    }
+
+    /// The per-expert load the current placement was solved for.
+    pub fn plan_load(&self) -> &ExpertLoad {
+        &self.plan_load
+    }
+
+    /// The placement-identity the planner keys its cache entries with.
+    pub fn plan_placement_id(&self) -> PlacementId {
+        self.plan_placement_id
+    }
+
+    /// Fold one routed batch into the server's expert-popularity EWMA
+    /// (called from the serving loop; cheap, lock + O(assignments)).
+    pub fn observe_routing(&self, routing: &Routing) {
+        self.expert_stats.lock().unwrap_or_else(PoisonError::into_inner).observe(routing);
+    }
+
+    /// The observed per-expert relative load (uniform until routed
+    /// batches have been observed).
+    pub fn observed_expert_load(&self) -> ExpertLoad {
+        self.expert_stats.lock().unwrap_or_else(PoisonError::into_inner).observed_load()
+    }
+
+    /// L∞ distance between the observed expert load and the load the
+    /// current placement was solved for (in relative-load units: 0.5
+    /// means some expert drifted by half the uniform share).
+    pub fn placement_drift(&self) -> f64 {
+        self.observed_expert_load().linf_drift(&self.plan_load)
+    }
+
+    /// Drift-driven placement re-solve: when the observed expert load
+    /// has drifted more than `threshold` (L∞, relative-load units) from
+    /// the load the current placement was priced under, re-run the
+    /// replication search ([`solver::search_replication`], warm-pruned)
+    /// against the observed load and adopt the winner. Returns `true`
+    /// when a new placement was installed (which clears the plan
+    /// cache). Cheap when quiescent: a single histogram read and an L∞
+    /// scan.
+    pub fn resolve_placement_if_drifted(&mut self, threshold: f64) -> bool {
+        let observed = self.observed_expert_load();
+        if observed.linf_drift(&self.plan_load) <= threshold {
+            return false;
+        }
+        let base = Instance::on_cluster(
+            self.pipeline.model().model.clone(),
+            self.plan_cluster.clone(),
+            self.plan_split,
+            self.pipeline.model().seq_len,
+        );
+        let params = solver::SearchParams {
+            solver: self.solver_params,
+            multi_replica: false,
+            ..Default::default()
+        };
+        match solver::search_replication(&base, &observed, &params) {
+            Some(rep) => {
+                self.metrics.inc("placement_resolves", 1);
+                self.set_expert_placement(rep.best.placement, observed);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Install TTFT/TPOT targets: subsequent prefill solves are capped
@@ -454,6 +570,15 @@ impl Server {
         if let Some(split) = split {
             if split != self.plan_split {
                 self.plan_split = split;
+                // An explicit placement was solved for the old split's
+                // shard count — fall back to uniform for the new one
+                // (re-resolved on the next drift check).
+                if self.plan_placement_id != PlacementId::UNIFORM {
+                    let n_experts = self.pipeline.model().model.n_experts;
+                    self.plan_placement = ExpertPlacement::uniform(n_experts, split.eg);
+                    self.plan_load = ExpertLoad::uniform(n_experts);
+                    self.plan_placement_id = PlacementId::UNIFORM;
+                }
                 self.plan_cache.clear();
             }
         }
@@ -529,7 +654,7 @@ impl Server {
     /// cache-on/off runs stay byte-identical.
     fn phase_instance(&self, split: GroupSplit, phase: Phase) -> Instance {
         let model = self.pipeline.model().model.clone();
-        match phase {
+        let inst = match phase {
             Phase::Prefill => Instance::on_cluster(
                 model,
                 self.plan_cluster.clone(),
@@ -542,6 +667,18 @@ impl Server {
                 split,
                 bucket_up(kv_len),
             ),
+        };
+        // The uniform default takes the instance's own uniform
+        // placement (bit-identical, no clone); an explicit placement is
+        // applied only when it matches the split width — split-scoring
+        // probes other (ag, eg) candidates, which a placement solved
+        // for `plan_split.eg` shards cannot price.
+        if self.plan_placement_id == PlacementId::UNIFORM
+            || self.plan_placement.n_shards() != split.eg
+        {
+            inst
+        } else {
+            inst.with_placement(self.plan_placement.clone(), self.plan_load.clone())
         }
     }
 
@@ -646,7 +783,8 @@ impl Server {
             Phase::Decode { kv_len } => ShapeKey::decode(kv_len, capacity),
         }
         .with_profile(self.plan_profile)
-        .with_cluster(self.plan_cluster_id);
+        .with_cluster(self.plan_cluster_id)
+        .with_placement(self.plan_placement_id);
         // The cache hands back `Arc<Solution>` (a hit is a pointer
         // bump, not a deep clone under a lock); the cache-disabled
         // baseline wraps its fresh solve the same way so both arms
@@ -1535,6 +1673,57 @@ mod tests {
             .expect("shape solvable");
         assert_eq!(refined.config, full.config);
         assert_eq!(refined.throughput_tokens.to_bits(), full.throughput_tokens.to_bits());
+    }
+
+    #[test]
+    fn drifted_routing_re_solves_expert_placement() {
+        use crate::coordinator::router::ExpertGroup;
+        let Some(mut srv) = server() else { return };
+        // Quiescent default: uniform placement, no drift, no re-solve.
+        assert_eq!(srv.plan_placement_id(), PlacementId::UNIFORM);
+        assert!(srv.plan_placement().is_uniform());
+        assert!(!srv.resolve_placement_if_drifted(0.25));
+        // Serving feeds the pipeline's shared routing histogram.
+        let s = srv.pipeline.model().seq_len;
+        let m = srv.pipeline.model().model.embed;
+        let reqs: Vec<EmbeddedRequest> =
+            (0..2).map(|i| EmbeddedRequest::synthetic(i, s, m)).collect();
+        srv.serve_batch(&reqs, Policy::Naive).unwrap();
+        let n_experts = srv.pipeline.model().model.n_experts;
+        let observed = srv.observed_expert_load();
+        assert_eq!(observed.n_experts(), n_experts);
+        // Inject a heavily skewed routed stream: expert 0 takes 3·E of
+        // the ~4·E assignments per batch.
+        let mut groups = vec![ExpertGroup {
+            expert: 0,
+            token_ids: (0..3 * n_experts as u32).collect(),
+            weights: vec![1.0; 3 * n_experts],
+        }];
+        for e in 1..n_experts {
+            groups.push(ExpertGroup { expert: e, token_ids: vec![0], weights: vec![1.0] });
+        }
+        let skewed = Routing { groups, n_tokens: 3 * n_experts, top_k: 1 };
+        for _ in 0..200 {
+            srv.observe_routing(&skewed);
+        }
+        assert!(srv.placement_drift() > 0.25, "drift {}", srv.placement_drift());
+        // The drift check adopts a placement solved for the observed
+        // load; afterwards the observed load IS the plan load, so a
+        // second check is quiescent again.
+        assert!(srv.resolve_placement_if_drifted(0.25));
+        assert_ne!(srv.plan_placement_id(), PlacementId::UNIFORM);
+        assert_eq!(srv.plan_placement().n_shards(), srv.plan_split.eg);
+        assert!(srv.placement_drift() < 1e-9);
+        assert!(!srv.resolve_placement_if_drifted(0.25));
+        assert_eq!(srv.metrics.counter("placement_resolves"), 1);
+        // Serving still works under the explicit placement, and its
+        // plans are keyed under the placement fingerprint.
+        let (resp, _) = srv.serve_batch(&reqs, Policy::Adaptive).unwrap();
+        assert_eq!(resp.len(), 2);
+        let key = ShapeKey::prefill(s, srv.padded_capacity(2))
+            .with_profile(srv.plan_profile())
+            .with_placement(srv.plan_placement_id());
+        assert!(srv.plan_cache().peek(key).is_some(), "plan not keyed under placement");
     }
 
     #[test]

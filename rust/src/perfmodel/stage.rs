@@ -18,7 +18,7 @@
 //! * `t_a2e(m_e) = α_c + β_c·(E/eg)·m_e·M·bytes`, and t_e2a = t_a2e
 //!   (full-duplex symmetric links, §3.1).
 
-use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, ExpertLoad, ExpertPlacement, GroupSplit, ModelConfig, Phase, Testbed};
 use crate::perfmodel::linear::LinearModel;
 
 /// The three hardware component models fitted by micro-benchmarks
@@ -190,15 +190,46 @@ impl StageModels {
         seq_len: usize,
         phase: Phase,
     ) -> Self {
+        Self::for_cluster_placed(
+            model,
+            cl,
+            split,
+            seq_len,
+            phase,
+            &ExpertPlacement::uniform(model.n_experts, split.eg),
+            &ExpertLoad::uniform(model.n_experts),
+        )
+    }
+
+    /// Placement-aware generalization of [`Self::for_cluster`]: the
+    /// expert-stage α/β come from the **max-loaded shard** of
+    /// `placement` under `load` instead of the uniform `(E/eg)·m_e`
+    /// closed form. The uniform placement short-circuits to the literal
+    /// `E/eg` expressions, so `for_cluster` (which delegates here) is
+    /// bit-identical to the legacy derivation — pinned by
+    /// `tests/placement_equivalence.rs`.
+    pub fn for_cluster_placed(
+        model: &ModelConfig,
+        cl: &Cluster,
+        split: GroupSplit,
+        seq_len: usize,
+        phase: Phase,
+        placement: &ExpertPlacement,
+        load: &ExpertLoad,
+    ) -> Self {
         let comp = ClusterComps::from_cluster(cl, split);
         match phase {
-            Phase::Prefill => Self::from_cluster_comps(model, &comp, split, seq_len),
-            Phase::Decode { kv_len } => Self::decode_from_cluster_comps(
+            Phase::Prefill => {
+                Self::from_cluster_comps_placed(model, &comp, split, seq_len, placement, load)
+            }
+            Phase::Decode { kv_len } => Self::decode_from_cluster_comps_placed(
                 model,
                 &comp,
                 split,
                 kv_len,
                 LinearModel::new(0.0, 1.0 / cl.attn().gpu.hbm_bw),
+                placement,
+                load,
             ),
         }
     }
@@ -243,11 +274,34 @@ impl StageModels {
         kv_len: usize,
         kv_read: LinearModel,
     ) -> Self {
+        Self::decode_from_cluster_comps_placed(
+            model,
+            comp,
+            split,
+            kv_len,
+            kv_read,
+            &ExpertPlacement::uniform(model.n_experts, split.eg),
+            &ExpertLoad::uniform(model.n_experts),
+        )
+    }
+
+    /// Placement-aware decode derivation (see
+    /// [`Self::from_cluster_comps_placed`] for the expert-stage
+    /// generalization; the attention rewrite below is placement-blind).
+    pub fn decode_from_cluster_comps_placed(
+        model: &ModelConfig,
+        comp: &ClusterComps,
+        split: GroupSplit,
+        kv_len: usize,
+        kv_read: LinearModel,
+        placement: &ExpertPlacement,
+        load: &ExpertLoad,
+    ) -> Self {
         // Everything except attention — shared-expert, expert, and
         // transfer α/β plus token conservation — *is* the prefill
         // derivation at S = 1 (one token per sample), so derive it
         // there and keep one source for those formulas.
-        let mut sm = Self::from_cluster_comps(model, comp, split, 1);
+        let mut sm = Self::from_cluster_comps_placed(model, comp, split, 1, placement, load);
 
         let m = model.embed as f64;
         let nh = model.n_heads as f64;
@@ -292,6 +346,36 @@ impl StageModels {
         split: GroupSplit,
         seq_len: usize,
     ) -> Self {
+        Self::from_cluster_comps_placed(
+            model,
+            comp,
+            split,
+            seq_len,
+            &ExpertPlacement::uniform(model.n_experts, split.eg),
+            &ExpertLoad::uniform(model.n_experts),
+        )
+    }
+
+    /// The Eqs. 10-11 derivation generalized over an expert placement:
+    /// the expert stage is priced on the **max-loaded shard**. Two
+    /// scalars replace the uniform `E/eg` factor — the busiest shard's
+    /// kernel-launch count (α) and its work share
+    /// `F = max_d Σ_{e∈d} rel_e/c_e` (β and the A2E payload). For the
+    /// uniform placement both scalars are the literal `E/eg` division,
+    /// so the legacy closed form reproduces bit for bit. `k_tokens`
+    /// (global token conservation) is placement-invariant: `m_e` stays
+    /// "tokens per expert per part under uniform balance" and the
+    /// max-shard factor is folded into the coefficients.
+    pub fn from_cluster_comps_placed(
+        model: &ModelConfig,
+        comp: &ClusterComps,
+        split: GroupSplit,
+        seq_len: usize,
+        placement: &ExpertPlacement,
+        load: &ExpertLoad,
+    ) -> Self {
+        assert_eq!(placement.n_experts(), model.n_experts, "placement/model expert mismatch");
+        assert_eq!(placement.n_shards(), split.eg, "placement shards must match split.eg");
         let s = seq_len as f64;
         let m = model.embed as f64;
         let h = model.ffn_hidden as f64;
@@ -299,7 +383,6 @@ impl StageModels {
         let dk = model.d_k as f64;
         let dv = model.d_v as f64;
         let e = model.n_experts as f64;
-        let eg = split.eg as f64;
         let nsh = model.n_shared as f64;
         let bytes = model.bytes_per_elem as f64;
 
@@ -321,13 +404,19 @@ impl StageModels {
             (0.0, 0.0)
         };
 
-        // Eq. 3: t_e = 3·(E/eg)·t_gm(m_e·M·H) on the expert pool.
-        let alpha_e = 3.0 * (e / eg) * comp.gemm_e.alpha;
-        let beta_e = 3.0 * (e / eg) * comp.gemm_e.beta * m * h;
+        // Eq. 3 generalized: t_e = 3·A·α_gm + 3·F·β_gm·(m_e·M·H) on the
+        // expert pool, where A = busiest shard's expert count and
+        // F = max-shard work factor. Uniform placement: A = F = E/eg,
+        // the paper's closed form (same division, same bits).
+        let a_factor = placement.alpha_shard_experts();
+        let f_load = placement.beta_shard_load(load);
+        let alpha_e = 3.0 * a_factor * comp.gemm_e.alpha;
+        let beta_e = 3.0 * f_load * comp.gemm_e.beta * m * h;
 
-        // Eq. 4: z = (E/eg)·m_e·M elements -> bytes.
+        // Eq. 4 generalized: the max-loaded shard receives z = F·m_e·M
+        // elements -> bytes (uniform: F = E/eg).
         let alpha_a2e = comp.comm.alpha;
-        let beta_a2e = comp.comm.beta * (e / eg) * m * bytes;
+        let beta_a2e = comp.comm.beta * f_load * m * bytes;
 
         let k_tokens = split.ag as f64 * model.top_k as f64 * s / e;
 

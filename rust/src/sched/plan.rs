@@ -312,6 +312,21 @@ impl Plan {
         buf.plan
     }
 
+    /// One-shot wrapper over [`Plan::build_into_loaded`]: a plan whose
+    /// expert-part durations carry per-part load factors.
+    pub fn build_loaded(
+        models: &StageModels,
+        cfg: PlanConfig,
+        n_layers: usize,
+        ag: usize,
+        seq_len: usize,
+        part_loads: &[f64],
+    ) -> Plan {
+        let mut buf = PlanBuffers::new();
+        Plan::build_into_loaded(&mut buf, models, cfg, n_layers, ag, seq_len, Some(part_loads));
+        buf.plan
+    }
+
     /// Rebuild the task DAG in place, reusing `buf`'s task, dependency,
     /// and issue-order storage. Returns a borrow of the built plan.
     /// Output is task-for-task identical to a fresh [`Plan::build`]
@@ -324,7 +339,31 @@ impl Plan {
         ag: usize,
         seq_len: usize,
     ) -> &'a Plan {
+        Self::build_into_loaded(buf, models, cfg, n_layers, ag, seq_len, None)
+    }
+
+    /// [`Plan::build_into`] with optional per-part expert load factors:
+    /// the Expert task of fine-grained part `j` runs for
+    /// `t_e(m_e · part_loads[j mod len])` instead of the homogeneous
+    /// `t_e(m_e)` — how the simulator prices skew-sampled per-part
+    /// expert loads (see `config::placement::ExpertLoad::
+    /// sample_part_factors`) without re-deriving stage coefficients.
+    /// `None` (and equally a slice of exact `1.0`s, since `x·1.0 ≡ x`)
+    /// is bit-identical to the legacy builder; the factors apply in
+    /// both the full build and the duration-only topology fast path.
+    pub fn build_into_loaded<'a>(
+        buf: &'a mut PlanBuffers,
+        models: &StageModels,
+        cfg: PlanConfig,
+        n_layers: usize,
+        ag: usize,
+        seq_len: usize,
+        part_loads: Option<&[f64]>,
+    ) -> &'a Plan {
         assert!(cfg.r1 >= 1 && cfg.r2 >= 1 && cfg.m_a >= 1);
+        if let Some(l) = part_loads {
+            assert!(!l.is_empty(), "empty per-part load factors");
+        }
         let r1 = cfg.r1;
         let r2 = cfg.r2;
         let shared_tasks = models.has_shared && !cfg.fuse_shared;
@@ -334,6 +373,12 @@ impl Plan {
         let t_s = if shared_tasks { models.shared_time(cfg.m_a as f64) } else { 0.0 };
         let t_e = models.expert_time(cfg.m_e);
         let t_c = models.comm_time(cfg.m_e);
+        // Per-part expert duration: the homogeneous t_e unless the
+        // caller supplied load factors (None reproduces t_e exactly).
+        let expert_dur = |j: usize| match part_loads {
+            None => t_e,
+            Some(l) => models.expert_time(cfg.m_e * l[j % l.len()]),
+        };
 
         // Duration-only fast path: if the arena already holds a plan of
         // this exact topology, only the durations (and the scalar
@@ -355,7 +400,7 @@ impl Plan {
                 t.duration = match t.kind {
                     TaskKind::Attention => t_a,
                     TaskKind::SharedExpert => t_s,
-                    TaskKind::Expert => t_e,
+                    TaskKind::Expert => expert_dur(t.part as usize),
                     TaskKind::A2E | TaskKind::E2A => t_c,
                 };
             }
@@ -445,7 +490,7 @@ impl Plan {
                 for j in 0..r2 {
                     let dep_start = pool.len();
                     pool.push(idx_a2e(t, i, j));
-                    push(tasks, pool, dep_start, TaskKind::Expert, t, i, j, t_e);
+                    push(tasks, pool, dep_start, TaskKind::Expert, t, i, j, expert_dur(j));
                 }
             }
             // E2A parts (rule 8).
@@ -774,6 +819,34 @@ mod tests {
         let reused = Plan::build_into(&mut buf, &sm_a, c, 4, 3, 2048).clone();
         assert_eq!(reused, Plan::build(&sm_a, c, 4, 3, 2048));
         assert_ne!(reused.topology_key(), Some(key));
+    }
+
+    #[test]
+    fn loaded_build_prices_skewed_parts_and_unit_factors_are_identity() {
+        let sm = models(true);
+        let c = cfg(2, 3, Order::Asas);
+        let base = Plan::build(&sm, c, 4, 3, 2048);
+        // None (via build) and exact-1.0 factors are bit-identical.
+        let ones = Plan::build_loaded(&sm, c, 4, 3, 2048, &[1.0, 1.0, 1.0]);
+        assert_eq!(base, ones);
+        // Skewed factors: Expert durations move per part, everything
+        // else stays bit-identical, and the duration-only fast path
+        // agrees with a fresh loaded build.
+        let loads = [1.75, 0.5, 0.75];
+        let fresh = Plan::build_loaded(&sm, c, 4, 3, 2048, &loads);
+        let mut buf = PlanBuffers::new();
+        Plan::build_into(&mut buf, &sm, c, 4, 3, 2048);
+        let reused =
+            Plan::build_into_loaded(&mut buf, &sm, c, 4, 3, 2048, Some(&loads)).clone();
+        assert_eq!(reused, fresh, "loaded fast path drifted from full build");
+        for (a, b) in base.tasks.iter().zip(fresh.tasks.iter()) {
+            if a.kind == TaskKind::Expert {
+                let want = sm.expert_time(c.m_e * loads[a.part as usize]);
+                assert_eq!(b.duration.to_bits(), want.to_bits());
+            } else {
+                assert_eq!(a.duration.to_bits(), b.duration.to_bits());
+            }
+        }
     }
 
     #[test]

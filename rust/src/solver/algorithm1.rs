@@ -70,7 +70,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, ExpertLoad, ExpertPlacement, GroupSplit, ModelConfig, Phase, Testbed};
 use crate::perfmodel::StageModels;
 use crate::sched::analytic::Analytic;
 use crate::sched::{Order, Plan, PlanBuffers, PlanConfig};
@@ -94,6 +94,14 @@ pub struct Instance {
     pub split: GroupSplit,
     pub seq_len: usize,
     pub phase: Phase,
+    /// Expert → shard assignment (with replication) the instance's
+    /// stage and memory models are priced under. Defaults to the
+    /// idealized uniform placement, which reproduces the legacy
+    /// derivation bit for bit (`tests/placement_equivalence.rs`).
+    pub placement: ExpertPlacement,
+    /// Per-expert relative token load the placement is priced against.
+    /// Defaults to uniform (all-ones).
+    pub load: ExpertLoad,
 }
 
 impl Instance {
@@ -113,7 +121,21 @@ impl Instance {
         // empty serving window) must fail loudly here, not surface as a
         // degenerate all-zero-duration plan winning the argmax.
         assert!(seq_len >= 1, "zero-length sequence reached the solver");
-        Self { model, cluster, split, seq_len, phase: Phase::Prefill }
+        let placement = ExpertPlacement::uniform(model.n_experts, split.eg);
+        let load = ExpertLoad::uniform(model.n_experts);
+        Self { model, cluster, split, seq_len, phase: Phase::Prefill, placement, load }
+    }
+
+    /// Price this instance under a concrete expert placement and load
+    /// instead of the uniform default. Stage models, memory accounting,
+    /// and every solve on the instance pick the pair up automatically.
+    pub fn with_placement(mut self, placement: ExpertPlacement, load: ExpertLoad) -> Self {
+        assert_eq!(placement.n_experts(), self.model.n_experts, "placement/model mismatch");
+        assert_eq!(placement.n_shards(), self.split.eg, "placement shards must match split.eg");
+        assert_eq!(load.n_experts(), self.model.n_experts, "load/model mismatch");
+        self.placement = placement;
+        self.load = load;
+        self
     }
 
     /// A decode-phase instance: every sample generates one token per
@@ -135,11 +157,20 @@ impl Instance {
     }
 
     pub fn stage_models(&self) -> StageModels {
-        StageModels::for_cluster(&self.model, &self.cluster, self.split, self.seq_len, self.phase)
+        StageModels::for_cluster_placed(
+            &self.model,
+            &self.cluster,
+            self.split,
+            self.seq_len,
+            self.phase,
+            &self.placement,
+            &self.load,
+        )
     }
 
     pub fn memory(&self) -> MemoryModel {
         MemoryModel::for_cluster(&self.model, &self.cluster, self.split, self.seq_len, self.phase)
+            .with_placement(self.placement.clone())
     }
 
     /// Build the reusable candidate evaluator for this instance.

@@ -33,7 +33,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError, RwLock};
 
-use crate::config::{ClusterId, Phase};
+use crate::config::{ClusterId, Phase, PlacementId};
 use crate::perfmodel::profile::ProfileId;
 use crate::solver::Solution;
 
@@ -57,7 +57,10 @@ pub fn bucket_up(x: usize) -> usize {
 /// can never alias plans. The cluster fingerprint joins the identity
 /// for the same reason again: plans solved under different cluster
 /// shapes (pool counts, device constants, link constants, role wiring)
-/// can never alias, even at identical shapes and profiles.
+/// can never alias, even at identical shapes and profiles. And the
+/// placement fingerprint once more: plans solved under different
+/// expert placements (replica sets, shard assignments) price different
+/// stage models and memory budgets, so they can never alias either.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeKey {
     pub phase: Phase,
@@ -69,6 +72,9 @@ pub struct ShapeKey {
     /// [`ClusterId::SINGLE`] for the legacy single-pool Testbed
     /// keyspace, otherwise [`crate::config::Cluster::fingerprint`].
     pub cluster: ClusterId,
+    /// [`PlacementId::UNIFORM`] for the legacy uniform-expert keyspace,
+    /// otherwise [`crate::config::ExpertPlacement::fingerprint`].
+    pub placement: PlacementId,
 }
 
 impl ShapeKey {
@@ -84,6 +90,7 @@ impl ShapeKey {
             batch,
             profile: ProfileId::HAND,
             cluster: ClusterId::SINGLE,
+            placement: PlacementId::UNIFORM,
         }
     }
 
@@ -97,6 +104,7 @@ impl ShapeKey {
             batch,
             profile: ProfileId::HAND,
             cluster: ClusterId::SINGLE,
+            placement: PlacementId::UNIFORM,
         }
     }
 
@@ -109,6 +117,12 @@ impl ShapeKey {
     /// Re-key onto a cluster shape's keyspace.
     pub fn with_cluster(mut self, cluster: ClusterId) -> Self {
         self.cluster = cluster;
+        self
+    }
+
+    /// Re-key onto an expert placement's keyspace.
+    pub fn with_placement(mut self, placement: PlacementId) -> Self {
+        self.placement = placement;
         self
     }
 }
@@ -275,6 +289,7 @@ impl PlanCache {
             if *k == key
                 || k.profile != key.profile
                 || k.cluster != key.cluster
+                || k.placement != key.placement
                 || k.batch < key.batch
             {
                 continue;
@@ -365,6 +380,7 @@ mod tests {
                 batch: 8,
                 profile: ProfileId::HAND,
                 cluster: ClusterId::SINGLE,
+                placement: PlacementId::UNIFORM,
             }
         );
     }
@@ -414,6 +430,38 @@ mod tests {
         let _ = cache.get_or_solve(both, || solve_online(&paper_instance(), 8, &params));
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn placements_key_separate_plans() {
+        // The placement fingerprint joins the key identity exactly like
+        // the profile and cluster fingerprints: the same shape solved
+        // under different expert placements prices different stage
+        // models and memory budgets, so the entries must never alias.
+        let cache = PlanCache::new();
+        let params = SolverParams::default();
+        let uniform_key = ShapeKey::prefill(2048, 8);
+        let skew_key = uniform_key.with_placement(PlacementId(0xbeef));
+        assert_eq!(uniform_key.placement, PlacementId::UNIFORM);
+        assert_ne!(uniform_key, skew_key);
+        let _ = cache.get_or_solve(uniform_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 1);
+        let _ = cache.get_or_solve(skew_key, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 2, "placed shape must not hit the uniform entry");
+        assert_eq!(cache.len(), 2);
+        let _ = cache.get_or_solve(uniform_key, || panic!("uniform key must hit"));
+        let _ = cache.get_or_solve(skew_key, || panic!("placed key must hit"));
+        assert_eq!(cache.hits(), 2);
+        // Placement composes with profile and cluster without aliasing.
+        let all = skew_key.with_profile(ProfileId(0x5eed)).with_cluster(ClusterId(0xc1));
+        let _ = cache.get_or_solve(all, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+        // Two distinct explicit placements never alias each other.
+        let other = uniform_key.with_placement(PlacementId(0xf00d));
+        let _ = cache.get_or_solve(other, || solve_online(&paper_instance(), 8, &params));
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]
@@ -518,6 +566,8 @@ mod tests {
         assert!(cache.nearest(ShapeKey::decode(2048, 8).with_profile(ProfileId(7))).is_none());
         // ... and cluster shapes stay isolated the same way.
         assert!(cache.nearest(ShapeKey::decode(2048, 8).with_cluster(ClusterId(7))).is_none());
+        // Never across placements.
+        assert!(cache.nearest(ShapeKey::decode(2048, 8).with_placement(PlacementId(7))).is_none());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! (weights either fit or the split is invalid); the AG check bounds
 //! `r1·m_a`.
 
-use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, ExpertPlacement, GroupSplit, ModelConfig, Phase, Testbed};
 
 /// Memory occupancy calculator for one (model, cluster, split, S,
 /// phase). Capacity is accounted per pool: AG devices check against
@@ -32,6 +32,11 @@ pub struct MemoryModel {
     /// Fraction of device memory usable for model state (the rest is
     /// framework overhead / fragmentation slack).
     pub usable_frac: f64,
+    /// Expert → shard assignment with replication. The uniform
+    /// placement reproduces the legacy `⌈E/eg⌉`-experts-per-device
+    /// accounting exactly; explicit placements charge the fullest
+    /// shard's slots (replicas included) against expert-pool capacity.
+    pub placement: ExpertPlacement,
 }
 
 impl MemoryModel {
@@ -64,7 +69,18 @@ impl MemoryModel {
             seq_len,
             phase,
             usable_frac: 0.90,
+            placement: ExpertPlacement::uniform(model.n_experts, split.eg),
         }
+    }
+
+    /// Account a concrete placement's replica weights instead of the
+    /// uniform `⌈E/eg⌉` slots. The placement must match this model's
+    /// expert count and split.
+    pub fn with_placement(mut self, placement: ExpertPlacement) -> Self {
+        assert_eq!(placement.n_experts(), self.model.n_experts, "placement/model mismatch");
+        assert_eq!(placement.n_shards(), self.split.eg, "placement shards must match split.eg");
+        self.placement = placement;
+        self
     }
 
     fn usable_ag(&self) -> f64 {
@@ -83,10 +99,25 @@ impl MemoryModel {
         attn + shared
     }
 
-    /// Static weight bytes on each EG device: E/eg experts per layer.
+    /// Static weight bytes on each EG device: the fullest shard's
+    /// expert slots (replicas included) per layer. Uniform placement:
+    /// `⌈E/eg⌉` slots, the legacy accounting bit for bit.
     pub fn eg_weight_bytes(&self) -> usize {
-        let experts_per_dev = self.model.n_experts.div_ceil(self.split.eg);
-        self.model.n_layers * experts_per_dev * self.model.expert_param_bytes()
+        self.model.n_layers * self.placement.max_shard_slots() * self.model.expert_param_bytes()
+    }
+
+    /// Extra expert slots per expert-pool GPU beyond the uniform
+    /// `⌈E/eg⌉` that still fit in usable memory — the replication
+    /// budget ceiling for the placement search. (An upper bound for
+    /// enumeration; each candidate placement is still gated by
+    /// [`Self::eg_feasible`] on its actual fullest shard.)
+    pub fn eg_slot_headroom(&self) -> usize {
+        let per_slot = (self.model.n_layers * self.model.expert_param_bytes()) as f64;
+        if per_slot <= 0.0 {
+            return 0;
+        }
+        let cap = (self.usable_eg() / per_slot) as usize;
+        cap.saturating_sub(self.model.n_experts.div_ceil(self.split.eg))
     }
 
     /// Per-sample dynamic bytes on an AG device: KV cache across all
@@ -176,6 +207,25 @@ mod tests {
             m.max_samples_per_ag_gpu() > small_ag.max_samples_per_ag_gpu(),
             "96 GB attention pool must batch more than a 24 GB one"
         );
+    }
+
+    #[test]
+    fn replica_weights_charge_expert_pool_capacity() {
+        use crate::config::{ExpertLoad, ExpertPlacement};
+        let m = mm(2048);
+        // Uniform placement is the legacy formula bit for bit.
+        assert_eq!(m.eg_weight_bytes(), 8 * 32 * m.model.expert_param_bytes());
+        // Replicated hot experts add slots on the fullest shard.
+        let load = ExpertLoad::zipf(160, 1.5);
+        let repl = mm(2048).with_placement(ExpertPlacement::replicate_hot(&load, 5, 10));
+        assert!(repl.eg_weight_bytes() > m.eg_weight_bytes());
+        assert!(repl.placement.max_shard_slots() >= 33);
+        // Testbed A has headroom for replicas; the budget shrinks to
+        // zero when every slot is spoken for.
+        assert!(m.eg_slot_headroom() > 0);
+        let mut tight = mm(2048);
+        tight.eg_mem_bytes = m.eg_weight_bytes() + (1 << 20);
+        assert_eq!(tight.eg_slot_headroom(), 0);
     }
 
     #[test]

@@ -39,10 +39,12 @@ pub use algorithm1::{
     SolverParams, WarmStart,
 };
 pub use cache::{bucket_up, shape_key, shape_key_decode, PlanCache, RefineToken, ShapeKey};
+pub use crate::config::placement::PlacementId;
 pub use crate::perfmodel::profile::ProfileId;
 pub use memory::MemoryModel;
 pub use splitsearch::{
-    carve, enumerate_cluster_candidates, search as search_splits, search_cluster,
-    search_serial as search_splits_serial, throughput_bound_cluster, CarvePlan, SearchParams,
-    SearchReport, SearchStats, SplitCandidate, SplitSolution, TrafficMix,
+    carve, enumerate_cluster_candidates, instance_bound, search as search_splits, search_cluster,
+    search_replication, search_serial as search_splits_serial, throughput_bound_cluster,
+    CarvePlan, PlacementSolution, ReplicationReport, ReplicationStats, SearchParams, SearchReport,
+    SearchStats, SplitCandidate, SplitSolution, TrafficMix,
 };

@@ -43,7 +43,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{Cluster, GroupSplit, ModelConfig, Phase, Testbed};
+use crate::config::{Cluster, ExpertLoad, ExpertPlacement, GroupSplit, ModelConfig, Phase, Testbed};
 use crate::solver::algorithm1::{
     self, solve_warm, EvalMode, Evaluator, Instance, Solution, SolverParams, WarmStart,
 };
@@ -671,6 +671,197 @@ pub fn carve(
             i += 1;
         }
     }
+}
+
+/// One solved candidate of the replication search: a concrete expert
+/// placement (the replication budget it spends) plus Algorithm 1's
+/// solution priced under it.
+#[derive(Debug, Clone)]
+pub struct PlacementSolution {
+    /// Extra expert slots (replicas beyond one copy per expert) the
+    /// placement spends across the expert group.
+    pub extra_slots: usize,
+    pub placement: ExpertPlacement,
+    pub solution: Solution,
+}
+
+/// Replication-search diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicationStats {
+    /// Replication budgets enumerated (including dominated ones).
+    pub candidates: usize,
+    /// Candidates actually solved by Algorithm 1.
+    pub solved: usize,
+    /// Candidates skipped by the admissible bound against the incumbent.
+    pub bound_pruned: usize,
+    /// Candidates skipped by exact dominance (no smaller max-shard load
+    /// than an earlier, cheaper placement).
+    pub dominated: usize,
+    /// Largest replication budget the memory headroom allowed.
+    pub max_extra: usize,
+}
+
+/// Result of [`search_replication`].
+#[derive(Debug, Clone)]
+pub struct ReplicationReport {
+    pub best: PlacementSolution,
+    pub stats: ReplicationStats,
+}
+
+/// Optimistic tokens/s upper bound for one concrete [`Instance`]
+/// (placement included) from the §4.2 closed forms only — the
+/// admissible-bound extension of [`throughput_bound`] to placed
+/// instances: the placed stage models' coefficients feed the same
+/// `row_bound`, whose admissibility argument (non-preemptive resource
+/// occupancy, Theorem 1 monotonicity in `m_a`) is placement-agnostic.
+/// Returns 0.0 when the placement's replica weights don't fit.
+pub fn instance_bound(inst: &Instance, params: &SolverParams) -> f64 {
+    let mem = inst.memory();
+    if !mem.eg_feasible() {
+        return 0.0;
+    }
+    let ma_max = mem.max_samples_per_ag_gpu().min(params.ma_cap);
+    if ma_max == 0 {
+        return 0.0;
+    }
+    let sm = inst.stage_models();
+    algorithm1::row_bound(&sm, ma_max, inst.split.ag, inst.seq_len, inst.model.n_layers)
+}
+
+/// Search the expert-replication factor as a plan dimension: sweep the
+/// replication budget (extra expert slots across the expert group) from
+/// 0 up to the expert pool's memory headroom, price each greedy
+/// [`ExpertPlacement::replicate_hot`] placement with Algorithm 1 under
+/// `load`, and return the strict-improvement argmax (ties to the
+/// smallest budget).
+///
+/// Three exact screens keep the sweep cheap without changing the
+/// winner:
+/// * **Dominance.** Stage coefficients depend on a placement only
+///   through its max-shard load `F` (β terms) and max-shard slots (α
+///   terms), and both weakly grow when a budget increase fails to
+///   reduce `F` — so a candidate whose `F` is not strictly below every
+///   cheaper evaluated candidate's is dominated and skipped unsolved.
+/// * **Admissible bound.** [`instance_bound`] against the running
+///   incumbent (same argument as the split search: a pruned candidate
+///   sits strictly below an evaluated throughput).
+/// * **Floor stop.** `F ≥ E/eg` always (the mean shard), so once a
+///   candidate reaches the perfect-balance floor no larger budget can
+///   improve it and the sweep ends.
+///
+/// Under exactly-uniform observed load the baseline candidate is the
+/// canonical [`ExpertPlacement::uniform`] — which sits at the floor, so
+/// the search returns the legacy uniform plan bit for bit (the
+/// exact-tie gate of `benches/expert_skew.rs`). Under skew the baseline
+/// is the honest unreplicated `replicate_hot(load, eg, 0)`.
+pub fn search_replication(
+    base: &Instance,
+    load: &ExpertLoad,
+    params: &SearchParams,
+) -> Option<ReplicationReport> {
+    let eg = base.split.eg;
+    let n_experts = base.model.n_experts;
+    assert_eq!(load.n_experts(), n_experts, "load/model expert mismatch");
+    let floor = n_experts as f64 / eg as f64;
+
+    // Replication budget ceiling: per-shard slot headroom of the
+    // uniform layout times the shard count, capped at full replication
+    // (`c_e = eg` everywhere). Each candidate is still individually
+    // gated by its own memory feasibility inside the solve.
+    let mem = MemoryModel::for_cluster(
+        &base.model,
+        &base.cluster,
+        base.split,
+        base.seq_len,
+        base.phase,
+    );
+    let max_extra = (mem.eg_slot_headroom() * eg).min(n_experts * (eg - 1));
+
+    let mut stats = ReplicationStats { max_extra, ..Default::default() };
+    let mut best: Option<PlacementSolution> = None;
+    let mut best_f = f64::INFINITY;
+    let mut last_placement: Option<ExpertPlacement> = None;
+    let mut ev: Option<Evaluator> = None;
+
+    for extra in 0..=max_extra {
+        stats.candidates += 1;
+        let placement = if extra == 0 && load.is_uniform() {
+            ExpertPlacement::uniform(n_experts, eg)
+        } else {
+            ExpertPlacement::replicate_hot(load, eg, extra)
+        };
+        // The greedy is nested in `extra`: once it saturates (every
+        // expert on every shard) all larger budgets repeat the same
+        // placement — stop.
+        if last_placement.as_ref() == Some(&placement) {
+            stats.candidates -= 1;
+            break;
+        }
+        let f_load = placement.beta_shard_load(load);
+        let at_floor = f_load <= floor * (1.0 + 1e-12);
+        last_placement = Some(placement.clone());
+
+        // Exact dominance: no strict max-shard-load improvement over a
+        // cheaper candidate means every coefficient is at least as bad.
+        if f_load >= best_f && best.is_some() {
+            stats.dominated += 1;
+            if at_floor {
+                break;
+            }
+            continue;
+        }
+
+        let inst = base.clone().with_placement(placement.clone(), load.clone());
+        // Admissible bound against the incumbent (strict: equality
+        // cannot beat a strict-improvement argmax).
+        if params.prune {
+            if let Some(b) = &best {
+                if instance_bound(&inst, &params.solver) <= b.solution.throughput_tokens {
+                    stats.bound_pruned += 1;
+                    if at_floor {
+                        break;
+                    }
+                    continue;
+                }
+            }
+        }
+
+        let ev = ev.get_or_insert_with(|| Evaluator::new(&inst));
+        let warm = if params.prune {
+            best.as_ref().map(|b| WarmStart::incumbent(b.solution.throughput_tokens))
+        } else {
+            None
+        };
+        match solve_warm(&inst, &params.solver, EvalMode::Buffered, ev, warm.as_ref()) {
+            None => {
+                // Infeasible (replica weights don't fit) or floored out
+                // by the incumbent — either way not a winner.
+            }
+            Some(sol) => {
+                stats.solved += 1;
+                if best
+                    .as_ref()
+                    .map_or(true, |b| sol.throughput_tokens > b.solution.throughput_tokens)
+                {
+                    best_f = f_load;
+                    best = Some(PlacementSolution {
+                        extra_slots: extra,
+                        placement,
+                        solution: sol,
+                    });
+                } else if f_load < best_f {
+                    // Lower max-shard load that still lost (α launch
+                    // overhead outweighed it): later budgets must beat
+                    // this F to be worth solving.
+                    best_f = f_load;
+                }
+            }
+        }
+        if at_floor {
+            break;
+        }
+    }
+    best.map(|best| ReplicationReport { best, stats })
 }
 
 #[cfg(test)]

@@ -14,7 +14,7 @@
 //!   [`Request::next_decode_step`] applies it to workload requests the
 //!   way the coordinator's batcher applies it to embedded ones).
 
-use crate::config::Phase;
+use crate::config::{ExpertLoad, LoadProfile, Phase};
 use crate::util::rng::Rng;
 
 /// One inference request (or one autoregressive step of one — the
@@ -69,6 +69,74 @@ impl Request {
 /// Offline batch generator: `count` requests of identical length.
 pub fn offline_batch(count: usize, seq_len: usize) -> Vec<Request> {
     (0..count).map(|i| Request::prefill(i as u64, seq_len, 0.0)).collect()
+}
+
+/// Synthetic gating behaviour: which experts a request's tokens route
+/// to, layer by layer. Expert popularity is Zipf-shaped (rank `e` gets
+/// weight `(e+1)^(-zipf_s/temp)` — `zipf_s = 0` is exactly uniform
+/// traffic), and `layer_corr` is the probability that a request keeps
+/// its previous layer's expert instead of re-sampling — the cross-layer
+/// stickiness real MoE traces show, which makes skew persistent across
+/// a request's whole forward pass rather than averaging out.
+#[derive(Debug, Clone)]
+pub struct GatingProfile {
+    pub n_experts: usize,
+    /// Zipf exponent of expert popularity (0 = uniform).
+    pub zipf_s: f64,
+    /// Temperature flattening: the effective exponent is
+    /// `zipf_s / temp`, so `temp > 1` pulls traffic toward uniform.
+    pub temp: f64,
+    /// Probability a request re-uses its previous layer's expert.
+    pub layer_corr: f64,
+}
+
+impl GatingProfile {
+    /// Balanced traffic (the legacy uniform-expert assumption).
+    pub fn uniform(n_experts: usize) -> Self {
+        Self { n_experts, zipf_s: 0.0, temp: 1.0, layer_corr: 0.0 }
+    }
+
+    /// Skewed traffic with the cross-layer stickiness of real traces.
+    pub fn skewed(n_experts: usize, zipf_s: f64) -> Self {
+        Self { n_experts, zipf_s, temp: 1.0, layer_corr: 0.6 }
+    }
+
+    /// Effective Zipf exponent after temperature flattening.
+    fn s_eff(&self) -> f64 {
+        assert!(self.temp > 0.0, "non-positive gating temperature");
+        self.zipf_s / self.temp
+    }
+
+    /// The marginal per-expert relative load this profile induces —
+    /// what the planner prices placements against. Cross-layer
+    /// correlation does not move the marginal (a re-used expert was
+    /// itself drawn from the same Zipf), so this is the plain
+    /// [`LoadProfile`] load.
+    pub fn expert_load(&self) -> ExpertLoad {
+        if self.zipf_s == 0.0 {
+            LoadProfile::Uniform.load(self.n_experts)
+        } else {
+            LoadProfile::Zipf { s: self.zipf_s, temp: self.temp }.load(self.n_experts)
+        }
+    }
+
+    /// Sample one request's expert choice per layer: Zipf-popular
+    /// experts, re-used from the previous layer with probability
+    /// `layer_corr`. Seeded and deterministic via `rng`.
+    pub fn sample_request(&self, n_layers: usize, rng: &mut Rng) -> Vec<usize> {
+        let s = self.s_eff();
+        let mut out = Vec::with_capacity(n_layers);
+        let mut prev: Option<usize> = None;
+        for _ in 0..n_layers {
+            let e = match prev {
+                Some(p) if rng.f64() < self.layer_corr => p,
+                _ => rng.zipf(self.n_experts, s),
+            };
+            out.push(e);
+            prev = Some(e);
+        }
+        out
+    }
 }
 
 /// Online arrival process: Poisson arrivals at `rate_per_s`, lognormal
@@ -247,6 +315,58 @@ mod tests {
         assert!(b.iter().all(|r| r.seq_len == 2048 && r.arrival_s == 0.0));
         assert_eq!(b[3].tokens(), 2048);
         assert!(b.iter().all(|r| r.phase == Phase::Prefill && r.output_len == 0));
+    }
+
+    #[test]
+    fn gating_profile_marginal_and_correlation() {
+        // Uniform profile: exactly the legacy assumption.
+        let flat = GatingProfile::uniform(16);
+        assert!(flat.expert_load().is_uniform());
+        // Skewed profile: marginal matches the empirical expert
+        // frequency of many sampled requests.
+        let prof = GatingProfile::skewed(16, 1.2);
+        let load = prof.expert_load();
+        assert!(load.rel(0) > load.rel(15));
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0usize; 16];
+        let n_layers = 8;
+        let draws = 4000;
+        for _ in 0..draws {
+            for e in prof.sample_request(n_layers, &mut rng) {
+                counts[e] += 1;
+            }
+        }
+        let total = (draws * n_layers) as f64;
+        for e in [0usize, 4, 15] {
+            let emp = counts[e] as f64 / total * 16.0;
+            assert!(
+                (emp - load.rel(e)).abs() < 0.25 * load.rel(e).max(0.5),
+                "expert {e}: empirical rel {emp} vs marginal {}",
+                load.rel(e)
+            );
+        }
+        // Cross-layer correlation: sticky profiles repeat the previous
+        // layer's expert far more often than independent draws.
+        let repeat_rate = |corr: f64, rng: &mut Rng| {
+            let p = GatingProfile { layer_corr: corr, ..prof.clone() };
+            let (mut rep, mut tot) = (0usize, 0usize);
+            for _ in 0..2000 {
+                let picks = p.sample_request(n_layers, rng);
+                for w in picks.windows(2) {
+                    tot += 1;
+                    rep += (w[0] == w[1]) as usize;
+                }
+            }
+            rep as f64 / tot as f64
+        };
+        let mut rng = Rng::new(12);
+        let sticky = repeat_rate(0.9, &mut rng);
+        let indep = repeat_rate(0.0, &mut rng);
+        assert!(sticky > indep + 0.3, "sticky {sticky} vs independent {indep}");
+        // Seeded determinism.
+        let a = prof.sample_request(32, &mut Rng::new(77));
+        let b = prof.sample_request(32, &mut Rng::new(77));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! The uniform→placed expert refactor's correctness oracle: the
+//! identity placement (the [`ExpertPlacement::uniform`] kind under a
+//! uniform [`ExpertLoad`]) must be bit-identical to the legacy
+//! uniform-expert derivation across every paper instance and both
+//! serving phases — stage-model coefficients, Algorithm-1 solutions,
+//! replication-search winners, and expert-pool memory accounting. The
+//! uniform kind performs literally the same f64 arithmetic as the old
+//! `E/eg` closed forms; these tests pin that, so skew-aware placement
+//! can never drift the Table-2 reproductions.
+
+use findep::config::{
+    Cluster, ExpertLoad, ExpertPlacement, GroupSplit, ModelConfig, Phase, PlacementId, Testbed,
+};
+use findep::perfmodel::StageModels;
+use findep::solver::{self, Instance, MemoryModel, PlanCache, SearchParams, ShapeKey, Solution};
+
+/// The 8 paper instances: every Table-2 testbed × both model families,
+/// at the §5.4 layer counts the testbed's memory admits.
+fn paper_instances() -> Vec<(ModelConfig, Testbed)> {
+    let mut out = Vec::new();
+    for tb in Testbed::all() {
+        for deepseek in [true, false] {
+            let layers = ModelConfig::paper_layers(deepseek, &tb.name[..2]);
+            let model = if deepseek {
+                ModelConfig::deepseek_v2(layers)
+            } else {
+                ModelConfig::qwen3_moe(layers)
+            };
+            out.push((model, tb.clone()));
+        }
+    }
+    out
+}
+
+fn phases() -> [Phase; 2] {
+    [Phase::Prefill, Phase::Decode { kv_len: 2048 }]
+}
+
+fn phase_instance(model: &ModelConfig, cl: &Cluster, split: GroupSplit, phase: Phase) -> Instance {
+    match phase {
+        Phase::Prefill => Instance::on_cluster(model.clone(), cl.clone(), split, 2048),
+        Phase::Decode { kv_len } => {
+            Instance::decode_on_cluster(model.clone(), cl.clone(), split, kv_len)
+        }
+    }
+}
+
+fn assert_solutions_identical(a: &Solution, b: &Solution, tag: &str) {
+    assert_eq!(a.config, b.config, "{tag}");
+    assert_eq!(a.throughput_tokens.to_bits(), b.throughput_tokens.to_bits(), "{tag}");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}");
+}
+
+#[test]
+fn stage_models_bit_identical_under_identity_placement() {
+    // The placed derivation fed the identity placement against the
+    // legacy uniform path: every α/β coefficient must be equal — the
+    // uniform kind short-circuits to the literal `E/eg` expressions.
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        let placement = ExpertPlacement::uniform(model.n_experts, split.eg);
+        let load = ExpertLoad::uniform(model.n_experts);
+        for phase in phases() {
+            let legacy = StageModels::for_cluster(&model, &cl, split, 2048, phase);
+            let placed =
+                StageModels::for_cluster_placed(&model, &cl, split, 2048, phase, &placement, &load);
+            assert_eq!(legacy, placed, "{} on {} {phase:?}", model.name, tb.name);
+        }
+    }
+}
+
+#[test]
+fn solves_bit_identical_under_identity_placement() {
+    // End to end through Algorithm 1: the default instance (which
+    // carries the identity placement implicitly) against one with the
+    // identity placement installed explicitly. Same winning config,
+    // same throughput and makespan to the last bit, same feasibility.
+    let params = solver::SolverParams::default();
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        for phase in phases() {
+            let implicit = phase_instance(&model, &cl, split, phase);
+            let explicit = implicit.clone().with_placement(
+                ExpertPlacement::uniform(model.n_experts, split.eg),
+                ExpertLoad::uniform(model.n_experts),
+            );
+            let tag = format!("{} on {} {phase:?}", model.name, tb.name);
+            match (solver::solve(&implicit, &params), solver::solve(&explicit, &params)) {
+                (Some(a), Some(b)) => assert_solutions_identical(&a, &b, &tag),
+                (None, None) => {}
+                (a, b) => panic!(
+                    "feasibility drift on {tag}: implicit={} explicit={}",
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn replication_search_under_uniform_load_returns_the_uniform_plan() {
+    // The exact-tie guarantee: with exactly-uniform observed load the
+    // replication search's baseline candidate is the canonical uniform
+    // placement, which sits at the perfect-balance floor — so the
+    // search must stop there and return the legacy plan bit for bit.
+    let params = SearchParams::default();
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        let load = ExpertLoad::uniform(model.n_experts);
+        for phase in phases() {
+            let inst = phase_instance(&model, &cl, split, phase);
+            let tag = format!("{} on {} {phase:?}", model.name, tb.name);
+            let legacy = solver::solve(&inst, &params.solver);
+            let report = solver::search_replication(&inst, &load, &params);
+            match (legacy, report) {
+                (Some(a), Some(r)) => {
+                    assert!(r.best.placement.is_uniform(), "{tag}");
+                    assert_eq!(r.best.extra_slots, 0, "{tag}");
+                    assert_eq!(r.best.placement.fingerprint(), PlacementId::UNIFORM, "{tag}");
+                    assert_solutions_identical(&a, &r.best.solution, &tag);
+                }
+                (None, None) => {}
+                (a, r) => panic!(
+                    "feasibility drift on {tag}: solve={} replication={}",
+                    a.is_some(),
+                    r.is_some()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn memory_accounting_identical_under_identity_placement() {
+    // The uniform placement charges exactly the legacy
+    // `n_layers · ⌈E/eg⌉ · expert_param_bytes` against the expert pool;
+    // a replicated placement charges strictly more.
+    for (model, tb) in paper_instances() {
+        let cl = Cluster::single_pool(&tb);
+        let split = GroupSplit::paper_default(&tb, model.has_shared_expert());
+        let mem = MemoryModel::for_cluster(&model, &cl, split, 2048, Phase::Prefill);
+        let legacy = model.n_layers
+            * model.n_experts.div_ceil(split.eg)
+            * model.expert_param_bytes();
+        assert_eq!(mem.eg_weight_bytes(), legacy, "{} on {}", model.name, tb.name);
+        // One extra replica of the hottest expert can only grow (or
+        // keep, if it lands on a non-max shard) the fullest shard.
+        let skew = ExpertLoad::zipf(model.n_experts, 1.5);
+        let replicated = mem
+            .clone()
+            .with_placement(ExpertPlacement::replicate_hot(&skew, split.eg, split.eg));
+        assert!(
+            replicated.eg_weight_bytes() >= legacy,
+            "{} on {}: replicas must not shrink weight bytes",
+            model.name,
+            tb.name
+        );
+    }
+}
+
+#[test]
+fn plan_cache_isolates_placement_fingerprints() {
+    // Integration-level cache isolation with *real* fingerprints: the
+    // uniform placement keys under PlacementId::UNIFORM, every distinct
+    // explicit placement under its own id, and entries never alias.
+    let load = ExpertLoad::zipf(32, 1.2);
+    let a = ExpertPlacement::replicate_hot(&load, 4, 0);
+    let b = ExpertPlacement::replicate_hot(&load, 4, 4);
+    assert_ne!(a.fingerprint(), b.fingerprint());
+    assert_ne!(a.fingerprint(), PlacementId::UNIFORM);
+    assert_eq!(ExpertPlacement::uniform(32, 4).fingerprint(), PlacementId::UNIFORM);
+
+    let cache = PlanCache::new();
+    let keys = [
+        ShapeKey::prefill(2048, 8),
+        ShapeKey::prefill(2048, 8).with_placement(a.fingerprint()),
+        ShapeKey::prefill(2048, 8).with_placement(b.fingerprint()),
+    ];
+    let mut solves = 0usize;
+    for (i, &key) in keys.iter().enumerate() {
+        let marker = (i + 1) as f64;
+        let sol = cache.get_or_solve(key, || {
+            solves += 1;
+            Some(Solution {
+                config: findep::sched::PlanConfig::findep(
+                    1,
+                    1,
+                    1,
+                    marker,
+                    findep::sched::Order::Asas,
+                ),
+                makespan: marker,
+                throughput_tokens: marker,
+                solve_seconds: 0.0,
+                evals: 0,
+                pruned_rows: 0,
+                warm_seeded: false,
+                exhaustive: true,
+            })
+        });
+        assert_eq!(sol.expect("stub solution").makespan, marker);
+    }
+    assert_eq!(solves, 3, "every placement fingerprint must miss separately");
+    assert_eq!(cache.len(), 3);
+    // Hits resolve to their own placement's entry.
+    for (i, &key) in keys.iter().enumerate() {
+        let hit = cache.get_or_solve(key, || panic!("must be a hit"));
+        assert_eq!(hit.expect("cached").makespan, (i + 1) as f64);
+    }
+}

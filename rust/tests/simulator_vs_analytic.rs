@@ -107,3 +107,40 @@ fn objective_agrees_with_des_throughput() {
         );
     }
 }
+
+#[test]
+fn skew_sampled_part_loads_price_through_the_simulator() {
+    use findep::config::{ExpertLoad, ExpertPlacement};
+    use findep::util::rng::Rng;
+    let model = ModelConfig::deepseek_v2(4);
+    let split = GroupSplit::new(3, 5);
+    let sm = StageModels::new(&model, &Testbed::a(), split, 2048);
+    let (m_a, r1, r2) = (2usize, 3usize, 4usize);
+    let a = Analytic::new(&sm, m_a as f64, r1, r2);
+    let cfg = PlanConfig::findep(m_a, r1, r2, a.m_e, Order::Asas);
+    let base = Plan::build(&sm, cfg, model.n_layers, split.ag, 2048);
+    // Unit factors are the identity: the simulated makespan is
+    // bit-identical to the homogeneous plan.
+    let ones = Plan::build_loaded(&sm, cfg, model.n_layers, split.ag, 2048, &[1.0; 4]);
+    assert_eq!(simulate(&ones).makespan.to_bits(), simulate(&base).makespan.to_bits());
+    // Zipf-sampled per-part factors (Monte-Carlo routing through the
+    // uniform placement): deterministic under a fixed seed, and the
+    // simulated makespan covers the slowest realized expert part.
+    let load = ExpertLoad::zipf(model.n_experts, 1.2);
+    let placement = ExpertPlacement::uniform(model.n_experts, split.eg);
+    let factors = load.sample_part_factors(&placement, 256, r2, &mut Rng::new(41));
+    assert_eq!(factors.len(), r2);
+    assert!(factors.iter().all(|f| f.is_finite() && *f > 0.0), "{factors:?}");
+    let loaded = Plan::build_loaded(&sm, cfg, model.n_layers, split.ag, 2048, &factors);
+    let sim = simulate(&loaded);
+    let max_f = factors.iter().fold(0.0f64, |m, &f| m.max(f));
+    assert!(
+        sim.makespan >= sm.expert_time(cfg.m_e * max_f),
+        "makespan {} cannot undercut its slowest expert part {}",
+        sim.makespan,
+        sm.expert_time(cfg.m_e * max_f)
+    );
+    let again = load.sample_part_factors(&placement, 256, r2, &mut Rng::new(41));
+    let replay = Plan::build_loaded(&sm, cfg, model.n_layers, split.ag, 2048, &again);
+    assert_eq!(simulate(&replay).makespan.to_bits(), sim.makespan.to_bits());
+}
